@@ -1,0 +1,103 @@
+//! Shared bench scaffolding: FP32 checkpoint reuse, QAT protocol, result
+//! persistence.  Every bench binary is harness=false (no criterion in the
+//! offline vendor set) and prints paper-shaped tables via util::stats.
+
+#![allow(dead_code)]
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use dybit::formats::Format;
+use dybit::qat::{QuantConfig, Session};
+use dybit::runtime::{Executor, Manifest};
+use dybit::util::json::Json;
+
+/// Per-model training hyperparameters shared by all accuracy benches
+/// (same schedule for every format — the paper's fairness protocol).
+#[derive(Clone, Copy, Debug)]
+pub struct Protocol {
+    pub pretrain_steps: usize,
+    pub pretrain_lr: f32,
+    pub qat_steps: usize,
+    pub qat_lr: f32,
+    pub eval_batches: usize,
+}
+
+impl Protocol {
+    /// Defaults sized for the 1-core CI box; `--full` runs the deeper
+    /// schedule (recommended on anything with real cores).
+    pub fn from_args(args: &dybit::util::argparse::Args) -> Self {
+        let full = args.has("full");
+        Protocol {
+            pretrain_steps: args.get_usize("pretrain", if full { 500 } else { 250 }),
+            pretrain_lr: args.get_f32("lr", 0.03),
+            qat_steps: args.get_usize("qat", if full { 80 } else { 25 }),
+            qat_lr: args.get_f32("qat-lr", 0.008),
+            eval_batches: args.get_usize("eval-batches", if full { 24 } else { 6 }),
+        }
+    }
+}
+
+pub fn load_manifest() -> Result<Manifest> {
+    Manifest::load(Path::new("artifacts"))
+}
+
+fn ckpt_path(model: &str) -> PathBuf {
+    Path::new("artifacts/checkpoints").join(format!("{model}_fp32.bin"))
+}
+
+/// FP32-pretrain `model` (or reuse the cached checkpoint) and return the
+/// session positioned at the FP32 weights + its eval accuracy.
+pub fn ensure_pretrained(manifest: &Manifest, exec: &mut Executor, model: &str,
+                         p: Protocol) -> Result<(Session, f32)> {
+    let mut session = Session::new(manifest, model)?;
+    let nl = session.model.n_quant_layers;
+    let fp = QuantConfig::fp32(nl);
+    let path = ckpt_path(model);
+    if session.load_checkpoint(&path).is_ok() {
+        eprintln!("[{model}] reusing FP32 checkpoint {}", path.display());
+    } else {
+        eprintln!("[{model}] FP32 pre-train {} steps…", p.pretrain_steps);
+        let t0 = std::time::Instant::now();
+        session.train(exec, &fp, p.pretrain_steps, p.pretrain_lr, 0)?;
+        eprintln!("[{model}] trained in {:.0}s", t0.elapsed().as_secs_f64());
+        session.save_checkpoint(&path)?;
+    }
+    let ev = session.evaluate(exec, &fp, p.eval_batches)?;
+    Ok((session, ev.acc))
+}
+
+/// The paper's QAT protocol: restore FP32 weights, calibrate, fine-tune at
+/// (fmt, w/a), evaluate top-1.
+pub fn qat_eval(session: &mut Session, exec: &mut Executor,
+                fp_snapshot: &[dybit::tensor::Tensor], fmt: Format,
+                wbits: u32, abits: u32, p: Protocol, seed0: i32) -> Result<f32> {
+    session.restore(fp_snapshot);
+    let nl = session.model.n_quant_layers;
+    let mut q = QuantConfig::uniform(nl, fmt, wbits, abits);
+    session.calibrate(exec, &mut q, 4242)?;
+    session.train(exec, &q, p.qat_steps, p.qat_lr, seed0)?;
+    let ev = session.evaluate(exec, &q, p.eval_batches)?;
+    Ok(ev.acc)
+}
+
+/// Persist a bench result table as JSON under artifacts/results/ so later
+/// benches (fig6) and EXPERIMENTS.md can consume it.
+pub fn save_results(name: &str, value: Json) -> Result<()> {
+    let dir = Path::new("artifacts/results");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.json")), value.to_string())?;
+    Ok(())
+}
+
+pub fn load_results(name: &str) -> Option<Json> {
+    let text = std::fs::read_to_string(
+        Path::new("artifacts/results").join(format!("{name}.json"))).ok()?;
+    dybit::util::json::parse(&text).ok()
+}
+
+/// Percentage formatting used in all tables (top-1 as the paper prints it).
+pub fn pct(x: f32) -> String {
+    format!("{:.2}", x * 100.0)
+}

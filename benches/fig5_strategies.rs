@@ -1,0 +1,95 @@
+//! Bench: Fig. 5 — speedup & accuracy under both search strategies.
+//!
+//! For each model the paper sweeps the constraint and reports the achieved
+//! speedup (cycle-accurate simulator, ZCU102) and post-QAT accuracy:
+//! row 1 = speedup-constrained (α), row 2 = RMSE-constrained (β).
+//!
+//! Expected shape: speedup grows with α up to ~8x on the ResNet50 stand-in
+//! while accuracy decays; the β strategy keeps accuracy near FP32 at a
+//! decent speedup; the MobileNet stand-in saturates early (depthwise).
+//!
+//! Run: cargo bench --bench fig5_strategies [-- --alphas 2,4,6 --betas 1.5,2,4]
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{ensure_pretrained, load_manifest, pct, Protocol};
+use dybit::formats::Format;
+use dybit::qat::QuantConfig;
+use dybit::runtime::Executor;
+use dybit::search::{run_search, Strategy};
+use dybit::sim::{HwConfig, Simulator};
+use dybit::util::argparse::Args;
+use dybit::util::json::Json;
+use dybit::util::stats::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let p = Protocol::from_args(&args);
+    let models = args.get_list("models", "micromobilenet,miniresnet18,miniresnet50");
+    let defaults = if args.has("full") { ("2,3,4,6,8", "1.25,1.5,2,4") } else { ("2,4,8", "1.5,4") };
+    let alphas: Vec<f64> = args.get_list("alphas", defaults.0)
+        .iter().map(|s| s.parse().unwrap()).collect();
+    let betas: Vec<f64> = args.get_list("betas", defaults.1)
+        .iter().map(|s| s.parse().unwrap()).collect();
+    let qat_steps = p.qat_steps / 2; // many points; shorter fine-tune
+
+    let manifest = load_manifest().expect("run `make artifacts` first");
+    let mut exec = Executor::new(&manifest.dir).expect("pjrt");
+    let mut results = Vec::new();
+
+    for model in &models {
+        let (mut session, fp_acc) =
+            ensure_pretrained(&manifest, &mut exec, model, p).expect("pretrain");
+        let snap = session.snapshot();
+        let weights = session.layer_weights();
+        let acts = session.layer_acts(&mut exec, 31).expect("acts");
+        let layers = session.model.layers.clone();
+
+        println!("\n=== Fig. 5 [{model}] (FP32 top-1 {}) ===", pct(fp_acc));
+        let mut table = Table::new(&["strategy", "constraint", "speedup", "rmse-ratio", "top-1", "drop%"]);
+
+        let mut points: Vec<(Strategy, String, f64)> = alphas
+            .iter()
+            .map(|&a| (Strategy::SpeedupConstrained { alpha: a }, "alpha".to_string(), a))
+            .collect();
+        points.extend(betas.iter().map(|&b| {
+            (Strategy::RmseConstrained { beta: b }, "beta".to_string(), b)
+        }));
+
+        for (strategy, kind, val) in points {
+            let mut sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+            let r = run_search(&mut sim, &weights, &acts, Format::DyBit, strategy, 3);
+            // QAT at the found assignment, then evaluate
+            session.restore(&snap);
+            let mut q = QuantConfig::from_assignment(Format::DyBit, &r.assignment);
+            session.calibrate(&mut exec, &mut q, 909).expect("calibrate");
+            session
+                .train(&mut exec, &q, qat_steps, p.qat_lr, 30_000 + (val * 100.0) as i32)
+                .expect("qat");
+            let ev = session.evaluate(&mut exec, &q, p.eval_batches).expect("eval");
+            let drop = (fp_acc - ev.acc) * 100.0;
+            table.row(vec![
+                kind.clone(),
+                format!("{val}"),
+                format!("{:.2}x", r.speedup),
+                format!("{:.2}", r.rmse_ratio),
+                pct(ev.acc),
+                format!("{drop:+.2}"),
+            ]);
+            results.push(Json::obj(vec![
+                ("model", Json::str(model)),
+                ("strategy", Json::str(&kind)),
+                ("constraint", Json::num(val)),
+                ("speedup", Json::num(r.speedup)),
+                ("rmse_ratio", Json::num(r.rmse_ratio)),
+                ("top1", Json::num(ev.acc as f64)),
+                ("fp32_top1", Json::num(fp_acc as f64)),
+            ]));
+        }
+        table.print();
+    }
+
+    common::save_results("fig5", Json::Arr(results)).expect("save");
+    println!("\nfig5_strategies done (qat steps per point: {qat_steps})");
+}

@@ -1,0 +1,121 @@
+//! Bench: Fig. 6 — the accuracy-speedup trade-off cloud.
+//!
+//! Collects every (speedup, accuracy) point produced by the Fig. 5 sweep
+//! (artifacts/results/fig5.json; run fig5_strategies first, otherwise this
+//! bench runs a reduced sweep itself) and prints the per-model frontier.
+//!
+//! Expected shape: accuracy decays monotonically along the frontier as
+//! speedup grows; the MobileNet stand-in's curve stops at a much lower
+//! max speedup than the ResNets (depthwise saturation, Sec. IV-C).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use dybit::util::json::Json;
+use dybit::util::stats::Table;
+
+fn main() {
+    let data = match common::load_results("fig5") {
+        Some(j) => j,
+        None => {
+            eprintln!("fig5 results missing — running the fig5 sweep first is recommended;");
+            eprintln!("falling back to simulator-only frontier (no QAT accuracy).");
+            sim_only_frontier();
+            return;
+        }
+    };
+    let points = data.as_arr().expect("fig5.json array");
+
+    // group by model
+    let mut models: Vec<String> = Vec::new();
+    for p in points {
+        let m = p.get("model").and_then(Json::as_str).unwrap().to_string();
+        if !models.contains(&m) {
+            models.push(m);
+        }
+    }
+
+    println!("=== Fig. 6: accuracy vs speedup (all strategies pooled) ===");
+    for model in &models {
+        let mut pts: Vec<(f64, f64, String)> = points
+            .iter()
+            .filter(|p| p.get("model").and_then(Json::as_str) == Some(model))
+            .map(|p| {
+                (
+                    p.get("speedup").and_then(Json::as_f64).unwrap(),
+                    p.get("top1").and_then(Json::as_f64).unwrap() * 100.0,
+                    format!(
+                        "{}={}",
+                        p.get("strategy").and_then(Json::as_str).unwrap_or("?"),
+                        p.get("constraint").and_then(Json::as_f64).unwrap_or(0.0)
+                    ),
+                )
+            })
+            .collect();
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let fp = points
+            .iter()
+            .find(|p| p.get("model").and_then(Json::as_str) == Some(model))
+            .and_then(|p| p.get("fp32_top1").and_then(Json::as_f64))
+            .unwrap_or(0.0)
+            * 100.0;
+
+        println!("\n[{model}] FP32 = {fp:.2}%");
+        let mut t = Table::new(&["speedup", "top-1 %", "point"]);
+        for (s, a, l) in &pts {
+            // ascii scatter: one column per 0.5x speedup
+            t.row(vec![format!("{s:.2}x"), format!("{a:.2}"), l.clone()]);
+        }
+        t.print();
+        let max_speedup = pts.last().map(|p| p.0).unwrap_or(1.0);
+        println!("max speedup reached: {max_speedup:.2}x");
+        // simple ascii curve
+        println!("curve (x = speedup 1..10, y = accuracy):");
+        plot(&pts, fp);
+    }
+    println!("\nfig6_tradeoff done");
+}
+
+/// Minimal ASCII scatter of the trade-off curve.
+fn plot(pts: &[(f64, f64, String)], fp: f64) {
+    let rows = 10;
+    let lo = pts.iter().map(|p| p.1).fold(f64::INFINITY, f64::min).min(fp) - 1.0;
+    let hi = fp.max(pts.iter().map(|p| p.1).fold(0.0, f64::max)) + 1.0;
+    for r in 0..rows {
+        let y = hi - (hi - lo) * r as f64 / (rows - 1) as f64;
+        let mut line = format!("{y:6.1} |");
+        for c in 0..40 {
+            let x = 1.0 + 9.0 * c as f64 / 39.0;
+            let hit = pts.iter().any(|p| {
+                (p.0 - x).abs() < 9.0 / 39.0 / 2.0 + 1e-9
+                    && (p.1 - y).abs() < (hi - lo) / (rows - 1) as f64 / 2.0 + 1e-9
+            });
+            line.push(if hit { '*' } else { ' ' });
+        }
+        println!("{line}");
+    }
+    println!("        +{}", "-".repeat(40));
+    println!("         1x{}10x", " ".repeat(34));
+}
+
+/// Fallback when fig5.json is absent: frontier from the simulator alone.
+fn sim_only_frontier() {
+    use dybit::formats::Format;
+    use dybit::search::{run_search, Strategy};
+    use dybit::sim::{HwConfig, Simulator};
+    use dybit::util::rng::Rng;
+
+    let mut rng = Rng::new(5);
+    let layers = dybit::models::synthetic_resnet(8);
+    let weights: Vec<Vec<f32>> = (0..layers.len()).map(|_| rng.normal_vec(2048)).collect();
+    let acts = weights.clone();
+    let mut t = Table::new(&["alpha", "speedup", "rmse-ratio"]);
+    for alpha in [2.0, 3.0, 4.0, 6.0, 8.0] {
+        let mut sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+        let r = run_search(&mut sim, &weights, &acts, Format::DyBit,
+                           Strategy::SpeedupConstrained { alpha }, 3);
+        t.row(vec![format!("{alpha}"), format!("{:.2}x", r.speedup),
+                   format!("{:.2}", r.rmse_ratio)]);
+    }
+    t.print();
+}

@@ -1,0 +1,128 @@
+//! Bench: §Perf hot paths across all three layers.
+//!
+//! L3: quantizer, simulator queries, Algorithm-1 search, JSON, batcher;
+//! L2/L1 (through PJRT): fwd latency (ref vs pallas artifact), train-step
+//! latency, serving throughput under closed-loop load.
+//!
+//! Run: cargo bench --bench perf_hotpath
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Duration;
+
+use dybit::coordinator::{load_test, Policy, Server, ServerConfig};
+use dybit::formats::{quantizer, Format};
+use dybit::qat::{QuantConfig, Session};
+use dybit::runtime::Executor;
+use dybit::search::{run_search, Strategy};
+use dybit::sim::{HwConfig, Prec, Simulator};
+use dybit::util::rng::Rng;
+use dybit::util::stats::{fmt_time, Bench, Table};
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let bench = Bench::new(3, 12);
+    let mut t = Table::new(&["path", "layer", "time/iter", "rate"]);
+
+    // ---- L3: quantizer -------------------------------------------------
+    let x: Vec<f32> = rng.normal_vec(1 << 20);
+    let grid = Format::DyBit.grid(4);
+    let mut out = vec![0.0f32; x.len()];
+    let s = bench.run(|| quantizer::quantize_to_grid(&x, &grid, 0.5, &mut out));
+    t.row(vec!["quantize 1M elems (dybit4)".into(), "L3".into(), fmt_time(s.mean),
+               format!("{:.0} Melem/s", x.len() as f64 / s.mean / 1e6)]);
+
+    let s = bench.run(|| {
+        std::hint::black_box(quantizer::calibrate_scale(&x[..32768], &grid));
+    });
+    t.row(vec!["calibrate_scale 32k".into(), "L3".into(), fmt_time(s.mean), "-".into()]);
+
+    // ---- L3: simulator -------------------------------------------------
+    let layers = dybit::models::synthetic_resnet(16);
+    let nl = layers.len();
+    let s = bench.run(|| {
+        let mut sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+        for i in 0..nl {
+            for pw in Prec::ALL {
+                for pa in Prec::ALL {
+                    std::hint::black_box(sim.layer_cycles(i, pw, pa));
+                }
+            }
+        }
+    });
+    t.row(vec![format!("simulator full sweep ({nl} layers x 9 modes)"), "L3".into(),
+               fmt_time(s.mean), format!("{:.0} queries/s", (nl * 9) as f64 / s.mean)]);
+
+    // ---- L3: Algorithm 1 end to end -------------------------------------
+    let weights: Vec<Vec<f32>> = (0..nl).map(|_| rng.normal_vec(4096)).collect();
+    let acts: Vec<Vec<f32>> = (0..nl).map(|_| rng.normal_vec(2048)).collect();
+    let s = bench.run(|| {
+        let mut sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+        std::hint::black_box(run_search(&mut sim, &weights, &acts, Format::DyBit,
+                                        Strategy::SpeedupConstrained { alpha: 4.0 }, 3));
+    });
+    t.row(vec!["Algorithm 1 search (alpha=4)".into(), "L3".into(), fmt_time(s.mean), "-".into()]);
+
+    // ---- L3: manifest JSON parse ----------------------------------------
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        let s = bench.run(|| {
+            std::hint::black_box(dybit::util::json::parse(&text).unwrap());
+        });
+        t.row(vec![format!("manifest.json parse ({} KB)", text.len() / 1024), "L3".into(),
+                   fmt_time(s.mean), format!("{:.0} MB/s", text.len() as f64 / s.mean / 1e6)]);
+    }
+
+    // ---- L2/L1 via PJRT --------------------------------------------------
+    if let Ok(manifest) = common::load_manifest() {
+        let mut exec = Executor::new(&manifest.dir).expect("pjrt");
+        let mut session = Session::new(&manifest, "mlp").expect("mlp");
+        let nl = session.model.n_quant_layers;
+        let mut q = QuantConfig::uniform(nl, Format::DyBit, 4, 8);
+        session.calibrate(&mut exec, &mut q, 3).expect("calib");
+        let (x, _) = dybit::qat::materialize_batch(&mut exec, &manifest.dir, 0).unwrap();
+
+        let fwd_bench = Bench::new(3, 15);
+        let s = fwd_bench.run(|| {
+            std::hint::black_box(session.forward(&mut exec, &q, &x, false).unwrap());
+        });
+        t.row(vec!["mlp fwd batch32 (ref fake-quant)".into(), "L2".into(), fmt_time(s.mean),
+                   format!("{:.0} img/s", 32.0 / s.mean)]);
+        let s = fwd_bench.run(|| {
+            std::hint::black_box(session.forward(&mut exec, &q, &x, true).unwrap());
+        });
+        t.row(vec!["mlp fwd batch32 (pallas kernel)".into(), "L1".into(), fmt_time(s.mean),
+                   format!("{:.0} img/s", 32.0 / s.mean)]);
+        let s = Bench::new(2, 8).run(|| {
+            session.train_step(&mut exec, &q, 17, 0.01).unwrap();
+        });
+        t.row(vec!["mlp train step batch32".into(), "L2".into(), fmt_time(s.mean),
+                   format!("{:.0} img/s", 32.0 / s.mean)]);
+
+        // serving throughput (closed loop, 4 clients)
+        let cfg = ServerConfig {
+            model: "mlp".into(),
+            qcfg: q.clone(),
+            policy: Policy { max_batch: 32, max_wait: Duration::from_millis(2) },
+            queue_cap: 256,
+            pallas: false,
+        };
+        let server = Server::start(&manifest, cfg).expect("server");
+        let img_elems: usize = manifest.models["mlp"].input.iter().skip(1).product();
+        let _ = server.infer(vec![0.0; img_elems]); // warm
+        let t0 = std::time::Instant::now();
+        let (clients, per) = (4, 128);
+        load_test(&server, clients, per, img_elems).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = server.shutdown();
+        t.row(vec!["serve mlp closed-loop (4 clients)".into(), "L3+L2".into(),
+                   format!("p50 {:.1}ms", snap.lat_p50_ms),
+                   format!("{:.0} req/s (batch avg {:.1})",
+                           (clients * per) as f64 / wall, snap.mean_batch)]);
+    } else {
+        eprintln!("artifacts missing: skipping PJRT rows");
+    }
+
+    t.print();
+    println!("perf_hotpath done");
+}

@@ -1,0 +1,111 @@
+//! Bench: Table I + Fig. 1 + Fig. 2 — the number formats themselves.
+//!
+//! Regenerates (a) the 4-bit DyBit value table, (b) grid shape/density
+//! comparisons across formats (Fig. 1's story), and (c) the RMSE of every
+//! format on the tensor distributions DNNs exhibit (Fig. 2's adaptive-
+//! representation story), plus codec micro-benchmarks.
+//!
+//! Run: cargo bench --bench table1_format
+
+#[path = "common/mod.rs"]
+mod common;
+
+use dybit::formats::dybit as dy;
+use dybit::formats::{quantizer, Format};
+use dybit::util::json::Json;
+use dybit::util::rng::Rng;
+use dybit::util::stats::{Bench, Table};
+
+fn main() {
+    println!("=== Table I: 4-bit unsigned DyBit value table ===");
+    let mut t = Table::new(&["binary", "value", "binary", "value", "binary", "value", "binary", "value"]);
+    let g = dy::grid_unsigned(4);
+    for r in 0..4 {
+        let mut row = Vec::new();
+        for c in 0..4 {
+            let code = c * 4 + r;
+            row.push(format!("{code:04b}"));
+            row.push(format!("{}", g[code]));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    println!("\n=== Fig. 1: grid structure at 8 bits (positive side) ===");
+    let mut t = Table::new(&["format", "values", "min>0", "max", "vals<=1", "vals>max/4"]);
+    for fmt in Format::ALL {
+        let g = fmt.grid(8);
+        let pos: Vec<f64> = g.iter().copied().filter(|&v| v > 0.0).collect();
+        let max = pos.last().copied().unwrap_or(0.0);
+        t.row(vec![
+            fmt.name().into(),
+            g.len().to_string(),
+            format!("{:.3e}", pos.first().copied().unwrap_or(0.0)),
+            format!("{max}"),
+            pos.iter().filter(|&&v| v <= 1.0).count().to_string(),
+            pos.iter().filter(|&&v| v > max / 4.0).count().to_string(),
+        ]);
+    }
+    t.print();
+    println!("(DyBit: dense linear sub-1 region + long exponential tail — the Fig. 1 taper)");
+
+    println!("\n=== Fig. 2: RMSE (Eqn. 2) by tensor distribution, 4-bit ===");
+    let mut rng = Rng::new(2023);
+    let n = 4096;
+    let dists: Vec<(&str, Vec<f32>)> = vec![
+        ("gaussian", (0..n).map(|_| rng.normal() as f32).collect()),
+        ("laplace", (0..n).map(|_| rng.laplace() as f32).collect()),
+        ("heavy-tail", (0..n)
+            .map(|_| (rng.normal() * (1.0 + 5.0 * rng.uniform().powi(6))) as f32)
+            .collect()),
+        ("relu-acts", (0..n).map(|_| (rng.normal() * 1.2 + 0.3).max(0.0) as f32).collect()),
+    ];
+    let mut t = Table::new(&["distribution", "dybit", "int", "flint", "adaptivfloat", "posit"]);
+    let mut results = Vec::new();
+    for (dn, x) in &dists {
+        let mut row = vec![dn.to_string()];
+        for fmt in [Format::DyBit, Format::Int, Format::Flint, Format::AdaptivFloat, Format::Posit] {
+            let e = quantizer::quant_rmse(x, fmt, 4);
+            row.push(format!("{e:.4}"));
+            results.push(Json::obj(vec![
+                ("dist", Json::str(dn)),
+                ("format", Json::str(fmt.name())),
+                ("bits", Json::num(4.0)),
+                ("rmse", Json::num(e)),
+            ]));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("(expected shape: DyBit lowest on heavy-tail/laplace; INT only competitive on pure gaussian)");
+
+    println!("\n=== codec micro-benchmarks ===");
+    let bench = Bench::new(3, 15);
+    let x: Vec<f32> = (0..262_144).map(|_| rng.normal() as f32).collect();
+    let grid = Format::DyBit.grid(4);
+    let mut out = vec![0.0f32; x.len()];
+    let s = bench.run(|| {
+        quantizer::quantize_to_grid(&x, &grid, 0.5, &mut out);
+    });
+    println!(
+        "quantize_to_grid dybit4, 256k elems: {} /iter ({:.1} Melem/s)",
+        dybit::util::stats::fmt_time(s.mean),
+        x.len() as f64 / s.mean / 1e6
+    );
+    let s = bench.run(|| {
+        std::hint::black_box(quantizer::calibrate_scale(&x[..16384], &grid));
+    });
+    println!(
+        "calibrate_scale (54 candidates, 16k elems): {} /iter",
+        dybit::util::stats::fmt_time(s.mean)
+    );
+    let s = bench.run(|| {
+        for c in 0..=255u8 {
+            std::hint::black_box(dy::decode(c, 8));
+        }
+    });
+    println!("dybit8 decode, all 256 codes: {} /iter", dybit::util::stats::fmt_time(s.mean));
+
+    common::save_results("table1_fig2", Json::Arr(results)).expect("save");
+    println!("\ntable1_format done");
+}

@@ -1,0 +1,95 @@
+//! Bench: Table II — Top-1 accuracy with QAT, main models.
+//!
+//! Paper: MobileNetV2 / ResNet18 / ResNet50 on ImageNet.
+//! Here:  micromobilenet / miniresnet18 / miniresnet50 on synthshapes
+//! (DESIGN.md §6 substitution), identical QAT schedule for every format.
+//!
+//! Expected shape (not absolute numbers): INT(4/4) collapses on the
+//! mobilenet stand-in but DyBit(4/4) stays near FP32; DyBit(8/8) ≈ FP32;
+//! DyBit(4/4) ≥ Flint(4/4) ≥ INT(4/4).
+//!
+//! Run: cargo bench --bench table2_accuracy [-- --models a,b --qat N --full]
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{ensure_pretrained, load_manifest, pct, qat_eval, Protocol};
+use dybit::formats::Format;
+use dybit::runtime::Executor;
+use dybit::util::argparse::Args;
+use dybit::util::json::Json;
+use dybit::util::stats::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let p = Protocol::from_args(&args);
+    let models = args.get_list("models", "micromobilenet,miniresnet18,miniresnet50");
+    // (label, format, wbits, abits) — the paper's Table II rows
+    let configs: Vec<(&str, Format, u32, u32)> = vec![
+        ("INT(4/4)", Format::Int, 4, 4),
+        ("INT(8/8)", Format::Int, 8, 8),
+        ("AdaFloat(4/4)", Format::AdaptivFloat, 4, 4),
+        ("Flint(4/4)", Format::Flint, 4, 4),
+        ("Posit(8/8)", Format::Posit, 8, 8),
+        ("DyBit(4/4)", Format::DyBit, 4, 4),
+        ("DyBit(4/8)", Format::DyBit, 4, 8),
+        ("DyBit(8/8)", Format::DyBit, 8, 8),
+    ];
+
+    let manifest = load_manifest().expect("run `make artifacts` first");
+    let mut exec = Executor::new(&manifest.dir).expect("pjrt");
+
+    println!("=== Table II: Top-1 accuracy with QAT (synthshapes; {} pretrain / {} QAT steps) ===",
+             p.pretrain_steps, p.qat_steps);
+    let mut table = Table::new(&{
+        let mut h = vec!["Methods (W/A)"];
+        h.extend(models.iter().map(|s| s.as_str()));
+        h
+    });
+
+    let mut cols: Vec<Vec<(String, f32)>> = Vec::new();
+    for model in &models {
+        let t0 = std::time::Instant::now();
+        let (mut session, fp_acc) =
+            ensure_pretrained(&manifest, &mut exec, model, p).expect("pretrain");
+        let snap = session.snapshot();
+        let mut col = vec![("FP32".to_string(), fp_acc)];
+        for (label, fmt, w, a) in &configs {
+            let acc = qat_eval(&mut session, &mut exec, &snap, *fmt, *w, *a, p, 10_000)
+                .expect("qat");
+            eprintln!("[{model}] {label}: {}", pct(acc));
+            col.push((label.to_string(), acc));
+        }
+        eprintln!("[{model}] done in {:.0}s", t0.elapsed().as_secs_f64());
+        cols.push(col);
+    }
+
+    let mut results = Vec::new();
+    for (ri, (label, _)) in cols[0].iter().enumerate() {
+        let mut row = vec![label.clone()];
+        for (mi, col) in cols.iter().enumerate() {
+            row.push(pct(col[ri].1));
+            results.push(Json::obj(vec![
+                ("model", Json::str(&models[mi])),
+                ("config", Json::str(label)),
+                ("top1", Json::num(col[ri].1 as f64)),
+            ]));
+        }
+        table.row(row);
+    }
+    table.print();
+
+    // the paper's headline check: DyBit(4/4) vs best non-DyBit 4-bit
+    for (mi, model) in models.iter().enumerate() {
+        let get = |l: &str| cols[mi].iter().find(|(k, _)| k == l).map(|(_, v)| *v);
+        if let (Some(dy), Some(int4)) = (get("DyBit(4/4)"), get("INT(4/4)")) {
+            println!("[{model}] DyBit(4/4) - INT(4/4) = {:+.2}%", (dy - int4) * 100.0);
+        }
+        if let (Some(dy), Some(fl)) = (get("DyBit(4/4)"), get("Flint(4/4)")) {
+            println!("[{model}] DyBit(4/4) - Flint(4/4) = {:+.2}%", (dy - fl) * 100.0);
+        }
+    }
+
+    common::save_results("table2", Json::Arr(results)).expect("save");
+    println!("table2_accuracy done (protocol: {p:?})");
+}

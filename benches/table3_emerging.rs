@@ -1,0 +1,74 @@
+//! Bench: Table III — Top-1 accuracy with QAT on emerging models.
+//!
+//! Paper: RegNet-3.2GF / ConvNext-Tiny / ViT-Base.
+//! Here:  microregnet / microconvnext / tinyvit (DESIGN.md §6).
+//!
+//! Expected shape: INT(4/4) collapses on the ConvNext stand-in (the paper
+//! reports 0.1%); DyBit(4/4) recovers most of FP32; DyBit(8/8) ≈ FP32.
+//!
+//! Run: cargo bench --bench table3_emerging [-- --models a,b --full]
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{ensure_pretrained, load_manifest, pct, qat_eval, Protocol};
+use dybit::formats::Format;
+use dybit::runtime::Executor;
+use dybit::util::argparse::Args;
+use dybit::util::json::Json;
+use dybit::util::stats::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let p = Protocol::from_args(&args);
+    let models = args.get_list("models", "microregnet,microconvnext,tinyvit");
+    let configs: Vec<(&str, Format, u32, u32)> = vec![
+        ("INT(4/4)", Format::Int, 4, 4),
+        ("Flint(4/4)", Format::Flint, 4, 4),
+        ("DyBit(4/4)", Format::DyBit, 4, 4),
+        ("DyBit(8/8)", Format::DyBit, 8, 8),
+    ];
+
+    let manifest = load_manifest().expect("run `make artifacts` first");
+    let mut exec = Executor::new(&manifest.dir).expect("pjrt");
+
+    println!("=== Table III: emerging models, Top-1 with QAT ({} pretrain / {} QAT steps) ===",
+             p.pretrain_steps, p.qat_steps);
+    let mut cols: Vec<Vec<(String, f32)>> = Vec::new();
+    for model in &models {
+        let (mut session, fp_acc) =
+            ensure_pretrained(&manifest, &mut exec, model, p).expect("pretrain");
+        let snap = session.snapshot();
+        let mut col = vec![("FP32".to_string(), fp_acc)];
+        for (label, fmt, w, a) in &configs {
+            let acc = qat_eval(&mut session, &mut exec, &snap, *fmt, *w, *a, p, 20_000)
+                .expect("qat");
+            eprintln!("[{model}] {label}: {}", pct(acc));
+            col.push((label.to_string(), acc));
+        }
+        cols.push(col);
+    }
+
+    let mut table = Table::new(&{
+        let mut h = vec!["Methods (W/A)"];
+        h.extend(models.iter().map(|s| s.as_str()));
+        h
+    });
+    let mut results = Vec::new();
+    for ri in 0..cols[0].len() {
+        let mut row = vec![cols[0][ri].0.clone()];
+        for (mi, col) in cols.iter().enumerate() {
+            row.push(pct(col[ri].1));
+            results.push(Json::obj(vec![
+                ("model", Json::str(&models[mi])),
+                ("config", Json::str(&col[ri].0)),
+                ("top1", Json::num(col[ri].1 as f64)),
+            ]));
+        }
+        table.row(row);
+    }
+    table.print();
+
+    common::save_results("table3", Json::Arr(results)).expect("save");
+    println!("table3_emerging done (protocol: {p:?})");
+}

@@ -1,0 +1,68 @@
+//! Hardware-aware quantization search (paper Fig. 4 + Algorithm 1).
+//!
+//! Runs both strategies on a real model's weights/activations:
+//!   * speedup-constrained (Eqn. 3): hit a target speedup, minimize ΣRMSE;
+//!   * RMSE-constrained   (Eqn. 4): stay under an error budget, minimize
+//!     latency;
+//! then verifies the chosen assignment on the cycle-accurate simulator and
+//! evaluates its model accuracy through the AOT runtime.
+//!
+//! Run: cargo run --release --example hw_search -- --model miniresnet18 --alpha 4 --beta 2
+
+use anyhow::Result;
+
+use dybit::formats::Format;
+use dybit::qat::{QuantConfig, Session};
+use dybit::runtime::{Executor, Manifest};
+use dybit::search::{run_search, Strategy};
+use dybit::sim::{HwConfig, Simulator};
+use dybit::util::argparse::Args;
+use dybit::util::stats::Table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "miniresnet18");
+    let alpha = args.get_f64("alpha", 4.0);
+    let beta = args.get_f64("beta", 2.0);
+    let top_k = args.get_usize("topk", 3);
+
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let mut exec = Executor::new(&manifest.dir)?;
+    let mut session = Session::new(&manifest, &model)?;
+
+    // metric inputs: real weights + a calibration batch of activations
+    let weights = session.layer_weights();
+    let acts = session.layer_acts(&mut exec, 17)?;
+    let layers = session.model.layers.clone();
+
+    for strategy in [
+        Strategy::SpeedupConstrained { alpha },
+        Strategy::RmseConstrained { beta },
+    ] {
+        let mut sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+        let r = run_search(&mut sim, &weights, &acts, Format::DyBit, strategy, top_k);
+        println!("\n== {strategy:?} on {model} ==");
+        println!(
+            "speedup {:.2}x | rmse ratio {:.3} | satisfied {} | {} iterations",
+            r.speedup, r.rmse_ratio, r.satisfied, r.iterations
+        );
+
+        let mut t = Table::new(&["layer", "kind", "W", "A"]);
+        for (l, (pw, pa)) in layers.iter().zip(r.assignment.iter()) {
+            t.row(vec![
+                l.name.clone(),
+                format!("{:?}", l.kind),
+                pw.bits().to_string(),
+                pa.bits().to_string(),
+            ]);
+        }
+        t.print();
+
+        // accuracy of the found config through the real runtime
+        let mut q = QuantConfig::from_assignment(Format::DyBit, &r.assignment);
+        session.calibrate(&mut exec, &mut q, 55)?;
+        let ev = session.evaluate(&mut exec, &q, 8)?;
+        println!("model eval under this assignment: loss {:.4} top-1 {:.3}", ev.loss, ev.acc);
+    }
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! End-to-end driver (the repo's headline validation run).
+//!
+//! Trains a real model from scratch through the AOT train-step (FP32),
+//! logging the loss curve; then runs the full paper pipeline on it:
+//! calibrate → QAT fine-tune at DyBit(4/4) and INT(4/4) → evaluate top-1 →
+//! hardware-aware search (both strategies) → simulated speedup.  All three
+//! layers compose: rust drives, XLA executes the JAX graph, the fake-quant
+//! semantics are the Pallas kernel's (verified equal in the test suite).
+//!
+//! Results are printed in EXPERIMENTS.md format.
+//!
+//! Run: cargo run --release --example qat_e2e -- --model miniresnet18 \
+//!        [--pretrain 300] [--qat 80] [--eval-batches 16]
+
+use anyhow::Result;
+
+use dybit::formats::Format;
+use dybit::qat::{QuantConfig, Session};
+use dybit::runtime::{Executor, Manifest};
+use dybit::search::{run_search, Strategy};
+use dybit::sim::{HwConfig, Simulator};
+use dybit::util::argparse::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "miniresnet18");
+    let pretrain = args.get_usize("pretrain", 300);
+    let qat_steps = args.get_usize("qat", 80);
+    let eval_batches = args.get_usize("eval-batches", 16);
+    let lr = args.get_f32("lr", 0.05);
+
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let mut exec = Executor::new(&manifest.dir)?;
+    let mut session = Session::new(&manifest, &model)?;
+    let nl = session.model.n_quant_layers;
+    println!(
+        "model {model} (stands in for {}), {} quant layers, {} params",
+        session.model.stands_for,
+        nl,
+        session.params.iter().map(|p| p.numel()).sum::<usize>()
+    );
+
+    // ---- phase 1: FP32 training from scratch, loss curve ----------------
+    let fp = QuantConfig::fp32(nl);
+    let t0 = std::time::Instant::now();
+    println!("\n== FP32 pre-train: {pretrain} steps, lr {lr} ==");
+    let chunk = 25;
+    for c in 0..pretrain.div_ceil(chunk) {
+        let s0 = c * chunk;
+        let n = chunk.min(pretrain - s0);
+        let ms = session.train(&mut exec, &fp, n, lr, s0 as i32)?;
+        let last = ms.last().unwrap();
+        println!(
+            "step {:4}  loss {:.4}  batch-acc {:.3}  [{:.0}s]",
+            s0 + n, last.loss, last.acc, t0.elapsed().as_secs_f64()
+        );
+    }
+    let fp_eval = session.evaluate(&mut exec, &fp, eval_batches)?;
+    println!("FP32 eval: loss {:.4} top-1 {:.4}", fp_eval.loss, fp_eval.acc);
+    let fp_snapshot = session.snapshot();
+
+    // ---- phase 2: QAT at 4/4 for DyBit vs INT ---------------------------
+    println!("\n== QAT fine-tune ({qat_steps} steps, lr {}) ==", lr * 0.2);
+    let mut rows = Vec::new();
+    for fmt in [Format::DyBit, Format::Int] {
+        session.restore(&fp_snapshot);
+        let mut q = QuantConfig::uniform(nl, fmt, 4, 4);
+        session.calibrate(&mut exec, &mut q, 777)?;
+        session.train(&mut exec, &q, qat_steps, lr * 0.2, pretrain as i32)?;
+        let ev = session.evaluate(&mut exec, &q, eval_batches)?;
+        println!("{:>6}(4/4) top-1 {:.4}", fmt.name(), ev.acc);
+        rows.push((fmt, ev.acc));
+    }
+
+    // ---- phase 3: hardware-aware search on the trained weights ----------
+    session.restore(&fp_snapshot);
+    let weights = session.layer_weights();
+    let acts = session.layer_acts(&mut exec, 99)?;
+    println!("\n== hardware-aware search (Algorithm 1) ==");
+    for strategy in [
+        Strategy::SpeedupConstrained { alpha: 4.0 },
+        Strategy::RmseConstrained { beta: 2.0 },
+    ] {
+        let mut sim = Simulator::new(HwConfig::zcu102(), session.model.layers.clone(), 1);
+        let r = run_search(&mut sim, &weights, &acts, Format::DyBit, strategy, 3);
+        let mut q = QuantConfig::from_assignment(Format::DyBit, &r.assignment);
+        session.restore(&fp_snapshot);
+        session.calibrate(&mut exec, &mut q, 778)?;
+        session.train(&mut exec, &q, qat_steps / 2, lr * 0.2, (pretrain + 500) as i32)?;
+        let ev = session.evaluate(&mut exec, &q, eval_batches)?;
+        println!(
+            "{strategy:?}: speedup {:.2}x rmse-ratio {:.2} -> top-1 {:.4} (drop {:.2}%)",
+            r.speedup,
+            r.rmse_ratio,
+            ev.acc,
+            (fp_eval.acc - ev.acc) * 100.0
+        );
+    }
+
+    println!("\n== summary (EXPERIMENTS.md format) ==");
+    println!("| config | top-1 |");
+    println!("|--------|-------|");
+    println!("| FP32 | {:.4} |", fp_eval.acc);
+    for (fmt, acc) in rows {
+        println!("| {}(4/4) | {:.4} |", fmt.name(), acc);
+    }
+    println!("\nqat_e2e OK ({:.0}s total)", t0.elapsed().as_secs_f64());
+    Ok(())
+}

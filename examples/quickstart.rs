@@ -1,0 +1,75 @@
+//! Quickstart: the whole DyBit pipeline on one small model in ~a minute.
+//!
+//!   1. inspect the DyBit format (Table I);
+//!   2. quantize a tensor with per-tensor scale adaptation + RMSE (Eqn. 2);
+//!   3. simulate the mixed-precision accelerator on a layer;
+//!   4. load the AOT-compiled MLP, quantize it to DyBit(4/8), and compare
+//!      top-1 accuracy against FP32 on held-out data.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use dybit::formats::dybit as dybit_fmt;
+use dybit::formats::{quantizer, Format};
+use dybit::qat::{QuantConfig, Session};
+use dybit::runtime::{Executor, Manifest};
+use dybit::sim::{HwConfig, LayerShape, Prec, Simulator};
+use dybit::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // ---- 1. the format itself (paper Table I) ---------------------------
+    println!("== DyBit 4-bit unsigned value table (paper Table I) ==");
+    for (code, v) in dybit_fmt::grid_unsigned(4).iter().enumerate() {
+        print!("{code:04b}->{v:<5} ");
+        if code % 8 == 7 {
+            println!();
+        }
+    }
+
+    // ---- 2. tensor-level adaptive quantization (Fig. 2) ----------------
+    println!("\n== per-tensor adaptive quantization ==");
+    let mut rng = Rng::new(7);
+    // heavy-tailed weights, the distribution DNNs actually have
+    let w: Vec<f32> = (0..4096)
+        .map(|_| (rng.normal() * (1.0 + 4.0 * rng.uniform().powi(6))) as f32)
+        .collect();
+    for fmt in [Format::DyBit, Format::Int, Format::Flint] {
+        let (_, r) = quantizer::fake_quant(&w, fmt, 4, None);
+        println!("  {:>6} 4-bit: scale {:.4}  RMSE {:.4}", fmt.name(), r.scale, r.rmse);
+    }
+
+    // ---- 3. accelerator simulation --------------------------------------
+    println!("\n== mixed-precision systolic array (ZCU102) ==");
+    let layer = LayerShape::gemm("conv-as-gemm", 576, 144, 64);
+    let mut sim = Simulator::new(HwConfig::zcu102(), vec![layer], 1);
+    for (pw, pa) in [(Prec::B8, Prec::B8), (Prec::B4, Prec::B8), (Prec::B4, Prec::B4), (Prec::B2, Prec::B2)] {
+        let c = sim.layer_cycles(0, pw, pa);
+        println!(
+            "  {}W{}A: {:>7} cycles  (util {:.2}, {:>6} bytes)",
+            pw.bits(), pa.bits(), c.total, c.utilization, c.bytes
+        );
+    }
+
+    // ---- 4. end-to-end: quantize the compiled MLP ----------------------
+    println!("\n== AOT model: FP32 vs DyBit(4/8) ==");
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let mut exec = Executor::new(&manifest.dir)?;
+    let mut session = Session::new(&manifest, "mlp")?;
+    let nl = session.model.n_quant_layers;
+
+    // brief FP32 pre-train so accuracy is meaningful
+    let fp = QuantConfig::fp32(nl);
+    session.train(&mut exec, &fp, 60, 0.05, 0)?;
+    let acc_fp = session.evaluate(&mut exec, &fp, 8)?;
+
+    let mut q = QuantConfig::uniform(nl, Format::DyBit, 4, 8);
+    session.calibrate(&mut exec, &mut q, 1234)?;
+    session.train(&mut exec, &q, 30, 0.01, 60)?; // QAT fine-tune
+    let acc_q = session.evaluate(&mut exec, &q, 8)?;
+
+    println!("  FP32       top-1: {:.3}", acc_fp.acc);
+    println!("  DyBit(4/8) top-1: {:.3}  (after 30 QAT steps)", acc_q.acc);
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Serving demo: the coordinator under closed-loop load.
+//!
+//! Starts the batching server with a DyBit-quantized model and drives it
+//! with concurrent clients sending synthetic images; reports throughput,
+//! batch-formation quality and latency percentiles — the deployment-side
+//! view of the paper's accelerator.
+//!
+//! Run: cargo run --release --example serve -- --model mlp --clients 8 \
+//!        --requests 64 [--wbits 4 --abits 8] [--pallas]
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use dybit::coordinator::{load_test, Policy, Server, ServerConfig};
+use dybit::formats::Format;
+use dybit::qat::QuantConfig;
+use dybit::runtime::Manifest;
+use dybit::util::argparse::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "mlp");
+    let clients = args.get_usize("clients", 8);
+    let requests = args.get_usize("requests", 64);
+    let wbits = args.get_usize("wbits", 4) as u32;
+    let abits = args.get_usize("abits", 8) as u32;
+    let wait_ms = args.get_usize("max-wait-ms", 5) as u64;
+
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let entry = manifest
+        .models
+        .get(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let img_elems: usize = entry.input.iter().skip(1).product();
+
+    let cfg = ServerConfig {
+        model: model.clone(),
+        qcfg: QuantConfig::uniform(entry.n_quant_layers, Format::DyBit, wbits, abits),
+        policy: Policy {
+            max_batch: entry.batch,
+            max_wait: Duration::from_millis(wait_ms),
+        },
+        queue_cap: 512,
+        pallas: args.has("pallas"),
+    };
+
+    println!(
+        "serving {model} as DyBit({wbits}/{abits}), batch<= {}, wait {}ms, {} clients x {} reqs",
+        entry.batch, wait_ms, clients, requests
+    );
+    let server = Server::start(&manifest, cfg)?;
+
+    // one warm-up request so compile time doesn't pollute the measurement
+    let _ = server.infer(vec![0.0; img_elems])?;
+
+    let t0 = std::time::Instant::now();
+    load_test(&server, clients, requests, img_elems)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let snap = server.shutdown();
+    println!("\n== results ==");
+    println!("requests          {}", snap.requests);
+    println!("batches           {} (mean size {:.1}, padded slots {})",
+             snap.batches, snap.mean_batch, snap.padded_slots);
+    println!("batch latency     p50 {:.1}ms  p95 {:.1}ms  mean {:.1}ms",
+             snap.lat_p50_ms, snap.lat_p95_ms, snap.lat_mean_ms);
+    println!("throughput        {:.1} req/s (load-test wall {:.1}s)",
+             (clients * requests) as f64 / wall, wall);
+    Ok(())
+}

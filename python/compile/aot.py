@@ -1,0 +1,266 @@
+"""AOT compiler: lower every model/step to HLO text + write the manifest.
+
+This is the only python that ever needs to run; after ``make artifacts`` the
+rust binary is self-contained.  Per model we emit:
+
+  <model>_fwd.hlo.txt        (params.., x, qcfg..)           -> logits
+  <model>_fwd_acts.hlo.txt   (params.., x, qcfg..)           -> logits, taps
+  <model>_train.hlo.txt      (params.., moms.., seed, qcfg.., lr)
+                              -> new_params.., new_moms.., loss, acc
+  <model>_eval.hlo.txt       (params.., seed, qcfg..)        -> loss, acc
+  <model>_params.bin          initial parameters (f32 LE, leaf order)
+
+plus ``mlp_fwd_pallas.hlo.txt`` / ``miniresnet18_fwd_pallas.hlo.txt`` (the
+L1 Pallas fake-quant path lowered into the model), two standalone kernel
+artifacts for rust-side kernel tests/benches, ``formats_golden.json`` (grid
++ codec vectors for the bit-exact rust cross-check) and ``manifest.json``
+describing every artifact's I/O signature, parameter leaves and layer
+geometry.  qcfg input order is always: wluts, aluts, ascales, wq_en, aq_en.
+
+Interchange is HLO *text*: the image's xla_extension 0.5.1 rejects jax>=0.5
+serialized protos (64-bit instruction ids); the text parser reassigns ids.
+Lowered with return_tuple=True; rust unwraps the tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import formats as F
+from . import model as M
+from . import train as T
+from .kernels.fake_quant import fake_quant_pallas
+from .kernels.qgemm import qgemm_pallas
+
+LUT = F.LUT_SIZE
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(name, arr):
+    return {"name": name, "shape": list(arr.shape),
+            "dtype": str(arr.dtype)}
+
+
+def _qcfg_args(nl):
+    """Example qcfg arrays in canonical order."""
+    return [
+        ("wluts", jnp.zeros((nl, LUT), jnp.float32)),
+        ("aluts", jnp.zeros((nl, LUT), jnp.float32)),
+        ("ascales", jnp.ones((nl,), jnp.float32)),
+        ("wq_en", jnp.zeros((nl,), jnp.float32)),
+        ("aq_en", jnp.zeros((nl,), jnp.float32)),
+    ]
+
+
+def _qcfg_dict(args):
+    return {k: v for k, v in args}
+
+
+def lower_model(name: str, outdir: str, pallas_fwd: bool) -> dict:
+    """Lower all artifacts for one model; returns its manifest entry."""
+    params, pspecs, lspecs = M.build(name)
+    nl = len(lspecs)
+    entry = {
+        "stands_for": M.MODELS[name][1],
+        "batch": M.BATCH,
+        "input": [M.BATCH, M.IMG, M.IMG, 3],
+        "classes": M.NCLASS,
+        "n_quant_layers": nl,
+        "layers": [ls.to_json() for ls in lspecs],
+        "params": [], "artifacts": {},
+    }
+
+    # ---- params.bin (f32 LE, leaf order) --------------------------------
+    off = 0
+    blob = bytearray()
+    for spec, p in zip(pspecs, params):
+        a = np.asarray(p, dtype=np.float32)
+        entry["params"].append({"name": spec.name, "shape": list(spec.shape),
+                                "offset": off, "nelems": int(a.size)})
+        blob += a.tobytes()
+        off += int(a.size)
+    pfile = f"{name}_params.bin"
+    with open(os.path.join(outdir, pfile), "wb") as f:
+        f.write(bytes(blob))
+    entry["params_file"] = pfile
+    entry["params_total_elems"] = off
+
+    x = jnp.zeros((M.BATCH, M.IMG, M.IMG, 3), jnp.float32)
+    qargs = _qcfg_args(nl)
+    qvals = [v for _, v in qargs]
+    seed = jnp.zeros((), jnp.int32)
+    lr = jnp.zeros((), jnp.float32)
+    moms = [jnp.zeros_like(p) for p in params]
+    np_ = len(params)
+
+    def emit(tag, fn, example_args, in_names, out_names):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{tag}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        entry["artifacts"][tag] = {
+            "file": fname,
+            "inputs": [_spec(n, a) for n, a in zip(in_names, example_args)],
+            "outputs": out_names,
+        }
+        print(f"  {fname}: {len(text)} chars, "
+              f"{len(example_args)} inputs")
+
+    pnames = [f"p:{s.name}" for s in pspecs]
+    mnames = [f"m:{s.name}" for s in pspecs]
+    qnames = [k for k, _ in qargs]
+
+    # fwd
+    def fwd_flat(*args):
+        ps, xx, qv = list(args[:np_]), args[np_], args[np_ + 1:]
+        return (M.apply(name, ps, xx, qcfg=_qcfg_dict(zip(qnames, qv))),)
+
+    emit("fwd", fwd_flat, [*params, x, *qvals],
+         [*pnames, "x", *qnames], ["logits"])
+
+    # fwd_acts
+    def fwd_acts_flat(*args):
+        ps, xx, qv = list(args[:np_]), args[np_], args[np_ + 1:]
+        return M.apply(name, ps, xx, qcfg=_qcfg_dict(zip(qnames, qv)),
+                       with_acts=True)
+
+    emit("fwd_acts", fwd_acts_flat, [*params, x, *qvals],
+         [*pnames, "x", *qnames], ["logits", "act_taps"])
+
+    # train step
+    tstep = T.make_train_step(name)
+
+    def train_flat(*args):
+        ps = list(args[:np_])
+        ms = list(args[np_:2 * np_])
+        sd = args[2 * np_]
+        qv = args[2 * np_ + 1:2 * np_ + 6]
+        lr_ = args[2 * np_ + 6]
+        nps, nms, loss, acc = tstep(ps, ms, sd, _qcfg_dict(zip(qnames, qv)),
+                                    lr_)
+        return (*nps, *nms, loss, acc)
+
+    emit("train", train_flat, [*params, *moms, seed, *qvals, lr],
+         [*pnames, *mnames, "seed", *qnames, "lr"],
+         [*pnames, *mnames, "loss", "acc"])
+
+    # eval step
+    estep = T.make_eval_step(name)
+
+    def eval_flat(*args):
+        ps = list(args[:np_])
+        sd = args[np_]
+        qv = args[np_ + 1:]
+        loss, acc = estep(ps, sd, _qcfg_dict(zip(qnames, qv)))
+        return (loss, acc)
+
+    emit("eval", eval_flat, [*params, seed, *qvals],
+         [*pnames, "seed", *qnames], ["loss", "acc"])
+
+    # Pallas-kernel fwd variant (L1 on the inference path)
+    if pallas_fwd:
+        def fwd_pallas_flat(*args):
+            ps, xx, qv = list(args[:np_]), args[np_], args[np_ + 1:]
+            return (M.apply(name, ps, xx,
+                            qcfg=_qcfg_dict(zip(qnames, qv)), pallas=True),)
+
+        emit("fwd_pallas", fwd_pallas_flat, [*params, x, *qvals],
+             [*pnames, "x", *qnames], ["logits"])
+
+    return entry
+
+
+def lower_data(outdir: str) -> dict:
+    """`data_batch.hlo.txt`: seed -> (x, y) — the synthshapes generator as
+    a standalone artifact so rust can materialize batches for calibration
+    and serving without porting the RNG."""
+    seed = jnp.zeros((), jnp.int32)
+    lowered = jax.jit(lambda s: T.synth_batch(s)).lower(seed)
+    with open(os.path.join(outdir, "data_batch.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {"file": "data_batch.hlo.txt",
+            "inputs": [_spec("seed", seed)], "outputs": ["x", "y"]}
+
+
+def lower_kernels(outdir: str) -> dict:
+    """Standalone L1 kernel artifacts for rust kernel tests + benches."""
+    out = {}
+    xk = jnp.zeros((M.BATCH, 4096), jnp.float32)
+    lut = jnp.zeros((LUT,), jnp.float32)
+    s = jnp.ones((), jnp.float32)
+    lowered = jax.jit(
+        lambda a, l, sc: (fake_quant_pallas(a, l, sc),)).lower(xk, lut, s)
+    with open(os.path.join(outdir, "kernel_fake_quant.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    out["fake_quant"] = {
+        "file": "kernel_fake_quant.hlo.txt",
+        "inputs": [_spec("x", xk), _spec("lut", lut), _spec("scale", s)],
+        "outputs": ["y"]}
+
+    xg = jnp.zeros((64, 256), jnp.float32)
+    codes = jnp.zeros((256, 128), jnp.int32)
+    lc = jnp.zeros((LUT,), jnp.float32)
+    lowered = jax.jit(
+        lambda a, c, l, sc: (qgemm_pallas(a, c, l, sc),)).lower(
+            xg, codes, lc, s)
+    with open(os.path.join(outdir, "kernel_qgemm.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    out["qgemm"] = {
+        "file": "kernel_qgemm.hlo.txt",
+        "inputs": [_spec("x", xg), _spec("codes", codes),
+                   _spec("lut_codes", lc), _spec("scale", s)],
+        "outputs": ["y"]}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land beside it")
+    ap.add_argument("--models", default=",".join(M.MODELS),
+                    help="comma-separated subset")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = {"lut_size": LUT, "batch": M.BATCH,
+                "img": M.IMG, "classes": M.NCLASS,
+                "eval_seed_base": T.EVAL_SEED_BASE,
+                "momentum": T.MOMENTUM,
+                "models": {}, "kernels": {}}
+
+    with open(os.path.join(outdir, "formats_golden.json"), "w") as f:
+        json.dump(F.golden_dump(), f)
+    print("wrote formats_golden.json")
+
+    print("lowering standalone kernels…")
+    manifest["kernels"] = lower_kernels(outdir)
+    manifest["data_batch"] = lower_data(outdir)
+
+    for name in args.models.split(","):
+        print(f"lowering {name}…")
+        manifest["models"][name] = lower_model(
+            name, outdir, pallas_fwd=(name in ("mlp", "miniresnet18")))
+
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

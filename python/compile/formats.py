@@ -1,0 +1,324 @@
+"""Numeric-format value grids for DyBit and the paper's baselines.
+
+This is the build-time (python) mirror of ``rust/src/formats/``.  Every
+format is reduced to a *sorted value grid*: the finite set of representable
+reals at scale 1.0.  Per-tensor adaptation (Fig. 2 of the paper) multiplies
+the grid by a scale ``s``; fake-quantization rounds ``x / s`` to the nearest
+grid point.  The grids generated here are exported to
+``artifacts/formats_golden.json`` by ``aot.py`` and cross-checked bit-exactly
+by the rust test-suite, so the two halves of the system can never drift.
+
+DyBit definition (paper Eqn. 1 + Table I): an n-bit signed DyBit is one sign
+bit plus an m = n-1 bit magnitude field.  Let ``i`` be the number of leading
+1s in the magnitude field (terminated by the first 0, which is consumed, or
+by the end of the field):
+
+* all-zero field            -> 0
+* i = 0 (starts with 0)     -> subnormal: remaining m-1 bits are a fraction
+                               x, value = x / 2^(m-1)         (linear [0,1))
+* i >= 1                    -> k = m - i - 1 fraction bits remain
+                               value = 2^(i-1) * (1 + x / 2^k)
+* all-ones field            -> i = m, k = 0, value = 2^(m-1)  (Eqn.1 "max")
+
+The 4-bit *unsigned* table (m = 4) reproduces the paper's Table I exactly;
+the 8-bit decoder example ``11001010 -> exp 001, mantissa 10101000`` is the
+i=2 case.  See ``python/tests/test_formats.py``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+LUT_SIZE = 256  # max grid cardinality across supported formats (<= 8 bits)
+
+
+# ---------------------------------------------------------------------------
+# magnitude-field decoders (one per format family)
+# ---------------------------------------------------------------------------
+
+def dybit_magnitude(code: int, m: int) -> float:
+    """Decode an m-bit DyBit magnitude field (paper Eqn. 1)."""
+    if code == 0:
+        return 0.0
+    # i = number of leading ones in the m-bit field
+    i = 0
+    for b in range(m - 1, -1, -1):
+        if (code >> b) & 1:
+            i += 1
+        else:
+            break
+    if i == 0:
+        # subnormal: low m-1 bits are the fraction over 2^(m-1)
+        x = code & ((1 << (m - 1)) - 1)
+        return x / float(1 << (m - 1))
+    if i == m:
+        return float(1 << (m - 1))  # all-ones: max = 2^(m-1)
+    k = m - i - 1  # fraction bits after the consumed terminating zero
+    x = code & ((1 << k) - 1)
+    return (2.0 ** (i - 1)) * (1.0 + x / float(1 << k)) if k > 0 else 2.0 ** (i - 1)
+
+
+def dybit_encode_magnitude(value: float, m: int) -> int:
+    """Nearest-value encode |value| into an m-bit DyBit magnitude code."""
+    grid = [dybit_magnitude(c, m) for c in range(1 << m)]
+    order = sorted(range(1 << m), key=lambda c: grid[c])
+    best, bestc = None, 0
+    for c in order:
+        d = abs(grid[c] - value)
+        if best is None or d < best:
+            best, bestc = d, c
+    return bestc
+
+
+def flint_magnitudes(n: int) -> list[float]:
+    """Flint [ANT, Guo et al. 2022] positive grid — our reconstruction.
+
+    ANT's flint is a tapered float-int hybrid.  A literal leading-zero
+    unary-exponent reading degenerates to a *uniform* grid at 4 bits, which
+    contradicts ANT's own Table results, so we reconstruct flint as the
+    nearest well-defined member of the same family: a minifloat with
+    subnormals, es = ceil((n-1)/2) exponent bits and n-1-es mantissa bits.
+    At n=4 this is E2M1: ±{0.5,1,1.5,2,3,4,6} ∪ {0, ±0.25-denorm} — tapered
+    like flint, with a smaller dynamic range and no dense linear segment
+    compared to DyBit, which reproduces the paper's DyBit>Flint ordering.
+    Documented in DESIGN.md §6 (substitutions).
+    """
+    es = (n - 1 + 1) // 2
+    mb = n - 1 - es
+    assert mb >= 1, "flint reconstruction needs >=1 mantissa bit"
+    vals = []
+    for f in range(1, 1 << mb):  # subnormals: (f/2^mb) * 2^1  (E=0)
+        vals.append((f / float(1 << mb)) * 2.0)
+    for E in range(1, 1 << es):  # normals, bias 0: 2^E * (1+f/2^mb)
+        for f in range(1 << mb):
+            vals.append((2.0 ** E) * (1.0 + f / float(1 << mb)))
+    return vals
+
+
+def posit_value(code: int, n: int, es: int) -> float | None:
+    """Decode an n-bit posit (two's complement); None for NaR."""
+    mask = (1 << n) - 1
+    if code == 0:
+        return 0.0
+    if code == (1 << (n - 1)):
+        return None  # NaR
+    sign = -1.0 if code >> (n - 1) else 1.0
+    if sign < 0:
+        code = (-code) & mask  # two's complement magnitude
+    bits = code & ((1 << (n - 1)) - 1)  # strip sign
+    nb = n - 1
+    first = (bits >> (nb - 1)) & 1
+    run = 0
+    for b in range(nb - 1, -1, -1):
+        if ((bits >> b) & 1) == first:
+            run += 1
+        else:
+            break
+    k = run - 1 if first == 1 else -run
+    rest_len = max(nb - run - 1, 0)  # regime terminator consumed
+    rest = bits & ((1 << rest_len) - 1) if rest_len > 0 else 0
+    e_len = min(es, rest_len)
+    e = (rest >> (rest_len - e_len)) if e_len > 0 else 0
+    e <<= es - e_len  # pad truncated exponent bits with zeros
+    f_len = rest_len - e_len
+    f = rest & ((1 << f_len) - 1) if f_len > 0 else 0
+    frac = 1.0 + (f / float(1 << f_len) if f_len > 0 else 0.0)
+    useed = 2.0 ** (2 ** es)
+    return sign * (useed ** k) * (2.0 ** e) * frac
+
+
+def adaptivfloat_magnitudes(n: int, e: int) -> list[float]:
+    """AdaptivFloat [Tambe et al. 2020] positive grid at exponent bias 0.
+
+    sign + e exponent bits + (n-1-e) mantissa bits, no subnormals; the
+    per-tensor exponent bias is absorbed by the quantizer scale.
+    """
+    mb = n - 1 - e
+    assert mb >= 1, "adaptivfloat needs >=1 mantissa bit"
+    vals = []
+    for E in range(1 << e):
+        for f in range(1 << mb):
+            if E == 0 and f == 0:
+                continue  # the all-zero code is sacrificed to represent 0
+            vals.append((2.0 ** E) * (1.0 + f / float(1 << mb)))
+    return vals
+
+
+# ---------------------------------------------------------------------------
+# grid constructors (public API)
+# ---------------------------------------------------------------------------
+
+def _signed_grid(mags: list[float]) -> np.ndarray:
+    """Mirror positive magnitudes, add zero, sort, dedupe."""
+    pos = sorted(set(m for m in mags if m > 0))
+    grid = [-v for v in reversed(pos)] + [0.0] + pos
+    return np.asarray(grid, dtype=np.float64)
+
+
+def dybit_grid(n: int) -> np.ndarray:
+    """Signed n-bit DyBit grid (1 sign + n-1 magnitude bits), scale 1.0."""
+    assert 2 <= n <= 8
+    m = n - 1
+    return _signed_grid([dybit_magnitude(c, m) for c in range(1 << m)])
+
+
+def dybit_grid_unsigned(m: int) -> np.ndarray:
+    """Unsigned m-bit DyBit grid (Table I uses m = 4)."""
+    return np.asarray(sorted(dybit_magnitude(c, m) for c in range(1 << m)),
+                      dtype=np.float64)
+
+
+def int_grid(n: int) -> np.ndarray:
+    """Symmetric uniform INT grid: {-(2^(n-1)-1) .. 2^(n-1)-1}."""
+    q = (1 << (n - 1)) - 1
+    return np.arange(-q, q + 1, dtype=np.float64)
+
+
+def posit_grid(n: int, es: int = 1) -> np.ndarray:
+    vals = [posit_value(c, n, es) for c in range(1 << n)]
+    vals = sorted(set(v for v in vals if v is not None))
+    return np.asarray(vals, dtype=np.float64)
+
+
+def adaptivfloat_grid(n: int, e: int | None = None) -> np.ndarray:
+    if e is None:
+        e = {2: 1, 3: 1, 4: 2, 5: 2, 6: 3, 7: 3, 8: 3}[n]
+    return _signed_grid(adaptivfloat_magnitudes(n, e))
+
+
+def flint_grid(n: int) -> np.ndarray:
+    return _signed_grid(flint_magnitudes(n))
+
+
+FORMATS = {
+    "dybit": dybit_grid,
+    "int": int_grid,
+    "posit": lambda n: posit_grid(n, es=1),
+    "adaptivfloat": adaptivfloat_grid,
+    "flint": flint_grid,
+}
+
+
+def grid(fmt: str, n: int) -> np.ndarray:
+    """Sorted value grid for format ``fmt`` at bitwidth ``n`` (scale 1.0)."""
+    return FORMATS[fmt](n)
+
+
+def padded_lut(fmt: str, n: int) -> np.ndarray:
+    """Fixed-size (LUT_SIZE) ascending LUT: the runtime interchange unit.
+
+    Grids smaller than LUT_SIZE are right-padded by repeating the maximum,
+    which is a no-op for nearest-value quantization (duplicate midpoints
+    collapse).  This is the tensor rust feeds to the fwd/train HLO.
+    """
+    g = grid(fmt, n).astype(np.float32)
+    assert g.size <= LUT_SIZE, (fmt, n, g.size)
+    return np.pad(g, (0, LUT_SIZE - g.size), mode="edge")
+
+
+def midpoints(lut: np.ndarray) -> np.ndarray:
+    """Decision boundaries between adjacent LUT entries."""
+    return (lut[:-1] + lut[1:]) / 2.0
+
+
+# ---------------------------------------------------------------------------
+# quantizer: per-tensor scale calibration + fake-quant + RMSE (Eqn. 2)
+# ---------------------------------------------------------------------------
+
+def quantize_to_grid(x: np.ndarray, g: np.ndarray, scale: float) -> np.ndarray:
+    """Round x to the nearest point of scale*g (numpy reference)."""
+    mids = midpoints(g.astype(np.float64)) * scale
+    idx = np.searchsorted(mids, x.astype(np.float64), side="right")
+    return (g[idx] * scale).astype(x.dtype)
+
+
+def maxabs_scale(x: np.ndarray, g: np.ndarray) -> float:
+    """Map the tensor's max magnitude onto the grid's max value."""
+    gm = float(np.max(np.abs(g)))
+    xm = float(np.max(np.abs(x)))
+    return (xm / gm) if xm > 0 and gm > 0 else 1.0
+
+
+def rmse(x: np.ndarray, xq: np.ndarray) -> float:
+    """Paper Eqn. 2: RMSE normalized by the tensor's standard deviation."""
+    sigma = float(np.std(x))
+    if sigma == 0.0:
+        sigma = 1.0
+    return float(np.sqrt(np.mean(((x - xq) / sigma) ** 2)))
+
+
+def calibrate_scale(x: np.ndarray, g: np.ndarray) -> float:
+    """RMSE-optimal per-tensor scale search (Fig. 2 adaptation).
+
+    Scans power-of-two multiples of the max-abs scale in BOTH directions
+    (tapered grids like DyBit often prefer scales above max-abs, trading a
+    coarser far tail for a finer dense region) plus a fine multiplier
+    sweep — the same candidate ladder the rust quantizer uses bit-exactly.
+    """
+    base = maxabs_scale(x, g)
+    if base == 0.0:
+        return 1.0
+    best_s, best_e = base, math.inf
+    for j in range(-6, 12):
+        for mult in (1.0, 0.75, 0.5):
+            s = base * mult * (2.0 ** -j)
+            xq = quantize_to_grid(x, g, s)
+            e = rmse(x, xq)
+            if e < best_e:
+                best_s, best_e = s, e
+    return best_s
+
+
+def fake_quant(x: np.ndarray, fmt: str, n: int,
+               scale: float | None = None) -> tuple[np.ndarray, float]:
+    """Quantize-dequantize x in format (fmt, n); returns (xq, scale)."""
+    g = grid(fmt, n)
+    s = calibrate_scale(x, g) if scale is None else scale
+    return quantize_to_grid(x, g, s), s
+
+
+# ---------------------------------------------------------------------------
+# DyBit codec on integer codes (bit-exact mirror of rust formats/dybit.rs)
+# ---------------------------------------------------------------------------
+
+def dybit_decode_code(code: int, n: int) -> float:
+    """Signed n-bit DyBit code -> value.  MSB is the sign bit.
+
+    The negative-zero code (sign=1, magnitude=0) is remapped to -2^(m-1)
+    (i.e. -max) so all 2^n codes are meaningful; documented in DESIGN.md §5.
+    """
+    m = n - 1
+    sign = (code >> m) & 1
+    mag = code & ((1 << m) - 1)
+    if sign and mag == 0:
+        return -float(1 << (m - 1))
+    v = dybit_magnitude(mag, m)
+    return -v if sign else v
+
+
+def dybit_encode_code(value: float, n: int) -> int:
+    """Nearest-value encode into a signed n-bit DyBit code."""
+    m = n - 1
+    grid_codes = [(dybit_decode_code(c, n), c) for c in range(1 << n)]
+    best = min(grid_codes, key=lambda vc: (abs(vc[0] - value), vc[1]))
+    return best[1]
+
+
+def golden_dump() -> dict:
+    """All grids + codec vectors for the rust cross-check (JSON-able)."""
+    out = {"grids": {}, "dybit_codes": {}, "table1_unsigned4":
+           dybit_grid_unsigned(4).tolist()}
+    for fmt in FORMATS:
+        for n in (2, 3, 4, 5, 6, 7, 8):
+            if fmt == "adaptivfloat" and n == 2:
+                continue  # needs >=1 mantissa + >=1 exponent bit
+            try:
+                out["grids"][f"{fmt}{n}"] = grid(fmt, n).tolist()
+            except AssertionError:
+                continue
+    for n in (2, 4, 8):
+        out["dybit_codes"][str(n)] = [dybit_decode_code(c, n)
+                                      for c in range(1 << n)]
+    return out

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels + pure-jnp oracles for the DyBit hot paths."""
+from . import ref  # noqa: F401
+from .fake_quant import fake_quant_pallas  # noqa: F401
+from .qgemm import qgemm_pallas  # noqa: F401

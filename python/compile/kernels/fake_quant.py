@@ -1,0 +1,88 @@
+"""Pallas LUT fake-quantization kernel (L1).
+
+The TPU re-expression of the paper's mixed-precision decoder (Fig. 3b):
+instead of a leading-one detector + shifter at the systolic-array edge, the
+nonuniform DyBit grid lives in VMEM as a 256-entry LUT and decoding is a
+branchless binary search + gather.  One kernel serves every format and
+bitwidth because the grid is *data* (see DESIGN.md §2).
+
+Kernel contract (must match ``ref.quantize_to_lut``):
+    out = lut[searchsorted(midpoints(lut), x, side="right")]
+
+Scale handling lives in the wrapper: q(x, lut, s) = s * q(x/s, lut, 1), so
+the kernel body stays scale-free and the scalar never enters VMEM.
+
+interpret=True everywhere (CPU PJRT cannot run Mosaic custom-calls); the
+BlockSpec structure is still written for TPU: (8,128) f32 tiles = one VPU
+register row, LUT replicated per-block in VMEM (1 KiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import quantize_to_lut
+
+LUT_SIZE = 256
+_BLOCK_R = 8     # sublane dimension of a f32 VPU tile
+_BLOCK_C = 128   # lane dimension
+
+
+def _fq_kernel(x_ref, lut_ref, o_ref):
+    """Branchless binary search of each element into the LUT midpoints."""
+    x = x_ref[...]
+    lut = lut_ref[...]
+    mids = (lut[:-1] + lut[1:]) * 0.5                      # [255]
+    big = jnp.full((1,), jnp.inf, dtype=mids.dtype)
+    mids = jnp.concatenate([mids, big])                    # [256] guard
+    # searchsorted(mids, x, "right") = count(mids <= x), via 8 halving steps
+    pos = jnp.zeros(x.shape, dtype=jnp.int32)
+    for step in (128, 64, 32, 16, 8, 4, 2, 1):
+        cand = pos + step
+        m = jnp.take(mids, cand - 1)
+        pos = jnp.where(m <= x, cand, pos)
+    o_ref[...] = jnp.take(lut, pos)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fake_quant_pallas(x: jnp.ndarray, lut: jnp.ndarray, scale: jnp.ndarray,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Fake-quantize ``x`` onto ``scale*lut`` using the Pallas kernel.
+
+    Accepts any shape/f32 input; pads to (8,128) tile multiples, runs the
+    grid, and slices back.  Matches ``ref.quantize_to_lut`` exactly.
+    """
+    assert lut.shape == (LUT_SIZE,), lut.shape
+    orig_shape = x.shape
+    s = jnp.maximum(scale, 1e-12).astype(x.dtype)
+    flat = (x / s).reshape(-1)
+    n = flat.shape[0]
+    cols = _BLOCK_C
+    rows = -(-n // cols)
+    rows_p = -(-rows // _BLOCK_R) * _BLOCK_R
+    pad = rows_p * cols - n
+    flat = jnp.pad(flat, (0, pad))
+    grid_in = flat.reshape(rows_p, cols)
+
+    out = pl.pallas_call(
+        _fq_kernel,
+        grid=(rows_p // _BLOCK_R,),
+        in_specs=[
+            pl.BlockSpec((_BLOCK_R, _BLOCK_C), lambda i: (i, 0)),
+            pl.BlockSpec((LUT_SIZE,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK_R, _BLOCK_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, cols), x.dtype),
+        interpret=interpret,
+    )(grid_in, lut.astype(x.dtype))
+
+    return (out.reshape(-1)[:n] * s).reshape(orig_shape)
+
+
+def fake_quant_check(x, lut, scale):
+    """Convenience: (pallas, ref) pair for tests."""
+    return fake_quant_pallas(x, lut, scale), quantize_to_lut(x, lut, scale)

@@ -1,0 +1,83 @@
+"""Pallas fused decode-GEMM kernel (L1).
+
+The paper's accelerator keeps weights in low-bit DyBit codes in external
+memory and decodes them at the edge of the systolic array (Fig. 3a); MACs
+run on decoded values with FP partial sums.  On TPU the same insight is:
+codes travel HBM→VMEM at 2/4/8 bits (bandwidth win), a VMEM LUT gather
+decodes them, and the MXU consumes the decoded tile — partial sums stay
+f32 in the accumulator.  This kernel fuses decode + matmul per tile so the
+decoded weights never round-trip to HBM.
+
+Contract (must match ``ref.qgemm_ref``):
+    y[M,N] = x[M,K] @ (scale * lut_codes[codes[K,N]])
+
+``lut_codes`` is code-indexed (code -> value), not the sorted quantization
+LUT.  Block sizes follow MXU geometry (128-multiples); interpret=True for
+CPU execution, structure written for TPU (see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LUT_SIZE = 256
+
+
+def _qgemm_kernel(x_ref, codes_ref, lut_ref, o_ref):
+    """One (i, j, k) grid step: decode the weight tile, MAC into o_ref."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = jnp.take(lut_ref[...], codes_ref[...])  # VMEM decode (Fig. 3b analogue)
+    o_ref[...] += jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(a: jnp.ndarray, mults: tuple[int, ...]) -> jnp.ndarray:
+    pads = [(0, -dim % m) for dim, m in zip(a.shape, mults)]
+    return jnp.pad(a, pads)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def qgemm_pallas(x: jnp.ndarray, codes: jnp.ndarray, lut_codes: jnp.ndarray,
+                 scale: jnp.ndarray, bm: int = 128, bn: int = 128,
+                 bk: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """y = x @ (scale * lut_codes[codes]) with tile-fused decode.
+
+    x: [M, K] f32; codes: [K, N] int (any width, values < 256);
+    lut_codes: [256] f32; scale: scalar.  Pads to block multiples.
+    """
+    assert lut_codes.shape == (LUT_SIZE,), lut_codes.shape
+    m, k = x.shape
+    k2, n = codes.shape
+    assert k == k2, (x.shape, codes.shape)
+    bm, bn, bk = min(bm, -(-m // 8) * 8), min(bn, -(-n // 128) * 128), min(bk, -(-k // 128) * 128)
+
+    xp = _pad_to(x, (bm, bk))
+    cp = _pad_to(codes.astype(jnp.int32), (bk, bn))
+    mp, kp = xp.shape
+    _, np_ = cp.shape
+
+    out = pl.pallas_call(
+        _qgemm_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((LUT_SIZE,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, cp, lut_codes.astype(jnp.float32))
+
+    return out[:m, :n] * scale

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness reference).
+
+These functions define the *semantics*; ``fake_quant.py`` / ``qgemm.py``
+must match them to float tolerance (pytest + hypothesis enforce this).
+They are also what the L2 model uses on the fast XLA path (the Pallas
+variants are exercised by the ``*_pallas`` artifacts — see aot.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_midpoints(lut: jnp.ndarray) -> jnp.ndarray:
+    """Decision boundaries of an ascending LUT (duplicates collapse)."""
+    return (lut[:-1] + lut[1:]) * 0.5
+
+
+def quantize_to_lut(x: jnp.ndarray, lut: jnp.ndarray,
+                    scale) -> jnp.ndarray:
+    """Nearest-value projection of x onto scale*lut (no gradient defined)."""
+    mids = lut_midpoints(lut) * scale
+    idx = jnp.searchsorted(mids, x, side="right")
+    return jnp.take(lut, idx) * scale
+
+
+@jax.custom_vjp
+def fake_quant_ref(x: jnp.ndarray, lut: jnp.ndarray,
+                   scale: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quantize x onto scale*lut with an STE backward.
+
+    Forward: nearest grid point.  Backward: identity inside the grid's
+    representable range, zero outside (standard QAT straight-through
+    estimator; the clip mask is what keeps weights from drifting past
+    the format's max — cf. paper Sec. III-C).
+    """
+    return quantize_to_lut(x, lut, scale)
+
+
+def _fq_fwd(x, lut, scale):
+    lim = jnp.max(jnp.abs(lut)) * scale
+    return quantize_to_lut(x, lut, scale), (x, lim)
+
+
+def _fq_bwd(res, g):
+    x, lim = res
+    mask = (jnp.abs(x) <= lim).astype(g.dtype)
+    return (g * mask, None, None)
+
+
+fake_quant_ref.defvjp(_fq_fwd, _fq_bwd)
+
+
+def weight_fake_quant_ref(w: jnp.ndarray, lut: jnp.ndarray,
+                          enable: jnp.ndarray) -> jnp.ndarray:
+    """Weight path: per-tensor scale derived in-graph (max-abs onto grid max).
+
+    ``enable`` is a scalar {0,1} runtime switch so one HLO serves both the
+    FP32 baseline and every quantized config.
+    """
+    gmax = jnp.max(jnp.abs(lut))
+    s = jnp.max(jnp.abs(w)) / jnp.maximum(gmax, 1e-12)
+    s = jnp.maximum(s, 1e-12)
+    wq = fake_quant_ref(w, lut, s)
+    return enable * wq + (1.0 - enable) * w
+
+
+def act_fake_quant_ref(x: jnp.ndarray, lut: jnp.ndarray,
+                       scale: jnp.ndarray, enable: jnp.ndarray) -> jnp.ndarray:
+    """Activation path: calibrated per-tensor scale supplied at runtime."""
+    xq = fake_quant_ref(x, lut, jnp.maximum(scale, 1e-12))
+    return enable * xq + (1.0 - enable) * x
+
+
+def qgemm_ref(x: jnp.ndarray, codes: jnp.ndarray, lut_codes: jnp.ndarray,
+              scale: jnp.ndarray) -> jnp.ndarray:
+    """Decode-and-GEMM oracle: y = x @ (scale * lut_codes[codes]).
+
+    ``codes`` are integer format codes (e.g. signed DyBit codes) of shape
+    [K, N]; ``lut_codes`` maps code -> value (code-indexed, NOT the sorted
+    quantization LUT).  This is the accelerator's decoder-feeds-MACs path
+    (paper Fig. 3) as one fused op.
+    """
+    w = jnp.take(lut_codes, codes.astype(jnp.int32)) * scale
+    return jnp.dot(x, w.astype(x.dtype), precision=jax.lax.Precision.HIGHEST)

@@ -1,0 +1,230 @@
+"""L2 models: scaled-down stand-ins for the paper's benchmark networks.
+
+Table II models — MobileNetV2, ResNet18, ResNet50 — and Table III models —
+RegNet-3.2GF, ConvNext-Tiny, ViT-Base — are reproduced as ~0.1–1M-parameter
+versions with the same *layer vocabulary* (residual convs, bottlenecks,
+inverted residuals + depthwise, grouped convs, LN+dw7×7 ConvNext blocks,
+MHSA) so that (a) weight/activation distributions exercise each format the
+same way and (b) the simulator sees the same layer-kind mix (depthwise
+layers are what caps MobileNet speedup in the paper's Fig. 6).
+Substitution rationale: DESIGN.md §6.
+
+All models consume NHWC f32 [B, 24, 24, 3] and emit 10-class logits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .nn import Ctx, avgpool_global, gelu, relu
+
+IMG = 24
+NCLASS = 10
+BATCH = 32
+
+
+# ---------------------------------------------------------------------------
+# model bodies (shared between init and apply via Ctx)
+# ---------------------------------------------------------------------------
+
+def _mlp(ctx: Ctx, x: jnp.ndarray) -> jnp.ndarray:
+    h = x.reshape(x.shape[0], -1)
+    h = relu(ctx.dense(h, "fc1", 256))
+    h = relu(ctx.dense(h, "fc2", 128))
+    return ctx.dense(h, "head", NCLASS)
+
+
+def _basic_block(ctx: Ctx, x, name: str, cout: int, stride: int):
+    """ResNet-18-style basic block with GroupNorm."""
+    h = ctx.conv(x, f"{name}.c1", cout, 3, stride=stride)
+    h = relu(ctx.groupnorm(h, f"{name}.n1"))
+    h = ctx.conv(h, f"{name}.c2", cout, 3)
+    h = ctx.groupnorm(h, f"{name}.n2")
+    if stride != 1 or x.shape[-1] != cout:
+        x = ctx.conv(x, f"{name}.sc", cout, 1, stride=stride)
+    return relu(h + x)
+
+
+def _miniresnet18(ctx: Ctx, x: jnp.ndarray) -> jnp.ndarray:
+    h = relu(ctx.groupnorm(ctx.conv(x, "stem", 16, 3), "stem.n"))
+    for si, (c, s) in enumerate([(16, 1), (32, 2), (64, 2)]):
+        for bi in range(2):
+            h = _basic_block(ctx, h, f"s{si}b{bi}", c, s if bi == 0 else 1)
+    return ctx.dense(avgpool_global(h), "head", NCLASS)
+
+
+def _bottleneck(ctx: Ctx, x, name: str, cmid: int, cout: int, stride: int):
+    """ResNet-50-style bottleneck (1x1 -> 3x3 -> 1x1, expansion 2)."""
+    h = relu(ctx.groupnorm(ctx.conv(x, f"{name}.c1", cmid, 1), f"{name}.n1"))
+    h = relu(ctx.groupnorm(ctx.conv(h, f"{name}.c2", cmid, 3, stride=stride),
+                           f"{name}.n2"))
+    h = ctx.groupnorm(ctx.conv(h, f"{name}.c3", cout, 1), f"{name}.n3")
+    if stride != 1 or x.shape[-1] != cout:
+        x = ctx.conv(x, f"{name}.sc", cout, 1, stride=stride)
+    return relu(h + x)
+
+
+def _miniresnet50(ctx: Ctx, x: jnp.ndarray) -> jnp.ndarray:
+    h = relu(ctx.groupnorm(ctx.conv(x, "stem", 16, 3), "stem.n"))
+    for si, (cm, c, s) in enumerate([(8, 32, 1), (16, 64, 2), (32, 128, 2)]):
+        for bi in range(2):
+            h = _bottleneck(ctx, h, f"s{si}b{bi}", cm, c, s if bi == 0 else 1)
+    return ctx.dense(avgpool_global(h), "head", NCLASS)
+
+
+def _inverted_residual(ctx: Ctx, x, name: str, cout: int, stride: int,
+                       expand: int = 4):
+    """MobileNetV2 inverted residual: expand 1x1 -> dw 3x3 -> project 1x1."""
+    cin = x.shape[-1]
+    cmid = cin * expand
+    h = relu(ctx.groupnorm(ctx.conv(x, f"{name}.exp", cmid, 1), f"{name}.n1"))
+    h = ctx.conv(h, f"{name}.dw", cmid, 3, stride=stride, groups=cmid)
+    h = relu(ctx.groupnorm(h, f"{name}.n2"))
+    h = ctx.groupnorm(ctx.conv(h, f"{name}.proj", cout, 1), f"{name}.n3")
+    if stride == 1 and cin == cout:
+        h = h + x
+    return h
+
+
+def _micromobilenet(ctx: Ctx, x: jnp.ndarray) -> jnp.ndarray:
+    h = relu(ctx.groupnorm(ctx.conv(x, "stem", 16, 3, stride=1), "stem.n"))
+    for bi, (c, s) in enumerate([(16, 1), (24, 2), (24, 1), (32, 2), (32, 1)]):
+        h = _inverted_residual(ctx, h, f"ir{bi}", c, s)
+    h = relu(ctx.groupnorm(ctx.conv(h, "headconv", 64, 1), "head.n"))
+    return ctx.dense(avgpool_global(h), "head", NCLASS)
+
+
+def _mhsa(ctx: Ctx, x, name: str, dim: int, heads: int):
+    """Multi-head self-attention; qkv/proj are quantizable dense layers."""
+    b, t, _ = x.shape
+    qkv = ctx.dense(x, f"{name}.qkv", dim * 3, use_bias=True)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd = dim // heads
+
+    def heads_split(a):
+        return a.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads_split(q), heads_split(k), heads_split(v)
+    att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(hd), axis=-1)
+    o = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, dim)
+    return ctx.dense(o, f"{name}.proj", dim)
+
+
+def _vit_block(ctx: Ctx, x, name: str, dim: int, heads: int, mlp_ratio: int):
+    h = x + _mhsa(ctx, ctx.layernorm(x, f"{name}.ln1"), name, dim, heads)
+    m = ctx.layernorm(h, f"{name}.ln2")
+    m = gelu(ctx.dense(m, f"{name}.fc1", dim * mlp_ratio))
+    m = ctx.dense(m, f"{name}.fc2", dim)
+    return h + m
+
+
+def _tinyvit(ctx: Ctx, x: jnp.ndarray) -> jnp.ndarray:
+    dim, heads, depth = 64, 4, 4
+    h = ctx.conv(x, "patch", dim, 4, stride=4, padding="VALID")  # 6x6 tokens
+    b = h.shape[0]
+    h = h.reshape(b, -1, dim)
+    pos = ctx.param("pos", (1, h.shape[1], dim),
+                    lambda k, s: 0.02 * jax.random.normal(k, s))
+    h = h + pos
+    for d in range(depth):
+        h = _vit_block(ctx, h, f"blk{d}", dim, heads, 2)
+    h = ctx.layernorm(h, "ln_f")
+    return ctx.dense(jnp.mean(h, axis=1), "head", NCLASS)
+
+
+def _regnet_block(ctx: Ctx, x, name: str, cout: int, stride: int,
+                  groups: int):
+    """RegNet X block: 1x1 -> grouped 3x3 -> 1x1 with residual."""
+    h = relu(ctx.groupnorm(ctx.conv(x, f"{name}.c1", cout, 1), f"{name}.n1"))
+    h = relu(ctx.groupnorm(
+        ctx.conv(h, f"{name}.c2", cout, 3, stride=stride, groups=groups),
+        f"{name}.n2"))
+    h = ctx.groupnorm(ctx.conv(h, f"{name}.c3", cout, 1), f"{name}.n3")
+    if stride != 1 or x.shape[-1] != cout:
+        x = ctx.conv(x, f"{name}.sc", cout, 1, stride=stride)
+    return relu(h + x)
+
+
+def _microregnet(ctx: Ctx, x: jnp.ndarray) -> jnp.ndarray:
+    h = relu(ctx.groupnorm(ctx.conv(x, "stem", 16, 3), "stem.n"))
+    for si, (c, s) in enumerate([(24, 1), (48, 2), (96, 2)]):
+        h = _regnet_block(ctx, h, f"s{si}", c, s, groups=8)
+    return ctx.dense(avgpool_global(h), "head", NCLASS)
+
+
+def _convnext_block(ctx: Ctx, x, name: str, dim: int):
+    """ConvNext block: dw7x7 -> LN -> pw expand 2x -> GELU -> pw project."""
+    h = ctx.conv(x, f"{name}.dw", dim, 7, groups=dim)
+    h = ctx.layernorm(h, f"{name}.ln")
+    h = gelu(ctx.conv(h, f"{name}.pw1", dim * 2, 1))
+    h = ctx.conv(h, f"{name}.pw2", dim, 1)
+    return x + h
+
+
+def _microconvnext(ctx: Ctx, x: jnp.ndarray) -> jnp.ndarray:
+    dim = 48
+    h = ctx.conv(x, "stem", dim, 4, stride=4, padding="VALID")  # 6x6
+    h = ctx.layernorm(h, "stem.ln")
+    for d in range(3):
+        h = _convnext_block(ctx, h, f"blk{d}", dim)
+    h = ctx.layernorm(h, "ln_f")
+    return ctx.dense(avgpool_global(h), "head", NCLASS)
+
+
+# ---------------------------------------------------------------------------
+# registry + public API
+# ---------------------------------------------------------------------------
+
+# model name -> (body fn, paper model it stands in for)
+MODELS = {
+    "mlp": (_mlp, "quickstart MLP"),
+    "miniresnet18": (_miniresnet18, "ResNet18"),
+    "miniresnet50": (_miniresnet50, "ResNet50"),
+    "micromobilenet": (_micromobilenet, "MobileNetV2"),
+    "tinyvit": (_tinyvit, "ViT-Base"),
+    "microregnet": (_microregnet, "RegNet-3.2GF"),
+    "microconvnext": (_microconvnext, "ConvNext-Tiny"),
+}
+
+
+def build(name: str, seed: int = 0, batch: int = BATCH):
+    """Initialize a model: returns (params, param_specs, layer_specs)."""
+    body, _ = MODELS[name]
+    ctx = Ctx("init", key=jax.random.PRNGKey(seed))
+    x = jnp.zeros((batch, IMG, IMG, 3), jnp.float32)
+    body(ctx, x)
+    return ctx.init_params, ctx.param_specs, ctx.layer_specs
+
+
+def num_quant_layers(name: str) -> int:
+    return len(build(name)[2])
+
+
+def apply(name: str, params, x, qcfg=None, pallas: bool = False,
+          with_acts: bool = False):
+    """Forward pass.  qcfg=None means pure FP32.
+
+    with_acts=True also returns the [L, 2048] matrix of strided pre-quant
+    activation samples (calibration/RMSE taps for the rust search engine).
+    """
+    body, _ = MODELS[name]
+    ctx = Ctx("apply", params=params, qcfg=qcfg, pallas=pallas)
+    logits = body(ctx, x)
+    if with_acts:
+        taps = (jnp.stack(ctx.act_taps) if ctx.act_taps
+                else jnp.zeros((0, 2048), jnp.float32))
+        return logits, taps
+    return logits
+
+
+def make_qcfg(n_layers: int, lut_size: int = nn.LUT_SIZE):
+    """All-FP32 (disabled) quantization config of the right shapes."""
+    return {
+        "wluts": jnp.zeros((n_layers, lut_size), jnp.float32),
+        "aluts": jnp.zeros((n_layers, lut_size), jnp.float32),
+        "ascales": jnp.ones((n_layers,), jnp.float32),
+        "wq_en": jnp.zeros((n_layers,), jnp.float32),
+        "aq_en": jnp.zeros((n_layers,), jnp.float32),
+    }

@@ -1,0 +1,242 @@
+"""Minimal functional NN library with per-layer quantization hooks (L2).
+
+Every quantizable op (conv / depthwise / grouped conv / dense) is assigned a
+layer index in construction order.  At apply time, layer ``l`` fake-quantizes
+its weight with ``wluts[l]`` (scale derived in-graph from max-abs) and its
+input activation with ``(aluts[l], ascales[l])``; per-layer enable flags let
+one HLO serve FP32 and every quantized config (DESIGN.md §2).
+
+The same construction pass records each layer's GEMM geometry after im2col
+(M = OH·OW per image, K = kh·kw·Cin/groups, N = Cout) — this is the layer
+descriptor list the rust cycle-accurate simulator consumes via
+``artifacts/manifest.json``, so python and rust can never disagree about
+layer shapes.
+
+Params are a flat *list* of arrays in creation order (the HLO boundary and
+the ``*_params.bin`` interchange format both use this order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.fake_quant import fake_quant_pallas
+
+LUT_SIZE = 256
+
+
+@dataclasses.dataclass
+class LayerSpec:
+    """Descriptor of one quantizable layer (simulator interchange unit)."""
+    name: str
+    kind: str      # conv | dwconv | gconv | dense
+    m: int         # GEMM rows per image (OH*OW, or 1 for dense-on-vector)
+    k: int         # GEMM reduction (kh*kw*cin/groups)
+    n: int         # GEMM cols (cout)
+    groups: int    # 1 for conv/dense; cin for dwconv; >1 for gconv
+    macs: int      # per-image multiply-accumulates
+    act_elems: int  # per-image input-activation element count
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "shape": list(self.shape)}
+
+
+class Ctx:
+    """Build/apply context.
+
+    mode="init": records ParamSpec/LayerSpec and materializes initial params.
+    mode="apply": consumes ``params`` sequentially and applies quantization
+    from ``qcfg`` = dict(wluts, aluts, ascales, wq_en, aq_en).
+    """
+
+    def __init__(self, mode: str, key=None, params=None, qcfg=None,
+                 pallas: bool = False):
+        assert mode in ("init", "apply")
+        self.mode = mode
+        self.key = key
+        self.params_in = list(params) if params is not None else None
+        self.pi = 0
+        self.qcfg = qcfg
+        self.qi = 0                      # quantizable-layer cursor
+        self.pallas = pallas
+        self.param_specs: list[ParamSpec] = []
+        self.layer_specs: list[LayerSpec] = []
+        self.init_params: list[jnp.ndarray] = []
+        self.act_taps: list[jnp.ndarray] = []  # per-layer input acts (fwd_acts)
+
+    # -- parameters ---------------------------------------------------------
+
+    def param(self, name: str, shape: tuple[int, ...],
+              init_fn: Callable) -> jnp.ndarray:
+        if self.mode == "init":
+            self.key, sub = jax.random.split(self.key)
+            p = init_fn(sub, shape).astype(jnp.float32)
+            self.param_specs.append(ParamSpec(name, tuple(shape)))
+            self.init_params.append(p)
+            return p
+        p = self.params_in[self.pi]
+        self.pi += 1
+        return p
+
+    # -- quantization hooks -------------------------------------------------
+
+    def _quant_idx(self) -> int:
+        qi = self.qi
+        self.qi += 1
+        return qi
+
+    def _fq_weight(self, w: jnp.ndarray, qi: int) -> jnp.ndarray:
+        if self.qcfg is None:
+            return w
+        lut = self.qcfg["wluts"][qi]
+        en = self.qcfg["wq_en"][qi]
+        if self.pallas:
+            gmax = jnp.max(jnp.abs(lut))
+            s = jnp.maximum(jnp.max(jnp.abs(w)) / jnp.maximum(gmax, 1e-12),
+                            1e-12)
+            wq = fake_quant_pallas(w, lut, s)
+            return en * wq + (1.0 - en) * w
+        return kref.weight_fake_quant_ref(w, lut, en)
+
+    def _fq_act(self, x: jnp.ndarray, qi: int) -> jnp.ndarray:
+        if self.qcfg is None:
+            return x
+        lut = self.qcfg["aluts"][qi]
+        s = self.qcfg["ascales"][qi]
+        en = self.qcfg["aq_en"][qi]
+        if self.pallas:
+            xq = fake_quant_pallas(x, lut, jnp.maximum(s, 1e-12))
+            return en * xq + (1.0 - en) * x
+        return kref.act_fake_quant_ref(x, lut, s, en)
+
+    def _tap(self, x: jnp.ndarray):
+        """Record a strided ≤2048-element sample of the pre-quant activation.
+
+        fwd_acts exposes these so the rust side can calibrate activation
+        scales and estimate per-layer activation RMSE for the search engine
+        without shipping full feature maps across the boundary.
+        """
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        if n >= 2048:
+            stride = n // 2048
+            samp = jax.lax.slice(flat, (0,), (2048 * stride,), (stride,))
+        else:
+            samp = jnp.pad(flat, (0, 2048 - n), mode="wrap")
+        self.act_taps.append(samp)
+
+    # -- layers ---------------------------------------------------------
+
+    def conv(self, x: jnp.ndarray, name: str, cout: int, ksize: int,
+             stride: int = 1, groups: int = 1, use_bias: bool = True,
+             padding: str = "SAME") -> jnp.ndarray:
+        """NHWC conv with weight+activation fake-quant. Returns pre-act."""
+        cin = x.shape[-1]
+        assert cin % groups == 0 and cout % groups == 0
+        fan_in = ksize * ksize * cin // groups
+        w = self.param(
+            f"{name}.w", (ksize, ksize, cin // groups, cout),
+            lambda k, s: jax.random.normal(k, s) * math.sqrt(2.0 / fan_in))
+        b = self.param(f"{name}.b", (cout,),
+                       lambda k, s: jnp.zeros(s)) if use_bias else None
+        qi = self._quant_idx()
+        if self.mode == "init":
+            hw = x.shape[1]
+            ohw = hw // stride if padding == "SAME" else (hw - ksize) // stride + 1
+            kind = ("dwconv" if groups == cin and groups == cout
+                    else ("gconv" if groups > 1 else "conv"))
+            m, kk, n = ohw * ohw, fan_in, cout
+            self.layer_specs.append(LayerSpec(
+                name, kind, m, kk, n, groups,
+                macs=m * kk * n,  # per-image; groups already folded into K
+                act_elems=int(x.shape[1] * x.shape[2] * cin)))
+        else:
+            self._tap(x)
+        xq = self._fq_act(x, qi)
+        wq = self._fq_weight(w, qi)
+        y = jax.lax.conv_general_dilated(
+            xq, wq, window_strides=(stride, stride), padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
+        if b is not None:
+            y = y + b
+        return y
+
+    def dense(self, x: jnp.ndarray, name: str, cout: int,
+              use_bias: bool = True) -> jnp.ndarray:
+        cin = x.shape[-1]
+        w = self.param(
+            f"{name}.w", (cin, cout),
+            lambda k, s: jax.random.normal(k, s) * math.sqrt(2.0 / cin))
+        b = self.param(f"{name}.b", (cout,),
+                       lambda k, s: jnp.zeros(s)) if use_bias else None
+        qi = self._quant_idx()
+        if self.mode == "init":
+            m = math.prod(x.shape[1:-1]) if x.ndim > 2 else 1
+            self.layer_specs.append(LayerSpec(
+                name, "dense", m, cin, cout, 1,
+                macs=m * cin * cout,
+                act_elems=math.prod(x.shape[1:])))
+        else:
+            self._tap(x)
+        xq = self._fq_act(x, qi)
+        wq = self._fq_weight(w, qi)
+        y = xq @ wq
+        if b is not None:
+            y = y + b
+        return y
+
+    # -- norms / misc (not quantized; scale/shift stay FP as in the paper's
+    #    accelerator, which keeps partial sums and norms in FP) -------------
+
+    def groupnorm(self, x: jnp.ndarray, name: str, groups: int = 8,
+                  eps: float = 1e-5) -> jnp.ndarray:
+        c = x.shape[-1]
+        g = min(groups, c)
+        while c % g:
+            g -= 1
+        gamma = self.param(f"{name}.g", (c,), lambda k, s: jnp.ones(s))
+        beta = self.param(f"{name}.b", (c,), lambda k, s: jnp.zeros(s))
+        shp = x.shape[:-1] + (g, c // g)
+        xg = x.reshape(shp)
+        mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+        var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+        xn = ((xg - mu) / jnp.sqrt(var + eps)).reshape(x.shape)
+        return xn * gamma + beta
+
+    def layernorm(self, x: jnp.ndarray, name: str,
+                  eps: float = 1e-5) -> jnp.ndarray:
+        c = x.shape[-1]
+        gamma = self.param(f"{name}.g", (c,), lambda k, s: jnp.ones(s))
+        beta = self.param(f"{name}.b", (c,), lambda k, s: jnp.zeros(s))
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+def avgpool_global(x):
+    """NHWC global average pool -> [B, C]."""
+    return jnp.mean(x, axis=(1, 2))

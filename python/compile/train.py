@@ -1,0 +1,106 @@
+"""QAT training step + synthetic dataset, both lowered into the HLO (L2).
+
+ImageNet substitution (DESIGN.md §6): "synthshapes", a procedurally
+generated 10-class oriented-texture dataset.  The generator is *inside* the
+lowered computation (jax.random / threefry lowers to plain HLO), so the rust
+driver and the python tests see bit-identical batches by construction —
+no cross-language RNG porting, and python stays off the request path.
+
+Class signal: orientation + spatial frequency + RGB tint of a Gabor-like
+sinusoid, plus per-sample jitter and additive Gaussian noise.  Small conv
+nets reach >90% top-1 in a few hundred steps; formats then separate through
+QAT exactly as in the paper's protocol (same schedule for every format).
+
+The train step is plain SGD with momentum 0.9 and an STE through every
+fake-quant (kernels/ref.py).  Seeds are i32 inputs: train uses seed space
+[0, 2^30), eval uses [2^30, ...) — disjoint by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+MOMENTUM = 0.9
+EVAL_SEED_BASE = 1 << 30
+
+
+def synth_batch(seed: jnp.ndarray, batch: int = M.BATCH):
+    """Deterministic batch from an i32 seed: (x [B,24,24,3], y [B] i32)."""
+    key = jax.random.PRNGKey(seed)
+    ky, kjit, kphase, knoise, ktint = jax.random.split(key, 5)
+    y = jax.random.randint(ky, (batch,), 0, M.NCLASS)
+
+    yf = y.astype(jnp.float32)
+    theta = yf * (jnp.pi / M.NCLASS) + \
+        0.12 * jax.random.normal(kjit, (batch,))
+    freq = 2.0 + jnp.mod(yf, 3.0) + \
+        0.25 * jax.random.normal(kjit, (batch,))
+    phase = jax.random.uniform(kphase, (batch,), minval=0.0,
+                               maxval=2.0 * jnp.pi)
+
+    r = jnp.linspace(-1.0, 1.0, M.IMG)
+    u, v = jnp.meshgrid(r, r, indexing="ij")              # [H, W]
+    ang = (u[None] * jnp.cos(theta)[:, None, None] +
+           v[None] * jnp.sin(theta)[:, None, None])       # [B, H, W]
+    pattern = jnp.sin(2.0 * jnp.pi * freq[:, None, None] * ang +
+                      phase[:, None, None])
+
+    # class-conditioned RGB tint with mild per-sample jitter
+    ch = jnp.arange(3, dtype=jnp.float32)
+    tint = 0.6 + 0.4 * jnp.cos(yf[:, None] * 0.7 + ch[None, :] * 2.1)
+    tint = tint + 0.05 * jax.random.normal(ktint, (batch, 3))
+
+    x = pattern[..., None] * tint[:, None, None, :]
+    x = x + 0.8 * jax.random.normal(knoise, x.shape)
+    return x.astype(jnp.float32), y
+
+
+def cross_entropy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+def make_train_step(name: str):
+    """(params, moms, seed, qcfg, lr) -> (new_params, new_moms, loss, acc)."""
+
+    def loss_fn(params, x, y, qcfg):
+        logits = M.apply(name, params, x, qcfg=qcfg)
+        return cross_entropy(logits, y), logits
+
+    def train_step(params, moms, seed, qcfg, lr):
+        x, y = synth_batch(seed)
+        (loss, logits), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, x, y, qcfg)
+        new_moms = [MOMENTUM * m + g for m, g in zip(moms, grads)]
+        new_params = [p - lr * m for p, m in zip(params, new_moms)]
+        return new_params, new_moms, loss, accuracy(logits, y)
+
+    return train_step
+
+
+def make_eval_step(name: str):
+    """(params, seed, qcfg) -> (loss, acc) on a held-out batch."""
+
+    def eval_step(params, seed, qcfg):
+        x, y = synth_batch(EVAL_SEED_BASE + seed)
+        logits = M.apply(name, params, x, qcfg=qcfg)
+        return cross_entropy(logits, y), accuracy(logits, y)
+
+    return eval_step
+
+
+def make_fwd(name: str, with_acts: bool = False, pallas: bool = False):
+    """(params, x, qcfg) -> logits [, act taps]."""
+
+    def fwd(params, x, qcfg):
+        return M.apply(name, params, x, qcfg=qcfg, pallas=pallas,
+                       with_acts=with_acts)
+
+    return fwd

@@ -1,0 +1,75 @@
+"""AOT path tests: HLO text emission + manifest consistency.
+
+Kept light (one small model) — the full emission is exercised by
+`make artifacts`; the heavyweight contract checks live on the rust side
+(tests/golden.rs, tests/runtime_integration.rs).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_emits_parseable_module():
+    lowered = jax.jit(lambda a, b: (a @ b,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # text (not proto) is the 0.5.1-safe interchange — must be pure ASCII
+    text.encode("ascii")
+
+
+def test_lower_model_manifest_entry(tmp_path):
+    entry = aot.lower_model("mlp", str(tmp_path), pallas_fwd=False)
+    # all four artifacts present with I/O specs
+    assert set(entry["artifacts"]) == {"fwd", "fwd_acts", "train", "eval"}
+    for tag, art in entry["artifacts"].items():
+        path = tmp_path / art["file"]
+        assert path.exists(), tag
+        assert path.stat().st_size > 1000
+        assert art["inputs"] and art["outputs"]
+    # params.bin is exactly the concatenation of the leaves
+    total = entry["params_total_elems"]
+    assert (tmp_path / entry["params_file"]).stat().st_size == total * 4
+    # layer count consistent
+    assert entry["n_quant_layers"] == len(entry["layers"])
+
+
+def test_train_io_signature_matches_convention(tmp_path):
+    entry = aot.lower_model("mlp", str(tmp_path), pallas_fwd=False)
+    ins = [i["name"] for i in entry["artifacts"]["train"]["inputs"]]
+    np_ = len(entry["params"])
+    # params, moms, seed, qcfg (5), lr
+    assert len(ins) == 2 * np_ + 7
+    assert ins[2 * np_] == "seed"
+    assert ins[2 * np_ + 1:2 * np_ + 6] == [
+        "wluts", "aluts", "ascales", "wq_en", "aq_en"]
+    assert ins[-1] == "lr"
+
+
+def test_existing_artifacts_dir_consistent():
+    """If `make artifacts` has run, the manifest must match the models."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    assert manifest["lut_size"] == 256
+    for name, entry in manifest["models"].items():
+        assert name in M.MODELS
+        _, _, lspecs = M.build(name)
+        assert entry["n_quant_layers"] == len(lspecs), name
+        got = [(l["name"], l["m"], l["k"], l["n"]) for l in entry["layers"]]
+        want = [(l.name, l.m, l.k, l.n) for l in lspecs]
+        assert got == want, f"{name}: layer specs drifted — re-run make artifacts"
+    # data_batch artifact registered
+    assert manifest["data_batch"]["outputs"] == ["x", "y"]

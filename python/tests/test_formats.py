@@ -1,0 +1,149 @@
+"""Format-grid tests: Table I exactness + per-format invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats as F
+
+ALL_FMT_BITS = [(f, n) for f in F.FORMATS for n in (2, 3, 4, 5, 6, 7, 8)
+                if not (f in ("adaptivfloat", "flint") and n == 2)]
+
+
+class TestTable1:
+    def test_paper_table1_exact(self):
+        expect = [0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875,
+                  1.0, 1.25, 1.5, 1.75, 2.0, 3.0, 4.0, 8.0]
+        assert F.dybit_grid_unsigned(4).tolist() == expect
+
+    def test_paper_decoder_example(self):
+        # Sec. III-B2: unsigned 11001010 -> exp 001, mantissa 10101000
+        assert F.dybit_magnitude(0b11001010, 8) == 2.0 * (1.0 + 10.0 / 32.0)
+
+    def test_subnormal_region_linear(self):
+        for m in range(2, 8):
+            step = 1.0 / (1 << (m - 1))
+            for x in range(1 << (m - 1)):
+                assert F.dybit_magnitude(x, m) == x * step
+
+    def test_all_ones_is_max(self):
+        for m in range(1, 8):
+            assert F.dybit_magnitude((1 << m) - 1, m) == float(1 << (m - 1))
+
+
+class TestGrids:
+    @pytest.mark.parametrize("fmt,n", ALL_FMT_BITS)
+    def test_sorted_unique(self, fmt, n):
+        g = F.grid(fmt, n)
+        assert np.all(np.diff(g) > 0), (fmt, n)
+
+    @pytest.mark.parametrize("fmt,n", ALL_FMT_BITS)
+    def test_symmetric_with_zero(self, fmt, n):
+        g = F.grid(fmt, n)
+        assert 0.0 in g
+        np.testing.assert_array_equal(g, -g[::-1])
+
+    @pytest.mark.parametrize("fmt,n", ALL_FMT_BITS)
+    def test_fits_lut(self, fmt, n):
+        g = F.grid(fmt, n)
+        assert len(g) <= F.LUT_SIZE
+        lut = F.padded_lut(fmt, n)
+        assert lut.shape == (F.LUT_SIZE,)
+        assert np.all(np.diff(lut) >= 0)
+
+    def test_dybit_int_coincide_at_2bit(self):
+        np.testing.assert_array_equal(F.grid("dybit", 2), F.grid("int", 2))
+
+    def test_grid_cardinality(self):
+        # signed n-bit formats represent 2^n - 1 distinct values
+        for fmt in ("dybit", "int", "posit", "adaptivfloat", "flint"):
+            for n in (4, 8):
+                assert len(F.grid(fmt, n)) == 2 ** n - 1, (fmt, n)
+
+
+class TestCodec:
+    def test_roundtrip_all_codes(self):
+        for n in (2, 4, 8):
+            for c in range(1 << n):
+                v = F.dybit_decode_code(c, n)
+                c2 = F.dybit_encode_code(v, n)
+                assert F.dybit_decode_code(c2, n) == v, (n, c)
+
+    def test_negative_zero_remap(self):
+        # sign=1 mag=0 -> -max (DESIGN.md §5)
+        for n in (2, 4, 8):
+            assert F.dybit_decode_code(1 << (n - 1), n) == -float(
+                1 << (n - 2))
+
+    @given(st.floats(-20, 20), st.sampled_from([2, 4, 8]))
+    @settings(max_examples=200, deadline=None)
+    def test_encode_is_nearest(self, v, n):
+        c = F.dybit_encode_code(v, n)
+        got = abs(F.dybit_decode_code(c, n) - v)
+        best = min(abs(F.dybit_decode_code(cc, n) - v)
+                   for cc in range(1 << n))
+        assert got == pytest.approx(best, abs=1e-12)
+
+
+class TestQuantizer:
+    @given(st.integers(0, 2 ** 31), st.sampled_from(["dybit", "int", "flint"]),
+           st.sampled_from([2, 4, 8]))
+    @settings(max_examples=60, deadline=None)
+    def test_quantized_values_on_grid(self, seed, fmt, n):
+        if fmt == "flint" and n == 2:
+            n = 3  # flint needs >=1 mantissa bit
+        rs = np.random.RandomState(seed % (2 ** 31))
+        x = rs.randn(257).astype(np.float32) * rs.uniform(0.01, 100)
+        xq, s = F.fake_quant(x, fmt, n)
+        g = F.grid(fmt, n) * s
+        dmin = np.abs(xq[:, None] - g[None, :].astype(np.float32)).min(1)
+        assert dmin.max() < 1e-5 * max(1.0, np.abs(g).max())
+
+    def test_quantize_idempotent(self):
+        rs = np.random.RandomState(0)
+        x = rs.randn(500)
+        g = F.grid("dybit", 4)
+        q1 = F.quantize_to_grid(x, g, 0.5)
+        q2 = F.quantize_to_grid(q1, g, 0.5)
+        np.testing.assert_array_equal(q1, q2)
+
+    def test_rmse_normalized_by_sigma(self):
+        rs = np.random.RandomState(1)
+        x = rs.randn(1000)
+        # scaling the tensor leaves the sigma-normalized RMSE invariant
+        xq1, _ = F.fake_quant(x, "dybit", 4)
+        xq2, _ = F.fake_quant(10 * x, "dybit", 4)
+        assert F.rmse(x, xq1) == pytest.approx(F.rmse(10 * x, xq2), rel=1e-6)
+
+    def test_more_bits_lower_rmse(self):
+        rs = np.random.RandomState(2)
+        x = rs.randn(2000)
+        for fmt, bits in [("dybit", (2, 4, 8)), ("int", (2, 4, 8)),
+                          ("flint", (3, 4, 8))]:
+            e = [F.rmse(x, F.fake_quant(x, fmt, n)[0]) for n in bits]
+            assert e[0] > e[1] > e[2], (fmt, e)
+
+    def test_dybit_beats_int_on_heavy_tails(self):
+        rs = np.random.RandomState(3)
+        x = rs.standard_t(3, size=5000)
+        ed = F.rmse(x, F.fake_quant(x, "dybit", 4)[0])
+        ei = F.rmse(x, F.fake_quant(x, "int", 4)[0])
+        assert ed < ei
+
+    def test_calibrated_no_worse_than_maxabs(self):
+        rs = np.random.RandomState(4)
+        x = rs.laplace(size=3000)
+        for fmt in F.FORMATS:
+            g = F.grid(fmt, 4)
+            s_max = F.maxabs_scale(x, g)
+            e_max = F.rmse(x, F.quantize_to_grid(x, g, s_max))
+            e_cal = F.rmse(x, F.fake_quant(x, fmt, 4)[0])
+            assert e_cal <= e_max + 1e-12, fmt
+
+
+class TestGolden:
+    def test_golden_dump_complete(self):
+        d = F.golden_dump()
+        assert len(d["grids"]) >= 30
+        assert set(d["dybit_codes"]) == {"2", "4", "8"}
+        assert len(d["table1_unsigned4"]) == 16

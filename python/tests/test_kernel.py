@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes, scales, formats and bitwidths; every case must
+match `ref.py` to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats as F
+from compile.kernels import ref
+from compile.kernels.fake_quant import fake_quant_pallas
+from compile.kernels.qgemm import qgemm_pallas
+
+
+def lut_for(fmt, n):
+    return jnp.asarray(F.padded_lut(fmt, n))
+
+
+class TestFakeQuantKernel:
+    @given(
+        shape=st.sampled_from([(7,), (64,), (33, 9), (8, 128), (3, 5, 7),
+                               (1, 1), (257,), (2, 2, 2, 2)]),
+        fmt=st.sampled_from(list(F.FORMATS)),
+        bits=st.sampled_from([2, 3, 4, 8]),
+        scale=st.floats(1e-3, 50.0),
+        seed=st.integers(0, 2 ** 20),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_matches_ref_over_shapes_formats(self, shape, fmt, bits, scale,
+                                             seed):
+        if fmt in ("adaptivfloat", "flint") and bits == 2:
+            bits = 3
+        rs = np.random.RandomState(seed)
+        x = jnp.asarray(rs.randn(*shape).astype(np.float32) * 3)
+        lut = lut_for(fmt, bits)
+        s = jnp.float32(scale)
+        got = fake_quant_pallas(x, lut, s)
+        want = ref.quantize_to_lut(x, lut, s)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+        assert got.shape == x.shape
+
+    def test_values_land_on_scaled_grid(self):
+        rs = np.random.RandomState(0)
+        x = jnp.asarray(rs.randn(500).astype(np.float32))
+        lut = lut_for("dybit", 4)
+        y = np.asarray(fake_quant_pallas(x, lut, jnp.float32(0.5)))
+        grid = F.grid("dybit", 4) * 0.5
+        d = np.abs(y[:, None] - grid[None, :]).min(1)
+        assert d.max() < 1e-6
+
+    def test_idempotent(self):
+        rs = np.random.RandomState(1)
+        x = jnp.asarray(rs.randn(100).astype(np.float32))
+        lut = lut_for("dybit", 4)
+        y1 = fake_quant_pallas(x, lut, jnp.float32(1.0))
+        y2 = fake_quant_pallas(y1, lut, jnp.float32(1.0))
+        np.testing.assert_allclose(y1, y2, rtol=0, atol=0)
+
+    def test_zero_maps_to_zero(self):
+        x = jnp.zeros((16,), jnp.float32)
+        for fmt in F.FORMATS:
+            y = fake_quant_pallas(x, lut_for(fmt, 4), jnp.float32(2.0))
+            np.testing.assert_array_equal(np.asarray(y), 0.0)
+
+    def test_matches_numpy_formats_reference(self):
+        # three-way agreement: pallas kernel == jnp ref == numpy formats.py
+        rs = np.random.RandomState(2)
+        x = rs.randn(300).astype(np.float32)
+        g = F.grid("dybit", 4)
+        s = 0.7
+        want_np = F.quantize_to_grid(x, g, s)
+        got = np.asarray(fake_quant_pallas(jnp.asarray(x), lut_for("dybit", 4),
+                                           jnp.float32(s)))
+        np.testing.assert_allclose(got, want_np, rtol=1e-6, atol=1e-6)
+
+
+class TestQGemmKernel:
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 90),
+        n=st.integers(1, 70),
+        bits=st.sampled_from([2, 4, 8]),
+        seed=st.integers(0, 2 ** 20),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, m, k, n, bits, seed):
+        rs = np.random.RandomState(seed)
+        x = jnp.asarray(rs.randn(m, k).astype(np.float32))
+        codes = jnp.asarray(rs.randint(0, 1 << bits, size=(k, n)),
+                            dtype=jnp.int32)
+        lc = np.zeros(F.LUT_SIZE, np.float32)
+        for c in range(1 << bits):
+            lc[c] = F.dybit_decode_code(c, bits)
+        lc = jnp.asarray(lc)
+        s = jnp.float32(0.3)
+        got = qgemm_pallas(x, codes, lc, s)
+        want = ref.qgemm_ref(x, codes, lc, s)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_codes_give_zero_output(self):
+        x = jnp.ones((8, 16), jnp.float32)
+        codes = jnp.zeros((16, 8), jnp.int32)
+        lc = jnp.asarray(np.zeros(F.LUT_SIZE, np.float32))
+        y = qgemm_pallas(x, codes, lc, jnp.float32(1.0))
+        np.testing.assert_array_equal(np.asarray(y), 0.0)
+
+    def test_mxu_sized_blocks(self):
+        # a 256x256x256 problem exercises multi-tile grid accumulation
+        rs = np.random.RandomState(3)
+        x = jnp.asarray(rs.randn(256, 256).astype(np.float32))
+        codes = jnp.asarray(rs.randint(0, 16, size=(256, 256)), jnp.int32)
+        lc = np.zeros(F.LUT_SIZE, np.float32)
+        for c in range(16):
+            lc[c] = F.dybit_decode_code(c, 4)
+        got = qgemm_pallas(x, codes, jnp.asarray(lc), jnp.float32(0.1))
+        want = ref.qgemm_ref(x, codes, jnp.asarray(lc), jnp.float32(0.1))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+class TestSTE:
+    def test_fake_quant_gradient_is_masked_identity(self):
+        lut = lut_for("dybit", 4)
+        s = jnp.float32(0.5)  # representable range: ±4*0.5 = ±2
+
+        def f(x):
+            return jnp.sum(ref.fake_quant_ref(x, lut, s))
+
+        x = jnp.asarray([0.3, -1.5, 5.0, -7.0, 1.9], jnp.float32)
+        g = jax.grad(f)(x)
+        np.testing.assert_array_equal(np.asarray(g),
+                                      [1.0, 1.0, 0.0, 0.0, 1.0])
+
+    def test_weight_fq_enable_flag(self):
+        lut = lut_for("dybit", 4)
+        w = jnp.asarray(np.random.RandomState(4).randn(32).astype(np.float32))
+        off = ref.weight_fake_quant_ref(w, lut, jnp.float32(0.0))
+        np.testing.assert_array_equal(np.asarray(off), np.asarray(w))
+        on = ref.weight_fake_quant_ref(w, lut, jnp.float32(1.0))
+        assert not np.array_equal(np.asarray(on), np.asarray(w))

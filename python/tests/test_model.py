@@ -1,0 +1,136 @@
+"""Model-level tests: shapes, quant-hook wiring, dataset, train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import formats as F
+from compile import model as M
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rs = np.random.RandomState(0)
+    return jnp.asarray(rs.randn(M.BATCH, M.IMG, M.IMG, 3).astype(np.float32))
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_shapes_and_param_specs(name, batch):
+    params, pspecs, lspecs = M.build(name)
+    assert len(params) == len(pspecs)
+    for p, s in zip(params, pspecs):
+        assert tuple(p.shape) == tuple(s.shape), s.name
+    logits = M.apply(name, params, batch)
+    assert logits.shape == (M.BATCH, M.NCLASS)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    # every quantizable layer has a weight leaf "<layer>.w"
+    pnames = {s.name for s in pspecs}
+    for ls in lspecs:
+        assert f"{ls.name}.w" in pnames
+
+
+@pytest.mark.parametrize("name", ["mlp", "microconvnext"])
+def test_disabled_qcfg_is_identity(name, batch):
+    params, _, lspecs = M.build(name)
+    a = M.apply(name, params, batch)
+    b = M.apply(name, params, batch, qcfg=M.make_qcfg(len(lspecs)))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_enabled_quant_changes_output(batch):
+    params, _, lspecs = M.build("mlp")
+    nl = len(lspecs)
+    q = M.make_qcfg(nl)
+    lut = jnp.asarray(np.tile(F.padded_lut("dybit", 2), (nl, 1)))
+    q["wluts"] = lut
+    q["wq_en"] = jnp.ones((nl,), jnp.float32)
+    a = M.apply("mlp", params, batch)
+    b = M.apply("mlp", params, batch, qcfg=q)
+    assert not np.allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+def test_act_taps_shape_and_content(batch):
+    params, _, lspecs = M.build("miniresnet18")
+    _, taps = M.apply("miniresnet18", params, batch,
+                      qcfg=M.make_qcfg(len(lspecs)), with_acts=True)
+    assert taps.shape == (len(lspecs), 2048)
+    # first tap row samples the normalized input image
+    assert np.all(np.isfinite(np.asarray(taps)))
+    assert float(jnp.abs(taps).max()) > 0
+
+
+def test_layer_specs_gemm_dims():
+    _, _, lspecs = M.build("micromobilenet")
+    kinds = {ls.kind for ls in lspecs}
+    assert "dwconv" in kinds and "conv" in kinds
+    for ls in lspecs:
+        assert ls.m > 0 and ls.k > 0 and ls.n > 0
+        if ls.kind == "dwconv":
+            assert ls.groups == ls.n
+
+
+class TestDataset:
+    def test_deterministic(self):
+        x1, y1 = T.synth_batch(jnp.int32(3))
+        x2, y2 = T.synth_batch(jnp.int32(3))
+        np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    def test_seeds_differ(self):
+        x1, _ = T.synth_batch(jnp.int32(3))
+        x2, _ = T.synth_batch(jnp.int32(4))
+        assert not np.array_equal(np.asarray(x1), np.asarray(x2))
+
+    def test_label_range_and_shape(self):
+        x, y = T.synth_batch(jnp.int32(0))
+        assert x.shape == (M.BATCH, M.IMG, M.IMG, 3)
+        y = np.asarray(y)
+        assert y.min() >= 0 and y.max() < M.NCLASS
+
+    def test_eval_split_disjoint(self):
+        # eval seeds live in a disjoint seed space
+        xt, _ = T.synth_batch(jnp.int32(5))
+        xe, _ = T.synth_batch(jnp.int32(T.EVAL_SEED_BASE + 5))
+        assert not np.array_equal(np.asarray(xt), np.asarray(xe))
+
+
+class TestTrainStep:
+    def test_loss_decreases_fp32(self):
+        params, _, lspecs = M.build("mlp", seed=1)
+        moms = [jnp.zeros_like(p) for p in params]
+        q = M.make_qcfg(len(lspecs))
+        step = jax.jit(T.make_train_step("mlp"))
+        first = None
+        for i in range(30):
+            params, moms, loss, _ = step(params, moms, jnp.int32(i), q,
+                                         jnp.float32(0.05))
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first
+
+    def test_qat_trains_with_quant_enabled(self):
+        params, _, lspecs = M.build("mlp", seed=2)
+        nl = len(lspecs)
+        moms = [jnp.zeros_like(p) for p in params]
+        q = M.make_qcfg(nl)
+        q["wluts"] = jnp.asarray(np.tile(F.padded_lut("dybit", 4), (nl, 1)))
+        q["wq_en"] = jnp.ones((nl,), jnp.float32)
+        step = jax.jit(T.make_train_step("mlp"))
+        losses = []
+        for i in range(30):
+            params, moms, loss, _ = step(params, moms, jnp.int32(i), q,
+                                         jnp.float32(0.05))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+        assert all(np.isfinite(l) for l in losses)
+
+    def test_eval_step_runs(self):
+        params, _, lspecs = M.build("mlp")
+        q = M.make_qcfg(len(lspecs))
+        ev = jax.jit(T.make_eval_step("mlp"))
+        loss, acc = ev(params, jnp.int32(0), q)
+        assert np.isfinite(float(loss))
+        assert 0.0 <= float(acc) <= 1.0

@@ -1,0 +1,128 @@
+//! Dynamic batcher: size + deadline policy over a bounded request queue.
+//!
+//! The compiled fwd HLO has a static batch dimension (32); the batcher
+//! fills a batch up to that size or until the oldest request has waited
+//! `max_wait`, then pads the remainder with zero images.  The assembly
+//! logic is pure (no threads) so it is unit-testable; the server wraps it
+//! in a worker loop.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// One enqueued inference request.
+pub struct Request<T, R> {
+    pub payload: T,
+    pub enqueued: Instant,
+    /// Per-request response channel (std mpsc as a oneshot).
+    pub respond: std::sync::mpsc::Sender<R>,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct Policy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Policy { max_batch: 32, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Outcome of one assembly round.
+pub enum Assembled<T, R> {
+    /// A batch ready to execute (1..=max_batch requests).
+    Batch(Vec<Request<T, R>>),
+    /// Queue closed and drained — worker should exit.
+    Closed,
+}
+
+/// Block until a batch is ready per the policy (or the channel closes).
+pub fn assemble<T, R>(rx: &Receiver<Request<T, R>>, policy: Policy) -> Assembled<T, R> {
+    // block for the first request
+    let first = match rx.recv() {
+        Ok(r) => r,
+        Err(_) => return Assembled::Closed,
+    };
+    let deadline = first.enqueued.max(Instant::now() - policy.max_wait) + policy.max_wait;
+    let mut batch = vec![first];
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Assembled::Batch(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    fn req(v: u32) -> (Request<u32, u32>, mpsc::Receiver<u32>) {
+        let (tx, rx) = mpsc::channel();
+        (Request { payload: v, enqueued: Instant::now(), respond: tx }, rx)
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..5 {
+            tx.send(req(i).0).unwrap();
+        }
+        let policy = Policy { max_batch: 3, max_wait: Duration::from_secs(5) };
+        match assemble(&rx, policy) {
+            Assembled::Batch(b) => {
+                assert_eq!(b.len(), 3);
+                assert_eq!(b[0].payload, 0);
+            }
+            _ => panic!("expected batch"),
+        }
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel::<Request<u32, u32>>();
+        tx.send(req(7).0).unwrap();
+        let policy = Policy { max_batch: 32, max_wait: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        match assemble(&rx, policy) {
+            Assembled::Batch(b) => {
+                assert_eq!(b.len(), 1);
+                assert!(t0.elapsed() < Duration::from_secs(1));
+            }
+            _ => panic!("expected batch"),
+        }
+    }
+
+    #[test]
+    fn closed_channel_reports_closed() {
+        let (tx, rx) = mpsc::channel::<Request<u32, u32>>();
+        drop(tx);
+        assert!(matches!(assemble(&rx, Policy::default()), Assembled::Closed));
+    }
+
+    #[test]
+    fn late_arrivals_join_within_deadline() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1).0).unwrap();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            tx.send(req(2).0).unwrap();
+        });
+        let policy = Policy { max_batch: 8, max_wait: Duration::from_millis(200) };
+        match assemble(&rx, policy) {
+            Assembled::Batch(b) => assert!(b.len() >= 1), // 2 on a fast box
+            _ => panic!(),
+        }
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,97 @@
+//! Serving metrics: request/batch counters + latency percentiles.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::{percentile, summarize};
+
+/// Shared, thread-safe metrics sink for the coordinator.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    latencies_s: Mutex<Vec<f64>>,
+    batch_sizes: Mutex<Vec<usize>>,
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub mean_batch: f64,
+    pub lat_p50_ms: f64,
+    pub lat_p95_ms: f64,
+    pub lat_mean_ms: f64,
+    pub throughput_rps: f64,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, size: usize, latency_s: f64, padded: usize) {
+        self.requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_slots.fetch_add(padded as u64, Ordering::Relaxed);
+        self.latencies_s.lock().unwrap().push(latency_s);
+        self.batch_sizes.lock().unwrap().push(size);
+    }
+
+    pub fn snapshot(&self, elapsed_s: f64) -> Snapshot {
+        let lats = self.latencies_s.lock().unwrap().clone();
+        let sizes = self.batch_sizes.lock().unwrap().clone();
+        let requests = self.requests.load(Ordering::Relaxed);
+        let (p50, p95, mean) = if lats.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            let mut s = lats.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (percentile(&s, 50.0), percentile(&s, 95.0), summarize(&lats).mean)
+        };
+        Snapshot {
+            requests,
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            mean_batch: if sizes.is_empty() {
+                0.0
+            } else {
+                sizes.iter().sum::<usize>() as f64 / sizes.len() as f64
+            },
+            lat_p50_ms: p50 * 1e3,
+            lat_p95_ms: p95 * 1e3,
+            lat_mean_ms: mean * 1e3,
+            throughput_rps: if elapsed_s > 0.0 {
+                requests as f64 / elapsed_s
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::default();
+        m.record_batch(4, 0.010, 28);
+        m.record_batch(2, 0.020, 30);
+        let s = m.snapshot(1.0);
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.padded_slots, 58);
+        assert!((s.mean_batch - 3.0).abs() < 1e-12);
+        assert!(s.lat_p95_ms > s.lat_p50_ms);
+        assert!((s.throughput_rps - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let m = Metrics::default();
+        let s = m.snapshot(0.0);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.lat_p50_ms, 0.0);
+    }
+}

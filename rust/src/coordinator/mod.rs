@@ -1,0 +1,11 @@
+//! L3 coordinator: the serving deployment of the quantized model —
+//! bounded intake queue, dynamic batcher (size+deadline), PJRT worker,
+//! latency/throughput metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Policy, Request};
+pub use metrics::{Metrics, Snapshot};
+pub use server::{load_test, Server, ServerConfig};

@@ -1,0 +1,189 @@
+//! Inference server: bounded intake queue -> dynamic batcher -> PJRT
+//! worker executing the quantized fwd HLO -> per-request responses.
+//!
+//! The worker thread owns the Session + Executor (PJRT handles are not
+//! shared across threads); clients talk through channels.  This is the
+//! deployment shape of the paper's accelerator: DyBit quantization config
+//! is chosen once (by the search framework) and applied as runtime inputs
+//! on every batch.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::qat::{QuantConfig, Session};
+use crate::runtime::{Executor, Manifest};
+use crate::tensor::Tensor;
+
+use super::batcher::{assemble, Assembled, Policy, Request};
+use super::metrics::{Metrics, Snapshot};
+
+/// One image in, one class index out.
+type Payload = Vec<f32>;
+type Reply = Result<usize, String>;
+
+/// Server configuration.
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub model: String,
+    pub qcfg: QuantConfig,
+    pub policy: Policy,
+    pub queue_cap: usize,
+    /// Use the Pallas-kernel fwd artifact if available.
+    pub pallas: bool,
+}
+
+/// Running server handle.
+pub struct Server {
+    tx: Option<SyncSender<Request<Payload, Reply>>>,
+    worker: Option<JoinHandle<Result<()>>>,
+    pub metrics: Arc<Metrics>,
+    started: Instant,
+    img_elems: usize,
+    batch: usize,
+}
+
+impl Server {
+    /// Start the worker; compiles the fwd artifact before returning.
+    pub fn start(manifest: &Manifest, cfg: ServerConfig) -> Result<Server> {
+        let metrics = Arc::new(Metrics::default());
+        let m = metrics.clone();
+        let entry = manifest
+            .models
+            .get(&cfg.model)
+            .ok_or_else(|| anyhow!("unknown model {}", cfg.model))?;
+        let batch = entry.batch;
+        let img_elems: usize = entry.input.iter().skip(1).product();
+        let input_shape = entry.input.clone();
+        let (tx, rx) = sync_channel::<Request<Payload, Reply>>(cfg.queue_cap);
+
+        let manifest = manifest.clone();
+        let worker = std::thread::spawn(move || -> Result<()> {
+            let mut exec = Executor::new(&manifest.dir)?;
+            let mut session = Session::new(&manifest, &cfg.model)?;
+            // compile before serving so the first request isn't a stall
+            let tag = if cfg.pallas { "fwd_pallas" } else { "fwd" };
+            let art = session.model.artifact(tag)?.file.clone();
+            exec.load(&art)?;
+            loop {
+                match assemble(&rx, cfg.policy) {
+                    Assembled::Closed => return Ok(()),
+                    Assembled::Batch(reqs) => {
+                        let t0 = Instant::now();
+                        let n = reqs.len();
+                        // pad to the static batch dim
+                        let mut xdata = vec![0.0f32; batch * img_elems];
+                        for (i, r) in reqs.iter().enumerate() {
+                            if r.payload.len() == img_elems {
+                                xdata[i * img_elems..(i + 1) * img_elems]
+                                    .copy_from_slice(&r.payload);
+                            }
+                        }
+                        let x = Tensor::new(input_shape.clone(), xdata)?;
+                        let out = session.forward(&mut exec, &cfg.qcfg, &x, cfg.pallas);
+                        let dt = t0.elapsed().as_secs_f64();
+                        match out {
+                            Ok(logits) => {
+                                let preds = logits.argmax_rows();
+                                for (i, r) in reqs.iter().enumerate() {
+                                    let _ = r.respond.send(Ok(preds[i]));
+                                }
+                                m.record_batch(n, dt, batch - n);
+                            }
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                for r in &reqs {
+                                    let _ = r.respond.send(Err(msg.clone()));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        });
+
+        Ok(Server {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+            started: Instant::now(),
+            img_elems,
+            batch,
+        })
+    }
+
+    /// Blocking single-request inference (returns predicted class).
+    pub fn infer(&self, image: Vec<f32>) -> Result<usize> {
+        let rx = self.submit(image)?;
+        rx.recv()
+            .map_err(|_| anyhow!("server dropped request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Async submit; returns the response channel.
+    pub fn submit(&self, image: Vec<f32>) -> Result<std::sync::mpsc::Receiver<Reply>> {
+        if image.len() != self.img_elems {
+            return Err(anyhow!("image must have {} elements", self.img_elems));
+        }
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("server stopped"))?
+            .send(Request { payload: image, enqueued: Instant::now(), respond: rtx })
+            .map_err(|_| anyhow!("server worker exited"))?;
+        Ok(rrx)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Stop accepting requests, drain, and return final metrics.
+    pub fn shutdown(mut self) -> Snapshot {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        let elapsed = self.started.elapsed().as_secs_f64();
+        self.metrics.snapshot(elapsed)
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        self.metrics
+            .snapshot(self.started.elapsed().as_secs_f64())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Closed-loop load generator: `clients` threads each issue `per_client`
+/// sequential requests of synthetic images; returns the final snapshot.
+pub fn load_test(server: &Server, clients: usize, per_client: usize,
+                 img_elems: usize) -> Result<()> {
+    let _ = server.metrics.requests.load(Ordering::Relaxed);
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            scope.spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(100 + c as u64);
+                for _ in 0..per_client {
+                    let img = rng.normal_vec(img_elems);
+                    if let Ok(rx) = server.submit(img) {
+                        let _ = rx.recv_timeout(Duration::from_secs(120));
+                    }
+                }
+            });
+        }
+    });
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! AdaptivFloat grid [Tambe et al., DAC'20] — baseline adaptive format.
+//!
+//! sign + e exponent bits + (n-1-e) mantissa bits, no subnormals; the
+//! per-tensor exponent bias of the original is absorbed by the quantizer's
+//! scale search (a power-of-two bias shift IS a scale), exactly as in the
+//! python mirror.
+
+/// Default exponent-bit allocation per total bitwidth (mirrors python).
+pub fn default_exp_bits(n: u32) -> u32 {
+    match n {
+        2 | 3 => 1,
+        4 | 5 => 2,
+        _ => 3,
+    }
+}
+
+/// Sorted signed grid at exponent bias 0.
+pub fn grid(n: u32, e: Option<u32>) -> Vec<f64> {
+    let e = e.unwrap_or_else(|| default_exp_bits(n));
+    let mb = n - 1 - e;
+    assert!(mb >= 1, "adaptivfloat needs >=1 mantissa bit (n={n}, e={e})");
+    let mut pos = Vec::new();
+    for exp in 0..(1u32 << e) {
+        for f in 0..(1u32 << mb) {
+            if exp == 0 && f == 0 {
+                continue; // the all-zero code is sacrificed to represent 0
+            }
+            pos.push(2f64.powi(exp as i32) * (1.0 + f as f64 / (1u64 << mb) as f64));
+        }
+    }
+    pos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pos.dedup();
+    let mut g: Vec<f64> = pos.iter().rev().map(|v| -v).collect();
+    g.push(0.0);
+    g.extend_from_slice(&pos);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adafloat4_values() {
+        // 1.0 (the E=0, f=0 code) is sacrificed for zero: 2^n - 1 values
+        assert_eq!(
+            grid(4, None),
+            vec![-12.0, -8.0, -6.0, -4.0, -3.0, -2.0, -1.5, 0.0,
+                 1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0]
+        );
+    }
+
+    #[test]
+    fn grid_cardinality_fits_codes() {
+        for n in 3..=8u32 {
+            assert_eq!(grid(n, None).len(), (1usize << n) - 1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn tapered_spacing() {
+        // relative step is constant per binade: |Δ|/v grows with v inside
+        // the grid, i.e. absolute spacing increases monotonically
+        let g = grid(6, None);
+        let pos: Vec<f64> = g.into_iter().filter(|v| *v > 0.0).collect();
+        let mut prev_step = 0.0;
+        for w in pos.windows(2) {
+            let step = w[1] - w[0];
+            assert!(step >= prev_step - 1e-12);
+            prev_step = step;
+        }
+    }
+
+    #[test]
+    fn symmetry() {
+        for n in 3..=8u32 {
+            let g = grid(n, None);
+            for (a, b) in g.iter().zip(g.iter().rev()) {
+                assert_eq!(*a, -b);
+            }
+        }
+    }
+}

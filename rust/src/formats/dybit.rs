@@ -1,0 +1,247 @@
+//! DyBit codec — the paper's contribution (Eqn. 1, Table I, Fig. 1).
+//!
+//! An n-bit signed DyBit is 1 sign bit + an m = n-1 bit magnitude field
+//! with a *variable-length* exponent: the count `i` of leading 1s
+//! (terminated by the first 0, which is consumed, or the end of the field)
+//! selects the binade; the remaining k = m-i-1 bits are the fraction.
+//!
+//! * all-zero field          -> 0
+//! * i = 0 (leads with 0)    -> subnormal: value = x / 2^(m-1), linear [0,1)
+//! * i >= 1                  -> value = 2^(i-1) * (1 + x / 2^k)
+//! * all-ones field          -> 2^(m-1)   (Eqn. 1's "max")
+//!
+//! This file is the bit-exact mirror of `python/compile/formats.py`; the
+//! integration test `tests/golden.rs` compares every grid and code table
+//! against `artifacts/formats_golden.json`.
+
+/// Decode an m-bit DyBit magnitude field (m in 1..=7 for 2..=8-bit signed;
+/// m=8 covers the paper's unsigned 8-bit decoder example).
+pub fn magnitude(code: u8, m: u32) -> f64 {
+    debug_assert!(m >= 1 && m <= 8 && (code as u32) < (1u32 << m));
+    if code == 0 {
+        return 0.0;
+    }
+    // i = number of leading ones in the m-bit field (hardware: LOD, Fig. 3b)
+    let mut i = 0u32;
+    for b in (0..m).rev() {
+        if (code >> b) & 1 == 1 {
+            i += 1;
+        } else {
+            break;
+        }
+    }
+    if i == 0 {
+        // subnormal: low m-1 bits over 2^(m-1)
+        let x = (code & ((1 << (m - 1)) - 1)) as f64;
+        return x / (1u64 << (m - 1)) as f64;
+    }
+    if i == m {
+        return (1u64 << (m - 1)) as f64; // all-ones: max = 2^(m-1)
+    }
+    let k = m - i - 1; // fraction bits after the consumed terminating zero
+    let x = (code & ((1u8 << k) - 1)) as f64;
+    let frac = if k > 0 { x / (1u64 << k) as f64 } else { 0.0 };
+    2f64.powi(i as i32 - 1) * (1.0 + frac)
+}
+
+/// Decode a signed n-bit DyBit code (MSB = sign).
+///
+/// The negative-zero code (sign=1, magnitude=0) is remapped to
+/// -2^(m-1) = -max so all 2^n codes carry information (DESIGN.md §5).
+pub fn decode(code: u8, n: u32) -> f64 {
+    debug_assert!(n >= 2 && n <= 8 && (code as u32) < (1u32 << n));
+    let m = n - 1;
+    let sign = (code >> m) & 1;
+    let mag = code & ((1 << m) - 1);
+    if sign == 1 && mag == 0 {
+        return -((1u64 << (m - 1)) as f64);
+    }
+    let v = magnitude(mag, m);
+    if sign == 1 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Nearest-value encode into a signed n-bit code (ties -> lower code,
+/// matching the python mirror).
+pub fn encode(value: f64, n: u32) -> u8 {
+    let mut best_code = 0u8;
+    let mut best_err = f64::INFINITY;
+    for c in 0..(1u32 << n) {
+        let err = (decode(c as u8, n) - value).abs();
+        if err < best_err {
+            best_err = err;
+            best_code = c as u8;
+        }
+    }
+    best_code
+}
+
+/// Sorted signed grid at scale 1.0 (2^n - 1 distinct values).
+pub fn grid(n: u32) -> Vec<f64> {
+    let m = n - 1;
+    let mut pos: Vec<f64> = (1..(1u32 << m))
+        .map(|c| magnitude(c as u8, m))
+        .collect();
+    pos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pos.dedup();
+    let mut g: Vec<f64> = pos.iter().rev().map(|v| -v).collect();
+    g.push(0.0);
+    g.extend_from_slice(&pos);
+    g
+}
+
+/// Unsigned m-bit grid (the paper's Table I uses m = 4).
+pub fn grid_unsigned(m: u32) -> Vec<f64> {
+    let mut g: Vec<f64> = (0..(1u32 << m)).map(|c| magnitude(c as u8, m)).collect();
+    g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    g
+}
+
+/// Code-indexed value table (code -> value) for the fused decode-GEMM
+/// kernel; length 2^n, padded to `len` by repeating the last entry.
+pub fn code_lut(n: u32, len: usize) -> Vec<f32> {
+    let mut lut: Vec<f32> = (0..(1u32 << n)).map(|c| decode(c as u8, n) as f32).collect();
+    lut.resize(len, *lut.last().unwrap());
+    lut
+}
+
+/// Decoded (exponent, mantissa-style) split used by the MP decoder model
+/// in the simulator: returns (i-1 exponent, normalized fraction in [1,2)),
+/// or None for zero/subnormal (which decode via the linear path).
+pub fn decode_fields(code: u8, m: u32) -> Option<(i32, f64)> {
+    if code == 0 {
+        return None;
+    }
+    let mut i = 0u32;
+    for b in (0..m).rev() {
+        if (code >> b) & 1 == 1 {
+            i += 1;
+        } else {
+            break;
+        }
+    }
+    if i == 0 {
+        return None;
+    }
+    let v = magnitude(code, m);
+    let e = i as i32 - 1;
+    Some((e, v / 2f64.powi(e)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table I, verbatim.
+    #[test]
+    fn table1_exact() {
+        let expect = [
+            0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0, 1.25,
+            1.5, 1.75, 2.0, 3.0, 4.0, 8.0,
+        ];
+        assert_eq!(grid_unsigned(4), expect);
+    }
+
+    /// Paper Sec. III-B2 decoder example: 11001010 -> exp 001, man 10101000.
+    #[test]
+    fn decoder_example_8bit() {
+        // i=2 -> exponent i-1 = 1; fraction 01010 over 2^5
+        let v = magnitude(0b1100_1010, 8 /* unsigned example */);
+        assert_eq!(v, 2.0 * (1.0 + 10.0 / 32.0));
+        let (e, f) = decode_fields(0b1100_1010, 8).unwrap();
+        assert_eq!(e, 1);
+        assert!((f - (1.0 + 10.0 / 32.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_codes() {
+        for n in 2..=8u32 {
+            for c in 0..(1u32 << n) {
+                let v = decode(c as u8, n);
+                let c2 = encode(v, n);
+                // distinct codes may share a value (only ±0); require value eq
+                assert_eq!(
+                    decode(c2, n),
+                    v,
+                    "n={n} c={c:#010b} v={v} re-encoded {c2:#010b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encode_is_nearest() {
+        // scan fine values, check returned code minimizes |err|
+        for n in [2u32, 4, 8] {
+            let g = grid(n);
+            let top = *g.last().unwrap();
+            let mut v = -top * 1.2;
+            while v < top * 1.2 {
+                let c = encode(v, n);
+                let got = (decode(c, n) - v).abs();
+                let best = g
+                    .iter()
+                    .map(|x| (x - v).abs())
+                    .fold(f64::INFINITY, f64::min);
+                assert!(
+                    (got - best).abs() < 1e-12,
+                    "n={n} v={v}: got err {got}, best {best}"
+                );
+                v += top / 57.3;
+            }
+        }
+    }
+
+    #[test]
+    fn grid_sizes() {
+        // 2^n codes, ±0 collapse, neg-zero remapped to -max duplicate:
+        // distinct values = 2^n - 1
+        for n in 2..=8u32 {
+            assert_eq!(grid(n).len(), (1usize << n) - 1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn grid_symmetric_and_monotone() {
+        for n in 2..=8u32 {
+            let g = grid(n);
+            for w in g.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            for (a, b) in g.iter().zip(g.iter().rev()) {
+                assert_eq!(*a, -b);
+            }
+        }
+    }
+
+    #[test]
+    fn subnormal_region_is_linear() {
+        // codes 0..2^(m-1) decode to x / 2^(m-1): uniform spacing near zero,
+        // the property that lets DyBit track bell-shaped tensors (Fig. 2)
+        for m in 2..=7u32 {
+            let step = 1.0 / (1u64 << (m - 1)) as f64;
+            for x in 0..(1u32 << (m - 1)) {
+                assert_eq!(magnitude(x as u8, m), x as f64 * step);
+            }
+        }
+    }
+
+    #[test]
+    fn max_is_pow2_of_m_minus_1() {
+        for m in 1..=7u32 {
+            let all_ones = ((1u32 << m) - 1) as u8;
+            assert_eq!(magnitude(all_ones, m), (1u64 << (m - 1)) as f64);
+        }
+    }
+
+    #[test]
+    fn code_lut_padding() {
+        let lut = code_lut(4, 256);
+        assert_eq!(lut.len(), 256);
+        assert_eq!(lut[15], lut[255]);
+        assert_eq!(lut[0], 0.0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Flint grid — reconstruction of ANT's float-int hybrid [Guo et al. 2022],
+//! the paper's closest competitor (Table II row Flint(4/4)).
+//!
+//! A literal leading-zero unary-exponent reading of flint degenerates to a
+//! *uniform* grid at 4 bits (contradicting ANT's own results), so we
+//! reconstruct it as the nearest well-defined member of the same tapered
+//! family: a minifloat with subnormals, es = ceil((n-1)/2) exponent bits
+//! and n-1-es mantissa bits.  Bit-exact mirror of python formats.py;
+//! rationale documented in DESIGN.md §6.
+
+/// Positive magnitudes (bias 0).
+fn magnitudes(n: u32) -> Vec<f64> {
+    let es = n / 2; // == ceil((n-1)/2) for n >= 2
+    let mb = n - 1 - es;
+    assert!(mb >= 1, "flint reconstruction needs >=1 mantissa bit");
+    let mut vals = Vec::new();
+    for f in 1..(1u32 << mb) {
+        // subnormals: (f / 2^mb) * 2^1  (E = 0 shares the first binade)
+        vals.push(f as f64 / (1u64 << mb) as f64 * 2.0);
+    }
+    for exp in 1..(1u32 << es) {
+        for f in 0..(1u32 << mb) {
+            vals.push(2f64.powi(exp as i32) * (1.0 + f as f64 / (1u64 << mb) as f64));
+        }
+    }
+    vals
+}
+
+/// Sorted signed grid at scale 1.0.
+pub fn grid(n: u32) -> Vec<f64> {
+    let mut pos = magnitudes(n);
+    pos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pos.dedup();
+    let mut g: Vec<f64> = pos.iter().rev().map(|v| -v).collect();
+    g.push(0.0);
+    g.extend_from_slice(&pos);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flint4_values() {
+        assert_eq!(
+            grid(4),
+            vec![-12.0, -8.0, -6.0, -4.0, -3.0, -2.0, -1.0, 0.0,
+                 1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0]
+        );
+    }
+
+    #[test]
+    fn tapered_not_uniform_at_4bit() {
+        // the defining fix vs the degenerate literal reading
+        let g = grid(4);
+        let steps: Vec<f64> = g.windows(2).map(|w| w[1] - w[0]).collect();
+        let uniform = steps.iter().all(|s| (*s - steps[0]).abs() < 1e-12);
+        assert!(!uniform);
+    }
+
+    #[test]
+    fn symmetric_monotone() {
+        for n in 3..=8u32 {
+            let g = grid(n);
+            for w in g.windows(2) {
+                assert!(w[0] < w[1], "n={n}");
+            }
+            for (a, b) in g.iter().zip(g.iter().rev()) {
+                assert_eq!(*a, -b);
+            }
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Symmetric uniform INT grid — the conventional fixed-point baseline the
+//! paper compares against (INT4/INT8 rows of Tables II/III), also standing
+//! in for PACT/DSQ when combined with the quantizer's RMSE-optimal clip
+//! search (DESIGN.md §6).
+
+/// {-(2^(n-1)-1) .. 2^(n-1)-1} at scale 1.0 (symmetric, no -2^(n-1)).
+pub fn grid(n: u32) -> Vec<f64> {
+    let q = (1i64 << (n - 1)) - 1;
+    (-q..=q).map(|x| x as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_symmetry() {
+        for n in 2..=8u32 {
+            let g = grid(n);
+            assert_eq!(g.len(), (1usize << n) - 1);
+            for (a, b) in g.iter().zip(g.iter().rev()) {
+                assert_eq!(*a, -b);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_spacing() {
+        let g = grid(4);
+        for w in g.windows(2) {
+            assert_eq!(w[1] - w[0], 1.0);
+        }
+    }
+
+    #[test]
+    fn int2_is_ternary() {
+        assert_eq!(grid(2), vec![-1.0, 0.0, 1.0]);
+    }
+}

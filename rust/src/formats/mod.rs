@@ -1,0 +1,123 @@
+//! Numeric formats: DyBit (the paper's contribution) + every baseline it
+//! is compared against, reduced to sorted value grids + per-tensor scale
+//! adaptation.  Bit-exact mirror of `python/compile/formats.py`; verified
+//! against `artifacts/formats_golden.json` in `tests/golden.rs`.
+
+pub mod adaptivfloat;
+pub mod dybit;
+pub mod flint;
+pub mod intq;
+pub mod posit;
+pub mod quantizer;
+
+/// The LUT interchange width shared with the HLO artifacts (aot.py).
+pub const LUT_SIZE: usize = 256;
+
+/// Supported numeric formats (paper Tables II/III row families).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Format {
+    DyBit,
+    Int,
+    Posit,
+    AdaptivFloat,
+    Flint,
+}
+
+impl Format {
+    pub const ALL: [Format; 5] = [
+        Format::DyBit,
+        Format::Int,
+        Format::Posit,
+        Format::AdaptivFloat,
+        Format::Flint,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Format::DyBit => "dybit",
+            Format::Int => "int",
+            Format::Posit => "posit",
+            Format::AdaptivFloat => "adaptivfloat",
+            Format::Flint => "flint",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Format> {
+        Format::ALL.iter().copied().find(|f| f.name() == s)
+    }
+
+    /// Sorted signed value grid at scale 1.0.
+    ///
+    /// Panics on unsupported (format, bits) combos — AdaptivFloat/Flint
+    /// need n >= 3; everything else supports 2..=8 (same as python).
+    pub fn grid(&self, bits: u32) -> Vec<f64> {
+        assert!((2..=8).contains(&bits), "bits={bits}");
+        match self {
+            Format::DyBit => dybit::grid(bits),
+            Format::Int => intq::grid(bits),
+            Format::Posit => posit::grid(bits, 1),
+            Format::AdaptivFloat => adaptivfloat::grid(bits, None),
+            Format::Flint => flint::grid(bits),
+        }
+    }
+
+    /// Does this (format, bits) combination exist?
+    pub fn supports(&self, bits: u32) -> bool {
+        match self {
+            Format::AdaptivFloat | Format::Flint => (3..=8).contains(&bits),
+            _ => (2..=8).contains(&bits),
+        }
+    }
+
+    /// Fixed-size ascending LUT (edge-padded) — the runtime unit fed to the
+    /// HLO fake-quant inputs; mirrors formats.padded_lut.
+    pub fn padded_lut(&self, bits: u32) -> Vec<f32> {
+        let g = self.grid(bits);
+        assert!(g.len() <= LUT_SIZE);
+        let mut lut: Vec<f32> = g.iter().map(|&v| v as f32).collect();
+        let last = *lut.last().expect("non-empty grid");
+        lut.resize(LUT_SIZE, last);
+        lut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for f in Format::ALL {
+            assert_eq!(Format::from_name(f.name()), Some(f));
+        }
+        assert_eq!(Format::from_name("nope"), None);
+    }
+
+    #[test]
+    fn grids_fit_lut() {
+        for f in Format::ALL {
+            for bits in 2..=8u32 {
+                if !f.supports(bits) {
+                    continue;
+                }
+                let g = f.grid(bits);
+                assert!(g.len() <= LUT_SIZE, "{f:?} {bits}: {}", g.len());
+                assert!(g.windows(2).all(|w| w[0] < w[1]), "{f:?} {bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn padded_lut_is_monotone_nondecreasing() {
+        let lut = Format::DyBit.padded_lut(4);
+        assert_eq!(lut.len(), LUT_SIZE);
+        assert!(lut.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(lut[LUT_SIZE - 1], 4.0); // dybit4 max
+    }
+
+    #[test]
+    fn dybit_int_coincide_at_2_bits() {
+        // both are ternary {-1, 0, 1}: documented identity (DESIGN.md §5)
+        assert_eq!(Format::DyBit.grid(2), Format::Int.grid(2));
+    }
+}

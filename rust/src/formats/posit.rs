@@ -1,0 +1,107 @@
+//! Posit(n, es) decode — baseline adaptive format [Langroudi et al., ALPS].
+//!
+//! Standard posit semantics: two's-complement negation, regime run-length
+//! encoding, es exponent bits, remaining fraction bits with implicit 1.
+//! The paper evaluates Posit(8,·) (Table II row Posit(8/8)); we keep es
+//! configurable and default to es=1 like the python mirror.
+
+/// Decode an n-bit posit code; None for NaR (the 1000…0 pattern).
+pub fn value(code: u32, n: u32, es: u32) -> Option<f64> {
+    debug_assert!(n >= 2 && n <= 16);
+    let mask = (1u32 << n) - 1;
+    if code == 0 {
+        return Some(0.0);
+    }
+    if code == 1 << (n - 1) {
+        return None; // NaR
+    }
+    let neg = (code >> (n - 1)) & 1 == 1;
+    let c = if neg { (code.wrapping_neg()) & mask } else { code };
+    let bits = c & ((1 << (n - 1)) - 1); // strip sign bit
+    let nb = n - 1;
+    let first = (bits >> (nb - 1)) & 1;
+    let mut run = 0u32;
+    for b in (0..nb).rev() {
+        if (bits >> b) & 1 == first {
+            run += 1;
+        } else {
+            break;
+        }
+    }
+    let k: i32 = if first == 1 { run as i32 - 1 } else { -(run as i32) };
+    let rest_len = nb.saturating_sub(run + 1); // regime terminator consumed
+    let rest = if rest_len > 0 { bits & ((1 << rest_len) - 1) } else { 0 };
+    let e_len = es.min(rest_len);
+    let mut e = if e_len > 0 { rest >> (rest_len - e_len) } else { 0 };
+    e <<= es - e_len; // pad truncated exponent with zeros
+    let f_len = rest_len - e_len;
+    let f = if f_len > 0 { rest & ((1 << f_len) - 1) } else { 0 };
+    let frac = 1.0 + if f_len > 0 { f as f64 / (1u64 << f_len) as f64 } else { 0.0 };
+    let useed = 2f64.powi(1 << es);
+    let v = useed.powi(k) * 2f64.powi(e as i32) * frac;
+    Some(if neg { -v } else { v })
+}
+
+/// Sorted grid of all finite posit(n, es) values.
+pub fn grid(n: u32, es: u32) -> Vec<f64> {
+    let mut vals: Vec<f64> = (0..(1u32 << n))
+        .filter_map(|c| value(c, n, es))
+        .collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.dedup();
+    vals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_posit4_es1_values() {
+        // cross-checked against the python mirror / posit standard tables
+        let g = grid(4, 1);
+        assert_eq!(
+            g,
+            vec![-16.0, -4.0, -2.0, -1.0, -0.5, -0.25, -0.0625, 0.0,
+                 0.0625, 0.25, 0.5, 1.0, 2.0, 4.0, 16.0]
+        );
+    }
+
+    #[test]
+    fn nar_excluded() {
+        assert!(value(1 << 7, 8, 1).is_none());
+        assert_eq!(grid(8, 1).len(), (1 << 8) - 1); // all codes distinct but NaR
+    }
+
+    #[test]
+    fn negation_symmetry() {
+        for n in [4u32, 6, 8] {
+            let g = grid(n, 1);
+            for (a, b) in g.iter().zip(g.iter().rev()) {
+                assert_eq!(*a, -b, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_in_code_for_positives() {
+        // positive posits compare like integers — a defining property
+        for es in [0u32, 1, 2] {
+            let mut prev = 0.0;
+            for c in 1..(1u32 << 7) {
+                let v = value(c, 8, es).unwrap();
+                assert!(v > prev, "es={es} c={c}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn useed_scaling() {
+        // regime k multiplies by useed = 2^(2^es)
+        let one = value(0b0100_0000, 8, 1).unwrap();
+        assert_eq!(one, 1.0);
+        let next_regime = value(0b0110_0000, 8, 1).unwrap();
+        assert_eq!(next_regime, 4.0); // useed = 4 for es=1
+    }
+}

@@ -1,0 +1,220 @@
+//! Per-tensor quantizer: scale calibration, fake-quant, RMSE (paper Eqn. 2).
+//!
+//! This is the tensor-level adaptation of Fig. 2: the format grid is fixed,
+//! the per-tensor scale `s` is searched to minimize the σ-normalized RMSE.
+//! The candidate ladder (powers of two under the max-abs scale × fine
+//! multipliers) mirrors `python/compile/formats.py::calibrate_scale` so the
+//! two sides pick identical scales on identical data.
+
+use super::Format;
+
+/// Nearest-value projection of `x` onto `scale * grid` (grid ascending).
+pub fn quantize_to_grid(x: &[f32], grid: &[f64], scale: f64, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    // midpoints once per call; binary search per element
+    let mids: Vec<f64> = grid.windows(2).map(|w| (w[0] + w[1]) * 0.5 * scale).collect();
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        let idx = upper_bound(&mids, v as f64);
+        *o = (grid[idx] * scale) as f32;
+    }
+}
+
+/// First index whose value is > x (searchsorted side="right").
+#[inline]
+pub fn upper_bound(sorted: &[f64], x: f64) -> usize {
+    let mut lo = 0usize;
+    let mut hi = sorted.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if sorted[mid] <= x {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Paper Eqn. 2: sqrt(mean(((x - x̂)/σ)²)) with σ = std(x).
+pub fn rmse(x: &[f32], xq: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), xq.len());
+    if x.is_empty() {
+        return 0.0;
+    }
+    let n = x.len() as f64;
+    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    let sigma = if var > 0.0 { var.sqrt() } else { 1.0 };
+    let se = x
+        .iter()
+        .zip(xq.iter())
+        .map(|(&a, &b)| ((a as f64 - b as f64) / sigma).powi(2))
+        .sum::<f64>()
+        / n;
+    se.sqrt()
+}
+
+/// Max-abs scale: maps the tensor's max magnitude to the grid max.
+pub fn maxabs_scale(x: &[f32], grid: &[f64]) -> f64 {
+    let gm = grid.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    let xm = x.iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+    if xm > 0.0 && gm > 0.0 {
+        xm / gm
+    } else {
+        1.0
+    }
+}
+
+/// RMSE-optimal scale search (bit-exact mirror of the python ladder).
+///
+/// Scans power-of-two multiples of the max-abs scale in BOTH directions:
+/// tapered grids like DyBit often prefer scales *above* max-abs, trading a
+/// coarser far tail for a finer dense region near zero.
+pub fn calibrate_scale(x: &[f32], grid: &[f64]) -> f64 {
+    let base = maxabs_scale(x, grid);
+    if base == 0.0 {
+        return 1.0;
+    }
+    let mut buf = vec![0.0f32; x.len()];
+    let mut best = (base, f64::INFINITY);
+    for j in -6i32..12 {
+        for mult in [1.0f64, 0.75, 0.5] {
+            let s = base * mult * 2f64.powi(-j);
+            quantize_to_grid(x, grid, s, &mut buf);
+            let e = rmse(x, &buf);
+            if e < best.1 {
+                best = (s, e);
+            }
+        }
+    }
+    best.0
+}
+
+/// Result of quantizing one tensor.
+#[derive(Clone, Debug)]
+pub struct QuantResult {
+    pub scale: f64,
+    pub rmse: f64,
+}
+
+/// Fake-quantize in place-ish: returns quantized copy + (scale, rmse).
+pub fn fake_quant(x: &[f32], fmt: Format, bits: u32,
+                  scale: Option<f64>) -> (Vec<f32>, QuantResult) {
+    let grid = fmt.grid(bits);
+    let s = scale.unwrap_or_else(|| calibrate_scale(x, &grid));
+    let mut out = vec![0.0f32; x.len()];
+    quantize_to_grid(x, &grid, s, &mut out);
+    let e = rmse(x, &out);
+    (out, QuantResult { scale: s, rmse: e })
+}
+
+/// Per-layer RMSE of a tensor at (fmt, bits) without keeping the output.
+pub fn quant_rmse(x: &[f32], fmt: Format, bits: u32) -> f64 {
+    fake_quant(x, fmt, bits, None).1.rmse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn upper_bound_matches_linear_scan() {
+        let v = vec![-1.0, 0.0, 0.5, 0.5, 2.0];
+        for x in [-2.0, -1.0, 0.2, 0.5, 1.0, 3.0] {
+            let want = v.iter().filter(|&&m| m <= x).count();
+            assert_eq!(upper_bound(&v, x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        let g = Format::DyBit.grid(4);
+        let x: Vec<f32> = vec![0.3, -1.7, 0.0, 2.5, -0.01];
+        let mut q1 = vec![0.0; x.len()];
+        quantize_to_grid(&x, &g, 0.5, &mut q1);
+        let mut q2 = vec![0.0; x.len()];
+        quantize_to_grid(&q1, &g, 0.5, &mut q2);
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn rmse_zero_for_exact() {
+        let x = vec![1.0f32, -2.0, 0.0];
+        assert_eq!(rmse(&x, &x), 0.0);
+    }
+
+    #[test]
+    fn calibrated_beats_or_ties_maxabs() {
+        let mut rng = Rng::new(11);
+        let x = rng.normal_vec(2000);
+        for fmt in Format::ALL {
+            let g = fmt.grid(4);
+            let s_cal = calibrate_scale(&x, &g);
+            let s_max = maxabs_scale(&x, &g);
+            let mut a = vec![0.0; x.len()];
+            let mut b = vec![0.0; x.len()];
+            quantize_to_grid(&x, &g, s_cal, &mut a);
+            quantize_to_grid(&x, &g, s_max, &mut b);
+            assert!(rmse(&x, &a) <= rmse(&x, &b) + 1e-12, "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn more_bits_never_hurt_rmse() {
+        let mut rng = Rng::new(5);
+        let x = rng.normal_vec(1500);
+        for fmt in [Format::DyBit, Format::Int, Format::Flint] {
+            let e4 = quant_rmse(&x, fmt, 4);
+            let e8 = quant_rmse(&x, fmt, 8);
+            assert!(e8 <= e4 + 1e-9, "{fmt:?}: e8={e8} e4={e4}");
+        }
+    }
+
+    #[test]
+    fn prop_quantized_values_on_grid() {
+        check("quantized-on-grid", 60, |r, s| {
+            (gen::tensor(r, s), gen::bitwidth(r))
+        }, |(x, bits)| {
+            let (q, res) = fake_quant(x, Format::DyBit, *bits as u32, None);
+            let g = Format::DyBit.grid(*bits as u32);
+            q.iter().all(|&v| {
+                g.iter().any(|&gv| ((gv * res.scale) as f32 - v).abs() < 1e-30
+                    || (gv * res.scale) as f32 == v)
+            })
+        });
+    }
+
+    #[test]
+    fn prop_quantization_is_nearest() {
+        check("nearest-projection", 40, |r, s| gen::tensor(r, s), |x| {
+            let g = Format::DyBit.grid(4);
+            let s = 0.37f64;
+            let mut q = vec![0.0; x.len()];
+            quantize_to_grid(x, &g, s, &mut q);
+            x.iter().zip(q.iter()).all(|(&xi, &qi)| {
+                let best = g
+                    .iter()
+                    .map(|&gv| (gv * s - xi as f64).abs())
+                    .fold(f64::INFINITY, f64::min);
+                ((qi as f64 - xi as f64).abs() - best) < 1e-6
+            })
+        });
+    }
+
+    #[test]
+    fn dybit_beats_int_on_heavy_tails() {
+        // the paper's core claim at the metric level (Fig. 2 narrative)
+        let mut rng = Rng::new(2024);
+        let x: Vec<f32> = (0..4000)
+            .map(|_| {
+                let v = rng.normal();
+                (v * (1.0 + 2.0 * rng.uniform().powi(4) * 5.0)) as f32
+            })
+            .collect();
+        let d = quant_rmse(&x, Format::DyBit, 4);
+        let i = quant_rmse(&x, Format::Int, 4);
+        assert!(d < i, "dybit {d} vs int {i}");
+    }
+}

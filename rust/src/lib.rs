@@ -1,0 +1,34 @@
+//! # DyBit — dynamic bit-precision quantized inference, full-system repro
+//!
+//! Reproduction of *DyBit: Dynamic Bit-Precision Numbers for Efficient
+//! Quantized Neural Network Inference* (IEEE TCAD 2023) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`formats`] — the DyBit codec (Eqn. 1 / Table I) and every baseline
+//!   format, with per-tensor scale adaptation and the Eqn. 2 RMSE metric.
+//! * [`sim`] — cycle-accurate model of the paper's run-time configurable
+//!   mixed-precision systolic accelerator (Fig. 3), ZCU102 preset.
+//! * [`search`] — the hardware-aware quantization framework (Fig. 4,
+//!   Algorithm 1): speedup-constrained and RMSE-constrained strategies.
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled HLO artifacts
+//!   produced by `python/compile/aot.py` (build-time only python).
+//! * [`qat`] — quantization-aware training driver + top-1 evaluation.
+//! * [`coordinator`] — inference service: dynamic batcher + worker loop.
+//! * [`models`] — per-model layer descriptors for the simulator.
+//! * [`tensor`], [`util`] — substrates (tensors, IO, JSON, RNG, stats…).
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for measured
+//! reproductions of every table/figure in the paper.
+
+pub mod coordinator;
+pub mod formats;
+pub mod models;
+pub mod qat;
+pub mod runtime;
+pub mod search;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+/// Default artifact directory (relative to the repo root / cwd).
+pub const ARTIFACTS_DIR: &str = "artifacts";

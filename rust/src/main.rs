@@ -1,0 +1,261 @@
+//! `dybit` CLI — the leader entrypoint for the whole system.
+//!
+//! Subcommands:
+//!   formats                 print format grids + Table I
+//!   simulate  --model M     per-layer cycle report at a uniform precision
+//!   search    --model M     run Algorithm 1 (either strategy)
+//!   train     --model M     FP32 pre-train via the AOT train-step
+//!   qat       --model M     QAT fine-tune at a (format, W/A) config + eval
+//!   serve     --model M     start the batching server and run a load test
+//!   report                  dump manifest summary
+//!
+//! Everything executes from compiled artifacts; run `make artifacts` once.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use dybit::coordinator::{Policy, Server, ServerConfig};
+use dybit::formats::dybit as dybit_fmt;
+use dybit::formats::Format;
+use dybit::qat::{QuantConfig, Session};
+use dybit::runtime::{Executor, Manifest};
+use dybit::search::{run_search, Strategy};
+use dybit::sim::{HwConfig, Prec, Simulator};
+use dybit::util::argparse::Args;
+use dybit::util::stats::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let r = match cmd.as_str() {
+        "formats" => cmd_formats(&args),
+        "simulate" => cmd_simulate(&args),
+        "search" => cmd_search(&args),
+        "train" => cmd_train(&args, false),
+        "qat" => cmd_train(&args, true),
+        "serve" => cmd_serve(&args),
+        "report" => cmd_report(&args),
+        _ => {
+            eprintln!(
+                "usage: dybit <formats|simulate|search|train|qat|serve|report> [--flags]\n\
+                 common flags: --artifacts DIR --model NAME --format dybit --wbits 4 --abits 4\n\
+                 search: --strategy speedup|rmse --alpha 4.0 --beta 2.0 --topk 3\n\
+                 train/qat: --steps N --lr 0.05 --eval-batches 16\n\
+                 serve: --clients 4 --requests 64 --max-wait-ms 5"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn manifest(args: &Args) -> Result<Manifest> {
+    let dir = args.get_or("artifacts", dybit::ARTIFACTS_DIR);
+    Manifest::load(Path::new(&dir))
+}
+
+fn parse_format(args: &Args) -> Result<Format> {
+    let name = args.get_or("format", "dybit");
+    Format::from_name(&name).ok_or_else(|| anyhow!("unknown format '{name}'"))
+}
+
+fn cmd_formats(args: &Args) -> Result<()> {
+    let bits = args.get_usize("bits", 4) as u32;
+    println!("Table I — 4-bit unsigned DyBit value table:");
+    let t1 = dybit_fmt::grid_unsigned(4);
+    for (c, v) in t1.iter().enumerate() {
+        print!("{c:04b}:{v:<6} ");
+        if c % 4 == 3 {
+            println!();
+        }
+    }
+    println!("\nsigned grids at {bits} bits (scale 1.0):");
+    for f in Format::ALL {
+        if !f.supports(bits) {
+            continue;
+        }
+        let g = f.grid(bits);
+        println!("{:>13} ({:3} values): {:?}", f.name(), g.len(), g);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let name = args.get_or("model", "miniresnet18");
+    let layers = dybit::models::from_manifest(&m, &name)
+        .ok_or_else(|| anyhow!("model '{name}' not in manifest"))?;
+    let wbits = args.get_usize("wbits", 8) as u32;
+    let abits = args.get_usize("abits", 8) as u32;
+    let pw = Prec::from_bits(wbits).ok_or_else(|| anyhow!("wbits must be 2/4/8"))?;
+    let pa = Prec::from_bits(abits).ok_or_else(|| anyhow!("abits must be 2/4/8"))?;
+    let batch = args.get_usize("batch", 1);
+    let mut sim = Simulator::new(HwConfig::zcu102(), layers, batch);
+
+    let mut table = Table::new(&["layer", "kind", "M", "K", "N", "cycles", "util", "KB moved"]);
+    let assign = vec![(pw, pa); sim.layers.len()];
+    let res = sim.run(&assign);
+    for (l, c) in sim.layers.clone().iter().zip(res.per_layer.iter()) {
+        table.row(vec![
+            l.name.clone(),
+            format!("{:?}", l.kind),
+            l.m.to_string(),
+            l.k.to_string(),
+            l.n.to_string(),
+            c.total.to_string(),
+            format!("{:.2}", c.utilization),
+            format!("{:.1}", c.bytes as f64 / 1024.0),
+        ]);
+    }
+    table.print();
+    println!(
+        "total: {} cycles = {:.3} ms @ {} MHz  (batch={batch}, {}W{}A)",
+        res.total_cycles,
+        res.latency_s * 1e3,
+        sim.cfg.freq_mhz,
+        wbits,
+        abits
+    );
+    let base = sim.speedup(&assign);
+    println!("speedup vs 8/8 baseline: {base:.2}x");
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let name = args.get_or("model", "miniresnet18");
+    let fmt = parse_format(args)?;
+    let strategy = match args.get_or("strategy", "speedup").as_str() {
+        "speedup" => Strategy::SpeedupConstrained { alpha: args.get_f64("alpha", 4.0) },
+        "rmse" => Strategy::RmseConstrained { beta: args.get_f64("beta", 2.0) },
+        s => return Err(anyhow!("strategy must be speedup|rmse, got {s}")),
+    };
+    let top_k = args.get_usize("topk", 3);
+
+    let mut exec = Executor::new(&m.dir)?;
+    let mut session = Session::new(&m, &name)?;
+    let weights = session.layer_weights();
+    let acts = session.layer_acts(&mut exec, 7)?;
+    let layers = session.model.layers.clone();
+    let mut sim = Simulator::new(HwConfig::zcu102(), layers, 1);
+
+    let r = run_search(&mut sim, &weights, &acts, fmt, strategy, top_k);
+    println!("strategy: {strategy:?} (top-k {top_k}), format {}", fmt.name());
+    println!(
+        "result: speedup {:.2}x, rmse ratio {:.3}, satisfied={}, {} iters",
+        r.speedup, r.rmse_ratio, r.satisfied, r.iterations
+    );
+    let mut table = Table::new(&["layer", "W bits", "A bits"]);
+    for (l, (pw, pa)) in session.model.layers.iter().zip(r.assignment.iter()) {
+        table.row(vec![l.name.clone(), pw.bits().to_string(), pa.bits().to_string()]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_train(args: &Args, qat: bool) -> Result<()> {
+    let m = manifest(args)?;
+    let name = args.get_or("model", "mlp");
+    let steps = args.get_usize("steps", 200);
+    let lr = args.get_f32("lr", 0.05);
+    let eval_batches = args.get_usize("eval-batches", 16);
+
+    let mut exec = Executor::new(&m.dir)?;
+    let mut session = Session::new(&m, &name)?;
+    let nl = session.model.n_quant_layers;
+
+    let mut q = if qat {
+        let fmt = parse_format(args)?;
+        let wbits = args.get_usize("wbits", 4) as u32;
+        let abits = args.get_usize("abits", 4) as u32;
+        QuantConfig::uniform(nl, fmt, wbits, abits)
+    } else {
+        QuantConfig::fp32(nl)
+    };
+    if qat {
+        session.calibrate(&mut exec, &mut q, 99)?;
+    }
+
+    println!(
+        "{} {name}: {steps} steps, lr {lr} ({} artifacts from {})",
+        if qat { "QAT" } else { "train" },
+        exec.platform(),
+        m.dir.display()
+    );
+    let t0 = std::time::Instant::now();
+    for chunk in 0..steps.div_ceil(25) {
+        let s0 = chunk * 25;
+        let n = 25.min(steps - s0);
+        let ms = session.train(&mut exec, &q, n, lr, s0 as i32)?;
+        let last = ms.last().unwrap();
+        println!(
+            "step {:4}: loss {:.4} acc {:.3} ({:.1}s)",
+            s0 + n,
+            last.loss,
+            last.acc,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    let ev = session.evaluate(&mut exec, &q, eval_batches)?;
+    println!("eval: loss {:.4} top-1 {:.4}", ev.loss, ev.acc);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let name = args.get_or("model", "mlp");
+    let nl = m
+        .models
+        .get(&name)
+        .ok_or_else(|| anyhow!("unknown model {name}"))?
+        .n_quant_layers;
+    let fmt = parse_format(args)?;
+    let wbits = args.get_usize("wbits", 4) as u32;
+    let abits = args.get_usize("abits", 8) as u32;
+    let qcfg = QuantConfig::uniform(nl, fmt, wbits, abits);
+    let cfg = ServerConfig {
+        model: name.clone(),
+        qcfg,
+        policy: Policy {
+            max_batch: m.models[&name].batch,
+            max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64),
+        },
+        queue_cap: args.get_usize("queue-cap", 256),
+        pallas: args.has("pallas"),
+    };
+    let clients = args.get_usize("clients", 4);
+    let requests = args.get_usize("requests", 64);
+    let img_elems: usize = m.models[&name].input.iter().skip(1).product();
+
+    println!("serving {name} ({}W{}A {}), load test: {clients} clients x {requests} reqs",
+             wbits, abits, fmt.name());
+    let server = Server::start(&m, cfg)?;
+    dybit::coordinator::load_test(&server, clients, requests, img_elems)?;
+    let snap = server.shutdown();
+    println!(
+        "requests {}  batches {}  mean batch {:.1}  p50 {:.1}ms  p95 {:.1}ms  {:.1} req/s",
+        snap.requests, snap.batches, snap.mean_batch, snap.lat_p50_ms,
+        snap.lat_p95_ms, snap.throughput_rps
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let mut table = Table::new(&["model", "stands for", "layers", "params", "artifacts"]);
+    for (name, e) in &m.models {
+        table.row(vec![
+            name.clone(),
+            e.stands_for.clone(),
+            e.layers.len().to_string(),
+            e.params.iter().map(|p| p.nelems).sum::<usize>().to_string(),
+            e.artifacts.keys().cloned().collect::<Vec<_>>().join(","),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Model descriptors for the simulator/search when artifacts are present
+//! (manifest-backed) or absent (built-in synthetic stand-ins for tests and
+//! sim-only benches).
+
+use crate::runtime::Manifest;
+use crate::sim::{LayerKind, LayerShape};
+
+/// Layer descriptors for `model` from the manifest (authoritative: these
+/// are emitted by the same python pass that lowered the HLO).
+pub fn from_manifest(manifest: &Manifest, model: &str) -> Option<Vec<LayerShape>> {
+    manifest.models.get(model).map(|e| e.layers.clone())
+}
+
+/// A synthetic ResNet-like layer stack for simulator tests/benches that
+/// must run without artifacts: `depth` conv layers with stage-wise widths.
+pub fn synthetic_resnet(depth: usize) -> Vec<LayerShape> {
+    let mut layers = Vec::new();
+    let mut hw = 24usize;
+    let mut c = 16usize;
+    layers.push(conv("stem", hw, 3, c, 3));
+    for i in 0..depth {
+        if i > 0 && i % (depth / 3).max(1) == 0 {
+            hw /= 2;
+            c *= 2;
+        }
+        layers.push(conv(&format!("conv{i}"), hw, c, c, 3));
+    }
+    layers.push(LayerShape {
+        name: "head".into(),
+        kind: LayerKind::Dense,
+        m: 1,
+        k: c,
+        n: 10,
+        groups: 1,
+        macs: (c * 10) as u64,
+        act_elems: c,
+    });
+    layers
+}
+
+/// A synthetic MobileNet-like stack (alternating pointwise + depthwise) to
+/// exercise the depthwise saturation effect without artifacts.
+pub fn synthetic_mobilenet(blocks: usize) -> Vec<LayerShape> {
+    let mut layers = Vec::new();
+    let hw = 24usize;
+    let mut c = 16usize;
+    layers.push(conv("stem", hw, 3, c, 3));
+    for i in 0..blocks {
+        let cmid = c * 4;
+        layers.push(conv(&format!("b{i}.exp"), hw, c, cmid, 1));
+        layers.push(LayerShape {
+            name: format!("b{i}.dw"),
+            kind: LayerKind::DwConv,
+            m: hw * hw,
+            k: 9,
+            n: cmid,
+            groups: cmid,
+            macs: (hw * hw * 9 * cmid) as u64,
+            act_elems: hw * hw * cmid,
+        });
+        layers.push(conv(&format!("b{i}.proj"), hw, cmid, c, 1));
+        if i == blocks / 2 {
+            c *= 2;
+        }
+    }
+    layers
+}
+
+fn conv(name: &str, hw: usize, cin: usize, cout: usize, k: usize) -> LayerShape {
+    LayerShape {
+        name: name.into(),
+        kind: LayerKind::Conv,
+        m: hw * hw,
+        k: k * k * cin,
+        n: cout,
+        groups: 1,
+        macs: (hw * hw * k * k * cin * cout) as u64,
+        act_elems: hw * hw * cin,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{HwConfig, Prec, Simulator};
+
+    #[test]
+    fn synthetic_resnet_shape() {
+        let l = synthetic_resnet(6);
+        assert_eq!(l.len(), 8); // stem + 6 + head
+        assert!(l.iter().all(|x| x.m > 0 && x.k > 0 && x.n > 0));
+    }
+
+    #[test]
+    fn mobilenet_has_dw_layers() {
+        let l = synthetic_mobilenet(4);
+        assert!(l.iter().any(|x| x.kind == LayerKind::DwConv));
+    }
+
+    #[test]
+    fn mobilenet_speedup_saturates_vs_resnet() {
+        // Fig. 6's qualitative claim, reproduced on synthetic stacks
+        let mut rn = Simulator::new(HwConfig::zcu102(), synthetic_resnet(8), 1);
+        let mut mb = Simulator::new(HwConfig::zcu102(), synthetic_mobilenet(4), 1);
+        let rn_assign = vec![(Prec::B2, Prec::B2); rn.layers.len()];
+        let mb_assign = vec![(Prec::B2, Prec::B2); mb.layers.len()];
+        let s_rn = rn.speedup(&rn_assign);
+        let s_mb = mb.speedup(&mb_assign);
+        assert!(s_rn > s_mb, "resnet {s_rn} vs mobilenet {s_mb}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Quantization configs: per-layer (format, bits) assignments and their
+//! encoding as the qcfg tensors the HLO artifacts consume.
+//!
+//! This is the run-time half of the "precision is data" design (DESIGN.md
+//! §2): one HLO serves every format × bitwidth because rust feeds the
+//! value-grid LUTs, activation scales, and enable flags as inputs —
+//! mirroring the paper's run-time configurable PE modes.
+
+use anyhow::{ensure, Result};
+
+use crate::formats::{quantizer, Format, LUT_SIZE};
+use crate::sim::{Assignment, Prec};
+use crate::tensor::Tensor;
+
+/// Per-layer quantization choice.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerQuant {
+    pub wfmt: Format,
+    pub wbits: u32,
+    pub afmt: Format,
+    pub abits: u32,
+    pub w_en: bool,
+    pub a_en: bool,
+}
+
+impl LayerQuant {
+    pub fn fp32() -> Self {
+        LayerQuant {
+            wfmt: Format::DyBit,
+            wbits: 8,
+            afmt: Format::DyBit,
+            abits: 8,
+            w_en: false,
+            a_en: false,
+        }
+    }
+
+    pub fn uniform(fmt: Format, wbits: u32, abits: u32) -> Self {
+        LayerQuant { wfmt: fmt, wbits, afmt: fmt, abits, w_en: true, a_en: true }
+    }
+}
+
+/// Whole-model quantization config + calibrated activation scales.
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    pub layers: Vec<LayerQuant>,
+    /// Per-layer activation scale (1.0 until calibrated).
+    pub ascales: Vec<f32>,
+}
+
+impl QuantConfig {
+    /// All layers FP32 (quantization disabled) — the baseline config.
+    pub fn fp32(n_layers: usize) -> Self {
+        QuantConfig {
+            layers: vec![LayerQuant::fp32(); n_layers],
+            ascales: vec![1.0; n_layers],
+        }
+    }
+
+    /// Same (format, W, A) everywhere — the Table II/III configs.
+    pub fn uniform(n_layers: usize, fmt: Format, wbits: u32, abits: u32) -> Self {
+        QuantConfig {
+            layers: vec![LayerQuant::uniform(fmt, wbits, abits); n_layers],
+            ascales: vec![1.0; n_layers],
+        }
+    }
+
+    /// From an Algorithm-1 assignment (mixed per-layer bitwidths).
+    pub fn from_assignment(fmt: Format, assign: &Assignment) -> Self {
+        QuantConfig {
+            layers: assign
+                .iter()
+                .map(|&(pw, pa)| LayerQuant::uniform(fmt, pw.bits(), pa.bits()))
+                .collect(),
+            ascales: vec![1.0; assign.len()],
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// The simulator-facing view (precisions only).
+    pub fn assignment(&self) -> Assignment {
+        self.layers
+            .iter()
+            .map(|l| {
+                (
+                    Prec::from_bits(l.wbits).unwrap_or(Prec::B8),
+                    Prec::from_bits(l.abits).unwrap_or(Prec::B8),
+                )
+            })
+            .collect()
+    }
+
+    /// Calibrate per-layer activation scales from fwd_acts taps
+    /// (RMSE-optimal search on each layer's sample, Fig. 2 adaptation).
+    pub fn calibrate(&mut self, taps: &Tensor) -> Result<()> {
+        ensure!(taps.rank() == 2, "taps must be [L, S]");
+        ensure!(taps.shape[0] == self.layers.len(), "taps rows != layers");
+        for (i, lq) in self.layers.iter().enumerate() {
+            if !lq.a_en {
+                continue;
+            }
+            let grid = lq.afmt.grid(lq.abits);
+            self.ascales[i] = quantizer::calibrate_scale(taps.row(i), &grid) as f32;
+        }
+        Ok(())
+    }
+
+    /// Build the five qcfg tensors in the canonical artifact input order:
+    /// wluts [L,256], aluts [L,256], ascales [L], wq_en [L], aq_en [L].
+    pub fn to_tensors(&self) -> [Tensor; 5] {
+        let l = self.layers.len();
+        let mut wluts = Vec::with_capacity(l * LUT_SIZE);
+        let mut aluts = Vec::with_capacity(l * LUT_SIZE);
+        let mut wq_en = Vec::with_capacity(l);
+        let mut aq_en = Vec::with_capacity(l);
+        for lq in &self.layers {
+            wluts.extend_from_slice(&lq.wfmt.padded_lut(lq.wbits));
+            aluts.extend_from_slice(&lq.afmt.padded_lut(lq.abits));
+            wq_en.push(if lq.w_en { 1.0 } else { 0.0 });
+            aq_en.push(if lq.a_en { 1.0 } else { 0.0 });
+        }
+        [
+            Tensor::new(vec![l, LUT_SIZE], wluts).expect("wluts"),
+            Tensor::new(vec![l, LUT_SIZE], aluts).expect("aluts"),
+            Tensor::from_vec(self.ascales.clone()),
+            Tensor::from_vec(wq_en),
+            Tensor::from_vec(aq_en),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_config_disables_everything() {
+        let q = QuantConfig::fp32(4);
+        let [_, _, ascales, wq_en, aq_en] = q.to_tensors();
+        assert!(wq_en.data.iter().all(|&x| x == 0.0));
+        assert!(aq_en.data.iter().all(|&x| x == 0.0));
+        assert!(ascales.data.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn uniform_shapes() {
+        let q = QuantConfig::uniform(3, Format::DyBit, 4, 8);
+        let [wluts, aluts, ..] = q.to_tensors();
+        assert_eq!(wluts.shape, vec![3, LUT_SIZE]);
+        assert_eq!(aluts.shape, vec![3, LUT_SIZE]);
+        // row content = padded dybit4 / dybit8 luts
+        assert_eq!(wluts.row(0), &Format::DyBit.padded_lut(4)[..]);
+        assert_eq!(aluts.row(2), &Format::DyBit.padded_lut(8)[..]);
+    }
+
+    #[test]
+    fn from_assignment_roundtrip() {
+        use crate::sim::Prec;
+        let assign = vec![(Prec::B4, Prec::B8), (Prec::B2, Prec::B4)];
+        let q = QuantConfig::from_assignment(Format::DyBit, &assign);
+        assert_eq!(q.assignment(), assign);
+    }
+
+    #[test]
+    fn calibrate_sets_scales() {
+        let mut q = QuantConfig::uniform(2, Format::DyBit, 4, 4);
+        let taps = Tensor::new(
+            vec![2, 4],
+            vec![0.1, -0.2, 0.3, -0.1, 10.0, -20.0, 5.0, -8.0],
+        )
+        .unwrap();
+        q.calibrate(&taps).unwrap();
+        assert!(q.ascales[1] > q.ascales[0] * 10.0);
+    }
+
+    #[test]
+    fn calibrate_shape_mismatch_errors() {
+        let mut q = QuantConfig::uniform(2, Format::DyBit, 4, 4);
+        let taps = Tensor::zeros(&[3, 4]);
+        assert!(q.calibrate(&taps).is_err());
+    }
+}

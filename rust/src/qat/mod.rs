@@ -1,0 +1,9 @@
+//! Quantization-aware training driver + runtime quantization configs
+//! (the QAT stage of the paper's Fig. 4 framework, run from rust over the
+//! AOT-compiled train/eval computations).
+
+pub mod luts;
+pub mod trainer;
+
+pub use luts::{LayerQuant, QuantConfig};
+pub use trainer::{materialize_batch, top1, Session, StepMetrics};

@@ -1,0 +1,256 @@
+//! QAT driver: owns a model's runtime state (params + momenta) and drives
+//! the AOT-compiled train/eval/fwd computations — the "quantization-aware
+//! training" stage of Fig. 4, running entirely from rust.
+//!
+//! The synthetic dataset lives *inside* the HLO (train/eval steps generate
+//! their batch from an i32 seed; `data_batch` materializes one for
+//! calibration/serving), so training here is bit-identical to what the
+//! python tests see.
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::runtime::{
+    f32_scalar, i32_scalar, literal_to_tensor, tensor_to_literal, Executor, Manifest, ModelEntry,
+};
+use crate::tensor::Tensor;
+
+use super::luts::QuantConfig;
+
+/// Scalar metrics of one step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// A live model: manifest entry + parameters + optimizer state.
+pub struct Session {
+    pub model: ModelEntry,
+    pub params: Vec<Tensor>,
+    pub moms: Vec<Tensor>,
+    dir: std::path::PathBuf,
+}
+
+impl Session {
+    /// Load initial (python-initialized) parameters for `model`.
+    pub fn new(manifest: &Manifest, model: &str) -> Result<Self> {
+        let entry = manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model '{model}' not in manifest"))?
+            .clone();
+        let params = entry.load_params(&manifest.dir)?;
+        let moms = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        Ok(Session { model: entry, params, moms, dir: manifest.dir.clone() })
+    }
+
+    /// Reset optimizer momenta (between FP pre-train and QAT fine-tune).
+    pub fn reset_momentum(&mut self) {
+        for m in &mut self.moms {
+            *m = Tensor::zeros(&m.shape);
+        }
+    }
+
+    /// Snapshot / restore parameters (used by the bench sweeps so every
+    /// format starts QAT from the same FP32 checkpoint).
+    pub fn snapshot(&self) -> Vec<Tensor> {
+        self.params.clone()
+    }
+
+    pub fn restore(&mut self, snap: &[Tensor]) {
+        self.params = snap.to_vec();
+        self.reset_momentum();
+    }
+
+    fn qcfg_literals(&self, q: &QuantConfig) -> Result<Vec<xla::Literal>> {
+        ensure!(
+            q.n_layers() == self.model.n_quant_layers,
+            "qcfg layers {} != model {}",
+            q.n_layers(),
+            self.model.n_quant_layers
+        );
+        q.to_tensors().iter().map(tensor_to_literal).collect()
+    }
+
+    /// One SGD-momentum step on the batch derived from `seed`.
+    pub fn train_step(&mut self, exec: &mut Executor, q: &QuantConfig, seed: i32,
+                      lr: f32) -> Result<StepMetrics> {
+        let art = self.model.artifact("train")?.file.clone();
+        let np = self.params.len();
+        let mut inputs = Vec::with_capacity(2 * np + 7);
+        for p in &self.params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        for m in &self.moms {
+            inputs.push(tensor_to_literal(m)?);
+        }
+        inputs.push(i32_scalar(seed));
+        inputs.extend(self.qcfg_literals(q)?);
+        inputs.push(f32_scalar(lr));
+
+        let outs = exec.run(&art, &inputs)?;
+        ensure!(outs.len() == 2 * np + 2, "train outputs {}", outs.len());
+        for (i, o) in outs[..np].iter().enumerate() {
+            self.params[i] = literal_to_tensor(o)?;
+        }
+        for (i, o) in outs[np..2 * np].iter().enumerate() {
+            self.moms[i] = literal_to_tensor(o)?;
+        }
+        let loss = literal_to_tensor(&outs[2 * np])?.data[0];
+        let acc = literal_to_tensor(&outs[2 * np + 1])?.data[0];
+        Ok(StepMetrics { loss, acc })
+    }
+
+    /// Run `steps` training steps; returns the per-step metrics.
+    pub fn train(&mut self, exec: &mut Executor, q: &QuantConfig, steps: usize,
+                 lr: f32, seed_start: i32) -> Result<Vec<StepMetrics>> {
+        (0..steps)
+            .map(|i| self.train_step(exec, q, seed_start + i as i32, lr))
+            .collect()
+    }
+
+    /// Average loss/accuracy over `n_batches` held-out eval batches.
+    pub fn evaluate(&mut self, exec: &mut Executor, q: &QuantConfig,
+                    n_batches: usize) -> Result<StepMetrics> {
+        let art = self.model.artifact("eval")?.file.clone();
+        let mut inputs: Vec<xla::Literal> = Vec::new();
+        for p in &self.params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        inputs.push(i32_scalar(0)); // placeholder, replaced per batch
+        inputs.extend(self.qcfg_literals(q)?);
+        let seed_pos = self.params.len();
+
+        let (mut loss, mut acc) = (0.0f64, 0.0f64);
+        for b in 0..n_batches {
+            inputs[seed_pos] = i32_scalar(b as i32);
+            let outs = exec.run(&art, &inputs)?;
+            loss += literal_to_tensor(&outs[0])?.data[0] as f64;
+            acc += literal_to_tensor(&outs[1])?.data[0] as f64;
+        }
+        Ok(StepMetrics {
+            loss: (loss / n_batches as f64) as f32,
+            acc: (acc / n_batches as f64) as f32,
+        })
+    }
+
+    /// Forward pass on an explicit input batch -> logits.
+    pub fn forward(&mut self, exec: &mut Executor, q: &QuantConfig, x: &Tensor,
+                   pallas: bool) -> Result<Tensor> {
+        let tag = if pallas { "fwd_pallas" } else { "fwd" };
+        let art = self.model.artifact(tag)?.file.clone();
+        let mut inputs: Vec<xla::Literal> = Vec::new();
+        for p in &self.params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        inputs.push(tensor_to_literal(x)?);
+        inputs.extend(self.qcfg_literals(q)?);
+        let outs = exec.run(&art, &inputs)?;
+        literal_to_tensor(&outs[0])
+    }
+
+    /// Forward with activation taps: returns (logits, taps [L, 2048]).
+    pub fn forward_acts(&mut self, exec: &mut Executor, q: &QuantConfig,
+                        x: &Tensor) -> Result<(Tensor, Tensor)> {
+        let art = self.model.artifact("fwd_acts")?.file.clone();
+        let mut inputs: Vec<xla::Literal> = Vec::new();
+        for p in &self.params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        inputs.push(tensor_to_literal(x)?);
+        inputs.extend(self.qcfg_literals(q)?);
+        let outs = exec.run(&art, &inputs)?;
+        Ok((literal_to_tensor(&outs[0])?, literal_to_tensor(&outs[1])?))
+    }
+
+    /// Calibrate a config's activation scales on one synthetic batch
+    /// (taps are collected with quantization disabled).
+    pub fn calibrate(&mut self, exec: &mut Executor, q: &mut QuantConfig,
+                     seed: i32) -> Result<()> {
+        let (x, _) = materialize_batch(exec, &self.dir, seed)?;
+        let fp = QuantConfig::fp32(q.n_layers());
+        let (_, taps) = self.forward_acts(exec, &fp, &x)?;
+        q.calibrate(&taps)
+    }
+
+    /// Save current parameters as a raw f32 checkpoint (leaf order).
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let refs: Vec<&Tensor> = self.params.iter().collect();
+        crate::tensor::io::write_f32_file(path, &refs)
+    }
+
+    /// Load parameters from a checkpoint written by `save_checkpoint`.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let flat = crate::tensor::io::read_f32_file(path)?;
+        let want: usize = self.params.iter().map(|p| p.numel()).sum();
+        ensure!(flat.len() == want, "checkpoint has {} elems, want {want}", flat.len());
+        let mut off = 0;
+        for p in &mut self.params {
+            let n = p.numel();
+            p.data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        self.reset_momentum();
+        Ok(())
+    }
+
+    /// Flattened weight tensor of each quantizable layer (search input).
+    pub fn layer_weights(&self) -> Vec<Vec<f32>> {
+        (0..self.model.layers.len())
+            .map(|i| {
+                self.model
+                    .weight_leaf_idx(i)
+                    .map(|pi| self.params[pi].data.clone())
+                    .unwrap_or_default()
+            })
+            .collect()
+    }
+
+    /// Per-layer activation samples (taps rows) for the search engine.
+    pub fn layer_acts(&mut self, exec: &mut Executor, seed: i32) -> Result<Vec<Vec<f32>>> {
+        let (x, _) = materialize_batch(exec, &self.dir, seed)?;
+        let fp = QuantConfig::fp32(self.model.n_quant_layers);
+        let (_, taps) = self.forward_acts(exec, &fp, &x)?;
+        Ok((0..taps.shape[0]).map(|i| taps.row(i).to_vec()).collect())
+    }
+}
+
+/// Materialize one synthetic batch (x, y) from the data_batch artifact.
+pub fn materialize_batch(exec: &mut Executor, _dir: &Path, seed: i32)
+                         -> Result<(Tensor, Tensor)> {
+    let outs = exec
+        .run("data_batch.hlo.txt", &[i32_scalar(seed)])
+        .context("data_batch artifact (re-run `make artifacts`?)")?;
+    Ok((literal_to_tensor(&outs[0])?, literal_to_tensor(&outs[1])?))
+}
+
+/// Top-1 accuracy of logits against integer labels.
+pub fn top1(logits: &Tensor, y: &Tensor) -> f64 {
+    let pred = logits.argmax_rows();
+    let correct = pred
+        .iter()
+        .zip(y.data.iter())
+        .filter(|(&p, &t)| p == t as usize)
+        .count();
+    correct as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_counts() {
+        let logits = Tensor::new(vec![2, 3], vec![0.0, 1.0, 0.0, 1.0, 0.0, 0.0]).unwrap();
+        let y = Tensor::from_vec(vec![1.0, 2.0]);
+        assert!((top1(&logits, &y) - 0.5).abs() < 1e-12);
+    }
+
+    // Session integration (real PJRT execution) lives in
+    // tests/runtime_integration.rs, gated on built artifacts.
+}

@@ -1,0 +1,296 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes it at build time) and the rust runtime (which is the only thing
+//! that runs afterwards).  Everything the runtime knows about a model —
+//! parameter leaves, HLO I/O signatures, layer geometry — comes from here.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::sim::LayerShape;
+use crate::tensor::io::read_f32_slice;
+use crate::tensor::Tensor;
+use crate::util::json::{parse, Json};
+
+/// One input/output tensor signature of an HLO artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One lowered HLO computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// One parameter leaf inside `<model>_params.bin`.
+#[derive(Clone, Debug)]
+pub struct ParamLeaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nelems: usize,
+}
+
+/// Everything the runtime knows about one model.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub stands_for: String,
+    pub batch: usize,
+    pub input: Vec<usize>,
+    pub classes: usize,
+    pub n_quant_layers: usize,
+    pub layers: Vec<LayerShape>,
+    pub params: Vec<ParamLeaf>,
+    pub params_file: String,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+/// The whole `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub lut_size: usize,
+    pub batch: usize,
+    pub img: usize,
+    pub classes: usize,
+    pub eval_seed_base: i64,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub kernels: BTreeMap<String, ArtifactMeta>,
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+        shape: j
+            .get("shape")
+            .and_then(Json::as_usize_vec)
+            .ok_or_else(|| anyhow!("io spec missing shape"))?,
+        dtype: j.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string(),
+    })
+}
+
+fn artifact_meta(j: &Json) -> Result<ArtifactMeta> {
+    Ok(ArtifactMeta {
+        file: j
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact missing file"))?
+            .to_string(),
+        inputs: j
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact missing inputs"))?
+            .iter()
+            .map(io_spec)
+            .collect::<Result<_>>()?,
+        outputs: j
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(Json::as_str)
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or_default(),
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let j = parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            models.insert(name.clone(), Self::model_entry(name, mj)?);
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(ks) = j.get("kernels").and_then(Json::as_obj) {
+            for (name, kj) in ks {
+                kernels.insert(name.clone(), artifact_meta(kj)?);
+            }
+        }
+        let field = |k: &str| j.get(k).and_then(Json::as_usize).unwrap_or(0);
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            lut_size: field("lut_size"),
+            batch: field("batch"),
+            img: field("img"),
+            classes: field("classes"),
+            eval_seed_base: j
+                .get("eval_seed_base")
+                .and_then(Json::as_i64)
+                .unwrap_or(1 << 30),
+            models,
+            kernels,
+        })
+    }
+
+    fn model_entry(name: &str, j: &Json) -> Result<ModelEntry> {
+        let layers = j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: missing layers"))?
+            .iter()
+            .map(LayerShape::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: missing params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamLeaf {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_usize_vec)
+                        .ok_or_else(|| anyhow!("param shape"))?,
+                    offset: p.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                    nelems: p.get("nelems").and_then(Json::as_usize).unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = BTreeMap::new();
+        for (tag, aj) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("{name}: missing artifacts"))?
+        {
+            artifacts.insert(tag.clone(), artifact_meta(aj)?);
+        }
+        Ok(ModelEntry {
+            name: name.to_string(),
+            stands_for: j
+                .get("stands_for")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            batch: j.get("batch").and_then(Json::as_usize).unwrap_or(32),
+            input: j
+                .get("input")
+                .and_then(Json::as_usize_vec)
+                .unwrap_or_default(),
+            classes: j.get("classes").and_then(Json::as_usize).unwrap_or(10),
+            n_quant_layers: j
+                .get("n_quant_layers")
+                .and_then(Json::as_usize)
+                .unwrap_or(layers.len()),
+            layers,
+            params,
+            params_file: j
+                .get("params_file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing params_file"))?
+                .to_string(),
+            artifacts,
+        })
+    }
+}
+
+impl ModelEntry {
+    /// Load the initial parameters written by aot.py, in leaf order.
+    pub fn load_params(&self, dir: &Path) -> Result<Vec<Tensor>> {
+        let path = dir.join(&self.params_file);
+        self.params
+            .iter()
+            .map(|leaf| {
+                let data = read_f32_slice(&path, leaf.offset, leaf.nelems)?;
+                Tensor::new(leaf.shape.clone(), data)
+            })
+            .collect()
+    }
+
+    /// Index of the weight leaf belonging to quantizable layer `i`
+    /// (layer "name" owns leaf "name.w" — the nn.py convention).
+    pub fn weight_leaf_idx(&self, layer_idx: usize) -> Option<usize> {
+        let want = format!("{}.w", self.layers[layer_idx].name);
+        self.params.iter().position(|p| p.name == want)
+    }
+
+    pub fn artifact(&self, tag: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(tag)
+            .ok_or_else(|| anyhow!("{}: no artifact '{tag}'", self.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests require `make artifacts` to have run; they are the
+    /// python⇄rust contract check.
+    fn manifest() -> Option<Manifest> {
+        let dir = Path::new(crate::ARTIFACTS_DIR);
+        Manifest::load(dir).ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_has_models() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(m.lut_size, 256);
+        assert!(m.models.contains_key("mlp"));
+        let mlp = &m.models["mlp"];
+        assert_eq!(mlp.n_quant_layers, mlp.layers.len());
+        assert!(mlp.artifacts.contains_key("fwd"));
+        assert!(mlp.artifacts.contains_key("train"));
+    }
+
+    #[test]
+    fn params_load_and_match_shapes() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mlp = &m.models["mlp"];
+        let params = mlp.load_params(&m.dir).unwrap();
+        assert_eq!(params.len(), mlp.params.len());
+        for (t, leaf) in params.iter().zip(mlp.params.iter()) {
+            assert_eq!(t.shape, leaf.shape);
+            assert_eq!(t.numel(), leaf.nelems);
+        }
+    }
+
+    #[test]
+    fn weight_leaves_resolve_for_every_layer() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for entry in m.models.values() {
+            for i in 0..entry.layers.len() {
+                assert!(
+                    entry.weight_leaf_idx(i).is_some(),
+                    "{}: layer {} '{}' has no weight leaf",
+                    entry.name,
+                    i,
+                    entry.layers[i].name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! PJRT executor: load HLO-text artifacts, compile once, execute from the
+//! request path.  Adapted from /opt/xla-example/load_hlo (HLO text is the
+//! interchange format; lowered with return_tuple=True so every result is a
+//! tuple literal we decompose).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Compiled-executable cache over one PJRT CPU client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Create a CPU PJRT client rooted at the artifact directory.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Executor { client, dir: dir.to_path_buf(), cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact `file`.
+    pub fn load(&mut self, file: &str) -> Result<()> {
+        if self.cache.contains_key(file) {
+            return Ok(());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        self.cache.insert(file.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with f32/i32 inputs; returns output literals.
+    pub fn run(&mut self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(file)?;
+        let exe = self.cache.get(file).expect("just loaded");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {file}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {file}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        lit.to_tuple().map_err(|e| anyhow!("untuple {file}: {e:?}"))
+    }
+
+    /// Execute and convert every output to a [`Tensor`].
+    pub fn run_t(&mut self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        self.run(file, inputs)?
+            .iter()
+            .map(literal_to_tensor)
+            .collect()
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// f32 Tensor -> Literal (row-major, reshaped to the tensor's dims).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal to {:?}: {e:?}", t.shape))
+}
+
+/// Scalar i32 literal (seeds).
+pub fn i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Scalar f32 literal (lr, scales).
+pub fn f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal -> f32 Tensor (converts from any numeric element type).
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = match l.ty().map_err(|e| anyhow!("{e:?}"))? {
+        xla::ElementType::F32 => l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        _ => {
+            let conv = l
+                .convert(xla::PrimitiveType::F32)
+                .map_err(|e| anyhow!("convert literal: {e:?}"))?;
+            conv.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?
+        }
+    };
+    Tensor::new(dims, data).context("literal to tensor")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let l = f32_scalar(2.5);
+        let t = literal_to_tensor(&l).unwrap();
+        assert_eq!(t.shape, Vec::<usize>::new());
+        assert_eq!(t.data, vec![2.5]);
+    }
+
+    // full executor integration lives in tests/runtime_integration.rs
+    // (needs artifacts + the PJRT plugin, exercised by `make test`)
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: artifact manifest + compiled-executable cache.  The only
+//! bridge between the rust coordinator and the AOT-compiled JAX/Pallas
+//! compute (python never runs after `make artifacts`).
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactMeta, IoSpec, Manifest, ModelEntry, ParamLeaf};
+pub use executor::{f32_scalar, i32_scalar, literal_to_tensor, tensor_to_literal, Executor};

@@ -1,0 +1,8 @@
+//! Hardware-aware mixed-precision quantization framework (paper Fig. 4):
+//! Algorithm 1 over the cycle-accurate simulator + Eqn. 2 RMSE metrics.
+
+pub mod engine;
+pub mod strategy;
+
+pub use engine::{run_search, EngineMetrics};
+pub use strategy::{search, Metrics, SearchResult, Strategy};

@@ -1,0 +1,310 @@
+//! Algorithm 1: heuristic layer-wise bitwidth search, both strategies.
+//!
+//! Faithful to the paper's pseudocode:
+//!
+//! * start from all-(8,8);
+//! * each iteration ranks layers by the strategy's primary metric over the
+//!   top-k candidates (speedup mode: largest latency first — "quantize the
+//!   slowest layer first"; RMSE mode: smallest quantization error first),
+//!   re-ranks by the secondary metric, then `DEGRADE_LEVEL`s weights and
+//!   activations of the candidates one step (8→4→2), re-checking the
+//!   constraint ratio after every single degrade;
+//! * speedup-constrained (Eqn. 3): stop once `base_lat / lat >= alpha`,
+//!   minimizing ΣRMSE along the way;
+//! * RMSE-constrained (Eqn. 4): keep minimizing latency while
+//!   `Σrmse <= beta × Σrmse(8,8)`; a degrade that would break the budget
+//!   is rolled back and the layer is frozen.
+//!
+//! The search talks to the simulator + quantizer through the [`Metrics`]
+//! trait so unit tests can drive it with synthetic cost tables.
+
+use crate::sim::{Assignment, Prec};
+
+/// Per-layer cost oracle: latency from the cycle-accurate simulator,
+/// RMSE (paper Eqn. 2, summed over the layer's weight + activation
+/// tensors) from the quantizer.
+pub trait Metrics {
+    fn n_layers(&self) -> usize;
+    /// Latency (cycles) of layer `i` at (pw, pa).
+    fn latency(&mut self, i: usize, pw: Prec, pa: Prec) -> f64;
+    /// RMSE_i(a, w): combined quantization error of layer `i`.
+    fn rmse(&mut self, i: usize, pw: Prec, pa: Prec) -> f64;
+}
+
+/// Which constraint drives the search (Sec. III-C2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    /// Eqn. 3: reach speedup ≥ alpha over the 8/8 baseline, min ΣRMSE.
+    SpeedupConstrained { alpha: f64 },
+    /// Eqn. 4: stay under ΣRMSE ≤ beta × baseline, min latency.
+    RmseConstrained { beta: f64 },
+}
+
+/// Search outcome + bookkeeping for EXPERIMENTS.md.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub assignment: Assignment,
+    /// Achieved speedup over the all-8/8 baseline.
+    pub speedup: f64,
+    /// Achieved Σrmse / Σrmse(8,8).
+    pub rmse_ratio: f64,
+    /// Outer iterations executed.
+    pub iterations: usize,
+    /// True if the constraint was met (false = hit the 2-bit floor).
+    pub satisfied: bool,
+}
+
+fn total_latency<M: Metrics>(m: &mut M, a: &Assignment) -> f64 {
+    (0..a.len()).map(|i| m.latency(i, a[i].0, a[i].1)).sum()
+}
+
+fn total_rmse<M: Metrics>(m: &mut M, a: &Assignment) -> f64 {
+    (0..a.len()).map(|i| m.rmse(i, a[i].0, a[i].1)).sum()
+}
+
+/// Run Algorithm 1.
+pub fn search<M: Metrics>(metrics: &mut M, strategy: Strategy, top_k: usize) -> SearchResult {
+    let n = metrics.n_layers();
+    let mut assign: Assignment = vec![(Prec::B8, Prec::B8); n];
+    let base_lat = total_latency(metrics, &assign);
+    let base_rmse = total_rmse(metrics, &assign).max(1e-12);
+    // layers whose degrade was rolled back under the RMSE budget
+    let mut frozen = vec![false; n];
+    let mut iterations = 0;
+
+    let met = |lat: f64, rmse: f64| -> bool {
+        match strategy {
+            Strategy::SpeedupConstrained { alpha } => base_lat / lat >= alpha,
+            // RMSE mode keeps going while under budget; "met" = budget
+            // exhausted (any further degrade rolled back) — handled below.
+            Strategy::RmseConstrained { beta } => rmse > beta * base_rmse,
+        }
+    };
+
+    'outer: loop {
+        iterations += 1;
+        let cur_lat = total_latency(metrics, &assign);
+        let cur_rmse = total_rmse(metrics, &assign);
+        if let Strategy::SpeedupConstrained { .. } = strategy {
+            if met(cur_lat, cur_rmse) {
+                break;
+            }
+        }
+
+        // candidates: layers that can still degrade (and aren't frozen)
+        let cand: Vec<usize> = (0..n)
+            .filter(|&i| !frozen[i]
+                && (assign[i].0.degrade().is_some() || assign[i].1.degrade().is_some()))
+            .collect();
+        if cand.is_empty() {
+            break;
+        }
+
+        // ---- rank: primary metric, then secondary re-rank (Alg. 1 l.5-11)
+        let mut ranked = cand.clone();
+        match strategy {
+            Strategy::SpeedupConstrained { .. } => {
+                // Lat_Rank: k largest by current latency
+                ranked.sort_by(|&a, &b| {
+                    let la = metrics.latency(a, assign[a].0, assign[a].1);
+                    let lb = metrics.latency(b, assign[b].0, assign[b].1);
+                    lb.partial_cmp(&la).unwrap()
+                });
+                ranked.truncate(top_k);
+                // RMSE_RERANK: ascending RMSE at the *next* level so the
+                // cheapest-error layers are degraded first
+                ranked.sort_by(|&a, &b| {
+                    let ra = next_level_rmse(metrics, &assign, a);
+                    let rb = next_level_rmse(metrics, &assign, b);
+                    ra.partial_cmp(&rb).unwrap()
+                });
+            }
+            Strategy::RmseConstrained { .. } => {
+                // RMSE_RANK: k smallest by next-level RMSE
+                ranked.sort_by(|&a, &b| {
+                    let ra = next_level_rmse(metrics, &assign, a);
+                    let rb = next_level_rmse(metrics, &assign, b);
+                    ra.partial_cmp(&rb).unwrap()
+                });
+                ranked.truncate(top_k);
+                // Lat_rerank: descending latency — degrade slowest first
+                ranked.sort_by(|&a, &b| {
+                    let la = metrics.latency(a, assign[a].0, assign[a].1);
+                    let lb = metrics.latency(b, assign[b].0, assign[b].1);
+                    lb.partial_cmp(&la).unwrap()
+                });
+            }
+        }
+
+        // ---- DEGRADE_LEVEL over weights, then activations (Alg. 1 l.12-13)
+        let mut progressed = false;
+        for pass in 0..2 {
+            for &l in &ranked {
+                let old = assign[l];
+                let newp = if pass == 0 {
+                    assign[l].0.degrade().map(|p| (p, assign[l].1))
+                } else {
+                    assign[l].1.degrade().map(|p| (assign[l].0, p))
+                };
+                let Some(newp) = newp else { continue };
+                assign[l] = newp;
+                progressed = true;
+                let lat = total_latency(metrics, &assign);
+                let rmse = total_rmse(metrics, &assign);
+                match strategy {
+                    Strategy::SpeedupConstrained { .. } => {
+                        if met(lat, rmse) {
+                            break 'outer;
+                        }
+                    }
+                    Strategy::RmseConstrained { .. } => {
+                        if met(lat, rmse) {
+                            // over budget: roll back and freeze this layer
+                            assign[l] = old;
+                            frozen[l] = true;
+                        }
+                    }
+                }
+            }
+        }
+        if !progressed {
+            break;
+        }
+        if iterations > 64 * n {
+            break; // safety net; cannot trigger with monotone degrades
+        }
+    }
+
+    let lat = total_latency(metrics, &assign);
+    let rmse = total_rmse(metrics, &assign);
+    let speedup = base_lat / lat;
+    let rmse_ratio = rmse / base_rmse;
+    let satisfied = match strategy {
+        Strategy::SpeedupConstrained { alpha } => speedup >= alpha,
+        Strategy::RmseConstrained { beta } => rmse_ratio <= beta,
+    };
+    SearchResult { assignment: assign, speedup, rmse_ratio, iterations, satisfied }
+}
+
+/// RMSE of layer `l` if its weights were degraded one level (the ranking
+/// key used by both strategies).
+fn next_level_rmse<M: Metrics>(m: &mut M, assign: &Assignment, l: usize) -> f64 {
+    let (pw, pa) = assign[l];
+    let pw2 = pw.degrade().unwrap_or(pw);
+    m.rmse(l, pw2, pa)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic cost model: latency proportional to size × bits,
+    /// rmse grows as bits shrink, scaled per layer.
+    struct Fake {
+        sizes: Vec<f64>,
+        err_scale: Vec<f64>,
+    }
+
+    impl Metrics for Fake {
+        fn n_layers(&self) -> usize {
+            self.sizes.len()
+        }
+        fn latency(&mut self, i: usize, pw: Prec, pa: Prec) -> f64 {
+            self.sizes[i] * (pw.bits() * pa.bits()) as f64 / 64.0
+        }
+        fn rmse(&mut self, i: usize, pw: Prec, pa: Prec) -> f64 {
+            let e = |b: u32| match b {
+                8 => 0.01,
+                4 => 0.1,
+                _ => 0.6,
+            };
+            self.err_scale[i] * (e(pw.bits()) + e(pa.bits()))
+        }
+    }
+
+    fn fake() -> Fake {
+        Fake {
+            sizes: vec![100.0, 50.0, 10.0, 200.0],
+            err_scale: vec![1.0, 2.0, 0.5, 1.5],
+        }
+    }
+
+    #[test]
+    fn speedup_constraint_satisfied_on_exit() {
+        for alpha in [1.5, 2.0, 3.0] {
+            let mut m = fake();
+            let r = search(&mut m, Strategy::SpeedupConstrained { alpha }, 2);
+            assert!(r.satisfied, "alpha={alpha}: {r:?}");
+            assert!(r.speedup >= alpha);
+        }
+    }
+
+    #[test]
+    fn rmse_constraint_never_violated() {
+        for beta in [1.5, 3.0, 10.0, 40.0] {
+            let mut m = fake();
+            let r = search(&mut m, Strategy::RmseConstrained { beta }, 2);
+            assert!(r.rmse_ratio <= beta + 1e-9, "beta={beta}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn bitwidths_only_degrade() {
+        let mut m = fake();
+        let r = search(&mut m, Strategy::SpeedupConstrained { alpha: 2.5 }, 2);
+        for (pw, pa) in r.assignment {
+            assert!(pw.bits() <= 8 && pa.bits() <= 8);
+        }
+    }
+
+    #[test]
+    fn unreachable_alpha_reports_unsatisfied() {
+        let mut m = fake();
+        // max speedup is 16x (all 2/2); 100x is unreachable
+        let r = search(&mut m, Strategy::SpeedupConstrained { alpha: 100.0 }, 2);
+        assert!(!r.satisfied);
+        // everything hit the floor
+        assert!(r.assignment.iter().all(|&(w, a)| w == Prec::B2 && a == Prec::B2));
+    }
+
+    #[test]
+    fn larger_beta_gives_no_less_speedup() {
+        let mut prev = 0.0;
+        for beta in [1.2, 2.0, 8.0, 60.0] {
+            let mut m = fake();
+            let r = search(&mut m, Strategy::RmseConstrained { beta }, 2);
+            assert!(r.speedup >= prev - 1e-9, "beta={beta}");
+            prev = r.speedup;
+        }
+    }
+
+    #[test]
+    fn slowest_layer_quantized_first_in_speedup_mode() {
+        // with alpha just above 1, only the first degrade happens; it must
+        // hit one of the largest layers (idx 3 or 0)
+        let mut m = fake();
+        let r = search(&mut m, Strategy::SpeedupConstrained { alpha: 1.05 }, 2);
+        let changed: Vec<usize> = r
+            .assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &(w, a))| w != Prec::B8 || a != Prec::B8)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!changed.is_empty());
+        assert!(changed.iter().all(|&i| i == 3 || i == 0), "{changed:?}");
+    }
+
+    #[test]
+    fn prop_monotone_alpha_means_more_degrading() {
+        use crate::util::proptest::check;
+        check("alpha-monotone", 25, |r, _| 1.0 + 3.0 * r.uniform(), |&alpha| {
+            let mut m1 = fake();
+            let mut m2 = fake();
+            let r1 = search(&mut m1, Strategy::SpeedupConstrained { alpha }, 2);
+            let r2 = search(&mut m2,
+                Strategy::SpeedupConstrained { alpha: alpha + 0.5 }, 2);
+            r2.speedup >= r1.speedup - 1e-9
+        });
+    }
+}

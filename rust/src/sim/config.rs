@@ -1,0 +1,114 @@
+//! Hardware configuration for the mixed-precision accelerator simulator.
+//!
+//! The paper implements on a Xilinx ZCU102 (Sec. IV-A3); `HwConfig::zcu102`
+//! is the default preset.  `from_resources` reproduces the framework's
+//! first step (Fig. 4): "estimate the maximum hardware resource utilization
+//! based on the DNN models and given hardware constraints (e.g., LUTs and
+//! BRAMs in FPGAs)" — it sizes the largest array + buffers that fit.
+
+/// Static accelerator parameters (all sizes in the 8-bit baseline mode).
+#[derive(Clone, Debug)]
+pub struct HwConfig {
+    /// Systolic array is `array_n` × `array_n` fused PEs (8-bit mode).
+    pub array_n: usize,
+    /// Clock in MHz (latency reporting only; ratios are clock-free).
+    pub freq_mhz: f64,
+    /// Input-feature buffer bytes.
+    pub if_bytes: usize,
+    /// Weight buffer bytes.
+    pub w_bytes: usize,
+    /// Output-feature buffer bytes (FP32 partial sums, Fig. 3a).
+    pub of_bytes: usize,
+    /// External memory bandwidth, bytes per cycle.
+    pub dram_bytes_per_cycle: f64,
+    /// Pipeline latency of the shared MP decoder (cycles; Fig. 3b).
+    pub decoder_lat: u64,
+    /// Pipeline latency of the output encoder (cycles).
+    pub encoder_lat: u64,
+    /// Fixed per-layer setup cycles (instruction dispatch, mode switch).
+    pub layer_setup: u64,
+    /// Baseline operand precision the PE fuses from (8 = four 2-bit units).
+    pub base_bits: u32,
+}
+
+impl HwConfig {
+    /// ZCU102 preset: 16×16 fused PEs @ 200 MHz, 1 MiB IF / 1 MiB W /
+    /// 512 KiB OF buffers out of the part's ~4 MiB BRAM, DDR4 ~19.2 GB/s.
+    pub fn zcu102() -> Self {
+        HwConfig {
+            array_n: 16,
+            freq_mhz: 200.0,
+            if_bytes: 1 << 20,
+            w_bytes: 1 << 20,
+            of_bytes: 512 << 10,
+            dram_bytes_per_cycle: 19.2e9 / 200.0e6, // 96 B/cycle
+            decoder_lat: 2,
+            encoder_lat: 2,
+            layer_setup: 64,
+            base_bits: 8,
+        }
+    }
+
+    /// Size the maximum architecture from FPGA resource constraints
+    /// (the estimator stage of Fig. 4).  `luts_per_pe` covers the fused
+    /// multiplier + exponent adder; BRAM is split 2:2:1 IF:W:OF.
+    pub fn from_resources(luts: usize, bram_bytes: usize) -> Self {
+        const LUTS_PER_PE: usize = 900; // fused 8x8 MP multiplier + adders
+        let mut n = 2;
+        while (n * 2) * (n * 2) * LUTS_PER_PE <= luts {
+            n *= 2;
+        }
+        let b = bram_bytes / 5;
+        HwConfig {
+            array_n: n,
+            if_bytes: 2 * b,
+            w_bytes: 2 * b,
+            of_bytes: b,
+            ..HwConfig::zcu102()
+        }
+    }
+
+    /// Seconds per cycle.
+    pub fn cycle_time(&self) -> f64 {
+        1.0 / (self.freq_mhz * 1e6)
+    }
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig::zcu102()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zcu102_sane() {
+        let c = HwConfig::zcu102();
+        assert_eq!(c.array_n, 16);
+        assert!((c.dram_bytes_per_cycle - 96.0).abs() < 1e-9);
+        assert!(c.cycle_time() > 0.0);
+    }
+
+    #[test]
+    fn from_resources_scales_array() {
+        // ZCU102-class: ~274k LUTs -> 16x16; a small part -> smaller array
+        let big = HwConfig::from_resources(274_000, 4 << 20);
+        assert_eq!(big.array_n, 16);
+        let small = HwConfig::from_resources(40_000, 1 << 20);
+        assert!(small.array_n < big.array_n);
+        assert!(small.if_bytes < big.if_bytes);
+    }
+
+    #[test]
+    fn resource_estimator_monotone() {
+        let mut prev = 0;
+        for luts in [10_000, 60_000, 250_000, 1_000_000] {
+            let c = HwConfig::from_resources(luts, 4 << 20);
+            assert!(c.array_n >= prev);
+            prev = c.array_n;
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Layer descriptors consumed by the simulator and the search engine.
+//!
+//! One descriptor per quantizable layer, in model order — the same order
+//! the HLO qcfg inputs (wluts/aluts/…) use, so search results map 1:1 to
+//! runtime configs.  Descriptors are read from `artifacts/manifest.json`
+//! (emitted by the python build pass from the very same model definitions
+//! that were lowered — python and rust cannot disagree).
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Layer kind; determines GEMM mapping efficiency on the systolic array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Dense conv (im2col GEMM, fully efficient).
+    Conv,
+    /// Depthwise conv: block-diagonal weights densified by the GEMM
+    /// dataflow — the reason MobileNet speedup saturates (paper Fig. 6).
+    DwConv,
+    /// Grouped conv: G sequential sub-GEMMs.
+    GConv,
+    /// Fully-connected / attention projection.
+    Dense,
+}
+
+impl LayerKind {
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "conv" => LayerKind::Conv,
+            "dwconv" => LayerKind::DwConv,
+            "gconv" => LayerKind::GConv,
+            "dense" => LayerKind::Dense,
+            other => return Err(anyhow!("unknown layer kind '{other}'")),
+        })
+    }
+}
+
+/// GEMM-shaped layer (post-im2col geometry, per image).
+#[derive(Clone, Debug)]
+pub struct LayerShape {
+    pub name: String,
+    pub kind: LayerKind,
+    /// GEMM rows per image (OH·OW for convs, token count or 1 for dense).
+    pub m: usize,
+    /// Reduction length (kh·kw·cin/groups).
+    pub k: usize,
+    /// Output channels.
+    pub n: usize,
+    pub groups: usize,
+    /// Per-image MACs.
+    pub macs: u64,
+    /// Per-image input activation element count (memory traffic).
+    pub act_elems: usize,
+}
+
+impl LayerShape {
+    /// Parse one entry of the manifest's `layers` array.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let field = |k: &str| {
+            j.get(k)
+                .ok_or_else(|| anyhow!("layer json missing '{k}'"))
+        };
+        Ok(LayerShape {
+            name: field("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("name not a string"))?
+                .to_string(),
+            kind: LayerKind::from_str(
+                field("kind")?.as_str().ok_or_else(|| anyhow!("kind"))?,
+            )?,
+            m: field("m")?.as_usize().ok_or_else(|| anyhow!("m"))?,
+            k: field("k")?.as_usize().ok_or_else(|| anyhow!("k"))?,
+            n: field("n")?.as_usize().ok_or_else(|| anyhow!("n"))?,
+            groups: field("groups")?.as_usize().ok_or_else(|| anyhow!("groups"))?,
+            macs: field("macs")?.as_i64().ok_or_else(|| anyhow!("macs"))? as u64,
+            act_elems: field("act_elems")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("act_elems"))?,
+        })
+    }
+
+    /// Convenience constructor for tests/benches.
+    pub fn gemm(name: &str, m: usize, k: usize, n: usize) -> Self {
+        LayerShape {
+            name: name.to_string(),
+            kind: LayerKind::Dense,
+            m,
+            k,
+            n,
+            groups: 1,
+            macs: (m * k * n) as u64,
+            act_elems: m * k,
+        }
+    }
+
+    /// The GEMM(s) the systolic dataflow actually executes.
+    ///
+    /// Depthwise/grouped convs run as `groups` sequential sub-GEMMs of
+    /// (m, k, n/groups) — the GEMM dataflow cannot batch independent
+    /// channel groups across the array, so a depthwise layer becomes C
+    /// tiny (m × 9 × 1) GEMMs whose cost is dominated by streaming and
+    /// fill/drain, NOT by MACs.  Lowering precision therefore barely helps
+    /// them, which is exactly why MobileNetV2's end-to-end speedup
+    /// saturates in the paper ("depth-wise operations are not efficient
+    /// based on our current GEMM systolic array", Sec. IV-C).
+    pub fn executed_gemms(&self) -> (usize, (usize, usize, usize)) {
+        match self.kind {
+            LayerKind::DwConv | LayerKind::GConv => {
+                (self.groups, (self.m, self.k, self.n / self.groups))
+            }
+            _ => (1, (self.m, self.k, self.n)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn parse_roundtrip() {
+        let j = parse(
+            r#"{"name":"s0b0.c1","kind":"conv","m":576,"k":144,"n":16,
+                "groups":1,"macs":1327104,"act_elems":9216}"#,
+        )
+        .unwrap();
+        let l = LayerShape::from_json(&j).unwrap();
+        assert_eq!(l.name, "s0b0.c1");
+        assert_eq!(l.kind, LayerKind::Conv);
+        assert_eq!((l.m, l.k, l.n), (576, 144, 16));
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let j = parse(r#"{"name":"x"}"#).unwrap();
+        assert!(LayerShape::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn dwconv_densifies() {
+        let l = LayerShape {
+            name: "dw".into(),
+            kind: LayerKind::DwConv,
+            m: 100,
+            k: 9,
+            n: 64,
+            groups: 64,
+            macs: 100 * 9 * 64,
+            act_elems: 100 * 64,
+        };
+        let (count, (m, k, n)) = l.executed_gemms();
+        assert_eq!(count, 64); // one tiny GEMM per channel
+        assert_eq!((m, k, n), (100, 9, 1));
+    }
+
+    #[test]
+    fn gconv_splits() {
+        let l = LayerShape {
+            name: "g".into(),
+            kind: LayerKind::GConv,
+            m: 64,
+            k: 18,
+            n: 48,
+            groups: 8,
+            macs: 0,
+            act_elems: 0,
+        };
+        let (count, (_, _, n)) = l.executed_gemms();
+        assert_eq!(count, 8);
+        assert_eq!(n, 6);
+    }
+}

@@ -1,0 +1,17 @@
+//! Cycle-accurate simulator of the paper's run-time configurable
+//! mixed-precision systolic accelerator (Fig. 3): fused BitFusion-style
+//! PEs, shared MP decoders/encoders, double-buffered tiling over IF/W/OF
+//! buffers, DRAM bandwidth model.  Drives the hardware-aware search
+//! (Fig. 4) and regenerates the speedup axes of Fig. 5/6.
+
+pub mod config;
+pub mod layer;
+pub mod pe;
+pub mod simulator;
+pub mod systolic;
+
+pub use config::HwConfig;
+pub use layer::{LayerKind, LayerShape};
+pub use pe::Prec;
+pub use simulator::{baseline_assignment, Assignment, SimResult, Simulator};
+pub use systolic::Cycles;

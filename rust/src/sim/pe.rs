@@ -1,0 +1,96 @@
+//! Mixed-precision processing element model (paper Fig. 3c).
+//!
+//! The PE fuses a BitFusion-style composable mantissa multiplier: an 8×8
+//! unit decomposes into sixteen 2×2 units, so a (Pw, Pa) mode executes
+//! 64/(Pw·Pa) multiplies per cycle per PE.  At the array level the paper
+//! states the equivalent scaling: an N×N array in P1×P2 mode behaves like
+//! an (8/P1)N × (8/P2)N array.  The exponent adder reuses the carry chain
+//! across widths (Sec. III-B3) and does not change throughput.
+
+/// Supported operand precisions (Sec. III-C3: 8/4/2 only, to avoid
+/// off-chip alignment overhead of non-power-of-2 widths).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Prec {
+    B2 = 2,
+    B4 = 4,
+    B8 = 8,
+}
+
+impl Prec {
+    pub const ALL: [Prec; 3] = [Prec::B8, Prec::B4, Prec::B2];
+
+    pub fn bits(&self) -> u32 {
+        *self as u32
+    }
+
+    pub fn from_bits(b: u32) -> Option<Prec> {
+        match b {
+            2 => Some(Prec::B2),
+            4 => Some(Prec::B4),
+            8 => Some(Prec::B8),
+            _ => None,
+        }
+    }
+
+    /// Next lower precision (Algorithm 1's DEGRADE_LEVEL: 8 -> 4 -> 2).
+    pub fn degrade(&self) -> Option<Prec> {
+        match self {
+            Prec::B8 => Some(Prec::B4),
+            Prec::B4 => Some(Prec::B2),
+            Prec::B2 => None,
+        }
+    }
+}
+
+/// Per-PE multiply throughput multiplier in (pw, pa) mode.
+pub fn fusion_factor(base_bits: u32, pw: Prec, pa: Prec) -> u64 {
+    ((base_bits / pw.bits()) * (base_bits / pa.bits())) as u64
+}
+
+/// Effective array dimensions for an n×n array in (pw, pa) mode:
+/// (rows scale with the activation precision, cols with the weight
+/// precision — matching "(8/P1)N × (8/P2)N" in Sec. III-B3).
+pub fn effective_array(n: usize, base_bits: u32, pw: Prec, pa: Prec) -> (usize, usize) {
+    (
+        n * (base_bits / pa.bits()) as usize,
+        n * (base_bits / pw.bits()) as usize,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fusion_factors_match_bitfusion() {
+        assert_eq!(fusion_factor(8, Prec::B8, Prec::B8), 1);
+        assert_eq!(fusion_factor(8, Prec::B4, Prec::B8), 2);
+        assert_eq!(fusion_factor(8, Prec::B4, Prec::B4), 4);
+        assert_eq!(fusion_factor(8, Prec::B2, Prec::B4), 8);
+        assert_eq!(fusion_factor(8, Prec::B2, Prec::B2), 16);
+    }
+
+    #[test]
+    fn effective_array_scaling() {
+        // paper: N×N in P1×P2 mode == (8/P1)N × (8/P2)N
+        let (r, c) = effective_array(16, 8, Prec::B4, Prec::B2);
+        assert_eq!((r, c), (64, 32));
+        let (r, c) = effective_array(16, 8, Prec::B8, Prec::B8);
+        assert_eq!((r, c), (16, 16));
+    }
+
+    #[test]
+    fn degrade_chain() {
+        assert_eq!(Prec::B8.degrade(), Some(Prec::B4));
+        assert_eq!(Prec::B4.degrade(), Some(Prec::B2));
+        assert_eq!(Prec::B2.degrade(), None);
+    }
+
+    #[test]
+    fn prec_roundtrip() {
+        for p in Prec::ALL {
+            assert_eq!(Prec::from_bits(p.bits()), Some(p));
+        }
+        assert_eq!(Prec::from_bits(6), None);
+    }
+}

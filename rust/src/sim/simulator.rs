@@ -1,0 +1,178 @@
+//! Whole-model simulator: per-layer and end-to-end latency at a given
+//! layer-wise precision assignment (the simulator block of Fig. 4).
+//!
+//! Results are memoized per (layer, pw, pa) — the search engine re-queries
+//! the same cells thousands of times while degrading bitwidths, so this is
+//! the hot path the §Perf pass targets at L3.
+
+use std::collections::HashMap;
+
+use super::config::HwConfig;
+use super::layer::{LayerKind, LayerShape};
+use super::pe::Prec;
+use super::systolic::{gemm_cycles, Cycles};
+
+/// Per-layer precision assignment (weights, activations) in layer order.
+pub type Assignment = Vec<(Prec, Prec)>;
+
+/// All-8-bit baseline assignment (the paper's latency/RMSE reference).
+pub fn baseline_assignment(n_layers: usize) -> Assignment {
+    vec![(Prec::B8, Prec::B8); n_layers]
+}
+
+/// Simulator with memoized per-layer results.
+pub struct Simulator {
+    pub cfg: HwConfig,
+    pub layers: Vec<LayerShape>,
+    /// Images per inference request (M scales with batch).
+    pub batch: usize,
+    cache: HashMap<(usize, Prec, Prec), Cycles>,
+}
+
+/// End-to-end simulation result.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub per_layer: Vec<Cycles>,
+    pub total_cycles: u64,
+    pub total_bytes: u64,
+    pub latency_s: f64,
+}
+
+impl Simulator {
+    pub fn new(cfg: HwConfig, layers: Vec<LayerShape>, batch: usize) -> Self {
+        Simulator { cfg, layers, batch, cache: HashMap::new() }
+    }
+
+    /// Cycles for one layer at (pw, pa); memoized.
+    pub fn layer_cycles(&mut self, idx: usize, pw: Prec, pa: Prec) -> Cycles {
+        if let Some(c) = self.cache.get(&(idx, pw, pa)) {
+            return *c;
+        }
+        let l = &self.layers[idx];
+        let (count, (m, k, n)) = l.executed_gemms();
+        let m = m * self.batch;
+        let one = gemm_cycles(&self.cfg, m, k, n, pw, pa);
+        let c = if count == 1 {
+            one
+        } else {
+            // grouped conv: sequential sub-GEMMs, setup amortized once
+            let count = count as u64;
+            Cycles {
+                compute: one.compute * count,
+                dram: one.dram * count,
+                overhead: one.overhead,
+                total: (one.total - one.overhead) * count + one.overhead,
+                utilization: one.utilization,
+                bytes: one.bytes * count,
+            }
+        };
+        self.cache.insert((idx, pw, pa), c);
+        c
+    }
+
+    /// Full-model simulation under a layer-wise assignment.
+    pub fn run(&mut self, assign: &Assignment) -> SimResult {
+        assert_eq!(assign.len(), self.layers.len());
+        let per_layer: Vec<Cycles> = assign
+            .iter()
+            .enumerate()
+            .map(|(i, &(pw, pa))| self.layer_cycles(i, pw, pa))
+            .collect();
+        let total_cycles: u64 = per_layer.iter().map(|c| c.total).sum();
+        let total_bytes: u64 = per_layer.iter().map(|c| c.bytes).sum();
+        SimResult {
+            latency_s: total_cycles as f64 * self.cfg.cycle_time(),
+            per_layer,
+            total_cycles,
+            total_bytes,
+        }
+    }
+
+    /// Speedup of `assign` over the all-8-bit baseline (the paper's
+    /// headline metric; Sec. III-C2 "8-bit DyBit as the baseline").
+    pub fn speedup(&mut self, assign: &Assignment) -> f64 {
+        let base = self.run(&baseline_assignment(self.layers.len()));
+        let got = self.run(assign);
+        base.total_cycles as f64 / got.total_cycles as f64
+    }
+
+    /// True if this layer kind wastes array slots (dw densification).
+    pub fn layer_is_dw(&self, idx: usize) -> bool {
+        self.layers[idx].kind == LayerKind::DwConv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layers() -> Vec<LayerShape> {
+        vec![
+            LayerShape::gemm("a", 576, 144, 64),
+            LayerShape::gemm("b", 576, 576, 128),
+            LayerShape::gemm("c", 1, 128, 10),
+        ]
+    }
+
+    #[test]
+    fn baseline_speedup_is_one() {
+        let mut sim = Simulator::new(HwConfig::zcu102(), layers(), 1);
+        let a = baseline_assignment(3);
+        assert!((sim.speedup(&a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lower_bits_speed_up_e2e() {
+        let mut sim = Simulator::new(HwConfig::zcu102(), layers(), 1);
+        let all4 = vec![(Prec::B4, Prec::B4); 3];
+        let s = sim.speedup(&all4);
+        assert!(s > 1.5, "speedup {s}");
+        let all2 = vec![(Prec::B2, Prec::B2); 3];
+        assert!(sim.speedup(&all2) > s);
+    }
+
+    #[test]
+    fn memoization_consistent() {
+        let mut sim = Simulator::new(HwConfig::zcu102(), layers(), 1);
+        let c1 = sim.layer_cycles(0, Prec::B4, Prec::B8);
+        let c2 = sim.layer_cycles(0, Prec::B4, Prec::B8);
+        assert_eq!(c1.total, c2.total);
+    }
+
+    #[test]
+    fn batch_scales_latency() {
+        let mut s1 = Simulator::new(HwConfig::zcu102(), layers(), 1);
+        let mut s8 = Simulator::new(HwConfig::zcu102(), layers(), 8);
+        let a = baseline_assignment(3);
+        let r1 = s1.run(&a);
+        let r8 = s8.run(&a);
+        assert!(r8.total_cycles > 4 * r1.total_cycles);
+        assert!(r8.total_cycles < 16 * r1.total_cycles);
+    }
+
+    #[test]
+    fn dwconv_gains_less_than_conv() {
+        // the Fig. 6 phenomenon: depthwise densification caps the benefit
+        let dw = LayerShape {
+            name: "dw".into(),
+            kind: LayerKind::DwConv,
+            m: 576,
+            k: 9,
+            n: 64,
+            groups: 64,
+            macs: (576 * 9 * 64) as u64,
+            act_elems: 576 * 64,
+        };
+        let conv = LayerShape::gemm("conv", 576, 9 * 64, 64);
+        let mut sim = Simulator::new(HwConfig::zcu102(), vec![dw, conv], 1);
+        let dw8 = sim.layer_cycles(0, Prec::B8, Prec::B8);
+        let dw4 = sim.layer_cycles(0, Prec::B4, Prec::B4);
+        let cv8 = sim.layer_cycles(1, Prec::B8, Prec::B8);
+        let cv4 = sim.layer_cycles(1, Prec::B4, Prec::B4);
+        let dw_gain = dw8.total as f64 / dw4.total as f64;
+        let cv_gain = cv8.total as f64 / cv4.total as f64;
+        assert!(dw_gain <= cv_gain + 1e-9, "dw {dw_gain} vs conv {cv_gain}");
+        // and the dw layer wastes utilization
+        assert!(dw4.utilization <= cv4.utilization);
+    }
+}

@@ -1,0 +1,220 @@
+//! Cycle model of one GEMM on the mixed-precision systolic array.
+//!
+//! Weight-stationary dataflow (paper Fig. 3a): a (Tk × Tn) weight tile is
+//! loaded into the effective array, activations stream row by row through
+//! the shared MP decoders, FP partial sums accumulate in the OF buffer,
+//! and outputs are re-encoded to DyBit on writeback.  Double buffering
+//! overlaps DRAM traffic with compute: per-layer latency is
+//! `max(compute_cycles, dram_cycles) + pipeline constants`.
+//!
+//! The tiling loop enumerates every schedule (M-tile size × loop order)
+//! that fits the buffers and keeps the best — reproducing Sec. III-C4:
+//! "obtains the optimal latency by calculating the latencies corresponding
+//! to all possible tiling schedules of the current layer".
+
+use super::config::HwConfig;
+use super::pe::{effective_array, Prec};
+
+/// Cycle breakdown of one layer at one (pw, pa) mode.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cycles {
+    pub compute: u64,
+    pub dram: u64,
+    pub overhead: u64,
+    pub total: u64,
+    /// MAC-slot utilization of the effective array in [0, 1].
+    pub utilization: f64,
+    /// DRAM bytes moved (weights + activations + writeback).
+    pub bytes: u64,
+}
+
+/// Loop orders the schedule enumerator considers.
+///
+/// * `WeightStationary`: weights fetched once; activations re-streamed
+///   once per N-tile unless the IF buffer holds the whole input.
+/// * `OutputStationary`: activations fetched once; weights re-streamed
+///   once per M-tile pass unless the W buffer holds the whole layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopOrder {
+    WeightStationary,
+    OutputStationary,
+}
+
+/// Latency of a dense (m, k, n) GEMM in (pw, pa) mode under the best
+/// tiling schedule.  `m` already includes the batch dimension.
+pub fn gemm_cycles(cfg: &HwConfig, m: usize, k: usize, n: usize,
+                   pw: Prec, pa: Prec) -> Cycles {
+    let (rows_eff, cols_eff) = effective_array(cfg.array_n, cfg.base_bits, pw, pa);
+    let kt = div_ceil(k, rows_eff); // K tiles (array rows)
+    let nt = div_ceil(n, cols_eff); // N tiles (array cols)
+
+    let mut best = Cycles { total: u64::MAX, ..Default::default() };
+    for order in [LoopOrder::WeightStationary, LoopOrder::OutputStationary] {
+        // Enumerate M-tile sizes (powers of two + exact m).
+        let mut tm = 8usize;
+        loop {
+            let tm_eff = tm.min(m);
+            if fits_buffers(cfg, tm_eff, rows_eff, cols_eff, pw, pa) {
+                let c = schedule_cycles(
+                    cfg, m, k, n, pw, pa, rows_eff, cols_eff, kt, nt, tm_eff, order,
+                );
+                if c.total < best.total {
+                    best = c;
+                }
+            }
+            if tm >= m {
+                break;
+            }
+            tm *= 2;
+        }
+    }
+    best
+}
+
+fn fits_buffers(cfg: &HwConfig, tm: usize, rows_eff: usize, cols_eff: usize,
+                pw: Prec, pa: Prec) -> bool {
+    // IF tile: tm × rows_eff activations at pa bits (double-buffered ×2)
+    let if_need = 2 * tm * rows_eff * pa.bits() as usize / 8;
+    // W tile: rows_eff × cols_eff weights at pw bits (double-buffered ×2)
+    let w_need = 2 * rows_eff * cols_eff * pw.bits() as usize / 8;
+    // OF tile: tm × cols_eff FP32 partial sums
+    let of_need = tm * cols_eff * 4;
+    if_need <= cfg.if_bytes && w_need <= cfg.w_bytes && of_need <= cfg.of_bytes
+}
+
+#[allow(clippy::too_many_arguments)]
+fn schedule_cycles(cfg: &HwConfig, m: usize, k: usize, n: usize,
+                   pw: Prec, pa: Prec, rows_eff: usize, cols_eff: usize,
+                   kt: usize, nt: usize, tm: usize,
+                   order: LoopOrder) -> Cycles {
+    let mt = div_ceil(m, tm);
+
+    // --- compute: per (K,N,M) tile pass --------------------------------
+    // load weight tile into the array (one row per cycle, cols parallel),
+    // then stream tm activation rows; fill+drain = rows+cols pipeline.
+    // Edge tiles occupy fewer rows/cols: use the average tile extent so a
+    // K=9 depthwise channel does not pay for 16 weight-load cycles.
+    let row_ext = div_ceil(k, kt).min(rows_eff) as u64;
+    let col_ext = div_ceil(n, nt).min(cols_eff) as u64;
+    let w_load = row_ext;
+    let stream = tm as u64;
+    let fill_drain = row_ext + col_ext;
+    let per_pass = w_load + stream + fill_drain + cfg.decoder_lat + cfg.encoder_lat;
+    let passes = (kt * nt * mt) as u64;
+    let compute = per_pass * passes;
+
+    // --- DRAM traffic ----------------------------------------------------
+    let wbits = pw.bits() as u64;
+    let abits = pa.bits() as u64;
+    let w_bytes_once = (k * n) as u64 * wbits / 8;
+    let a_bytes_once = (m * k) as u64 * abits / 8;
+    // writeback re-encoded at 8-bit DyBit (next layer may read any width)
+    let o_bytes = (m * n) as u64;
+
+    let (w_bytes, a_bytes) = match order {
+        LoopOrder::WeightStationary => {
+            // weights once; activations re-fetched per N tile unless the
+            // whole input fits the IF buffer
+            let whole_input = (m * k) as u64 * abits / 8;
+            let refetch = if whole_input <= cfg.if_bytes as u64 { 1 } else { nt as u64 };
+            (w_bytes_once, a_bytes_once * refetch)
+        }
+        LoopOrder::OutputStationary => {
+            // activations once; weights re-fetched per M tile pass unless
+            // the whole layer fits the W buffer
+            let whole_w = (k * n) as u64 * wbits / 8;
+            let refetch = if whole_w <= cfg.w_bytes as u64 { 1 } else { mt as u64 };
+            (w_bytes_once * refetch, a_bytes_once)
+        }
+    };
+    let bytes = w_bytes + a_bytes + o_bytes;
+    let dram = (bytes as f64 / cfg.dram_bytes_per_cycle).ceil() as u64;
+
+    // --- total: double-buffered overlap + per-layer setup ----------------
+    let overhead = cfg.layer_setup;
+    let total = compute.max(dram) + overhead;
+
+    let ideal_macs = (m * k * n) as u64;
+    let slots = compute.max(1) * (rows_eff * cols_eff) as u64;
+    Cycles {
+        compute,
+        dram,
+        overhead,
+        total,
+        utilization: (ideal_macs as f64 / slots as f64).min(1.0),
+        bytes,
+    }
+}
+
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HwConfig {
+        HwConfig::zcu102()
+    }
+
+    #[test]
+    fn lower_precision_is_faster_compute_bound() {
+        // big GEMM -> compute-bound; 4/4 should approach 4x over 8/8
+        let c = cfg();
+        let c88 = gemm_cycles(&c, 4096, 1024, 1024, Prec::B8, Prec::B8);
+        let c44 = gemm_cycles(&c, 4096, 1024, 1024, Prec::B4, Prec::B4);
+        let c22 = gemm_cycles(&c, 4096, 1024, 1024, Prec::B2, Prec::B2);
+        let s44 = c88.total as f64 / c44.total as f64;
+        let s22 = c88.total as f64 / c22.total as f64;
+        assert!(s44 > 2.5 && s44 <= 4.5, "4/4 speedup {s44}");
+        assert!(s22 > s44, "2/2 ({s22}) should beat 4/4 ({s44})");
+    }
+
+    #[test]
+    fn asymmetric_modes_scale_one_axis() {
+        let c = cfg();
+        let c88 = gemm_cycles(&c, 2048, 2048, 2048, Prec::B8, Prec::B8);
+        let c48 = gemm_cycles(&c, 2048, 2048, 2048, Prec::B4, Prec::B8);
+        let s = c88.total as f64 / c48.total as f64;
+        assert!(s > 1.4 && s < 2.6, "4W8A speedup {s}");
+    }
+
+    #[test]
+    fn tiny_gemm_dominated_by_overhead() {
+        let c = cfg();
+        let t = gemm_cycles(&c, 1, 8, 8, Prec::B8, Prec::B8);
+        assert!(t.overhead > 0);
+        assert!(t.utilization < 0.05);
+    }
+
+    #[test]
+    fn memory_bound_layer_weight_bits_cut_traffic() {
+        // FC layer: m small, k·n big -> weight traffic dominates bytes;
+        // lowering weight bits shrinks traffic ~proportionally and helps
+        // the end-to-end latency.
+        let c = cfg();
+        let w8 = gemm_cycles(&c, 8, 4096, 4096, Prec::B8, Prec::B8);
+        let w2 = gemm_cycles(&c, 8, 4096, 4096, Prec::B2, Prec::B8);
+        assert!(w2.bytes < w8.bytes / 3, "{} vs {}", w2.bytes, w8.bytes);
+        assert!(w2.total < w8.total);
+        assert!(w2.dram < w8.dram / 3);
+    }
+
+    #[test]
+    fn cycles_monotone_in_problem_size() {
+        let c = cfg();
+        let small = gemm_cycles(&c, 64, 64, 64, Prec::B8, Prec::B8);
+        let big = gemm_cycles(&c, 128, 128, 128, Prec::B8, Prec::B8);
+        assert!(big.total > small.total);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let c = cfg();
+        for (m, k, n) in [(1, 1, 1), (100, 3, 1000), (4096, 4096, 4096)] {
+            let r = gemm_cycles(&c, m, k, n, Prec::B4, Prec::B4);
+            assert!(r.utilization >= 0.0 && r.utilization <= 1.0);
+        }
+    }
+}

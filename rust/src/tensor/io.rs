@@ -1,0 +1,93 @@
+//! Binary interchange with the python build path.
+//!
+//! `aot.py` writes `<model>_params.bin` as raw little-endian f32 in
+//! manifest leaf order; this module reads/writes that format plus generic
+//! f32 blobs used to checkpoint trained parameters from the rust QAT loop.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Tensor;
+
+/// Read `n` little-endian f32 values starting at element offset `off`.
+pub fn read_f32_slice(path: &Path, off: usize, n: usize) -> Result<Vec<f32>> {
+    let mut f = fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let meta = f.metadata()?;
+    let need = (off + n) * 4;
+    if (meta.len() as usize) < need {
+        bail!(
+            "{} too short: {} bytes, need {}",
+            path.display(),
+            meta.len(),
+            need
+        );
+    }
+    let mut buf = vec![0u8; n * 4];
+    use std::io::Seek;
+    f.seek(std::io::SeekFrom::Start((off * 4) as u64))?;
+    f.read_exact(&mut buf)?;
+    Ok(bytes_to_f32(&buf))
+}
+
+/// Whole-file read as f32 vector.
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = fs::read(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{} length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes_to_f32(&bytes))
+}
+
+/// Write tensors back-to-back as raw f32 LE (checkpoint format).
+pub fn write_f32_file(path: &Path, tensors: &[&Tensor]) -> Result<()> {
+    let mut f = fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    for t in tensors {
+        f.write_all(&f32_to_bytes(&t.data))?;
+    }
+    Ok(())
+}
+
+pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+pub fn f32_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32(&f32_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("dybit_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let a = Tensor::from_vec(vec![1.0, 2.0]);
+        let b = Tensor::from_vec(vec![3.0]);
+        write_f32_file(&p, &[&a, &b]).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(read_f32_slice(&p, 1, 2).unwrap(), vec![2.0, 3.0]);
+        assert!(read_f32_slice(&p, 2, 2).is_err());
+    }
+}

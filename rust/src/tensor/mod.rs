@@ -1,0 +1,147 @@
+//! Dense row-major f32 tensors + the python⇄rust binary interchange.
+//!
+//! Deliberately minimal: the heavy math lives in the AOT-compiled HLO; the
+//! rust side only needs shape-carrying buffers for marshalling, metric
+//! computation (RMSE, top-1) and the format codecs.
+
+pub mod io;
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape in place (must preserve element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self
+            .data
+            .iter()
+            .map(|&x| (x as f64 - m) * (x as f64 - m))
+            .sum::<f64>()
+            / self.data.len() as f64)
+            .sqrt()
+    }
+
+    /// argmax over the last axis of a rank-2 tensor -> per-row indices.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        (0..self.shape[0])
+            .map(|i| {
+                let r = self.row(i);
+                r.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::zeros(&[4, 3]).reshape(vec![2, 6]).unwrap();
+        assert_eq!(t.shape, vec![2, 6]);
+        assert!(Tensor::zeros(&[4]).reshape(vec![5]).is_err());
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::from_vec(vec![1.0, -3.0, 2.0]);
+        assert_eq!(t.max_abs(), 3.0);
+        assert!((t.mean() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 1.0, -1.0, 0.5]).unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn scalar_and_row() {
+        assert_eq!(Tensor::scalar(2.5).numel(), 1);
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+}

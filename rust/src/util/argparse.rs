@@ -1,0 +1,115 @@
+//! Tiny CLI flag parser (no clap in the offline vendor set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments; generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv slice (without the program name).
+    pub fn parse(argv: &[String]) -> Self {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.bools.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, key: &str, default: &str) -> Vec<String> {
+        self.get_or(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(args: &[&str]) -> Args {
+        Args::parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = mk(&["serve", "--model", "mlp", "--fast", "--k=3"]);
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert!(a.has("fast"));
+        assert_eq!(a.get_usize("k", 0), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = mk(&[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("y", 1.5), 1.5);
+        assert!(!a.has("z"));
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = mk(&["--models", "a,b,c"]);
+        assert_eq!(a.get_list("models", ""), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn eq_form_bool_like_value() {
+        let a = mk(&["--alpha=2.5", "--beta", "4"]);
+        assert_eq!(a.get_f64("alpha", 0.0), 2.5);
+        assert_eq!(a.get_f64("beta", 0.0), 4.0);
+    }
+}

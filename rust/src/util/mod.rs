@@ -1,0 +1,10 @@
+//! Self-built substrates: RNG, JSON, CLI args, stats/bench, thread pool,
+//! property-test harness.  The offline vendor set lacks rand/serde/clap/
+//! criterion/tokio/proptest, so these live in-crate (DESIGN.md §2).
+
+pub mod argparse;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

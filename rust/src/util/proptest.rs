@@ -1,0 +1,113 @@
+//! Mini property-test harness (proptest is not in the offline vendor set).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it performs a bounded greedy shrink using
+//! the generator's own re-draws at decreasing sizes, then panics with the
+//! smallest counterexample's debug print.  Deterministic per test name.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` generated inputs.
+///
+/// `gen(rng, size)` should produce inputs whose "complexity" grows with
+/// `size` in [0, 1]; the shrinker re-draws at smaller sizes looking for a
+/// smaller counterexample.
+pub fn check<T, G, P>(name: &str, cases: usize, gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng, f64) -> T,
+    P: FnMut(&T) -> bool,
+{
+    // deterministic seed from the test name
+    let seed = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let size = (case + 1) as f64 / cases as f64;
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            // greedy shrink: re-draw at smaller sizes
+            let mut smallest = input;
+            let mut s = size;
+            for _ in 0..200 {
+                s *= 0.7;
+                let cand = gen(&mut rng, s);
+                if !prop(&cand) {
+                    smallest = cand;
+                }
+                if s < 1e-3 {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}/{cases}).\n\
+                 smallest counterexample found:\n{smallest:#?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers shared by property tests across the crate.
+pub mod gen {
+    use super::super::rng::Rng;
+
+    /// f32 vector with magnitudes spanning ~size decades, incl. negatives.
+    pub fn tensor(rng: &mut Rng, size: f64) -> Vec<f32> {
+        let n = 1 + (size * 512.0) as usize;
+        (0..n)
+            .map(|_| {
+                let scale = 10f64.powf(rng.uniform() * 4.0 * size - 2.0);
+                (rng.normal() * scale) as f32
+            })
+            .collect()
+    }
+
+    /// Random bitwidth in {2, 4, 8} (the paper's supported set).
+    pub fn bitwidth(rng: &mut Rng) -> usize {
+        [2usize, 4, 8][rng.below(3)]
+    }
+
+    /// GEMM dims up to ~size * 512.
+    pub fn gemm_dims(rng: &mut Rng, size: f64) -> (usize, usize, usize) {
+        let top = 2.0 + size * 510.0;
+        (
+            1 + rng.below(top as usize),
+            1 + rng.below(top as usize),
+            1 + rng.below(top as usize),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum-commutes", 100, |r, s| {
+            (r.uniform_in(-1.0, 1.0), (s * 10.0) as i32)
+        }, |(a, b)| a + *b as f32 == *b as f32 + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn fails_and_reports() {
+        check("always-false", 10, |r, _| r.below(5), |_| false);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        check("det", 5, |r, _| r.next_u64(), |x| {
+            a.push(*x);
+            true
+        });
+        check("det", 5, |r, _| r.next_u64(), |x| {
+            b.push(*x);
+            true
+        });
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,175 @@
+//! Timing + descriptive statistics for the bench harness.
+//!
+//! The offline vendor set has no criterion; `Bench` provides the same core
+//! loop (warmup, timed iterations, robust summary) with deterministic
+//! output formatting shared by every `benches/*.rs` binary.
+
+use std::time::Instant;
+
+/// Descriptive statistics of a sample.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty());
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: s[0],
+        p50: percentile(&s, 50.0),
+        p95: percentile(&s, 95.0),
+        max: s[n - 1],
+    }
+}
+
+/// Percentile of a pre-sorted slice (linear interpolation).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let w = rank - lo as f64;
+    sorted[lo] * (1.0 - w) + sorted[hi] * w
+}
+
+/// Criterion-lite measurement loop.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, iters: 20 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Bench { warmup_iters, iters }
+    }
+
+    /// Time `f` and return per-iteration seconds summary.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        summarize(&samples)
+    }
+}
+
+/// Pretty time formatting (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+/// Fixed-width table printer used by every bench binary so tables are
+/// grep-able from bench_output.txt.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("| {:width$} ", c, width = w[i]));
+            }
+            s.push('|');
+            s
+        };
+        println!("{}", line(&self.headers));
+        let dashes: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        println!("{}", line(&dashes));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_sane() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let s = vec![0.0, 10.0];
+        assert!((percentile(&s, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&s, 0.0), 0.0);
+        assert_eq!(percentile(&s, 100.0), 10.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let s = Bench::new(1, 5).run(|| count += 1);
+        assert_eq!(count, 6);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

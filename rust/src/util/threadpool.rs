@@ -1,0 +1,134 @@
+//! Scoped thread pool + mpsc work queue.
+//!
+//! tokio is not in the offline vendor set; the coordinator and the search
+//! engine use this std-thread pool instead (same architecture — bounded
+//! queue, worker loop — without async syntax).  On the 1-core CI box the
+//! pool degenerates gracefully to near-serial execution.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Jobs run FIFO; `join` blocks until the queue
+/// drains and all workers exit.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // channel closed
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool joined")
+            .send(Box::new(f))
+            .expect("worker hung up");
+    }
+
+    /// Drop the sender and wait for all workers to finish the queue.
+    pub fn join(mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Map `f` over `items` in parallel, preserving order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, nthreads: usize, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
+    let f = Arc::new(f);
+    let (tx, rx) = mpsc::channel();
+    let pool = ThreadPool::new(nthreads);
+    for (i, item) in items.into_iter().enumerate() {
+        let tx = tx.clone();
+        let f = Arc::clone(&f);
+        pool.execute(move || {
+            let r = f(item);
+            let _ = tx.send((i, r));
+        });
+    }
+    drop(tx);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    pool.join();
+    out.into_iter().map(|o| o.expect("worker died")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let pool = ThreadPool::new(4);
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..50).collect::<Vec<_>>(), 4, |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,101 @@
+//! End-to-end system tests: search → quantize → serve, composed.
+//! Skips gracefully without artifacts.
+
+use std::path::Path;
+use std::time::Duration;
+
+use dybit::coordinator::{Policy, Server, ServerConfig};
+use dybit::formats::Format;
+use dybit::qat::{QuantConfig, Session};
+use dybit::runtime::{Executor, Manifest};
+use dybit::search::{run_search, Strategy};
+use dybit::sim::{HwConfig, Simulator};
+use dybit::util::rng::Rng;
+
+fn setup() -> Option<Manifest> {
+    Manifest::load(Path::new("artifacts")).ok()
+}
+
+#[test]
+fn search_then_simulate_confirms_speedup() {
+    let Some(m) = setup() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut exec = Executor::new(&m.dir).unwrap();
+    let mut session = Session::new(&m, "miniresnet18").unwrap();
+    let weights = session.layer_weights();
+    let acts = session.layer_acts(&mut exec, 3).unwrap();
+    let mut sim = Simulator::new(HwConfig::zcu102(), session.model.layers.clone(), 1);
+
+    let r = run_search(
+        &mut sim,
+        &weights,
+        &acts,
+        Format::DyBit,
+        Strategy::SpeedupConstrained { alpha: 3.0 },
+        3,
+    );
+    assert!(r.satisfied, "{r:?}");
+    // the assignment converts into a runnable quant config
+    let mut q = QuantConfig::from_assignment(Format::DyBit, &r.assignment);
+    session.calibrate(&mut exec, &mut q, 11).unwrap();
+    let ev = session.evaluate(&mut exec, &q, 2).unwrap();
+    assert!(ev.loss.is_finite());
+}
+
+#[test]
+fn server_round_trip_under_load() {
+    let Some(m) = setup() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let nl = m.models["mlp"].n_quant_layers;
+    let cfg = ServerConfig {
+        model: "mlp".into(),
+        qcfg: QuantConfig::uniform(nl, Format::DyBit, 4, 8),
+        policy: Policy { max_batch: m.models["mlp"].batch, max_wait: Duration::from_millis(3) },
+        queue_cap: 64,
+        pallas: false,
+    };
+    let img_elems: usize = m.models["mlp"].input.iter().skip(1).product();
+    let server = Server::start(&m, cfg).unwrap();
+
+    // mixed sync requests from two client threads
+    std::thread::scope(|s| {
+        for c in 0..2 {
+            let server = &server;
+            s.spawn(move || {
+                let mut rng = Rng::new(c as u64 + 1);
+                for _ in 0..8 {
+                    let img = rng.normal_vec(img_elems);
+                    let pred = server.infer(img).expect("inference ok");
+                    assert!(pred < 10);
+                }
+            });
+        }
+    });
+    let snap = server.shutdown();
+    assert_eq!(snap.requests, 16);
+    assert!(snap.batches >= 1);
+    assert!(snap.lat_p50_ms > 0.0);
+}
+
+#[test]
+fn rejects_wrong_image_size() {
+    let Some(m) = setup() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let nl = m.models["mlp"].n_quant_layers;
+    let cfg = ServerConfig {
+        model: "mlp".into(),
+        qcfg: QuantConfig::fp32(nl),
+        policy: Policy::default(),
+        queue_cap: 8,
+        pallas: false,
+    };
+    let server = Server::start(&m, cfg).unwrap();
+    assert!(server.infer(vec![0.0; 3]).is_err());
+    drop(server);
+}

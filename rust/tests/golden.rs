@@ -1,0 +1,78 @@
+//! Bit-exact cross-check of the rust format library against the python
+//! mirror via `artifacts/formats_golden.json` (written by `make artifacts`).
+//! This is the contract that keeps the two halves of the system from
+//! drifting: every grid, every DyBit code table, and Table I itself.
+
+use std::path::Path;
+
+use dybit::formats::dybit as dybit_codec;
+use dybit::formats::Format;
+use dybit::util::json::{parse, Json};
+
+fn golden() -> Option<Json> {
+    let p = Path::new("artifacts/formats_golden.json");
+    let text = std::fs::read_to_string(p).ok()?;
+    Some(parse(&text).expect("golden json parses"))
+}
+
+#[test]
+fn all_grids_match_python_bit_exactly() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let grids = g.get("grids").and_then(Json::as_obj).expect("grids");
+    let mut checked = 0;
+    for (key, vals) in grids {
+        let (name, bits) = key.split_at(key.len() - 1);
+        let bits: u32 = bits.parse().expect("bits suffix");
+        let fmt = Format::from_name(name).expect("format name");
+        if !fmt.supports(bits) {
+            continue;
+        }
+        let want = vals.as_f64_vec().expect("numeric grid");
+        let got = fmt.grid(bits);
+        assert_eq!(got, want, "grid mismatch for {key}");
+        checked += 1;
+    }
+    assert!(checked >= 30, "only {checked} grids checked");
+}
+
+#[test]
+fn dybit_code_tables_match_python() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let codes = g.get("dybit_codes").and_then(Json::as_obj).expect("codes");
+    for (n, vals) in codes {
+        let n: u32 = n.parse().unwrap();
+        let want = vals.as_f64_vec().unwrap();
+        for (c, &v) in want.iter().enumerate() {
+            assert_eq!(
+                dybit_codec::decode(c as u8, n),
+                v,
+                "dybit{n} code {c:#b} decode mismatch"
+            );
+        }
+    }
+}
+
+#[test]
+fn table1_matches_python_and_paper() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let want = g
+        .get("table1_unsigned4")
+        .and_then(Json::as_f64_vec)
+        .expect("table1");
+    assert_eq!(dybit_codec::grid_unsigned(4), want);
+    // and the paper's literal values once more, end to end
+    assert_eq!(
+        want,
+        vec![0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0, 1.25,
+             1.5, 1.75, 2.0, 3.0, 4.0, 8.0]
+    );
+}

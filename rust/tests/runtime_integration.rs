@@ -1,0 +1,205 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These exercise the full L3→L2→L1 composition: rust builds LUTs from its
+//! format library, feeds them to the compiled HLO, and checks the results
+//! against its own quantizer — i.e. the L1 Pallas kernel, the L2 model
+//! fake-quant, and the L3 codecs must all agree.
+//!
+//! All tests skip gracefully when artifacts are missing (`make artifacts`).
+
+use std::path::Path;
+
+use dybit::formats::{quantizer, Format, LUT_SIZE};
+use dybit::qat::{materialize_batch, QuantConfig, Session};
+use dybit::runtime::{f32_scalar, tensor_to_literal, Executor, Manifest};
+use dybit::tensor::Tensor;
+use dybit::util::rng::Rng;
+
+fn setup() -> Option<(Manifest, Executor)> {
+    let dir = Path::new("artifacts");
+    let m = Manifest::load(dir).ok()?;
+    let e = Executor::new(dir).ok()?;
+    Some((m, e))
+}
+
+#[test]
+fn pallas_fake_quant_kernel_matches_rust_quantizer() {
+    let Some((m, mut exec)) = setup() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let art = &m.kernels["fake_quant"];
+    let shape: Vec<usize> = art.inputs[0].shape.clone();
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(42);
+    let x = Tensor::new(shape, rng.normal_vec(n)).unwrap();
+    let lut = Tensor::from_vec(Format::DyBit.padded_lut(4));
+    let scale = 0.37f32;
+
+    let outs = exec
+        .run_t(
+            &art.file,
+            &[
+                tensor_to_literal(&x).unwrap(),
+                tensor_to_literal(&lut).unwrap(),
+                f32_scalar(scale),
+            ],
+        )
+        .expect("kernel runs");
+    let got = &outs[0];
+
+    let grid = Format::DyBit.grid(4);
+    let mut want = vec![0.0f32; n];
+    quantizer::quantize_to_grid(&x.data, &grid, scale as f64, &mut want);
+    let max_err = got
+        .data
+        .iter()
+        .zip(want.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-5, "pallas kernel vs rust quantizer: {max_err}");
+}
+
+#[test]
+fn qgemm_kernel_decodes_dybit_codes() {
+    let Some((m, mut exec)) = setup() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let art = &m.kernels["qgemm"];
+    let xs = art.inputs[0].shape.clone(); // [M, K]
+    let cs = art.inputs[1].shape.clone(); // [K, N]
+    let mut rng = Rng::new(7);
+    let x = Tensor::new(xs.clone(), rng.normal_vec(xs.iter().product()))
+        .unwrap();
+    // codes as f32 values 0..16 (i32 input: convert via literal)
+    let ncodes: usize = cs.iter().product();
+    let codes_f: Vec<f32> = (0..ncodes).map(|_| rng.below(16) as f32).collect();
+    let codes = Tensor::new(cs.clone(), codes_f.clone()).unwrap();
+    let lut_codes = Tensor::from_vec(code_lut4());
+    let scale = 0.25f32;
+
+    let code_lit = tensor_to_literal(&codes)
+        .unwrap()
+        .convert(xla::PrimitiveType::S32)
+        .expect("convert codes to i32");
+    let outs = exec
+        .run_t(
+            &art.file,
+            &[
+                tensor_to_literal(&x).unwrap(),
+                code_lit,
+                tensor_to_literal(&lut_codes).unwrap(),
+                f32_scalar(scale),
+            ],
+        )
+        .expect("qgemm runs");
+    let got = &outs[0];
+
+    // reference: y = x @ (scale * decode(codes))
+    let (mdim, k) = (xs[0], xs[1]);
+    let n = cs[1];
+    let lut = code_lut4();
+    let mut want = vec![0.0f32; mdim * n];
+    for i in 0..mdim {
+        for kk in 0..k {
+            let xv = x.data[i * k + kk];
+            for j in 0..n {
+                let w = lut[codes_f[kk * n + j] as usize] * scale;
+                want[i * n + j] += xv * w;
+            }
+        }
+    }
+    let max_err = got
+        .data
+        .iter()
+        .zip(want.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "qgemm mismatch: {max_err}");
+}
+
+/// Code-indexed dybit4 LUT padded to 256 (the qgemm artifact contract).
+fn code_lut4() -> Vec<f32> {
+    dybit::formats::dybit::code_lut(4, LUT_SIZE)
+}
+
+#[test]
+fn data_batch_is_deterministic_and_labelled() {
+    let Some((m, mut exec)) = setup() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let (x1, y1) = materialize_batch(&mut exec, &m.dir, 5).unwrap();
+    let (x2, y2) = materialize_batch(&mut exec, &m.dir, 5).unwrap();
+    let (x3, _) = materialize_batch(&mut exec, &m.dir, 6).unwrap();
+    assert_eq!(x1, x2, "same seed must give identical batches");
+    assert_eq!(y1.data, y2.data);
+    assert_ne!(x1.data, x3.data, "different seeds must differ");
+    assert_eq!(x1.shape, vec![m.batch, m.img, m.img, 3]);
+    assert!(y1.data.iter().all(|&c| c >= 0.0 && c < m.classes as f32));
+}
+
+#[test]
+fn mlp_fwd_fp32_equals_disabled_quant_and_pallas_agrees() {
+    let Some((m, mut exec)) = setup() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut session = Session::new(&m, "mlp").unwrap();
+    let (x, _) = materialize_batch(&mut exec, &m.dir, 1).unwrap();
+    let nl = session.model.n_quant_layers;
+
+    let fp = QuantConfig::fp32(nl);
+    let logits_ref = session.forward(&mut exec, &fp, &x, false).unwrap();
+    assert_eq!(logits_ref.shape, vec![m.batch, m.classes]);
+
+    // quantized (8/8 dybit) should be close to fp32, not equal
+    let mut q8 = QuantConfig::uniform(nl, Format::DyBit, 8, 8);
+    session.calibrate(&mut exec, &mut q8, 2).unwrap();
+    let logits_q8 = session.forward(&mut exec, &q8, &x, false).unwrap();
+    let diff = max_abs_diff(&logits_ref.data, &logits_q8.data);
+    assert!(diff > 0.0, "8/8 quant must actually quantize");
+    // untrained-net logits span several units; 8/8 must stay same-order
+    let span = logits_ref.max_abs().max(1.0);
+    assert!(diff < span, "8/8 quant drifted: diff {diff} vs span {span}");
+
+    // the pallas-kernel fwd must match the ref fwd on identical config
+    let logits_pallas = session.forward(&mut exec, &q8, &x, true).unwrap();
+    let dp = max_abs_diff(&logits_q8.data, &logits_pallas.data);
+    assert!(dp < 1e-3, "pallas fwd vs ref fwd: {dp}");
+}
+
+#[test]
+fn train_step_reduces_loss_on_mlp() {
+    let Some((m, mut exec)) = setup() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut session = Session::new(&m, "mlp").unwrap();
+    let nl = session.model.n_quant_layers;
+    let fp = QuantConfig::fp32(nl);
+    let first = session.train(&mut exec, &fp, 8, 0.05, 0).unwrap();
+    let before = first.first().unwrap().loss;
+    let after = first.last().unwrap().loss;
+    assert!(
+        after < before,
+        "loss should fall within 8 steps: {before} -> {after}"
+    );
+}
+
+#[test]
+fn lut_width_matches_manifest() {
+    let Some((m, _)) = setup() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    assert_eq!(m.lut_size, LUT_SIZE);
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
