@@ -12,11 +12,12 @@ mod common;
 use std::time::Duration;
 
 use dybit::coordinator::{load_test, Policy, Server, ServerConfig};
-use dybit::formats::{quantizer, Format};
+use dybit::formats::{quantizer, Format, GridLut};
 use dybit::qat::{QuantConfig, Session};
 use dybit::runtime::Executor;
 use dybit::search::{run_search, Strategy};
 use dybit::sim::{HwConfig, Prec, Simulator};
+use dybit::util::json::Json;
 use dybit::util::rng::Rng;
 use dybit::util::stats::{fmt_time, Bench, Table};
 
@@ -25,18 +26,42 @@ fn main() {
     let bench = Bench::new(3, 12);
     let mut t = Table::new(&["path", "layer", "time/iter", "rate"]);
 
-    // ---- L3: quantizer -------------------------------------------------
+    // ---- L3: quantizer — per-element baseline vs batched GridLut --------
     let x: Vec<f32> = rng.normal_vec(1 << 20);
     let grid = Format::DyBit.grid(4);
     let mut out = vec![0.0f32; x.len()];
-    let s = bench.run(|| quantizer::quantize_to_grid(&x, &grid, 0.5, &mut out));
-    t.row(vec!["quantize 1M elems (dybit4)".into(), "L3".into(), fmt_time(s.mean),
-               format!("{:.0} Melem/s", x.len() as f64 / s.mean / 1e6)]);
+    let s_base = bench.run(|| quantizer::quantize_to_grid(&x, &grid, 0.5, &mut out));
+    t.row(vec!["quantize 1M (dybit4, per-element baseline)".into(), "L3".into(),
+               fmt_time(s_base.mean),
+               format!("{:.0} Melem/s", x.len() as f64 / s_base.mean / 1e6)]);
 
-    let s = bench.run(|| {
+    let lut = GridLut::from_format(Format::DyBit, 4, 0.5);
+    let s_lut = bench.run(|| lut.quantize_batch(&x, &mut out));
+    t.row(vec!["quantize 1M (dybit4, GridLut batched)".into(), "L3".into(),
+               fmt_time(s_lut.mean),
+               format!("{:.0} Melem/s", x.len() as f64 / s_lut.mean / 1e6)]);
+
+    let mut codes = vec![0u8; x.len()];
+    let s_enc = bench.run(|| lut.encode_batch(&x, &mut codes));
+    t.row(vec!["encode_batch 1M -> u8 codes".into(), "L3".into(), fmt_time(s_enc.mean),
+               format!("{:.0} Melem/s", x.len() as f64 / s_enc.mean / 1e6)]);
+    let s_dec = bench.run(|| lut.dequantize_batch(&codes, &mut out));
+    t.row(vec!["dequantize_batch 1M codes".into(), "L3".into(), fmt_time(s_dec.mean),
+               format!("{:.0} Melem/s", x.len() as f64 / s_dec.mean / 1e6)]);
+
+    let quantize_speedup = s_base.mean / s_lut.mean;
+
+    let s_cal_base = bench.run(|| {
         std::hint::black_box(quantizer::calibrate_scale(&x[..32768], &grid));
     });
-    t.row(vec!["calibrate_scale 32k".into(), "L3".into(), fmt_time(s.mean), "-".into()]);
+    t.row(vec!["calibrate_scale 32k (baseline ladder)".into(), "L3".into(),
+               fmt_time(s_cal_base.mean), "-".into()]);
+    let s_cal_lut = bench.run(|| {
+        std::hint::black_box(quantizer::calibrate_scale_lut(&x[..32768], Format::DyBit, 4));
+    });
+    t.row(vec!["calibrate_scale 32k (GridLut ladder)".into(), "L3".into(),
+               fmt_time(s_cal_lut.mean), "-".into()]);
+    let calibrate_speedup = s_cal_base.mean / s_cal_lut.mean;
 
     // ---- L3: simulator -------------------------------------------------
     let layers = dybit::models::synthetic_resnet(16);
@@ -124,5 +149,24 @@ fn main() {
     }
 
     t.print();
+    println!(
+        "\nhot-path speedup (GridLut batched vs per-element baseline): \
+         quantize {quantize_speedup:.2}x, calibrate {calibrate_speedup:.2}x \
+         (acceptance floor: 2.00x on quantize)"
+    );
+    common::save_results(
+        "perf_hotpath",
+        Json::obj(vec![
+            ("quantize_baseline_s", Json::num(s_base.mean)),
+            ("quantize_gridlut_s", Json::num(s_lut.mean)),
+            ("encode_batch_s", Json::num(s_enc.mean)),
+            ("dequantize_batch_s", Json::num(s_dec.mean)),
+            ("calibrate_baseline_s", Json::num(s_cal_base.mean)),
+            ("calibrate_gridlut_s", Json::num(s_cal_lut.mean)),
+            ("quantize_speedup", Json::num(quantize_speedup)),
+            ("calibrate_speedup", Json::num(calibrate_speedup)),
+        ]),
+    )
+    .expect("save perf results");
     println!("perf_hotpath done");
 }

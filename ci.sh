@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Local CI gate for the DyBit workspace (see README.md).
+#
+#   ./ci.sh          # fmt + clippy + tier-1 (build + tests)
+#   ./ci.sh --fast   # tier-1 only
+#
+# Tier-1 must stay green; fmt/clippy keep the tree reviewable.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+fast=0
+[[ "${1:-}" == "--fast" ]] && fast=1
+
+if [[ $fast -eq 0 ]]; then
+  echo "==> cargo fmt --check"
+  cargo fmt --all -- --check
+
+  echo "==> cargo clippy (deny warnings)"
+  cargo clippy --workspace --all-targets -- -D warnings
+fi
+
+echo "==> tier-1: cargo build --release && cargo test -q"
+cargo build --release
+cargo test -q
+
+echo "ci.sh: all green"

@@ -237,6 +237,80 @@ mod tests {
         }
     }
 
+    /// Eqn. 1 edge: the all-ones magnitude field decodes to the format
+    /// maximum 2^(m-1) for every signed width, and its signed code pair
+    /// covers ±max.
+    #[test]
+    fn all_ones_code_is_max_at_every_width() {
+        for n in 2..=8u32 {
+            let m = n - 1;
+            let max = (1u64 << (m - 1)) as f64;
+            let all_ones_mag = ((1u32 << m) - 1) as u8;
+            assert_eq!(magnitude(all_ones_mag, m), max, "n={n}");
+            // positive signed code (sign=0, mag=all-ones)
+            assert_eq!(decode(all_ones_mag, n), max, "n={n}");
+            // negative signed code (sign=1, mag=all-ones)
+            let neg = (1u8 << m) | all_ones_mag;
+            assert_eq!(decode(neg, n), -max, "n={n}");
+            // and it is the grid's extreme
+            assert_eq!(*grid(n).last().unwrap(), max, "n={n}");
+        }
+    }
+
+    /// DESIGN.md §5: the otherwise-wasted negative-zero code (sign=1,
+    /// magnitude=0) is remapped to -2^(m-1) so all 2^n codes carry
+    /// information.
+    #[test]
+    fn negative_zero_remaps_to_negative_max() {
+        for n in 2..=8u32 {
+            let m = n - 1;
+            let neg_zero = 1u8 << m; // sign bit set, magnitude field 0
+            let want = -((1u64 << (m - 1)) as f64);
+            assert_eq!(decode(neg_zero, n), want, "n={n}");
+            // it duplicates the all-ones negative value, never a new one
+            assert_eq!(decode(neg_zero, n), *grid(n).first().unwrap(), "n={n}");
+        }
+    }
+
+    /// Subnormal boundary: the largest i=0 (leading-zero) code decodes
+    /// linearly to (2^(m-1)-1)/2^(m-1), and the next code up (i=1, the
+    /// first normal) lands exactly on 1.0 — no gap and no overlap at the
+    /// subnormal/normal seam.
+    #[test]
+    fn subnormal_to_normal_boundary_is_seamless() {
+        for m in 2..=7u32 {
+            let top_sub = (1u8 << (m - 1)) - 1; // 0111…1: largest subnormal
+            let denom = (1u64 << (m - 1)) as f64;
+            assert_eq!(magnitude(top_sub, m), (denom - 1.0) / denom, "m={m}");
+            let first_normal = 1u8 << (m - 1); // 1000…0: i=1, fraction 0
+            assert_eq!(magnitude(first_normal, m), 1.0, "m={m}");
+        }
+        // m=1 degenerate field: the single non-zero code is the max
+        assert_eq!(magnitude(1, 1), 1.0);
+    }
+
+    /// Every decodable value re-encodes to a code with the same value, for
+    /// every code of every width (2..=8) — the full-codebook roundtrip.
+    #[test]
+    fn roundtrip_value_identity_over_full_codebook() {
+        for n in 2..=8u32 {
+            let g = grid(n);
+            for c in 0..(1u32 << n) {
+                let v = decode(c as u8, n);
+                // decoded values all lie on the signed grid
+                assert!(
+                    g.iter().any(|&gv| gv == v),
+                    "n={n} c={c:#010b}: {v} not on grid"
+                );
+                let c2 = encode(v, n);
+                assert_eq!(decode(c2, n), v, "n={n} c={c:#010b}");
+                // encoding is stable: re-encoding the roundtripped code's
+                // value yields the same code
+                assert_eq!(encode(decode(c2, n), n), c2, "n={n} c={c:#010b}");
+            }
+        }
+    }
+
     #[test]
     fn code_lut_padding() {
         let lut = code_lut(4, 256);

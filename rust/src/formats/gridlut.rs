@@ -1,0 +1,349 @@
+//! Batched grid quantization through a precomputed bucket LUT.
+//!
+//! The original hot path (`quantizer::quantize_to_grid`) rebuilt the
+//! midpoint table on every call and ran a per-element binary search —
+//! ~log2(255) ≈ 8 unpredictable branches per element.  Following the
+//! table-driven inner loops of ANT [Guo et al. 2022] and Bit Fusion
+//! [Sharma et al. 2018], a [`GridLut`] precomputes, once per
+//! `(format, bits, scale)`:
+//!
+//! * the scaled decision boundaries (`mids`, identical arithmetic to the
+//!   baseline, so outputs are bit-exact with the python mirror),
+//! * the scaled code→value table (`values`),
+//! * a uniform bucket table `start` mapping a value's bucket to the first
+//!   candidate code, so encoding is O(1): one multiply, one clamp, and on
+//!   average ~1 boundary comparison instead of a full binary search.
+//!
+//! Batch entry points ([`GridLut::encode_batch`],
+//! [`GridLut::dequantize_batch`], [`GridLut::quantize_batch`]) operate
+//! slice-at-a-time; [`GridLut::from_format`] memoizes instances in a
+//! process-wide cache so fake-quant, the runtime LUT builder
+//! (`Format::padded_lut` → `qat::luts`) and the search engine share the
+//! same tables (the calibration ladder builds its 54 candidate tables
+//! locally — data-dependent scales would only pollute the cache).
+//! Measured against the per-element baseline in
+//! `benches/perf_hotpath.rs`; the before/after is recorded in
+//! EXPERIMENTS.md §Perf.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::quantizer::upper_bound;
+use super::Format;
+
+/// Bound on cached instances; the cache is cleared wholesale when full —
+/// a backstop for long-running processes that settle on many distinct
+/// data-dependent scales (one per quantized tensor).
+const CACHE_CAP: usize = 4096;
+
+/// Precomputed quantization tables for one `(grid, scale)` pair.
+///
+/// Construction is O(codes + buckets); each encoded element then costs
+/// O(1) expected time.  All comparisons use the same f64 arithmetic as the
+/// per-element baseline, so `quantize_batch` is bit-exact with
+/// `quantizer::quantize_to_grid` on every input (including ties, which
+/// resolve to the upper cell exactly like `searchsorted(side="right")`).
+pub struct GridLut {
+    scale: f64,
+    /// Code-indexed scaled values, ascending (`code -> grid[code] * scale`).
+    values: Vec<f32>,
+    /// Decision boundaries between adjacent codes, scaled; `len = codes-1`.
+    mids: Vec<f64>,
+    /// Left edge of the bucket table (= `mids[0]`).
+    lo: f64,
+    /// Buckets per unit value (0 when the boundary span is degenerate).
+    inv_step: f64,
+    /// First candidate code per bucket.
+    start: Vec<u16>,
+}
+
+impl GridLut {
+    /// Build tables for an ascending `grid` at `scale`.
+    ///
+    /// Panics if the grid has fewer than 2 values, is not strictly
+    /// ascending, or exceeds the `u8` code space used by the batch APIs.
+    pub fn new(grid: &[f64], scale: f64) -> Self {
+        assert!(grid.len() >= 2, "grid needs >= 2 values");
+        assert!(grid.len() <= 256, "grid exceeds u8 code space");
+        assert!(grid.windows(2).all(|w| w[0] < w[1]), "grid must ascend");
+        debug_assert!(scale > 0.0, "scale must be positive");
+
+        let values: Vec<f32> = grid.iter().map(|&g| (g * scale) as f32).collect();
+        // identical arithmetic to the per-element baseline: bit-exact cells
+        let mids: Vec<f64> = grid
+            .windows(2)
+            .map(|w| (w[0] + w[1]) * 0.5 * scale)
+            .collect();
+
+        let nbuckets = (mids.len() * 16).clamp(64, 4096);
+        let lo = mids[0];
+        let span = mids[mids.len() - 1] - lo;
+        let inv_step = if span > 0.0 { nbuckets as f64 / span } else { 0.0 };
+        let step = if span > 0.0 { span / nbuckets as f64 } else { 0.0 };
+
+        let mut start = Vec::with_capacity(nbuckets);
+        let mut idx = 0usize;
+        for b in 0..nbuckets {
+            let edge = lo + b as f64 * step;
+            while idx < mids.len() && mids[idx] < edge {
+                idx += 1;
+            }
+            start.push(idx as u16);
+        }
+
+        GridLut { scale, values, mids, lo, inv_step, start }
+    }
+
+    /// Cached instance for `(format, bits, scale)`.
+    ///
+    /// The same `Arc` is returned for repeated keys, so `fake_quant`,
+    /// `Format::padded_lut`, `qat::luts` and `search::engine` share
+    /// tables.  (The calibration ladder builds its candidate tables
+    /// locally instead — 54 data-dependent scales per tensor would only
+    /// pollute the cache.  *Settled* calibrated scales are worth caching:
+    /// repeated sweeps over the same tensors — e.g. the fig5 bench runs
+    /// several searches per session — re-derive identical scales, and
+    /// `CACHE_CAP` bounds the pathological many-distinct-scales case.)
+    /// Construction happens *outside* the lock, so a
+    /// panicking grid (unsupported bits) cannot poison the cache and
+    /// builders do not serialize each other; a poisoned lock is recovered
+    /// rather than propagated.
+    pub fn from_format(fmt: Format, bits: u32, scale: f64) -> Arc<GridLut> {
+        type Key = (Format, u32, u64);
+        static CACHE: OnceLock<Mutex<HashMap<Key, Arc<GridLut>>>> = OnceLock::new();
+        fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+            m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+        }
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let key = (fmt, bits, scale.to_bits());
+        if let Some(lut) = lock(cache).get(&key) {
+            return Arc::clone(lut);
+        }
+        let lut = Arc::new(GridLut::new(&fmt.grid(bits), scale));
+        let mut map = lock(cache);
+        if map.len() >= CACHE_CAP {
+            map.clear();
+        }
+        // double-checked: keep whichever instance landed first
+        Arc::clone(map.entry(key).or_insert(lut))
+    }
+
+    /// Number of codes (grid points).
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True when the table holds no codes (cannot occur for valid grids).
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// The scale the tables were built at.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Scaled value of `code` (codes past the end clamp to the maximum,
+    /// matching the edge-padded runtime LUT convention).
+    pub fn value(&self, code: u8) -> f32 {
+        self.values[(code as usize).min(self.values.len() - 1)]
+    }
+
+    /// Code-indexed scaled value table.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Nearest-code index of one value (ties to the upper cell, matching
+    /// `searchsorted(side="right")` on the midpoints).
+    ///
+    /// Typical cost is ~1 boundary comparison (uniformly-spaced grids put
+    /// 0–2 midpoints per bucket).  Exponentially-spaced grids (posit,
+    /// high-bit DyBit) can concentrate many midpoints into the buckets
+    /// near zero, so the forward scan is capped at `SCAN_CAP` steps and
+    /// falls back to a binary search over the remaining suffix — bounding
+    /// the worst case at `SCAN_CAP + log2(codes)` comparisons, i.e. never
+    /// asymptotically worse than the per-element baseline.
+    #[inline]
+    fn code_of(&self, v: f64) -> usize {
+        const SCAN_CAP: u32 = 8;
+        // negative / NaN offsets saturate to bucket 0, huge ones clamp high
+        let b = ((v - self.lo) * self.inv_step) as usize;
+        let b = b.min(self.start.len() - 1);
+        let mut idx = self.start[b] as usize;
+        let mut steps = 0u32;
+        while idx < self.mids.len() && self.mids[idx] <= v {
+            idx += 1;
+            steps += 1;
+            if steps == SCAN_CAP {
+                // dense bucket: the prefix is all <= v, so the global
+                // upper bound is idx + upper_bound(suffix)
+                idx += upper_bound(&self.mids[idx..], v);
+                break;
+            }
+        }
+        // guard against bucket-edge rounding: restore exact upper-bound
+        while idx > 0 && self.mids[idx - 1] > v {
+            idx -= 1;
+        }
+        idx
+    }
+
+    /// Nearest code for one value.
+    #[inline]
+    pub fn encode(&self, v: f32) -> u8 {
+        self.code_of(v as f64) as u8
+    }
+
+    /// Encode a slice of values into codes.
+    pub fn encode_batch(&self, x: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(x.len(), out.len());
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            *o = self.code_of(v as f64) as u8;
+        }
+    }
+
+    /// Decode a slice of codes back into scaled values.
+    pub fn dequantize_batch(&self, codes: &[u8], out: &mut [f32]) {
+        debug_assert_eq!(codes.len(), out.len());
+        let top = self.values.len() - 1;
+        for (o, &c) in out.iter_mut().zip(codes.iter()) {
+            *o = self.values[(c as usize).min(top)];
+        }
+    }
+
+    /// Fused nearest-value projection (encode + decode in one pass) —
+    /// the batched replacement for `quantizer::quantize_to_grid`.
+    pub fn quantize_batch(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), out.len());
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            *o = self.values[self.code_of(v as f64)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::quantizer;
+    use crate::util::rng::Rng;
+
+    fn heavy_tail(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| (rng.normal() * (1.0 + 5.0 * rng.uniform().powi(5))) as f32)
+            .collect()
+    }
+
+    #[test]
+    fn matches_baseline_bit_exactly_all_formats() {
+        let mut rng = Rng::new(41);
+        for fmt in Format::ALL {
+            for bits in [2u32, 3, 4, 8] {
+                if !fmt.supports(bits) {
+                    continue;
+                }
+                for scale in [0.03, 0.5, 1.0, 7.25] {
+                    let grid = fmt.grid(bits);
+                    let x = heavy_tail(&mut rng, 1500);
+                    let mut base = vec![0.0f32; x.len()];
+                    quantizer::quantize_to_grid(&x, &grid, scale, &mut base);
+                    let lut = GridLut::new(&grid, scale);
+                    let mut got = vec![0.0f32; x.len()];
+                    lut.quantize_batch(&x, &mut got);
+                    assert_eq!(got, base, "{fmt:?} bits={bits} scale={scale}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ties_resolve_to_upper_cell_like_baseline() {
+        let grid = Format::DyBit.grid(4);
+        let scale = 0.5;
+        let lut = GridLut::new(&grid, scale);
+        // probe exactly on every decision boundary
+        let mids: Vec<f32> = grid
+            .windows(2)
+            .map(|w| ((w[0] + w[1]) * 0.5 * scale) as f32)
+            .collect();
+        let mut base = vec![0.0f32; mids.len()];
+        quantizer::quantize_to_grid(&mids, &grid, scale, &mut base);
+        let mut got = vec![0.0f32; mids.len()];
+        lut.quantize_batch(&mids, &mut got);
+        assert_eq!(got, base);
+    }
+
+    #[test]
+    fn outliers_clamp_to_extremes() {
+        let lut = GridLut::new(&Format::DyBit.grid(4), 1.0);
+        let x = vec![-1e30f32, -9.0, 9.0, 1e30, f32::NEG_INFINITY, f32::INFINITY];
+        let mut codes = vec![0u8; x.len()];
+        lut.encode_batch(&x, &mut codes);
+        assert_eq!(codes[0], 0);
+        assert_eq!(codes[1], 0);
+        assert_eq!(codes[2] as usize, lut.len() - 1);
+        assert_eq!(codes[3] as usize, lut.len() - 1);
+        assert_eq!(codes[4], 0);
+        assert_eq!(codes[5] as usize, lut.len() - 1);
+    }
+
+    #[test]
+    fn encode_then_dequantize_equals_fused() {
+        let mut rng = Rng::new(9);
+        let x = heavy_tail(&mut rng, 4096);
+        let lut = GridLut::from_format(Format::Flint, 4, 0.75);
+        let mut codes = vec![0u8; x.len()];
+        lut.encode_batch(&x, &mut codes);
+        let mut via_codes = vec![0.0f32; x.len()];
+        lut.dequantize_batch(&codes, &mut via_codes);
+        let mut fused = vec![0.0f32; x.len()];
+        lut.quantize_batch(&x, &mut fused);
+        assert_eq!(via_codes, fused);
+    }
+
+    #[test]
+    fn quantize_is_idempotent() {
+        let mut rng = Rng::new(3);
+        let x = heavy_tail(&mut rng, 512);
+        let lut = GridLut::from_format(Format::DyBit, 4, 0.37);
+        let mut q1 = vec![0.0f32; x.len()];
+        lut.quantize_batch(&x, &mut q1);
+        let mut q2 = vec![0.0f32; x.len()];
+        lut.quantize_batch(&q1, &mut q2);
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn encode_is_monotone_in_value() {
+        let lut = GridLut::from_format(Format::AdaptivFloat, 5, 1.3);
+        let mut prev = 0u8;
+        let mut v = -40.0f32;
+        while v < 40.0 {
+            let c = lut.encode(v);
+            assert!(c >= prev, "v={v}: code {c} < {prev}");
+            prev = c;
+            v += 0.01;
+        }
+        assert_eq!(prev as usize, lut.len() - 1);
+    }
+
+    #[test]
+    fn cache_shares_instances() {
+        let a = GridLut::from_format(Format::Int, 4, 0.125);
+        let b = GridLut::from_format(Format::Int, 4, 0.125);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = GridLut::from_format(Format::Int, 4, 0.25);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn tiny_grid_works() {
+        let lut = GridLut::new(&[-1.0, 0.0, 1.0], 2.0);
+        assert_eq!(lut.len(), 3);
+        let x = vec![-5.0f32, -0.9, 0.9, 5.0, 0.0];
+        let mut out = vec![0.0f32; x.len()];
+        lut.quantize_batch(&x, &mut out);
+        assert_eq!(out, vec![-2.0, 0.0, 0.0, 2.0, 0.0]);
+        assert_eq!(lut.value(200), 2.0); // out-of-range code clamps
+    }
+}

@@ -6,9 +6,12 @@
 pub mod adaptivfloat;
 pub mod dybit;
 pub mod flint;
+pub mod gridlut;
 pub mod intq;
 pub mod posit;
 pub mod quantizer;
+
+pub use gridlut::GridLut;
 
 /// The LUT interchange width shared with the HLO artifacts (aot.py).
 pub const LUT_SIZE: usize = 256;
@@ -71,13 +74,17 @@ impl Format {
 
     /// Fixed-size ascending LUT (edge-padded) — the runtime unit fed to the
     /// HLO fake-quant inputs; mirrors formats.padded_lut.
+    ///
+    /// Served from the shared [`GridLut`] cache so repeated qcfg builds
+    /// (one per layer per batch of config tensors) reuse the same tables
+    /// as the quantizer and the search engine.
     pub fn padded_lut(&self, bits: u32) -> Vec<f32> {
-        let g = self.grid(bits);
-        assert!(g.len() <= LUT_SIZE);
-        let mut lut: Vec<f32> = g.iter().map(|&v| v as f32).collect();
-        let last = *lut.last().expect("non-empty grid");
-        lut.resize(LUT_SIZE, last);
-        lut
+        let lut = GridLut::from_format(*self, bits, 1.0);
+        assert!(lut.len() <= LUT_SIZE);
+        let mut out = lut.values().to_vec();
+        let last = *out.last().expect("non-empty grid");
+        out.resize(LUT_SIZE, last);
+        out
     }
 }
 

@@ -5,10 +5,28 @@
 //! The candidate ladder (powers of two under the max-abs scale × fine
 //! multipliers) mirrors `python/compile/formats.py::calibrate_scale` so the
 //! two sides pick identical scales on identical data.
+//!
+//! Two projection paths exist (DESIGN.md §5):
+//! * [`quantize_to_grid`] / [`calibrate_scale`] — the per-element reference
+//!   (midpoints rebuilt per call, binary search per element), kept as the
+//!   correctness oracle and bench baseline;
+//! * [`GridLut`](super::GridLut)-backed [`fake_quant`] /
+//!   [`calibrate_scale_lut`] — the batched production path, bit-exact with
+//!   the reference; `benches/perf_hotpath.rs` measures the two against
+//!   each other (acceptance floor 2×; before/after in EXPERIMENTS.md
+//!   §Perf).
 
+use super::gridlut::GridLut;
 use super::Format;
 
 /// Nearest-value projection of `x` onto `scale * grid` (grid ascending).
+///
+/// Per-element reference implementation: rebuilds the midpoint table every
+/// call and binary-searches per element.  Kept as the correctness oracle
+/// and the bench baseline; the production path is the batched
+/// [`GridLut`] (`quantize_batch`), which is bit-exact with this function
+/// and benchmarked against it in `benches/perf_hotpath.rs` (acceptance
+/// floor 2×; measured before/after in EXPERIMENTS.md §Perf).
 pub fn quantize_to_grid(x: &[f32], grid: &[f64], scale: f64, out: &mut [f32]) {
     debug_assert_eq!(x.len(), out.len());
     // midpoints once per call; binary search per element
@@ -35,16 +53,30 @@ pub fn upper_bound(sorted: &[f64], x: f64) -> usize {
     lo
 }
 
-/// Paper Eqn. 2: sqrt(mean(((x - x̂)/σ)²)) with σ = std(x).
-pub fn rmse(x: &[f32], xq: &[f32]) -> f64 {
+/// σ = std(x) with the σ=1 fallback for constant/empty tensors (the
+/// normalizer of Eqn. 2).  Hoisted out of [`rmse`] so the calibration
+/// ladder computes it once instead of once per candidate scale.
+pub fn sigma_of(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 1.0;
+    }
+    let n = x.len() as f64;
+    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    if var > 0.0 {
+        var.sqrt()
+    } else {
+        1.0
+    }
+}
+
+/// Eqn. 2 with a precomputed normalizer (see [`sigma_of`]).
+pub fn rmse_with_sigma(x: &[f32], xq: &[f32], sigma: f64) -> f64 {
     debug_assert_eq!(x.len(), xq.len());
     if x.is_empty() {
         return 0.0;
     }
     let n = x.len() as f64;
-    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n;
-    let var = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
-    let sigma = if var > 0.0 { var.sqrt() } else { 1.0 };
     let se = x
         .iter()
         .zip(xq.iter())
@@ -52,6 +84,11 @@ pub fn rmse(x: &[f32], xq: &[f32]) -> f64 {
         .sum::<f64>()
         / n;
     se.sqrt()
+}
+
+/// Paper Eqn. 2: sqrt(mean(((x - x̂)/σ)²)) with σ = std(x).
+pub fn rmse(x: &[f32], xq: &[f32]) -> f64 {
+    rmse_with_sigma(x, xq, sigma_of(x))
 }
 
 /// Max-abs scale: maps the tensor's max magnitude to the grid max.
@@ -65,29 +102,90 @@ pub fn maxabs_scale(x: &[f32], grid: &[f64]) -> f64 {
     }
 }
 
-/// RMSE-optimal scale search (bit-exact mirror of the python ladder).
-///
-/// Scans power-of-two multiples of the max-abs scale in BOTH directions:
-/// tapered grids like DyBit often prefer scales *above* max-abs, trading a
-/// coarser far tail for a finer dense region near zero.
-pub fn calibrate_scale(x: &[f32], grid: &[f64]) -> f64 {
-    let base = maxabs_scale(x, grid);
-    if base == 0.0 {
-        return 1.0;
-    }
-    let mut buf = vec![0.0f32; x.len()];
+/// The single 54-candidate ladder both calibration paths run (bit-exact
+/// mirror of the python ladder): power-of-two multiples of `base` in BOTH
+/// directions × {1, 0.75, 0.5} fine multipliers, keeping the
+/// RMSE-minimizing scale.  Parameterizing over the projection keeps the
+/// candidate set and tie rule in exactly one place, so the reference and
+/// batched paths cannot drift apart.
+fn scale_ladder<F>(x: &[f32], base: f64, sigma: f64, out: &mut [f32],
+                   mut project: F) -> f64
+where
+    F: FnMut(f64, &[f32], &mut [f32]),
+{
+    // σ depends only on x: callers compute it once, not once per candidate
     let mut best = (base, f64::INFINITY);
     for j in -6i32..12 {
         for mult in [1.0f64, 0.75, 0.5] {
             let s = base * mult * 2f64.powi(-j);
-            quantize_to_grid(x, grid, s, &mut buf);
-            let e = rmse(x, &buf);
+            project(s, x, &mut *out);
+            let e = rmse_with_sigma(x, out, sigma);
             if e < best.1 {
                 best = (s, e);
             }
         }
     }
     best.0
+}
+
+/// RMSE-optimal scale search (bit-exact mirror of the python ladder).
+///
+/// Scans power-of-two multiples of the max-abs scale in BOTH directions:
+/// tapered grids like DyBit often prefer scales *above* max-abs, trading a
+/// coarser far tail for a finer dense region near zero.
+///
+/// Per-element reference path over a raw grid; prefer
+/// [`calibrate_scale_lut`] when the `(format, bits)` pair is known — it
+/// selects the identical scale through the batched tables.
+pub fn calibrate_scale(x: &[f32], grid: &[f64]) -> f64 {
+    let base = maxabs_scale(x, grid);
+    if base == 0.0 {
+        return 1.0;
+    }
+    let mut buf = vec![0.0f32; x.len()];
+    scale_ladder(x, base, sigma_of(x), &mut buf,
+                 |s, xs, out| quantize_to_grid(xs, grid, s, out))
+}
+
+/// Batched [`calibrate_scale`]: the same ladder (the private
+/// `scale_ladder` is shared), with each candidate projected through
+/// [`GridLut`] tables instead of a fresh midpoint build + per-element
+/// binary search.
+///
+/// Candidate tables are built *locally* (not via the global cache):
+/// ladder scales are data-dependent and single-use, so caching them would
+/// only evict the genuinely shared entries.  Because
+/// `GridLut::quantize_batch` is bit-exact with [`quantize_to_grid`],
+/// every candidate's RMSE — and therefore the chosen scale — is identical
+/// to the reference ladder (asserted in the tests below).
+pub fn calibrate_scale_lut(x: &[f32], fmt: Format, bits: u32) -> f64 {
+    let mut buf = Vec::new();
+    calibrate_scale_lut_into(x, fmt, bits, &mut buf)
+}
+
+/// Allocation-free [`calibrate_scale_lut`]: the caller supplies the
+/// projection buffer (grown as needed, never shrunk), so hot loops like
+/// the search engine's RMSE oracle can reuse one buffer across queries.
+pub fn calibrate_scale_lut_into(x: &[f32], fmt: Format, bits: u32,
+                                buf: &mut Vec<f32>) -> f64 {
+    calibrate_lut_with_sigma(x, fmt, bits, sigma_of(x), buf)
+}
+
+/// Ladder core with the σ normalizer supplied by the caller (so pipelines
+/// that also need σ afterwards — [`quant_rmse_into`] — compute it once).
+fn calibrate_lut_with_sigma(x: &[f32], fmt: Format, bits: u32, sigma: f64,
+                            buf: &mut Vec<f32>) -> f64 {
+    let grid = fmt.grid(bits);
+    let base = maxabs_scale(x, &grid);
+    if base == 0.0 {
+        return 1.0;
+    }
+    if buf.len() < x.len() {
+        buf.resize(x.len(), 0.0);
+    }
+    scale_ladder(x, base, sigma, &mut buf[..x.len()], |s, xs, out| {
+        GridLut::new(&grid, s).quantize_batch(xs, out)
+    })
 }
 
 /// Result of quantizing one tensor.
@@ -98,19 +196,40 @@ pub struct QuantResult {
 }
 
 /// Fake-quantize in place-ish: returns quantized copy + (scale, rmse).
+///
+/// Runs on the batched [`GridLut`] path (calibration ladder included);
+/// output is bit-exact with the per-element reference.
 pub fn fake_quant(x: &[f32], fmt: Format, bits: u32,
                   scale: Option<f64>) -> (Vec<f32>, QuantResult) {
-    let grid = fmt.grid(bits);
-    let s = scale.unwrap_or_else(|| calibrate_scale(x, &grid));
+    let s = scale.unwrap_or_else(|| calibrate_scale_lut(x, fmt, bits));
+    let lut = GridLut::from_format(fmt, bits, s);
     let mut out = vec![0.0f32; x.len()];
-    quantize_to_grid(x, &grid, s, &mut out);
+    lut.quantize_batch(x, &mut out);
     let e = rmse(x, &out);
     (out, QuantResult { scale: s, rmse: e })
 }
 
 /// Per-layer RMSE of a tensor at (fmt, bits) without keeping the output.
 pub fn quant_rmse(x: &[f32], fmt: Format, bits: u32) -> f64 {
-    fake_quant(x, fmt, bits, None).1.rmse
+    quant_rmse_into(x, fmt, bits, &mut Vec::new())
+}
+
+/// Allocation-free [`quant_rmse`]: calibrate → project (through the
+/// settled-scale cached table) → Eqn. 2, with σ computed exactly once
+/// and every projection written into the caller's buffer.  This is the
+/// single calibrate-project-score pipeline; the search engine's ranking
+/// oracle calls it rather than reimplementing the chain.
+pub fn quant_rmse_into(x: &[f32], fmt: Format, bits: u32,
+                       buf: &mut Vec<f32>) -> f64 {
+    let sigma = sigma_of(x);
+    let s = calibrate_lut_with_sigma(x, fmt, bits, sigma, buf);
+    let lut = GridLut::from_format(fmt, bits, s);
+    if buf.len() < x.len() {
+        buf.resize(x.len(), 0.0);
+    }
+    let out = &mut buf[..x.len()];
+    lut.quantize_batch(x, out);
+    rmse_with_sigma(x, out, sigma)
 }
 
 #[cfg(test)]
@@ -201,6 +320,37 @@ mod tests {
                 ((qi as f64 - xi as f64).abs() - best) < 1e-6
             })
         });
+    }
+
+    #[test]
+    fn lut_ladder_picks_identical_scale() {
+        let mut rng = Rng::new(77);
+        let x = rng.normal_vec(1200);
+        for fmt in Format::ALL {
+            for bits in [3u32, 4, 8] {
+                if !fmt.supports(bits) {
+                    continue;
+                }
+                let grid = fmt.grid(bits);
+                let s_ref = calibrate_scale(&x, &grid);
+                let s_lut = calibrate_scale_lut(&x, fmt, bits);
+                assert_eq!(s_ref, s_lut, "{fmt:?} bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn fake_quant_matches_reference_path() {
+        let mut rng = Rng::new(123);
+        let x = rng.normal_vec(2000);
+        for fmt in [Format::DyBit, Format::Int, Format::Posit] {
+            let grid = fmt.grid(4);
+            let (q, res) = fake_quant(&x, fmt, 4, None);
+            let mut want = vec![0.0f32; x.len()];
+            quantize_to_grid(&x, &grid, res.scale, &mut want);
+            assert_eq!(q, want, "{fmt:?}");
+            assert_eq!(res.scale, calibrate_scale(&x, &grid), "{fmt:?}");
+        }
     }
 
     #[test]

@@ -17,8 +17,14 @@
 //! * [`models`] — per-model layer descriptors for the simulator.
 //! * [`tensor`], [`util`] — substrates (tensors, IO, JSON, RNG, stats…).
 //!
+//! The quantization hot path shared by [`formats`], [`qat`] and [`search`]
+//! is the batched, cached [`formats::GridLut`] (see EXPERIMENTS.md §Perf
+//! for the before/after against the per-element baseline).
+//!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for measured
 //! reproductions of every table/figure in the paper.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod coordinator;
 pub mod formats;

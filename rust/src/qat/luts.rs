@@ -95,6 +95,12 @@ impl QuantConfig {
 
     /// Calibrate per-layer activation scales from fwd_acts taps
     /// (RMSE-optimal search on each layer's sample, Fig. 2 adaptation).
+    ///
+    /// Runs the batched ladder (`calibrate_scale_lut`): every candidate
+    /// scale is projected through locally-built `GridLut` tables — O(1)
+    /// per element instead of a per-element binary search, without
+    /// touching the shared cache (ladder scales are data-dependent and
+    /// single-use).
     pub fn calibrate(&mut self, taps: &Tensor) -> Result<()> {
         ensure!(taps.rank() == 2, "taps must be [L, S]");
         ensure!(taps.shape[0] == self.layers.len(), "taps rows != layers");
@@ -102,8 +108,8 @@ impl QuantConfig {
             if !lq.a_en {
                 continue;
             }
-            let grid = lq.afmt.grid(lq.abits);
-            self.ascales[i] = quantizer::calibrate_scale(taps.row(i), &grid) as f32;
+            self.ascales[i] =
+                quantizer::calibrate_scale_lut(taps.row(i), lq.afmt, lq.abits) as f32;
         }
         Ok(())
     }

@@ -19,6 +19,9 @@ pub struct EngineMetrics<'a> {
     acts: Vec<Vec<f32>>,
     fmt: Format,
     rmse_cache: HashMap<(usize, u32, u32), f64>,
+    /// Reused projection buffer for `quant_rmse_into` (no per-query
+    /// allocation on the search hot path).
+    scratch: Vec<f32>,
 }
 
 /// Strided ≤2048-element subsample used for the ranking RMSE (§Perf).
@@ -42,6 +45,7 @@ impl<'a> EngineMetrics<'a> {
             acts: acts.iter().map(|a| subsample(a)).collect(),
             fmt,
             rmse_cache: HashMap::new(),
+            scratch: Vec::new(),
         }
     }
 }
@@ -61,14 +65,18 @@ impl Metrics for EngineMetrics<'_> {
     /// §Perf: the ranking metric is computed on a strided ≤2048-element
     /// subsample — Eqn. 2 is a mean, so a 2k sample estimates it within
     /// ~2% (σ/√n), while the full-tensor calibrate ladder dominated the
-    /// search wall time (see EXPERIMENTS.md §Perf, before/after).
+    /// search wall time.  Scoring runs through the quantizer's single
+    /// batched calibrate-project-score pipeline (`quant_rmse_into`) with
+    /// a reused scratch buffer (see EXPERIMENTS.md §Perf, before/after).
     fn rmse(&mut self, i: usize, pw: Prec, pa: Prec) -> f64 {
         let key = (i, pw.bits(), pa.bits());
         if let Some(&e) = self.rmse_cache.get(&key) {
             return e;
         }
-        let ew = quantizer::quant_rmse(&self.weights[i], self.fmt, pw.bits());
-        let ea = quantizer::quant_rmse(&self.acts[i], self.fmt, pa.bits());
+        let ew = quantizer::quant_rmse_into(&self.weights[i], self.fmt, pw.bits(),
+                                            &mut self.scratch);
+        let ea = quantizer::quant_rmse_into(&self.acts[i], self.fmt, pa.bits(),
+                                            &mut self.scratch);
         let e = ew + ea;
         self.rmse_cache.insert(key, e);
         e
@@ -123,6 +131,26 @@ mod tests {
                            Strategy::RmseConstrained { beta: 4.0 }, 2);
         assert!(r.rmse_ratio <= 4.0 + 1e-9);
         assert!(r.speedup > 1.0); // some degrade always fits a 4x budget
+    }
+
+    #[test]
+    fn batched_rmse_matches_per_element_reference_chain() {
+        // true oracle: the per-element baseline ladder + projection, NOT
+        // quant_rmse (which itself runs on the batched path)
+        let mut rng = Rng::new(17);
+        let x = rng.normal_vec(1024);
+        let mut scratch = Vec::new();
+        for fmt in [Format::DyBit, Format::Int, Format::Flint] {
+            for bits in [4u32, 8] {
+                let got = quantizer::quant_rmse_into(&x, fmt, bits, &mut scratch);
+                let grid = fmt.grid(bits);
+                let s = quantizer::calibrate_scale(&x, &grid);
+                let mut buf = vec![0.0f32; x.len()];
+                quantizer::quantize_to_grid(&x, &grid, s, &mut buf);
+                let want = quantizer::rmse(&x, &buf);
+                assert_eq!(got, want, "{fmt:?} bits={bits}");
+            }
+        }
     }
 
     #[test]
