@@ -58,8 +58,8 @@ fn main() {
         }));
 
         for (strategy, kind, val) in points {
-            let mut sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
-            let r = run_search(&mut sim, &weights, &acts, Format::DyBit, strategy, 3);
+            let sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+            let r = run_search(&sim, &weights, &acts, Format::DyBit, strategy, 3);
             // QAT at the found assignment, then evaluate
             session.restore(&snap);
             let mut q = QuantConfig::from_assignment(Format::DyBit, &r.assignment);

@@ -111,8 +111,8 @@ fn sim_only_frontier() {
     let acts = weights.clone();
     let mut t = Table::new(&["alpha", "speedup", "rmse-ratio"]);
     for alpha in [2.0, 3.0, 4.0, 6.0, 8.0] {
-        let mut sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
-        let r = run_search(&mut sim, &weights, &acts, Format::DyBit,
+        let sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+        let r = run_search(&sim, &weights, &acts, Format::DyBit,
                            Strategy::SpeedupConstrained { alpha }, 3);
         t.row(vec![format!("{alpha}"), format!("{:.2}x", r.speedup),
                    format!("{:.2}", r.rmse_ratio)]);

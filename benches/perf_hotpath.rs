@@ -83,8 +83,8 @@ fn main() {
     let weights: Vec<Vec<f32>> = (0..nl).map(|_| rng.normal_vec(4096)).collect();
     let acts: Vec<Vec<f32>> = (0..nl).map(|_| rng.normal_vec(2048)).collect();
     let s = bench.run(|| {
-        let mut sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
-        std::hint::black_box(run_search(&mut sim, &weights, &acts, Format::DyBit,
+        let sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+        std::hint::black_box(run_search(&sim, &weights, &acts, Format::DyBit,
                                         Strategy::SpeedupConstrained { alpha: 4.0 }, 3));
     });
     t.row(vec!["Algorithm 1 search (alpha=4)".into(), "L3".into(), fmt_time(s.mean), "-".into()]);

@@ -1,0 +1,147 @@
+//! Bench: §Perf — Algorithm-1 search, old vs new (DESIGN.md §7).
+//!
+//! Old: the pre-refactor oracle-driven walk (`search::reference` over
+//! `EngineMetrics`) — two full-model re-walks after every degrade, metric
+//! oracles invoked inside sort comparators, per-query HashMap memoization.
+//! New: `run_search` — parallel dense cost-table fill + incremental O(1)
+//! accounting.  Both sides are also checked to return identical results
+//! (assignment, iterations, satisfied) before timing.
+//!
+//! Run: cargo bench --bench perf_search [-- --smoke]
+//! `--smoke` shrinks the layer stacks + iteration counts for CI smoke
+//! runs (`ci.sh --bench-smoke`); the 5× acceptance floor only applies to
+//! the full-size resnet-50-like stack.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::hint::black_box;
+
+use dybit::formats::Format;
+use dybit::models::{synthetic_mobilenet, synthetic_resnet};
+use dybit::search::{reference, run_search, EngineMetrics, SearchResult, Strategy};
+use dybit::sim::{HwConfig, Simulator};
+use dybit::util::argparse::Args;
+use dybit::util::json::Json;
+use dybit::util::rng::Rng;
+use dybit::util::stats::{fmt_time, Bench, Table};
+
+const FLOOR: f64 = 5.0;
+
+fn strat_name(s: Strategy) -> &'static str {
+    match s {
+        Strategy::SpeedupConstrained { .. } => "speedup(alpha=4)",
+        Strategy::RmseConstrained { .. } => "rmse(beta=4)",
+    }
+}
+
+fn same_outcome(a: &SearchResult, b: &SearchResult) -> bool {
+    a.assignment == b.assignment && a.iterations == b.iterations && a.satisfied == b.satisfied
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let (depth, blocks) = if smoke { (6, 2) } else { (50, 16) };
+    let bench = if smoke { Bench::new(1, 3) } else { Bench::new(2, 10) };
+
+    let mut t = Table::new(&[
+        "model", "layers", "strategy", "old (oracle walk)", "new (cost table)", "speedup",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut floor_ok = true;
+    let mut rng = Rng::new(42);
+
+    let stacks = [
+        (format!("synthetic_resnet({depth})"), synthetic_resnet(depth), true),
+        (format!("synthetic_mobilenet({blocks})"), synthetic_mobilenet(blocks), false),
+    ];
+    for (name, layers, gated) in &stacks {
+        let nl = layers.len();
+        let weights: Vec<Vec<f32>> = (0..nl).map(|_| rng.normal_vec(4096)).collect();
+        let acts: Vec<Vec<f32>> = (0..nl)
+            .map(|_| rng.normal_vec(2048).iter().map(|x| x.abs()).collect())
+            .collect();
+        for strategy in [
+            Strategy::SpeedupConstrained { alpha: 4.0 },
+            Strategy::RmseConstrained { beta: 4.0 },
+        ] {
+            // bit-identical outcomes first (the property tests' claim,
+            // re-checked here on the bench inputs), then wall time
+            let r_old = {
+                let mut sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+                let mut m = EngineMetrics::new(&mut sim, &weights, &acts, Format::DyBit);
+                reference::search(&mut m, strategy, 3)
+            };
+            let r_new = {
+                let sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+                run_search(&sim, &weights, &acts, Format::DyBit, strategy, 3)
+            };
+            assert!(
+                same_outcome(&r_old, &r_new),
+                "table-driven search diverged from reference on {name} {strategy:?}"
+            );
+
+            // each timed iteration is a cold deployment decision: fresh
+            // simulator + fresh metric caches on both sides
+            let s_old = bench.run(|| {
+                let mut sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+                let mut m = EngineMetrics::new(&mut sim, &weights, &acts, Format::DyBit);
+                black_box(reference::search(&mut m, strategy, 3));
+            });
+            let s_new = bench.run(|| {
+                let sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+                black_box(run_search(&sim, &weights, &acts, Format::DyBit, strategy, 3));
+            });
+            let sp = s_old.mean / s_new.mean;
+            if *gated && !smoke && sp < FLOOR {
+                floor_ok = false;
+            }
+            t.row(vec![
+                name.clone(),
+                format!("{nl}"),
+                strat_name(strategy).into(),
+                fmt_time(s_old.mean),
+                fmt_time(s_new.mean),
+                format!("{sp:.2}x"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("model", Json::str(name)),
+                ("layers", Json::num(nl as f64)),
+                ("strategy", Json::str(strat_name(strategy))),
+                ("old_s", Json::num(s_old.mean)),
+                ("new_s", Json::num(s_new.mean)),
+                ("speedup", Json::num(sp)),
+            ]));
+        }
+    }
+
+    t.print();
+    println!(
+        "\nAlgorithm-1 search speedup (precomputed cost table + incremental \
+         accounting vs per-degrade oracle walk); acceptance floor {FLOOR:.2}x \
+         on the resnet-50-like stack, both strategies: {}",
+        if smoke {
+            "n/a (smoke stacks)"
+        } else if floor_ok {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+    common::save_results(
+        "perf_search",
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke)),
+            ("floor", Json::num(FLOOR)),
+            ("floor_pass", Json::Bool(floor_ok)),
+            ("rows", Json::Arr(rows)),
+        ]),
+    )
+    .expect("save perf results");
+    println!("perf_search done");
+    if !smoke && !floor_ok {
+        // make the floor a real gate: scripted full-size runs must fail
+        std::process::exit(1);
+    }
+}

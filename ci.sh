@@ -1,15 +1,25 @@
 #!/usr/bin/env bash
 # Local CI gate for the DyBit workspace (see README.md).
 #
-#   ./ci.sh          # fmt + clippy + tier-1 (build + tests)
-#   ./ci.sh --fast   # tier-1 only
+#   ./ci.sh               # fmt + clippy + tier-1 (build + bench build + tests)
+#   ./ci.sh --fast        # tier-1 only
+#   ./ci.sh --bench-smoke # additionally run the perf_search bench on tiny
+#                         # layer stacks (quick end-to-end bench smoke)
 #
-# Tier-1 must stay green; fmt/clippy keep the tree reviewable.
+# Tier-1 must stay green; fmt/clippy keep the tree reviewable.  Benches
+# are built (not run) as part of tier-1 so bench bit-rot fails CI.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 fast=0
-[[ "${1:-}" == "--fast" ]] && fast=1
+bench_smoke=0
+for arg in "$@"; do
+  case "$arg" in
+    --fast) fast=1 ;;
+    --bench-smoke) bench_smoke=1 ;;
+    *) echo "ci.sh: unknown flag '$arg'" >&2; exit 2 ;;
+  esac
+done
 
 if [[ $fast -eq 0 ]]; then
   echo "==> cargo fmt --check"
@@ -19,8 +29,14 @@ if [[ $fast -eq 0 ]]; then
   cargo clippy --workspace --all-targets -- -D warnings
 fi
 
-echo "==> tier-1: cargo build --release && cargo test -q"
+echo "==> tier-1: cargo build --release && cargo build --benches --release && cargo test -q"
 cargo build --release
+cargo build --benches --release
 cargo test -q
+
+if [[ $bench_smoke -eq 1 ]]; then
+  echo "==> bench smoke: perf_search on tiny layer stacks"
+  cargo bench --bench perf_search -- --smoke
+fi
 
 echo "ci.sh: all green"

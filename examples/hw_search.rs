@@ -39,8 +39,8 @@ fn main() -> Result<()> {
         Strategy::SpeedupConstrained { alpha },
         Strategy::RmseConstrained { beta },
     ] {
-        let mut sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
-        let r = run_search(&mut sim, &weights, &acts, Format::DyBit, strategy, top_k);
+        let sim = Simulator::new(HwConfig::zcu102(), layers.clone(), 1);
+        let r = run_search(&sim, &weights, &acts, Format::DyBit, strategy, top_k);
         println!("\n== {strategy:?} on {model} ==");
         println!(
             "speedup {:.2}x | rmse ratio {:.3} | satisfied {} | {} iterations",

@@ -81,8 +81,8 @@ fn main() -> Result<()> {
         Strategy::SpeedupConstrained { alpha: 4.0 },
         Strategy::RmseConstrained { beta: 2.0 },
     ] {
-        let mut sim = Simulator::new(HwConfig::zcu102(), session.model.layers.clone(), 1);
-        let r = run_search(&mut sim, &weights, &acts, Format::DyBit, strategy, 3);
+        let sim = Simulator::new(HwConfig::zcu102(), session.model.layers.clone(), 1);
+        let r = run_search(&sim, &weights, &acts, Format::DyBit, strategy, 3);
         let mut q = QuantConfig::from_assignment(Format::DyBit, &r.assignment);
         session.restore(&fp_snapshot);
         session.calibrate(&mut exec, &mut q, 778)?;

@@ -45,14 +45,33 @@ pub fn assemble<T, R>(rx: &Receiver<Request<T, R>>, policy: Policy) -> Assembled
         Ok(r) => r,
         Err(_) => return Assembled::Closed,
     };
-    let deadline = first.enqueued.max(Instant::now() - policy.max_wait) + policy.max_wait;
+    // Window end: effectively (enqueued ⌄ (now − max_wait)) + max_wait.
+    // `Instant::now() - max_wait` can panic early in process life on
+    // platforms where Instant's epoch is process start (and everywhere
+    // for huge waits like Duration::MAX), and `+ max_wait` can overflow
+    // Instant's range — use checked arithmetic with safe fallbacks
+    // instead: an unrepresentable deadline means "no deadline"
+    // (regression tests below).
+    let anchor = match Instant::now().checked_sub(policy.max_wait) {
+        Some(floor) => first.enqueued.max(floor),
+        None => first.enqueued,
+    };
+    let deadline = anchor.checked_add(policy.max_wait);
     let mut batch = vec![first];
     while batch.len() < policy.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
+        let recvd = match deadline {
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    break;
+                }
+                rx.recv_timeout(d - now)
+            }
+            // no finite deadline: wait until the batch fills or the
+            // queue closes
+            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+        };
+        match recvd {
             Ok(r) => batch.push(r),
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
@@ -108,6 +127,34 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Request<u32, u32>>();
         drop(tx);
         assert!(matches!(assemble(&rx, Policy::default()), Assembled::Closed));
+    }
+
+    #[test]
+    fn huge_max_wait_does_not_panic() {
+        // regression: the old deadline math did `Instant::now() - max_wait`
+        // unchecked, which panics whenever max_wait exceeds the Instant
+        // epoch (early process life on some platforms; Duration::MAX
+        // everywhere) — and the `+ max_wait` side can overflow too.
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1).0).unwrap();
+        tx.send(req(2).0).unwrap();
+        let policy = Policy { max_batch: 2, max_wait: Duration::MAX };
+        match assemble(&rx, policy) {
+            Assembled::Batch(b) => assert_eq!(b.len(), 2),
+            _ => panic!("expected batch"),
+        }
+    }
+
+    #[test]
+    fn huge_max_wait_still_flushes_when_queue_closes() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(7).0).unwrap();
+        drop(tx); // queue closes with a partial batch pending
+        let policy = Policy { max_batch: 8, max_wait: Duration::MAX };
+        match assemble(&rx, policy) {
+            Assembled::Batch(b) => assert_eq!(b.len(), 1),
+            _ => panic!("expected batch"),
+        }
     }
 
     #[test]

@@ -141,9 +141,9 @@ fn cmd_search(args: &Args) -> Result<()> {
     let weights = session.layer_weights();
     let acts = session.layer_acts(&mut exec, 7)?;
     let layers = session.model.layers.clone();
-    let mut sim = Simulator::new(HwConfig::zcu102(), layers, 1);
+    let sim = Simulator::new(HwConfig::zcu102(), layers, 1);
 
-    let r = run_search(&mut sim, &weights, &acts, fmt, strategy, top_k);
+    let r = run_search(&sim, &weights, &acts, fmt, strategy, top_k);
     println!("strategy: {strategy:?} (top-k {top_k}), format {}", fmt.name());
     println!(
         "result: speedup {:.2}x, rmse ratio {:.3}, satisfied={}, {} iters",

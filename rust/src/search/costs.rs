@@ -1,0 +1,169 @@
+//! Dense precomputed cost table for the Algorithm-1 search (DESIGN.md §7).
+//!
+//! One latency and one RMSE cell per (layer, pw, pa) mode, layer-major,
+//! cell order [`Prec::ALL`] × [`Prec::ALL`].  The table is materialized
+//! exactly once per search — serially here through a [`Metrics`] oracle,
+//! or in parallel by [`build_cost_table`](super::engine::build_cost_table)
+//! — and [`search_table`](super::strategy::search_table) then runs on
+//! O(1) array reads instead of oracle calls: no per-query HashMap hash,
+//! no trait dispatch inside sort comparators, no full-model re-walk per
+//! degrade step.
+
+use crate::sim::Prec;
+
+use super::strategy::Metrics;
+
+/// Number of supported precisions (8/4/2; Sec. III-C3).
+pub const N_PREC: usize = Prec::ALL.len();
+
+/// Number of (pw, pa) modes per layer.
+pub const MODES: usize = N_PREC * N_PREC;
+
+/// Index of `p` within [`Prec::ALL`] (8 → 0, 4 → 1, 2 → 2).
+#[inline]
+fn pidx(p: Prec) -> usize {
+    match p {
+        Prec::B8 => 0,
+        Prec::B4 => 1,
+        Prec::B2 => 2,
+    }
+}
+
+// Compile-time tie between `pidx` and the `Prec::ALL` iteration order the
+// fills walk (`CostTable::from_metrics`, `sim::cell_row`): reordering ALL
+// without updating `pidx` fails the build instead of silently decoding
+// the wrong cells.
+const _: () = {
+    assert!(matches!(Prec::ALL[0], Prec::B8));
+    assert!(matches!(Prec::ALL[1], Prec::B4));
+    assert!(matches!(Prec::ALL[2], Prec::B2));
+};
+
+/// Dense `[layer][pw][pa]` latency + RMSE cost surface (DESIGN.md §7).
+pub struct CostTable {
+    n: usize,
+    /// Latency cells (simulator cycle totals — integer-valued f64s).
+    lat: Vec<f64>,
+    /// RMSE cells (Eqn. 2, weight half at pw + activation half at pa).
+    rmse: Vec<f64>,
+}
+
+impl CostTable {
+    /// Assemble from dense arrays (layer-major, [`Prec::ALL`]² cell
+    /// order — the order [`Simulator::fill_cell_table`] and the parallel
+    /// fill emit).
+    ///
+    /// [`Simulator::fill_cell_table`]: crate::sim::Simulator::fill_cell_table
+    pub fn from_parts(lat: Vec<f64>, rmse: Vec<f64>) -> CostTable {
+        assert_eq!(lat.len(), rmse.len());
+        assert_eq!(lat.len() % MODES, 0, "dense table must be n × {MODES}");
+        CostTable { n: lat.len() / MODES, lat, rmse }
+    }
+
+    /// Serial fill through a [`Metrics`] oracle: exactly [`MODES`]·n
+    /// oracle queries up front, after which the search never invokes the
+    /// oracle again (DESIGN.md §7).
+    pub fn from_metrics<M: Metrics>(m: &mut M) -> CostTable {
+        let n = m.n_layers();
+        let mut lat = Vec::with_capacity(n * MODES);
+        let mut rmse = Vec::with_capacity(n * MODES);
+        for i in 0..n {
+            for pw in Prec::ALL {
+                for pa in Prec::ALL {
+                    lat.push(m.latency(i, pw, pa));
+                    rmse.push(m.rmse(i, pw, pa));
+                }
+            }
+        }
+        CostTable { n, lat, rmse }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn cell(&self, i: usize, pw: Prec, pa: Prec) -> usize {
+        debug_assert!(i < self.n);
+        (i * N_PREC + pidx(pw)) * N_PREC + pidx(pa)
+    }
+
+    /// Latency (cycles) of layer `i` at (pw, pa).
+    #[inline]
+    pub fn lat(&self, i: usize, pw: Prec, pa: Prec) -> f64 {
+        self.lat[self.cell(i, pw, pa)]
+    }
+
+    /// RMSE_i(a, w): combined quantization error of layer `i` at (pw, pa).
+    #[inline]
+    pub fn rmse(&self, i: usize, pw: Prec, pa: Prec) -> f64 {
+        self.rmse[self.cell(i, pw, pa)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Oracle whose cells encode their own coordinates, so reads can be
+    /// checked against the query that produced them.
+    struct Coord {
+        n: usize,
+        calls: usize,
+    }
+
+    impl Metrics for Coord {
+        fn n_layers(&self) -> usize {
+            self.n
+        }
+        fn latency(&mut self, i: usize, pw: Prec, pa: Prec) -> f64 {
+            self.calls += 1;
+            (i * 10_000 + pw.bits() as usize * 100 + pa.bits() as usize) as f64
+        }
+        fn rmse(&mut self, i: usize, pw: Prec, pa: Prec) -> f64 {
+            self.calls += 1;
+            (i * 10_000 + pw.bits() as usize * 100 + pa.bits() as usize) as f64 / 7.0
+        }
+    }
+
+    #[test]
+    fn fill_reads_back_every_cell() {
+        let mut m = Coord { n: 4, calls: 0 };
+        let t = CostTable::from_metrics(&mut m);
+        assert_eq!(t.n_layers(), 4);
+        for i in 0..4 {
+            for pw in Prec::ALL {
+                for pa in Prec::ALL {
+                    let want = (i * 10_000 + pw.bits() as usize * 100 + pa.bits() as usize) as f64;
+                    assert_eq!(t.lat(i, pw, pa), want);
+                    assert_eq!(t.rmse(i, pw, pa), want / 7.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_costs_exactly_modes_by_n_oracle_queries() {
+        let mut m = Coord { n: 6, calls: 0 };
+        let _t = CostTable::from_metrics(&mut m);
+        // one latency + one rmse query per cell, nothing else
+        assert_eq!(m.calls, 2 * MODES * 6);
+    }
+
+    #[test]
+    fn from_parts_roundtrip() {
+        let lat: Vec<f64> = (0..2 * MODES).map(|x| x as f64).collect();
+        let rmse: Vec<f64> = (0..2 * MODES).map(|x| x as f64 * 0.5).collect();
+        let t = CostTable::from_parts(lat, rmse);
+        assert_eq!(t.n_layers(), 2);
+        assert_eq!(t.lat(0, Prec::B8, Prec::B8), 0.0);
+        assert_eq!(t.lat(1, Prec::B2, Prec::B2), (2 * MODES - 1) as f64);
+        assert_eq!(t.rmse(1, Prec::B2, Prec::B2), (2 * MODES - 1) as f64 * 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "dense table")]
+    fn from_parts_rejects_ragged_input() {
+        let _ = CostTable::from_parts(vec![0.0; MODES + 1], vec![0.0; MODES + 1]);
+    }
+}

@@ -2,13 +2,22 @@
 //! simulator (latency) and the quantizer (RMSE on real weight tensors +
 //! activation calibration taps) — the full Fig. 4 loop minus QAT, which
 //! the qat module applies to the found assignment afterwards.
+//!
+//! §Perf (DESIGN.md §7): [`run_search`] materializes the dense
+//! [`CostTable`] first — [`build_cost_table`] fills one row per layer in
+//! parallel on the thread pool — then runs the table-driven
+//! [`search_table`].  The oracle-driven [`EngineMetrics`] is kept as the
+//! backing of [`super::strategy::reference`] (equivalence tests + the
+//! "old" side of `benches/perf_search.rs`).
 
 use std::collections::HashMap;
 
 use crate::formats::{quantizer, Format};
-use crate::sim::{Prec, Simulator};
+use crate::sim::{cell_row, LayerShape, Prec, Simulator};
+use crate::util::threadpool::parallel_map;
 
-use super::strategy::{search, Metrics, SearchResult, Strategy};
+use super::costs::{self, CostTable};
+use super::strategy::{search_table, Metrics, SearchResult, Strategy};
 
 /// Metrics backed by real tensors + the simulator; memoizes both.
 pub struct EngineMetrics<'a> {
@@ -83,17 +92,86 @@ impl Metrics for EngineMetrics<'_> {
     }
 }
 
-/// One-call wrapper: run Algorithm 1 over real data.
-pub fn run_search(sim: &mut Simulator, weights: &[Vec<f32>],
+/// Fill the dense cost table, one parallel job per layer (DESIGN.md §7).
+///
+/// Latency cells run through the pure [`cell_row`] — bypassing the
+/// simulator's per-call memoization HashMap entirely — and RMSE cells
+/// are assembled from the 2·|Prec| per-tensor halves (`ew(pw) + ea(pa)`
+/// via [`quantizer::quant_rmse_into`]): 6 calibration-ladder runs per
+/// layer instead of up to 2 per *touched* (pw, pa) combo on the oracle
+/// path.  Every cell is bit-identical to what [`EngineMetrics`] returns
+/// for the same query, so the table-driven search matches the
+/// oracle-driven reference decision for decision.
+///
+/// A fill job that panics surfaces as an `Err` (see
+/// [`parallel_map`], which routes through the borrowed-pool
+/// `parallel_map_on`) instead of a follow-on panic; [`run_search`]
+/// converts that `Err` back into a panic with context, so callers who
+/// want to recover should call this function directly.
+pub fn build_cost_table(sim: &Simulator, weights: &[Vec<f32>], acts: &[Vec<f32>],
+                        fmt: Format) -> anyhow::Result<CostTable> {
+    assert_eq!(sim.layers.len(), weights.len());
+    assert_eq!(weights.len(), acts.len());
+    let n = weights.len();
+    let cfg = sim.cfg.clone();
+    let batch = sim.batch;
+    let jobs: Vec<(LayerShape, Vec<f32>, Vec<f32>)> = sim
+        .layers
+        .iter()
+        .zip(weights)
+        .zip(acts)
+        .map(|((l, w), a)| (l.clone(), subsample(w), subsample(a)))
+        .collect();
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n.max(1));
+    let rows = parallel_map(jobs, threads, move |(layer, w, a)| {
+        let mut scratch = Vec::new();
+        let ew: Vec<f64> = Prec::ALL
+            .iter()
+            .map(|p| quantizer::quant_rmse_into(&w, fmt, p.bits(), &mut scratch))
+            .collect();
+        let ea: Vec<f64> = Prec::ALL
+            .iter()
+            .map(|p| quantizer::quant_rmse_into(&a, fmt, p.bits(), &mut scratch))
+            .collect();
+        // cell_row is the single source of truth for the cell order;
+        // k decomposes as (wi, ai) in the same Prec::ALL × Prec::ALL walk
+        let cells = cell_row(&cfg, &layer, batch);
+        let lat: Vec<f64> = cells.iter().map(|c| c.total as f64).collect();
+        let rmse: Vec<f64> = (0..cells.len())
+            .map(|k| ew[k / costs::N_PREC] + ea[k % costs::N_PREC])
+            .collect();
+        (lat, rmse)
+    })?;
+    let mut lat = Vec::with_capacity(n * costs::MODES);
+    let mut rmse = Vec::with_capacity(n * costs::MODES);
+    for (l, r) in rows {
+        lat.extend(l);
+        rmse.extend(r);
+    }
+    Ok(CostTable::from_parts(lat, rmse))
+}
+
+/// One-call wrapper: run Algorithm 1 over real data — parallel cost-table
+/// fill + incremental table-driven search (DESIGN.md §7).
+///
+/// Panics (with the failed job's context) if a fill job panicked; use
+/// [`build_cost_table`] + [`search_table`] directly to handle that as
+/// an `Err` instead.
+pub fn run_search(sim: &Simulator, weights: &[Vec<f32>],
                   acts: &[Vec<f32>], fmt: Format, strategy: Strategy,
                   top_k: usize) -> SearchResult {
-    let mut metrics = EngineMetrics::new(sim, weights, acts, fmt);
-    search(&mut metrics, strategy, top_k)
+    let table = build_cost_table(sim, weights, acts, fmt)
+        .expect("cost-table fill failed");
+    search_table(&table, strategy, top_k)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::search::strategy::reference;
     use crate::sim::{HwConfig, LayerShape};
     use crate::util::rng::Rng;
 
@@ -115,7 +193,7 @@ mod tests {
     #[test]
     fn speedup_search_on_real_metrics() {
         let (mut sim, w, a) = setup();
-        let r = run_search(&mut sim, &w, &a, Format::DyBit,
+        let r = run_search(&sim, &w, &a, Format::DyBit,
                            Strategy::SpeedupConstrained { alpha: 2.0 }, 2);
         assert!(r.satisfied, "{r:?}");
         assert!(r.speedup >= 2.0);
@@ -126,8 +204,8 @@ mod tests {
 
     #[test]
     fn rmse_search_keeps_budget() {
-        let (mut sim, w, a) = setup();
-        let r = run_search(&mut sim, &w, &a, Format::DyBit,
+        let (sim, w, a) = setup();
+        let r = run_search(&sim, &w, &a, Format::DyBit,
                            Strategy::RmseConstrained { beta: 4.0 }, 2);
         assert!(r.rmse_ratio <= 4.0 + 1e-9);
         assert!(r.speedup > 1.0); // some degrade always fits a 4x budget
@@ -161,5 +239,50 @@ mod tests {
         let e2 = m.rmse(0, Prec::B4, Prec::B4);
         assert_eq!(e1, e2);
         assert_eq!(m.rmse_cache.len(), 1);
+    }
+
+    #[test]
+    fn cost_table_cells_are_bit_identical_to_engine_metrics() {
+        let (mut sim, w, a) = setup();
+        let table = build_cost_table(&sim, &w, &a, Format::DyBit).unwrap();
+        let mut m = EngineMetrics::new(&mut sim, &w, &a, Format::DyBit);
+        assert_eq!(table.n_layers(), 3);
+        for i in 0..3 {
+            for pw in Prec::ALL {
+                for pa in Prec::ALL {
+                    assert_eq!(table.lat(i, pw, pa), m.latency(i, pw, pa),
+                               "lat {i} {pw:?} {pa:?}");
+                    assert_eq!(table.rmse(i, pw, pa), m.rmse(i, pw, pa),
+                               "rmse {i} {pw:?} {pa:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_table_search_matches_reference_on_real_metrics() {
+        use crate::util::proptest::check;
+        check(
+            "engine-search-equivalence",
+            12,
+            |r, _| {
+                let strategy = if r.below(2) == 0 {
+                    Strategy::SpeedupConstrained { alpha: 1.0 + 7.0 * r.uniform() }
+                } else {
+                    Strategy::RmseConstrained { beta: 1.0 + 15.0 * r.uniform() }
+                };
+                (strategy, 1 + r.below(3))
+            },
+            |&(strategy, top_k)| {
+                let (sim, w, a) = setup();
+                let r_new = run_search(&sim, &w, &a, Format::DyBit, strategy, top_k);
+                let (mut sim2, w2, a2) = setup();
+                let mut m = EngineMetrics::new(&mut sim2, &w2, &a2, Format::DyBit);
+                let r_old = reference::search(&mut m, strategy, top_k);
+                r_new.assignment == r_old.assignment
+                    && r_new.iterations == r_old.iterations
+                    && r_new.satisfied == r_old.satisfied
+            },
+        );
     }
 }

@@ -1,8 +1,11 @@
 //! Hardware-aware mixed-precision quantization framework (paper Fig. 4):
-//! Algorithm 1 over the cycle-accurate simulator + Eqn. 2 RMSE metrics.
+//! Algorithm 1 over a dense precomputed cost table (DESIGN.md §7) filled
+//! from the cycle-accurate simulator + Eqn. 2 RMSE metrics.
 
+pub mod costs;
 pub mod engine;
 pub mod strategy;
 
-pub use engine::{run_search, EngineMetrics};
-pub use strategy::{search, Metrics, SearchResult, Strategy};
+pub use costs::CostTable;
+pub use engine::{build_cost_table, run_search, EngineMetrics};
+pub use strategy::{reference, search, search_table, Metrics, SearchResult, Strategy};

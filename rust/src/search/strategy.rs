@@ -15,10 +15,21 @@
 //!   `Σrmse <= beta × Σrmse(8,8)`; a degrade that would break the budget
 //!   is rolled back and the layer is frozen.
 //!
-//! The search talks to the simulator + quantizer through the [`Metrics`]
-//! trait so unit tests can drive it with synthetic cost tables.
+//! §Perf (DESIGN.md §7): the search is table-driven.  [`search`] first
+//! materializes the whole cost surface as a [`CostTable`] (one latency
+//! and one RMSE cell per (layer, pw, pa) mode), and [`search_table`]
+//! then maintains *incremental running sums*: a degrade updates
+//! Σlat/Σrmse by the table delta in O(1) instead of re-walking all n
+//! layers, a rollback restores the saved sums (exactly the same delta
+//! removed), and the rank/re-rank sorts read table cells instead of
+//! invoking [`Metrics`] oracles inside comparators.  The pre-refactor
+//! oracle-driven implementation is preserved verbatim in [`reference`]
+//! as the equivalence oracle (property-tested below and in `engine.rs`)
+//! and as the "old" side of `benches/perf_search.rs`.
 
 use crate::sim::{Assignment, Prec};
+
+use super::costs::CostTable;
 
 /// Per-layer cost oracle: latency from the cycle-accurate simulator,
 /// RMSE (paper Eqn. 2, summed over the layer's weight + activation
@@ -54,20 +65,47 @@ pub struct SearchResult {
     pub satisfied: bool,
 }
 
-fn total_latency<M: Metrics>(m: &mut M, a: &Assignment) -> f64 {
-    (0..a.len()).map(|i| m.latency(i, a[i].0, a[i].1)).sum()
-}
-
-fn total_rmse<M: Metrics>(m: &mut M, a: &Assignment) -> f64 {
-    (0..a.len()).map(|i| m.rmse(i, a[i].0, a[i].1)).sum()
-}
-
-/// Run Algorithm 1.
+/// Run Algorithm 1 against a [`Metrics`] oracle.
+///
+/// Fills a [`CostTable`] up front — exactly |Prec|²·n oracle queries —
+/// and runs the table-driven [`search_table`].  Decision-for-decision
+/// the algorithm documented above; equivalence with the pre-refactor
+/// [`reference::search`] is property-tested in this module and in
+/// `engine.rs`.
 pub fn search<M: Metrics>(metrics: &mut M, strategy: Strategy, top_k: usize) -> SearchResult {
-    let n = metrics.n_layers();
+    search_table(&CostTable::from_metrics(metrics), strategy, top_k)
+}
+
+/// Run Algorithm 1 on a precomputed [`CostTable`] (DESIGN.md §7).
+///
+/// O(1) work per degrade step:
+///
+/// * the running Σlat/Σrmse start as layer-order folds over the table —
+///   bit-identical to the reference implementation's full walks — and
+///   each degrade applies the cell delta instead of re-walking all n
+///   layers;
+/// * an over-budget degrade in RMSE mode restores the saved pre-degrade
+///   sums (subtracting exactly the delta it added, with no rounding
+///   drift) and freezes the layer;
+/// * the rank/re-rank sorts read table cells in their comparators.
+///
+/// Latency cells are integer-valued cycle counts whose partial sums stay
+/// far below 2^53, so Σlat is *exact* under incremental updates; Σrmse
+/// can differ from a full re-sum in the last ulps, which cannot flip a
+/// constraint comparison except on measure-zero knife-edge inputs.
+/// Equivalence (assignment, iterations, satisfied) with
+/// [`reference::search`] is property-tested below and in `engine.rs`.
+pub fn search_table(t: &CostTable, strategy: Strategy, top_k: usize) -> SearchResult {
+    let n = t.n_layers();
     let mut assign: Assignment = vec![(Prec::B8, Prec::B8); n];
-    let base_lat = total_latency(metrics, &assign);
-    let base_rmse = total_rmse(metrics, &assign).max(1e-12);
+    // layer-order folds: bit-identical to the reference's naive walks
+    let base_lat: f64 = (0..n).map(|i| t.lat(i, Prec::B8, Prec::B8)).sum();
+    let full_rmse: f64 = (0..n).map(|i| t.rmse(i, Prec::B8, Prec::B8)).sum();
+    let base_rmse = full_rmse.max(1e-12);
+    // incremental running sums (DESIGN.md §7) — the only totals the
+    // search ever consults; never re-walked after this point
+    let mut sum_lat = base_lat;
+    let mut sum_rmse = full_rmse;
     // layers whose degrade was rolled back under the RMSE budget
     let mut frozen = vec![false; n];
     let mut iterations = 0;
@@ -83,54 +121,54 @@ pub fn search<M: Metrics>(metrics: &mut M, strategy: Strategy, top_k: usize) -> 
 
     'outer: loop {
         iterations += 1;
-        let cur_lat = total_latency(metrics, &assign);
-        let cur_rmse = total_rmse(metrics, &assign);
         if let Strategy::SpeedupConstrained { .. } = strategy {
-            if met(cur_lat, cur_rmse) {
+            if met(sum_lat, sum_rmse) {
                 break;
             }
         }
 
         // candidates: layers that can still degrade (and aren't frozen)
-        let cand: Vec<usize> = (0..n)
-            .filter(|&i| !frozen[i]
-                && (assign[i].0.degrade().is_some() || assign[i].1.degrade().is_some()))
+        let mut ranked: Vec<usize> = (0..n)
+            .filter(|&i| {
+                !frozen[i]
+                    && (assign[i].0.degrade().is_some() || assign[i].1.degrade().is_some())
+            })
             .collect();
-        if cand.is_empty() {
+        if ranked.is_empty() {
             break;
         }
 
         // ---- rank: primary metric, then secondary re-rank (Alg. 1 l.5-11)
-        let mut ranked = cand.clone();
+        // — pure table reads in the comparators, no oracle calls
         match strategy {
             Strategy::SpeedupConstrained { .. } => {
                 // Lat_Rank: k largest by current latency
                 ranked.sort_by(|&a, &b| {
-                    let la = metrics.latency(a, assign[a].0, assign[a].1);
-                    let lb = metrics.latency(b, assign[b].0, assign[b].1);
+                    let la = t.lat(a, assign[a].0, assign[a].1);
+                    let lb = t.lat(b, assign[b].0, assign[b].1);
                     lb.partial_cmp(&la).unwrap()
                 });
                 ranked.truncate(top_k);
                 // RMSE_RERANK: ascending RMSE at the *next* level so the
                 // cheapest-error layers are degraded first
                 ranked.sort_by(|&a, &b| {
-                    let ra = next_level_rmse(metrics, &assign, a);
-                    let rb = next_level_rmse(metrics, &assign, b);
+                    let ra = next_level_rmse(t, &assign, a);
+                    let rb = next_level_rmse(t, &assign, b);
                     ra.partial_cmp(&rb).unwrap()
                 });
             }
             Strategy::RmseConstrained { .. } => {
                 // RMSE_RANK: k smallest by next-level RMSE
                 ranked.sort_by(|&a, &b| {
-                    let ra = next_level_rmse(metrics, &assign, a);
-                    let rb = next_level_rmse(metrics, &assign, b);
+                    let ra = next_level_rmse(t, &assign, a);
+                    let rb = next_level_rmse(t, &assign, b);
                     ra.partial_cmp(&rb).unwrap()
                 });
                 ranked.truncate(top_k);
                 // Lat_rerank: descending latency — degrade slowest first
                 ranked.sort_by(|&a, &b| {
-                    let la = metrics.latency(a, assign[a].0, assign[a].1);
-                    let lb = metrics.latency(b, assign[b].0, assign[b].1);
+                    let la = t.lat(a, assign[a].0, assign[a].1);
+                    let lb = t.lat(b, assign[b].0, assign[b].1);
                     lb.partial_cmp(&la).unwrap()
                 });
             }
@@ -142,25 +180,31 @@ pub fn search<M: Metrics>(metrics: &mut M, strategy: Strategy, top_k: usize) -> 
             for &l in &ranked {
                 let old = assign[l];
                 let newp = if pass == 0 {
-                    assign[l].0.degrade().map(|p| (p, assign[l].1))
+                    old.0.degrade().map(|p| (p, old.1))
                 } else {
-                    assign[l].1.degrade().map(|p| (assign[l].0, p))
+                    old.1.degrade().map(|p| (old.0, p))
                 };
                 let Some(newp) = newp else { continue };
+                // O(1) incremental accounting (DESIGN.md §7): apply the
+                // table delta; keep the pre-degrade sums so a rollback
+                // can subtract exactly the same delta.
+                let (prev_lat, prev_rmse) = (sum_lat, sum_rmse);
+                sum_lat += t.lat(l, newp.0, newp.1) - t.lat(l, old.0, old.1);
+                sum_rmse += t.rmse(l, newp.0, newp.1) - t.rmse(l, old.0, old.1);
                 assign[l] = newp;
                 progressed = true;
-                let lat = total_latency(metrics, &assign);
-                let rmse = total_rmse(metrics, &assign);
                 match strategy {
                     Strategy::SpeedupConstrained { .. } => {
-                        if met(lat, rmse) {
+                        if met(sum_lat, sum_rmse) {
                             break 'outer;
                         }
                     }
                     Strategy::RmseConstrained { .. } => {
-                        if met(lat, rmse) {
+                        if met(sum_lat, sum_rmse) {
                             // over budget: roll back and freeze this layer
                             assign[l] = old;
+                            sum_lat = prev_lat;
+                            sum_rmse = prev_rmse;
                             frozen[l] = true;
                         }
                     }
@@ -175,10 +219,8 @@ pub fn search<M: Metrics>(metrics: &mut M, strategy: Strategy, top_k: usize) -> 
         }
     }
 
-    let lat = total_latency(metrics, &assign);
-    let rmse = total_rmse(metrics, &assign);
-    let speedup = base_lat / lat;
-    let rmse_ratio = rmse / base_rmse;
+    let speedup = base_lat / sum_lat;
+    let rmse_ratio = sum_rmse / base_rmse;
     let satisfied = match strategy {
         Strategy::SpeedupConstrained { alpha } => speedup >= alpha,
         Strategy::RmseConstrained { beta } => rmse_ratio <= beta,
@@ -187,11 +229,163 @@ pub fn search<M: Metrics>(metrics: &mut M, strategy: Strategy, top_k: usize) -> 
 }
 
 /// RMSE of layer `l` if its weights were degraded one level (the ranking
-/// key used by both strategies).
-fn next_level_rmse<M: Metrics>(m: &mut M, assign: &Assignment, l: usize) -> f64 {
+/// key used by both strategies), read from the table.
+fn next_level_rmse(t: &CostTable, assign: &Assignment, l: usize) -> f64 {
     let (pw, pa) = assign[l];
     let pw2 = pw.degrade().unwrap_or(pw);
-    m.rmse(l, pw2, pa)
+    t.rmse(l, pw2, pa)
+}
+
+pub mod reference {
+    //! Pre-refactor, oracle-driven Algorithm 1 — preserved verbatim as
+    //! the equivalence oracle for the table-driven path (DESIGN.md §7).
+    //!
+    //! Per degrade step it pays two full-model oracle walks
+    //! ([`total_latency`] / [`total_rmse`]) and it invokes the
+    //! [`Metrics`] oracles inside its sort comparators — the
+    //! O(n²·levels·top_k) query profile the cost table removes.  Not
+    //! `#[cfg(test)]`-gated because `benches/perf_search.rs` times it as
+    //! the "old" side of the before/after comparison; the equivalence
+    //! property tests live in this file's test module and in
+    //! `engine.rs`.
+
+    use super::{Assignment, Metrics, Prec, SearchResult, Strategy};
+
+    /// Naive full-model latency walk: one oracle query per layer.
+    pub fn total_latency<M: Metrics>(m: &mut M, a: &Assignment) -> f64 {
+        (0..a.len()).map(|i| m.latency(i, a[i].0, a[i].1)).sum()
+    }
+
+    /// Naive full-model RMSE walk: one oracle query per layer.
+    pub fn total_rmse<M: Metrics>(m: &mut M, a: &Assignment) -> f64 {
+        (0..a.len()).map(|i| m.rmse(i, a[i].0, a[i].1)).sum()
+    }
+
+    /// Run Algorithm 1, re-walking all n layers after every degrade.
+    pub fn search<M: Metrics>(metrics: &mut M, strategy: Strategy, top_k: usize) -> SearchResult {
+        let n = metrics.n_layers();
+        let mut assign: Assignment = vec![(Prec::B8, Prec::B8); n];
+        let base_lat = total_latency(metrics, &assign);
+        let base_rmse = total_rmse(metrics, &assign).max(1e-12);
+        // layers whose degrade was rolled back under the RMSE budget
+        let mut frozen = vec![false; n];
+        let mut iterations = 0;
+
+        let met = |lat: f64, rmse: f64| -> bool {
+            match strategy {
+                Strategy::SpeedupConstrained { alpha } => base_lat / lat >= alpha,
+                Strategy::RmseConstrained { beta } => rmse > beta * base_rmse,
+            }
+        };
+
+        'outer: loop {
+            iterations += 1;
+            let cur_lat = total_latency(metrics, &assign);
+            let cur_rmse = total_rmse(metrics, &assign);
+            if let Strategy::SpeedupConstrained { .. } = strategy {
+                if met(cur_lat, cur_rmse) {
+                    break;
+                }
+            }
+
+            // candidates: layers that can still degrade (and aren't frozen)
+            let cand: Vec<usize> = (0..n)
+                .filter(|&i| {
+                    !frozen[i]
+                        && (assign[i].0.degrade().is_some() || assign[i].1.degrade().is_some())
+                })
+                .collect();
+            if cand.is_empty() {
+                break;
+            }
+
+            // ---- rank: primary metric, then secondary re-rank
+            let mut ranked = cand.clone();
+            match strategy {
+                Strategy::SpeedupConstrained { .. } => {
+                    ranked.sort_by(|&a, &b| {
+                        let la = metrics.latency(a, assign[a].0, assign[a].1);
+                        let lb = metrics.latency(b, assign[b].0, assign[b].1);
+                        lb.partial_cmp(&la).unwrap()
+                    });
+                    ranked.truncate(top_k);
+                    ranked.sort_by(|&a, &b| {
+                        let ra = next_level_rmse(metrics, &assign, a);
+                        let rb = next_level_rmse(metrics, &assign, b);
+                        ra.partial_cmp(&rb).unwrap()
+                    });
+                }
+                Strategy::RmseConstrained { .. } => {
+                    ranked.sort_by(|&a, &b| {
+                        let ra = next_level_rmse(metrics, &assign, a);
+                        let rb = next_level_rmse(metrics, &assign, b);
+                        ra.partial_cmp(&rb).unwrap()
+                    });
+                    ranked.truncate(top_k);
+                    ranked.sort_by(|&a, &b| {
+                        let la = metrics.latency(a, assign[a].0, assign[a].1);
+                        let lb = metrics.latency(b, assign[b].0, assign[b].1);
+                        lb.partial_cmp(&la).unwrap()
+                    });
+                }
+            }
+
+            // ---- DEGRADE_LEVEL over weights, then activations
+            let mut progressed = false;
+            for pass in 0..2 {
+                for &l in &ranked {
+                    let old = assign[l];
+                    let newp = if pass == 0 {
+                        assign[l].0.degrade().map(|p| (p, assign[l].1))
+                    } else {
+                        assign[l].1.degrade().map(|p| (assign[l].0, p))
+                    };
+                    let Some(newp) = newp else { continue };
+                    assign[l] = newp;
+                    progressed = true;
+                    let lat = total_latency(metrics, &assign);
+                    let rmse = total_rmse(metrics, &assign);
+                    match strategy {
+                        Strategy::SpeedupConstrained { .. } => {
+                            if met(lat, rmse) {
+                                break 'outer;
+                            }
+                        }
+                        Strategy::RmseConstrained { .. } => {
+                            if met(lat, rmse) {
+                                // over budget: roll back and freeze
+                                assign[l] = old;
+                                frozen[l] = true;
+                            }
+                        }
+                    }
+                }
+            }
+            if !progressed {
+                break;
+            }
+            if iterations > 64 * n {
+                break; // safety net; cannot trigger with monotone degrades
+            }
+        }
+
+        let lat = total_latency(metrics, &assign);
+        let rmse = total_rmse(metrics, &assign);
+        let speedup = base_lat / lat;
+        let rmse_ratio = rmse / base_rmse;
+        let satisfied = match strategy {
+            Strategy::SpeedupConstrained { alpha } => speedup >= alpha,
+            Strategy::RmseConstrained { beta } => rmse_ratio <= beta,
+        };
+        SearchResult { assignment: assign, speedup, rmse_ratio, iterations, satisfied }
+    }
+
+    /// RMSE of layer `l` if its weights were degraded one level.
+    fn next_level_rmse<M: Metrics>(m: &mut M, assign: &Assignment, l: usize) -> f64 {
+        let (pw, pa) = assign[l];
+        let pw2 = pw.degrade().unwrap_or(pw);
+        m.rmse(l, pw2, pa)
+    }
 }
 
 #[cfg(test)]
@@ -306,5 +500,99 @@ mod tests {
                 Strategy::SpeedupConstrained { alpha: alpha + 0.5 }, 2);
             r2.speedup >= r1.speedup - 1e-9
         });
+    }
+
+    // ---- table-driven vs reference equivalence ---------------------------
+
+    /// Dense random cost model driven directly by its own table (the
+    /// equivalence tests' randomized synthetic models).
+    #[derive(Clone, Debug)]
+    struct TableModel {
+        n: usize,
+        lat: Vec<f64>,
+        rmse: Vec<f64>,
+    }
+
+    impl TableModel {
+        fn cell(&self, i: usize, pw: Prec, pa: Prec) -> usize {
+            let pidx = |p: Prec| match p {
+                Prec::B8 => 0usize,
+                Prec::B4 => 1,
+                Prec::B2 => 2,
+            };
+            (i * 3 + pidx(pw)) * 3 + pidx(pa)
+        }
+    }
+
+    impl Metrics for TableModel {
+        fn n_layers(&self) -> usize {
+            self.n
+        }
+        fn latency(&mut self, i: usize, pw: Prec, pa: Prec) -> f64 {
+            self.lat[self.cell(i, pw, pa)]
+        }
+        fn rmse(&mut self, i: usize, pw: Prec, pa: Prec) -> f64 {
+            self.rmse[self.cell(i, pw, pa)]
+        }
+    }
+
+    fn same_outcome(a: &SearchResult, b: &SearchResult) -> bool {
+        a.assignment == b.assignment && a.iterations == b.iterations && a.satisfied == b.satisfied
+    }
+
+    #[test]
+    fn table_search_matches_reference_on_fake_model_grid() {
+        for top_k in [1, 2, 4] {
+            for strategy in [
+                Strategy::SpeedupConstrained { alpha: 1.05 },
+                Strategy::SpeedupConstrained { alpha: 2.0 },
+                Strategy::SpeedupConstrained { alpha: 100.0 },
+                Strategy::RmseConstrained { beta: 1.2 },
+                Strategy::RmseConstrained { beta: 4.0 },
+                Strategy::RmseConstrained { beta: 60.0 },
+            ] {
+                let r_new = search(&mut fake(), strategy, top_k);
+                let r_old = reference::search(&mut fake(), strategy, top_k);
+                assert!(
+                    same_outcome(&r_new, &r_old),
+                    "k={top_k} {strategy:?}:\n new {r_new:?}\n old {r_old:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_table_search_matches_reference_on_random_models() {
+        use crate::util::proptest::check;
+        check(
+            "table-vs-reference-search",
+            40,
+            |r, size| {
+                let n = 1 + r.below(2 + (size * 10.0) as usize);
+                let cells = n * 9;
+                // half the cases use dyadic (exactly representable, exactly
+                // summable) costs to probe knife-edge comparisons; the rest
+                // use arbitrary positive floats
+                let dyadic = r.below(2) == 0;
+                let mut draw = |lo: f64, hi: f64| {
+                    let v = lo + (hi - lo) * r.uniform();
+                    if dyadic { (v * 64.0).round() / 64.0 } else { v }
+                };
+                let lat: Vec<f64> = (0..cells).map(|_| draw(1.0, 1000.0)).collect();
+                let rmse: Vec<f64> = (0..cells).map(|_| draw(0.0, 10.0)).collect();
+                let strategy = if r.below(2) == 0 {
+                    Strategy::SpeedupConstrained { alpha: 1.0 + 7.0 * r.uniform() }
+                } else {
+                    Strategy::RmseConstrained { beta: 1.0 + 15.0 * r.uniform() }
+                };
+                let top_k = 1 + r.below(4);
+                (TableModel { n, lat, rmse }, strategy, top_k)
+            },
+            |(model, strategy, top_k)| {
+                let r_new = search(&mut model.clone(), *strategy, *top_k);
+                let r_old = reference::search(&mut model.clone(), *strategy, *top_k);
+                same_outcome(&r_new, &r_old)
+            },
+        );
     }
 }

@@ -13,5 +13,6 @@ pub mod systolic;
 pub use config::HwConfig;
 pub use layer::{LayerKind, LayerShape};
 pub use pe::Prec;
-pub use simulator::{baseline_assignment, Assignment, SimResult, Simulator};
+pub use simulator::{baseline_assignment, cell_cycles, cell_row, Assignment, SimResult,
+                    Simulator};
 pub use systolic::Cycles;

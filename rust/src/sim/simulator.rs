@@ -1,9 +1,11 @@
 //! Whole-model simulator: per-layer and end-to-end latency at a given
 //! layer-wise precision assignment (the simulator block of Fig. 4).
 //!
-//! Results are memoized per (layer, pw, pa) — the search engine re-queries
-//! the same cells thousands of times while degrading bitwidths, so this is
-//! the hot path the §Perf pass targets at L3.
+//! Results are memoized per (layer, pw, pa) for ad-hoc queries.  The
+//! search engine no longer re-queries cells while degrading bitwidths:
+//! it batch-fills the whole cost surface up front through the pure
+//! [`cell_cycles`] / [`Simulator::fill_cell_table`] API, which bypasses
+//! the per-call HashMap hash entirely (§Perf, DESIGN.md §7).
 
 use std::collections::HashMap;
 
@@ -48,26 +50,19 @@ impl Simulator {
         if let Some(c) = self.cache.get(&(idx, pw, pa)) {
             return *c;
         }
-        let l = &self.layers[idx];
-        let (count, (m, k, n)) = l.executed_gemms();
-        let m = m * self.batch;
-        let one = gemm_cycles(&self.cfg, m, k, n, pw, pa);
-        let c = if count == 1 {
-            one
-        } else {
-            // grouped conv: sequential sub-GEMMs, setup amortized once
-            let count = count as u64;
-            Cycles {
-                compute: one.compute * count,
-                dram: one.dram * count,
-                overhead: one.overhead,
-                total: (one.total - one.overhead) * count + one.overhead,
-                utilization: one.utilization,
-                bytes: one.bytes * count,
-            }
-        };
+        let c = cell_cycles(&self.cfg, &self.layers[idx], self.batch, pw, pa);
         self.cache.insert((idx, pw, pa), c);
         c
+    }
+
+    /// Batch cell-fill (DESIGN.md §7): the dense `layers × |Prec|²` cost
+    /// surface in layer-major, [`Prec::ALL`] × [`Prec::ALL`] cell order,
+    /// computed without touching the per-call memoization HashMap.
+    pub fn fill_cell_table(&self) -> Vec<Cycles> {
+        self.layers
+            .iter()
+            .flat_map(|l| cell_row(&self.cfg, l, self.batch))
+            .collect()
     }
 
     /// Full-model simulation under a layer-wise assignment.
@@ -102,6 +97,45 @@ impl Simulator {
     }
 }
 
+/// One layer's dense |Prec|² cost row in [`Prec::ALL`] × [`Prec::ALL`]
+/// cell order — the single source of truth for the cost-table cell
+/// layout (DESIGN.md §7): [`Simulator::fill_cell_table`] and the search
+/// engine's parallel per-layer fill both go through it.
+pub fn cell_row(cfg: &HwConfig, layer: &LayerShape, batch: usize) -> Vec<Cycles> {
+    let mut out = Vec::with_capacity(Prec::ALL.len() * Prec::ALL.len());
+    for pw in Prec::ALL {
+        for pa in Prec::ALL {
+            out.push(cell_cycles(cfg, layer, batch, pw, pa));
+        }
+    }
+    out
+}
+
+/// Pure per-cell cycle computation — [`Simulator::layer_cycles`] minus
+/// the memoization.  Takes no `&mut`, so the search's cost-table fill
+/// (DESIGN.md §7) can evaluate independent cells from parallel worker
+/// threads and skip the per-call HashMap hash entirely.
+pub fn cell_cycles(cfg: &HwConfig, layer: &LayerShape, batch: usize,
+                   pw: Prec, pa: Prec) -> Cycles {
+    let (count, (m, k, n)) = layer.executed_gemms();
+    let m = m * batch;
+    let one = gemm_cycles(cfg, m, k, n, pw, pa);
+    if count == 1 {
+        one
+    } else {
+        // grouped conv: sequential sub-GEMMs, setup amortized once
+        let count = count as u64;
+        Cycles {
+            compute: one.compute * count,
+            dram: one.dram * count,
+            overhead: one.overhead,
+            total: (one.total - one.overhead) * count + one.overhead,
+            utilization: one.utilization,
+            bytes: one.bytes * count,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +163,24 @@ mod tests {
         assert!(s > 1.5, "speedup {s}");
         let all2 = vec![(Prec::B2, Prec::B2); 3];
         assert!(sim.speedup(&all2) > s);
+    }
+
+    #[test]
+    fn batch_cell_fill_matches_memoized_path() {
+        let mut sim = Simulator::new(HwConfig::zcu102(), layers(), 1);
+        let table = sim.fill_cell_table();
+        assert_eq!(table.len(), 3 * Prec::ALL.len() * Prec::ALL.len());
+        let mut k = 0;
+        for i in 0..3 {
+            for pw in Prec::ALL {
+                for pa in Prec::ALL {
+                    let c = sim.layer_cycles(i, pw, pa);
+                    assert_eq!(c.total, table[k].total, "{i} {pw:?} {pa:?}");
+                    assert_eq!(c.bytes, table[k].bytes);
+                    k += 1;
+                }
+            }
+        }
     }
 
     #[test]

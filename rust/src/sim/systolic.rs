@@ -45,8 +45,8 @@ pub enum LoopOrder {
 pub fn gemm_cycles(cfg: &HwConfig, m: usize, k: usize, n: usize,
                    pw: Prec, pa: Prec) -> Cycles {
     let (rows_eff, cols_eff) = effective_array(cfg.array_n, cfg.base_bits, pw, pa);
-    let kt = div_ceil(k, rows_eff); // K tiles (array rows)
-    let nt = div_ceil(n, cols_eff); // N tiles (array cols)
+    let kt = k.div_ceil(rows_eff); // K tiles (array rows)
+    let nt = n.div_ceil(cols_eff); // N tiles (array cols)
 
     let mut best = Cycles { total: u64::MAX, ..Default::default() };
     for order in [LoopOrder::WeightStationary, LoopOrder::OutputStationary] {
@@ -87,15 +87,15 @@ fn schedule_cycles(cfg: &HwConfig, m: usize, k: usize, n: usize,
                    pw: Prec, pa: Prec, rows_eff: usize, cols_eff: usize,
                    kt: usize, nt: usize, tm: usize,
                    order: LoopOrder) -> Cycles {
-    let mt = div_ceil(m, tm);
+    let mt = m.div_ceil(tm);
 
     // --- compute: per (K,N,M) tile pass --------------------------------
     // load weight tile into the array (one row per cycle, cols parallel),
     // then stream tm activation rows; fill+drain = rows+cols pipeline.
     // Edge tiles occupy fewer rows/cols: use the average tile extent so a
     // K=9 depthwise channel does not pay for 16 weight-load cycles.
-    let row_ext = div_ceil(k, kt).min(rows_eff) as u64;
-    let col_ext = div_ceil(n, nt).min(cols_eff) as u64;
+    let row_ext = k.div_ceil(kt).min(rows_eff) as u64;
+    let col_ext = n.div_ceil(nt).min(cols_eff) as u64;
     let w_load = row_ext;
     let stream = tm as u64;
     let fill_drain = row_ext + col_ext;
@@ -144,10 +144,6 @@ fn schedule_cycles(cfg: &HwConfig, m: usize, k: usize, n: usize,
         utilization: (ideal_macs as f64 / slots as f64).min(1.0),
         bytes,
     }
-}
-
-pub fn div_ceil(a: usize, b: usize) -> usize {
-    a.div_ceil(b)
 }
 
 #[cfg(test)]

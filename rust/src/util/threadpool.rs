@@ -4,10 +4,20 @@
 //! engine use this std-thread pool instead (same architecture — bounded
 //! queue, worker loop — without async syntax).  On the 1-core CI box the
 //! pool degenerates gracefully to near-serial execution.
+//!
+//! [`parallel_map_on`] borrows a caller-owned pool — its main compute
+//! consumer is the search's cost-table fill (DESIGN.md §7) — and catches
+//! job panics with `catch_unwind`, so a panicking job surfaces as an
+//! `Err` naming the job instead of killing a worker and producing a
+//! follow-on "worker died" panic at collection time.
 
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
+
+use anyhow::{anyhow, Result};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -64,8 +74,33 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Map `f` over `items` in parallel, preserving order.
-pub fn parallel_map<T, R, F>(items: Vec<T>, nthreads: usize, f: F) -> Vec<R>
+/// Map `f` over `items` in parallel on a freshly spawned pool of
+/// `nthreads` workers, preserving order.  See [`parallel_map_on`] for
+/// the borrowed-pool variant and the panic contract.
+pub fn parallel_map<T, R, F>(items: Vec<T>, nthreads: usize, f: F) -> Result<Vec<R>>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let pool = ThreadPool::new(nthreads);
+    let out = parallel_map_on(&pool, items, f);
+    pool.join();
+    out
+}
+
+/// Map `f` over `items` in parallel on a borrowed [`ThreadPool`],
+/// preserving order.
+///
+/// Borrowing keeps pool ownership with the caller, so one pool can be
+/// reused across several maps (its workers already serve all of a
+/// map's jobs, e.g. the cost-table fill's per-layer jobs —
+/// DESIGN.md §7 — without per-job spawns).  A job
+/// that panics is caught with `catch_unwind` and reported as an `Err`
+/// naming the item index and panic payload — the worker survives and
+/// the remaining jobs still run, so one poisoned item cannot take down
+/// the pool or trigger a follow-on panic at collection time.
+pub fn parallel_map_on<T, R, F>(pool: &ThreadPool, items: Vec<T>, f: F) -> Result<Vec<R>>
 where
     T: Send + 'static,
     R: Send + 'static,
@@ -74,22 +109,44 @@ where
     let n = items.len();
     let f = Arc::new(f);
     let (tx, rx) = mpsc::channel();
-    let pool = ThreadPool::new(nthreads);
     for (i, item) in items.into_iter().enumerate() {
         let tx = tx.clone();
         let f = Arc::clone(&f);
         pool.execute(move || {
-            let r = f(item);
+            let r = catch_unwind(AssertUnwindSafe(|| f(item)));
             let _ = tx.send((i, r));
         });
     }
     drop(tx);
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut panics: Vec<String> = Vec::new();
     for (i, r) in rx {
-        out[i] = Some(r);
+        match r {
+            Ok(v) => out[i] = Some(v),
+            Err(payload) => {
+                panics.push(format!("job {i} panicked: {}", payload_msg(&*payload)));
+            }
+        }
     }
-    pool.join();
-    out.into_iter().map(|o| o.expect("worker died")).collect()
+    if !panics.is_empty() {
+        return Err(anyhow!("parallel_map: {}", panics.join("; ")));
+    }
+    out.into_iter()
+        .enumerate()
+        .map(|(i, o)| o.ok_or_else(|| anyhow!("parallel_map: job {i} result missing")))
+        .collect()
+}
+
+/// Best-effort human-readable panic payload (`panic!` with a literal or
+/// with format args; anything else is opaque).
+fn payload_msg(p: &(dyn Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "<non-string payload>"
+    }
 }
 
 #[cfg(test)]
@@ -113,8 +170,36 @@ mod tests {
 
     #[test]
     fn parallel_map_preserves_order() {
-        let out = parallel_map((0..50).collect::<Vec<_>>(), 4, |x| x * 2);
+        let out = parallel_map((0..50).collect::<Vec<_>>(), 4, |x| x * 2).unwrap();
         assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn borrowed_pool_is_reusable_across_maps() {
+        let pool = ThreadPool::new(3);
+        let a = parallel_map_on(&pool, (0..20).collect::<Vec<_>>(), |x| x + 1).unwrap();
+        let b = parallel_map_on(&pool, (0..20).collect::<Vec<_>>(), |x| x * 3).unwrap();
+        assert_eq!(a, (1..21).collect::<Vec<_>>());
+        assert_eq!(b, (0..20).map(|x| x * 3).collect::<Vec<_>>());
+        pool.join();
+    }
+
+    #[test]
+    fn panicked_job_surfaces_as_error_not_panic() {
+        let pool = ThreadPool::new(2);
+        let err = parallel_map_on(&pool, vec![1, 2, 3, 4], |x| {
+            if x == 3 {
+                panic!("boom on {x}");
+            }
+            x
+        })
+        .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("job 2") && msg.contains("boom"), "{msg}");
+        // the pool survives the panicked job and keeps serving
+        let ok = parallel_map_on(&pool, vec![10, 20], |x| x / 2).unwrap();
+        assert_eq!(ok, vec![5, 10]);
+        pool.join();
     }
 
     #[test]

@@ -26,10 +26,10 @@ fn search_then_simulate_confirms_speedup() {
     let mut session = Session::new(&m, "miniresnet18").unwrap();
     let weights = session.layer_weights();
     let acts = session.layer_acts(&mut exec, 3).unwrap();
-    let mut sim = Simulator::new(HwConfig::zcu102(), session.model.layers.clone(), 1);
+    let sim = Simulator::new(HwConfig::zcu102(), session.model.layers.clone(), 1);
 
     let r = run_search(
-        &mut sim,
+        &sim,
         &weights,
         &acts,
         Format::DyBit,
