@@ -1,0 +1,171 @@
+//! Bench: §Perf — calibration ladder, old vs new (DESIGN.md §8).
+//!
+//! Old: the pre-§8 batched ladder (`quantizer::calibrate_scale_projected`)
+//! — 54 full GridLut projection + RMSE passes over the tensor per
+//! `(format, bits)` query.
+//! New: `CalibView` — one radix sort + prefix-sum pass per tensor, then
+//! 54 table-sized candidate evaluations per query; the view is reusable
+//! across every `(format, bits)` queried on the same tensor (the
+//! "shared view" rows sweep all 9 combos through one view).
+//!
+//! Before timing, every benched (tensor, format, bits) combo asserts
+//! that all three ladders — per-element reference
+//! (`quantizer::calibrate_scale`), projected, and view — select the
+//! *identical* scale.
+//!
+//! Run: cargo bench --bench perf_calib [-- --smoke]
+//! `--smoke` shrinks tensors + iteration counts for CI smoke runs
+//! (`ci.sh --bench-smoke`); the 4× acceptance floor only applies to the
+//! full-size 1M-element DyBit-4 case.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::hint::black_box;
+
+use dybit::formats::{quantizer, CalibView, Format};
+use dybit::util::argparse::Args;
+use dybit::util::json::Json;
+use dybit::util::proptest::gen::heavy_tail;
+use dybit::util::rng::Rng;
+use dybit::util::stats::{fmt_time, Bench, Table};
+
+const FLOOR: f64 = 4.0;
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let sizes: &[usize] = if smoke { &[1024, 4096] } else { &[4096, 65536, 1 << 20] };
+    let formats = [Format::DyBit, Format::Int, Format::Posit];
+    let bits_set = [2u32, 4, 8];
+
+    let mut t = Table::new(&[
+        "n", "format", "bits", "old (projected ladder)", "new (CalibView)", "speedup",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut floor_ok = true;
+    let mut rng = Rng::new(2302);
+
+    for &n in sizes {
+        let x = heavy_tail(&mut rng, n);
+        let bench = if n >= 65536 { Bench::new(1, 3) } else { Bench::new(2, 8) };
+        for fmt in formats {
+            for bits in bits_set {
+                // identical-scale gate first (acceptance criterion), on
+                // all three ladders, then wall time
+                let grid = fmt.grid(bits);
+                let s_ref = quantizer::calibrate_scale(&x, &grid);
+                let mut buf = Vec::new();
+                let s_old = quantizer::calibrate_scale_projected(&x, fmt, bits, &mut buf);
+                let s_new = CalibView::new(&x).calibrate(fmt, bits);
+                assert_eq!(
+                    s_ref, s_old,
+                    "projected ladder diverged from reference: n={n} {fmt:?} b{bits}"
+                );
+                assert_eq!(
+                    s_ref, s_new,
+                    "CalibView ladder diverged from reference: n={n} {fmt:?} b{bits}"
+                );
+
+                let s_o = bench.run(|| {
+                    black_box(quantizer::calibrate_scale_projected(
+                        &x, fmt, bits, &mut buf,
+                    ));
+                });
+                // fresh view per iteration: the honest single-query cost
+                let s_n = bench.run(|| {
+                    black_box(CalibView::new(&x).calibrate(fmt, bits));
+                });
+                let sp = s_o.mean / s_n.mean;
+                if !smoke && n == (1 << 20) && fmt == Format::DyBit && bits == 4
+                    && sp < FLOOR
+                {
+                    floor_ok = false;
+                }
+                t.row(vec![
+                    format!("{n}"),
+                    fmt.name().into(),
+                    format!("{bits}"),
+                    fmt_time(s_o.mean),
+                    fmt_time(s_n.mean),
+                    format!("{sp:.2}x"),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("n", Json::num(n as f64)),
+                    ("format", Json::str(fmt.name())),
+                    ("bits", Json::num(bits as f64)),
+                    ("old_s", Json::num(s_o.mean)),
+                    ("new_s", Json::num(s_n.mean)),
+                    ("speedup", Json::num(sp)),
+                ]));
+            }
+        }
+
+        // amortization: all 9 (format, bits) queries on ONE tensor —
+        // the cost-table-fill / format-sweep shape — share a single view
+        let mut buf = Vec::new();
+        let s_o = bench.run(|| {
+            for fmt in formats {
+                for bits in bits_set {
+                    black_box(quantizer::calibrate_scale_projected(
+                        &x, fmt, bits, &mut buf,
+                    ));
+                }
+            }
+        });
+        let s_n = bench.run(|| {
+            let view = CalibView::new(&x);
+            for fmt in formats {
+                for bits in bits_set {
+                    black_box(view.calibrate(fmt, bits));
+                }
+            }
+        });
+        let sp = s_o.mean / s_n.mean;
+        t.row(vec![
+            format!("{n}"),
+            "all-3".into(),
+            "2/4/8 (shared view)".into(),
+            fmt_time(s_o.mean),
+            fmt_time(s_n.mean),
+            format!("{sp:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("format", Json::str("all-3-shared-view")),
+            ("bits", Json::num(0.0)),
+            ("old_s", Json::num(s_o.mean)),
+            ("new_s", Json::num(s_n.mean)),
+            ("speedup", Json::num(sp)),
+        ]));
+    }
+
+    t.print();
+    println!(
+        "\nCalibration-ladder speedup (sorted prefix-sum cell evaluation vs \
+         54 full projection+RMSE passes); acceptance floor {FLOOR:.2}x on \
+         the 1M-element DyBit-4 single query: {}",
+        if smoke {
+            "n/a (smoke tensors)"
+        } else if floor_ok {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+    common::save_results(
+        "perf_calib",
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke)),
+            ("floor", Json::num(FLOOR)),
+            ("floor_pass", Json::Bool(floor_ok)),
+            ("rows", Json::Arr(rows)),
+        ]),
+    )
+    .expect("save perf results");
+    println!("perf_calib done");
+    if !smoke && !floor_ok {
+        // make the floor a real gate: scripted full-size runs must fail
+        std::process::exit(1);
+    }
+}

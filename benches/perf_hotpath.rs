@@ -59,7 +59,7 @@ fn main() {
     let s_cal_lut = bench.run(|| {
         std::hint::black_box(quantizer::calibrate_scale_lut(&x[..32768], Format::DyBit, 4));
     });
-    t.row(vec!["calibrate_scale 32k (GridLut ladder)".into(), "L3".into(),
+    t.row(vec!["calibrate_scale 32k (CalibView ladder, §8)".into(), "L3".into(),
                fmt_time(s_cal_lut.mean), "-".into()]);
     let calibrate_speedup = s_cal_base.mean / s_cal_lut.mean;
 

@@ -4,7 +4,9 @@
 #   ./ci.sh               # fmt + clippy + tier-1 (build + bench build + tests)
 #   ./ci.sh --fast        # tier-1 only
 #   ./ci.sh --bench-smoke # additionally run the perf_search bench on tiny
-#                         # layer stacks (quick end-to-end bench smoke)
+#                         # layer stacks and perf_calib on tiny tensors
+#                         # (quick end-to-end bench smoke); fails if any
+#                         # bench result JSON is missing or empty
 #
 # Tier-1 must stay green; fmt/clippy keep the tree reviewable.  Benches
 # are built (not run) as part of tier-1 so bench bit-rot fails CI.
@@ -37,6 +39,19 @@ cargo test -q
 if [[ $bench_smoke -eq 1 ]]; then
   echo "==> bench smoke: perf_search on tiny layer stacks"
   cargo bench --bench perf_search -- --smoke
+
+  echo "==> bench smoke: perf_calib on tiny tensors"
+  cargo bench --bench perf_calib -- --smoke
+
+  # the smoke gate is only meaningful if the benches actually persisted
+  # their results: a missing/empty JSON means a silently broken run
+  for name in perf_search perf_calib; do
+    out="artifacts/results/${name}.json"
+    if [[ ! -s "$out" ]]; then
+      echo "ci.sh: bench smoke produced no usable $out" >&2
+      exit 1
+    fi
+  done
 fi
 
 echo "ci.sh: all green"

@@ -61,8 +61,8 @@ fn main() -> Result<()> {
     let snap = server.shutdown();
     println!("\n== results ==");
     println!("requests          {}", snap.requests);
-    println!("batches           {} (mean size {:.1}, padded slots {})",
-             snap.batches, snap.mean_batch, snap.padded_slots);
+    println!("batches           {} (mean size {:.1}, padded slots {}, errors {})",
+             snap.batches, snap.mean_batch, snap.padded_slots, snap.errors);
     println!("batch latency     p50 {:.1}ms  p95 {:.1}ms  mean {:.1}ms",
              snap.lat_p50_ms, snap.lat_p95_ms, snap.lat_mean_ms);
     println!("throughput        {:.1} req/s (load-test wall {:.1}s)",

@@ -1,9 +1,17 @@
-//! Serving metrics: request/batch counters + latency percentiles.
+//! Serving metrics: request/batch/error counters + latency percentiles.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 use crate::util::stats::{percentile, summarize};
+
+/// Poison-recovering lock (same pattern as `GridLut::from_format`): a
+/// worker that panicked mid-push can at worst leave a half-recorded
+/// batch behind, which is strictly better than poisoning every future
+/// metrics call in the server.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Shared, thread-safe metrics sink for the coordinator.
 #[derive(Default)]
@@ -11,6 +19,10 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
+    /// Batches whose execution failed end-to-end (every request in them
+    /// received an error reply).  Success counters above are untouched
+    /// by failures.
+    pub errors: AtomicU64,
     latencies_s: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<usize>>,
 }
@@ -21,6 +33,7 @@ pub struct Snapshot {
     pub requests: u64,
     pub batches: u64,
     pub padded_slots: u64,
+    pub errors: u64,
     pub mean_batch: f64,
     pub lat_p50_ms: f64,
     pub lat_p95_ms: f64,
@@ -33,25 +46,36 @@ impl Metrics {
         self.requests.fetch_add(size as u64, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.padded_slots.fetch_add(padded as u64, Ordering::Relaxed);
-        self.latencies_s.lock().unwrap().push(latency_s);
-        self.batch_sizes.lock().unwrap().push(size);
+        lock(&self.latencies_s).push(latency_s);
+        lock(&self.batch_sizes).push(size);
+    }
+
+    /// A batch that failed end-to-end: count it in `errors` and record
+    /// its latency (failed batches consume worker wall time too, so
+    /// hiding them would bias the percentiles), leaving the
+    /// success-only request/batch/padding counters untouched.
+    pub fn record_error(&self, latency_s: f64) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        lock(&self.latencies_s).push(latency_s);
     }
 
     pub fn snapshot(&self, elapsed_s: f64) -> Snapshot {
-        let lats = self.latencies_s.lock().unwrap().clone();
-        let sizes = self.batch_sizes.lock().unwrap().clone();
+        // one clone per series; the latency clone is sorted in place and
+        // serves both the percentiles and the (order-insensitive) mean
+        let mut lats = lock(&self.latencies_s).clone();
+        let sizes = lock(&self.batch_sizes).clone();
         let requests = self.requests.load(Ordering::Relaxed);
         let (p50, p95, mean) = if lats.is_empty() {
             (0.0, 0.0, 0.0)
         } else {
-            let mut s = lats.clone();
-            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            (percentile(&s, 50.0), percentile(&s, 95.0), summarize(&lats).mean)
+            lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (percentile(&lats, 50.0), percentile(&lats, 95.0), summarize(&lats).mean)
         };
         Snapshot {
             requests,
             batches: self.batches.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
             mean_batch: if sizes.is_empty() {
                 0.0
             } else {
@@ -92,6 +116,24 @@ mod tests {
         let m = Metrics::default();
         let s = m.snapshot(0.0);
         assert_eq!(s.requests, 0);
+        assert_eq!(s.errors, 0);
         assert_eq!(s.lat_p50_ms, 0.0);
+    }
+
+    #[test]
+    fn record_error_counts_and_keeps_latency() {
+        let m = Metrics::default();
+        m.record_batch(4, 0.010, 0);
+        m.record_error(0.500); // slow failed batch
+        m.record_error(0.400);
+        let s = m.snapshot(1.0);
+        // failures never inflate the success counters…
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.errors, 2);
+        assert!((s.mean_batch - 4.0).abs() < 1e-12);
+        // …but their wall time shows up in the latency series
+        assert!(s.lat_p95_ms > 100.0, "p95 {} must see the failures", s.lat_p95_ms);
+        assert!((s.lat_mean_ms - (10.0 + 500.0 + 400.0) / 3.0).abs() < 1e-9);
     }
 }

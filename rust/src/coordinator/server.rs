@@ -99,6 +99,9 @@ impl Server {
                                 for r in &reqs {
                                     let _ = r.respond.send(Err(msg.clone()));
                                 }
+                                // failed batches are accounted too: the
+                                // error counter + their wall time
+                                m.record_error(dt);
                             }
                         }
                     }

@@ -1,0 +1,532 @@
+//! Single-pass calibration engine: sorted prefix-sum RMSE ladder
+//! (DESIGN.md §8).
+//!
+//! The Fig. 2 / Eqn. 2 scale search runs a fixed 54-candidate ladder and
+//! keeps the RMSE-minimizing scale.  Before this module every candidate
+//! was a full projection + RMSE pass over the tensor — O(54·n) per
+//! `(tensor, format, bits)` query, rebuilt from scratch for every query
+//! on the same tensor (the search engine's cost-table fill alone runs 6
+//! such ladders per layer).  Following the restructuring idea of ANT
+//! [Guo et al. 2022] and PrecisionBatching [Lam et al. 2020] — make
+//! per-candidate work table-sized, not tensor-sized — a [`CalibView`]
+//! preprocesses the tensor *once*:
+//!
+//! * sort the values (branchless LSB radix sort on the monotone `u32`
+//!   key mapping, O(n) with 4 byte passes), and
+//! * prefix sums of `x` and `x²` over the sorted order.
+//!
+//! Each ladder candidate then needs only the ≤255 scaled decision
+//! boundaries located in the sorted data by binary search: every
+//! quantization cell's exact squared error is `Σx² − 2vΣx + cnt·v²`
+//! from two prefix-sum differences, so a candidate costs
+//! O(codes·log n) instead of O(n), and the whole ladder is one sort
+//! plus 54 table-sized evaluations.  The view depends only on the
+//! tensor, so repeated queries at different `(format, bits)` — the
+//! cost-table fill, the format-sweep benches — reuse it for free.
+//!
+//! **Equivalence & the tie rule.**  The per-cell error terms are the
+//! same `f64` quantities the reference ladder
+//! ([`quantizer::calibrate_scale`]) sums per element; only the summation
+//! *grouping* changes, so the two ladders agree whenever candidates are
+//! separated by more than f64 rounding noise (randomized-tensor margins
+//! are ≥1e-4 relative; grouping noise is bounded by ~n·ε of the summed
+//! magnitude — prefix-sum rounding accumulates with tensor length, so
+//! the tie band scales with n).  Exact ties are real, not hypothetical:
+//! tensors
+//! whose values sit on grid points or decision midpoints (where rounding
+//! up and down give equal |error|) make many candidates bit-equal under
+//! the reference sum, and the reference's strict `<` keeps the earliest.
+//! The grouped sums round those ties differently, so candidates within
+//! the noise tolerance of the incumbent are re-decided by an exact
+//! per-element pass over the sorted data: bit-equal on the tie class
+//! (identical per-position error terms), hence the earlier candidate
+//! keeps — the reference's rule.  Fuzzed across all formats × bitwidths
+//! on random, heavy-tail, snapped-to-grid and snapped-to-midpoint
+//! tensors (see the property tests below and `benches/perf_calib.rs`).
+//!
+//! Non-finite tensors short-circuit: any NaN/±∞ element makes every
+//! reference candidate's RMSE non-finite, so its strict `<` never
+//! replaces the initial `(base, ∞)` and the max-abs base scale is
+//! returned — [`CalibView::calibrate_grid`] reproduces that directly.
+
+use super::quantizer::{self, sigma_of};
+use super::Format;
+
+/// Floor of the tie band: candidates within `noise-band × term-magnitude`
+/// of the incumbent are re-decided exactly.  The band itself scales with
+/// the tensor (see [`CalibView::noise_rel`]): sequential prefix-sum
+/// rounding accumulates as ~n·ε of the summed magnitude, so a fixed
+/// relative band would let reference-tied candidates escape on large
+/// tensors.  An over-wide band only costs O(n) exact passes for the few
+/// best-competitive candidates (never worse than the old 54-pass
+/// ladder); an under-wide band would mis-resolve ties, so the bound is
+/// deliberately generous.
+const TIE_REL: f64 = 1e-12;
+
+/// Sorted + prefix-summed read-only view of one tensor, reusable across
+/// every `(format, bits)` calibration query on that tensor.
+///
+/// Construction is O(n) (radix sort + two prefix passes); each
+/// [`calibrate`](CalibView::calibrate) ladder is then O(codes·log n)
+/// per candidate.  σ (the Eqn. 2 normalizer, with the σ=1 fallback for
+/// constant/empty tensors) is computed once at construction in the
+/// original element order, bit-identical to [`sigma_of`].
+pub struct CalibView {
+    /// Element count of the viewed tensor (kept even when `sorted` is
+    /// empty on the non-finite path).
+    n: usize,
+    /// Ascending values; empty when the tensor has non-finite elements.
+    sorted: Vec<f32>,
+    /// `pfx_x[i]` = Σ of the first `i` sorted values (f64), len n+1.
+    pfx_x: Vec<f64>,
+    /// `pfx_xx[i]` = Σ of the first `i` sorted squares (f64), len n+1.
+    pfx_xx: Vec<f64>,
+    sigma: f64,
+    /// f32 max-abs fold (the reference `maxabs_scale` numerator; NaNs
+    /// are ignored by `f32::max` exactly like the reference fold).
+    xm: f32,
+    all_finite: bool,
+}
+
+impl CalibView {
+    /// Preprocess `x`: one radix sort + prefix sums of `x` and `x²`.
+    pub fn new(x: &[f32]) -> CalibView {
+        let sigma = sigma_of(x);
+        let mut xm = 0.0f32;
+        let mut all_finite = true;
+        for &v in x {
+            xm = xm.max(v.abs());
+            all_finite &= v.is_finite();
+        }
+        let sorted = if all_finite { radix_sort_f32(x) } else { Vec::new() };
+        let mut pfx_x = Vec::with_capacity(sorted.len() + 1);
+        let mut pfx_xx = Vec::with_capacity(sorted.len() + 1);
+        pfx_x.push(0.0);
+        pfx_xx.push(0.0);
+        let (mut sx, mut sxx) = (0.0f64, 0.0f64);
+        for &v in &sorted {
+            let v = v as f64;
+            sx += v;
+            sxx += v * v;
+            pfx_x.push(sx);
+            pfx_xx.push(sxx);
+        }
+        CalibView { n: x.len(), sorted, pfx_x, pfx_xx, sigma, xm, all_finite }
+    }
+
+    /// Element count of the viewed tensor.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True for the empty tensor.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Eqn. 2 normalizer, bit-identical to [`sigma_of`] on the viewed
+    /// tensor (σ=1 fallback for constant/empty tensors included).
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// RMSE-optimal scale for `(fmt, bits)` — the ladder of
+    /// [`quantizer::calibrate_scale`] evaluated through the prefix sums;
+    /// selects the identical scale (see the module docs for the tie
+    /// rule).
+    pub fn calibrate(&self, fmt: Format, bits: u32) -> f64 {
+        self.calibrate_grid(&fmt.grid(bits))
+    }
+
+    /// [`calibrate`](CalibView::calibrate) over a raw ascending grid.
+    pub fn calibrate_grid(&self, grid: &[f64]) -> f64 {
+        let gm = grid.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        let xm = self.xm as f64;
+        // mirror of quantizer::maxabs_scale (incl. its 1.0 fallbacks)
+        let base = if xm > 0.0 && gm > 0.0 { xm / gm } else { 1.0 };
+        if base == 0.0 {
+            return 1.0;
+        }
+        if !self.all_finite {
+            // every reference candidate's RMSE is NaN/∞: strict `<`
+            // never replaces the (base, ∞) init, so base is selected
+            return base;
+        }
+        let mut best_s = base;
+        let mut best_sse = f64::INFINITY;
+        let mut best_mag = 0.0f64;
+        let mut best_exact: Option<f64> = None;
+        for j in quantizer::LADDER_EXPS {
+            for mult in quantizer::LADDER_MULTS {
+                let s = base * mult * 2f64.powi(-j);
+                let (sse, mag) = self.cell_sse(grid, s);
+                if sse.to_bits() == best_sse.to_bits() {
+                    // bit-equal grouped sums: the common structural tie
+                    // (e.g. every large-scale candidate collapsing the
+                    // tensor into the zero cell sums the same prefix
+                    // total) — the earlier candidate keeps, no exact
+                    // pass needed
+                    continue;
+                }
+                if best_sse.is_finite() {
+                    let tol = self.noise_rel() * mag.max(best_mag);
+                    let gap = (sse - best_sse).abs();
+                    // NaN gaps (overflowed candidate cells) take the tie
+                    // path too: the exact per-element pass gives them a
+                    // well-defined (infinite) error to lose with
+                    if gap <= tol || gap.is_nan() {
+                        // within grouping noise of the incumbent: decide
+                        // by the exact per-element sums (bit-equal on
+                        // the reference's tie class -> incumbent keeps)
+                        let be = *best_exact
+                            .get_or_insert_with(|| self.exact_sse(grid, best_s));
+                        let ce = self.exact_sse(grid, s);
+                        if ce < be {
+                            best_s = s;
+                            best_sse = sse;
+                            best_mag = mag;
+                            best_exact = Some(ce);
+                        }
+                        continue;
+                    }
+                }
+                if sse < best_sse {
+                    best_s = s;
+                    best_sse = sse;
+                    best_mag = mag;
+                    best_exact = None;
+                }
+            }
+        }
+        best_s
+    }
+
+    /// Relative width of the tie band: sequential summation error of an
+    /// n-term prefix is bounded by ~n·ε of the summed magnitude; the
+    /// difference of two prefixes and the ≤255-cell accumulation stay
+    /// within a small multiple of that, covered by the 8× margin.
+    /// `TIE_REL` floors the small-n case.
+    fn noise_rel(&self) -> f64 {
+        TIE_REL.max(8.0 * self.sorted.len() as f64 * f64::EPSILON)
+    }
+
+    /// Walk the quantization cells of `scale * grid` over the sorted
+    /// data, calling `f(code, lo, hi)` for every non-empty cell
+    /// (`sorted[lo..hi]`).  The single boundary definition both the
+    /// grouped and the exact-tie evaluations run on: boundaries use the
+    /// reference's midpoint arithmetic, elements exactly on a boundary
+    /// land in the upper cell, and since mids ascend each search narrows
+    /// to the remaining suffix.
+    fn for_each_cell<F: FnMut(usize, usize, usize)>(&self, grid: &[f64],
+                                                    scale: f64, mut f: F) {
+        let n = self.sorted.len();
+        let mut lo = 0usize;
+        for c in 0..grid.len() {
+            let hi = if c + 1 < grid.len() {
+                let mid = (grid[c] + grid[c + 1]) * 0.5 * scale;
+                lo + lower_bound_f32(&self.sorted[lo..], mid)
+            } else {
+                n
+            };
+            if hi > lo {
+                f(c, lo, hi);
+            }
+            lo = hi;
+        }
+    }
+
+    /// Grouped sum of squared errors at `scale`, plus the magnitude of
+    /// the terms entering it (the cancellation-noise scale for the tie
+    /// tolerance).  Each cell `[bounds(c-1), bounds(c))` of the sorted
+    /// data contributes `Σx² − 2vΣx + cnt·v²` with `v` the f32-rounded
+    /// scaled grid value — the exact per-cell error mass.
+    fn cell_sse(&self, grid: &[f64], scale: f64) -> (f64, f64) {
+        let mut sse = 0.0f64;
+        let mut mag = 0.0f64;
+        self.for_each_cell(grid, scale, |c, lo, hi| {
+            let v = (grid[c] * scale) as f32 as f64;
+            let s1 = self.pfx_x[hi] - self.pfx_x[lo];
+            let s2 = self.pfx_xx[hi] - self.pfx_xx[lo];
+            let cnt = (hi - lo) as f64;
+            sse += s2 - 2.0 * v * s1 + cnt * v * v;
+            mag += s2.abs() + 2.0 * v.abs() * s1.abs() + cnt * v * v;
+        });
+        (sse, mag)
+    }
+
+    /// Per-element squared error at `scale` over the *sorted* data —
+    /// the tie-resolution slow path, on the same cell walk as
+    /// [`CalibView::cell_sse`].  On the reference's tie class the
+    /// per-position terms of two tied candidates are identical, so the
+    /// sums are bit-equal and strict `<` keeps the earlier candidate.
+    fn exact_sse(&self, grid: &[f64], scale: f64) -> f64 {
+        let mut sse = 0.0f64;
+        self.for_each_cell(grid, scale, |c, lo, hi| {
+            let v = (grid[c] * scale) as f32 as f64;
+            for &x in &self.sorted[lo..hi] {
+                let d = x as f64 - v;
+                sse += d * d;
+            }
+        });
+        sse
+    }
+}
+
+/// First index in ascending `sorted` whose value (widened to f64) is
+/// ≥ `t` — i.e. the count of elements `< t`.  Elements exactly on a
+/// decision boundary therefore land in the upper cell, matching the
+/// reference's `searchsorted(side="right")` on the midpoints.
+fn lower_bound_f32(sorted: &[f32], t: f64) -> usize {
+    let mut lo = 0usize;
+    let mut hi = sorted.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if (sorted[mid] as f64) < t {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Ascending sort of finite f32s: LSB-first counting sort on the
+/// monotone `u32` key map (negatives bit-flipped, positives
+/// sign-flipped), 4 byte passes, branch-free inner loops.  Equivalent
+/// to `sort_unstable_by(f32::total_cmp)` on finite data (−0.0 orders
+/// before +0.0; both sum identically in the prefix arrays), which small
+/// inputs use directly — the histogram passes only pay off once the
+/// tensor outgrows them.
+fn radix_sort_f32(x: &[f32]) -> Vec<f32> {
+    const CUTOFF: usize = 512;
+    if x.len() < CUTOFF {
+        let mut v = x.to_vec();
+        v.sort_unstable_by(f32::total_cmp);
+        return v;
+    }
+    let mut keys: Vec<u32> = x
+        .iter()
+        .map(|&f| {
+            let b = f.to_bits();
+            if b & 0x8000_0000 != 0 {
+                !b
+            } else {
+                b ^ 0x8000_0000
+            }
+        })
+        .collect();
+    let mut tmp = vec![0u32; keys.len()];
+    for shift in [0u32, 8, 16, 24] {
+        let mut hist = [0usize; 256];
+        for &k in &keys {
+            hist[((k >> shift) & 0xFF) as usize] += 1;
+        }
+        if hist.iter().any(|&h| h == keys.len()) {
+            continue; // single bucket: this pass is the identity
+        }
+        let mut sum = 0usize;
+        for h in hist.iter_mut() {
+            let c = *h;
+            *h = sum;
+            sum += c;
+        }
+        for &k in &keys {
+            let b = ((k >> shift) & 0xFF) as usize;
+            tmp[hist[b]] = k;
+            hist[b] += 1;
+        }
+        std::mem::swap(&mut keys, &mut tmp);
+    }
+    keys.into_iter()
+        .map(|k| {
+            let b = if k & 0x8000_0000 != 0 { k ^ 0x8000_0000 } else { !k };
+            f32::from_bits(b)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::quantizer::{calibrate_scale, calibrate_scale_projected};
+    use crate::util::proptest::{check, gen::heavy_tail};
+    use crate::util::rng::Rng;
+
+    fn all_fmt_bits() -> Vec<(Format, u32)> {
+        let mut out = Vec::new();
+        for fmt in Format::ALL {
+            for bits in 2..=8u32 {
+                if fmt.supports(bits) {
+                    out.push((fmt, bits));
+                }
+            }
+        }
+        out
+    }
+
+    /// Both oracles: the per-element reference ladder and the pre-§8
+    /// batched projected ladder must agree with the view on every query.
+    fn assert_scales_match(name: &str, x: &[f32]) {
+        let view = CalibView::new(x);
+        let mut buf = Vec::new();
+        for (fmt, bits) in all_fmt_bits() {
+            let grid = fmt.grid(bits);
+            let s_ref = calibrate_scale(x, &grid);
+            let s_view = view.calibrate(fmt, bits);
+            assert!(
+                s_ref == s_view || (s_ref.is_nan() && s_view.is_nan()),
+                "{name} {fmt:?} b{bits}: ref {s_ref} view {s_view}"
+            );
+            let s_proj = calibrate_scale_projected(x, fmt, bits, &mut buf);
+            assert!(
+                s_proj == s_view || (s_proj.is_nan() && s_view.is_nan()),
+                "{name} {fmt:?} b{bits}: proj {s_proj} view {s_view}"
+            );
+        }
+    }
+
+    #[test]
+    fn radix_sort_matches_total_cmp_sort() {
+        let mut rng = Rng::new(31);
+        for n in [0usize, 1, 5, 511, 512, 513, 4096] {
+            let mut x: Vec<f32> = heavy_tail(&mut rng, n);
+            // salt with signed zeros, denormals, and exact dupes
+            if n > 8 {
+                x[0] = -0.0;
+                x[1] = 0.0;
+                x[2] = 1.0e-41;
+                x[3] = -1.0e-41;
+                x[4] = x[5];
+            }
+            let got = radix_sort_f32(&x);
+            let mut want = x.clone();
+            want.sort_unstable_by(f32::total_cmp);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn prefix_sums_are_consistent() {
+        let mut rng = Rng::new(8);
+        let x = heavy_tail(&mut rng, 700);
+        let view = CalibView::new(&x);
+        assert_eq!(view.len(), 700);
+        assert_eq!(view.pfx_x.len(), 701);
+        let total: f64 = view.sorted.iter().map(|&v| v as f64 * v as f64).sum();
+        assert!((view.pfx_xx[700] - total).abs() <= 1e-9 * total.abs().max(1.0));
+        assert!(view.sorted.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn view_matches_reference_on_heavy_tails() {
+        let mut rng = Rng::new(77);
+        for n in [1usize, 3, 130, 1200] {
+            let x = heavy_tail(&mut rng, n);
+            assert_scales_match(&format!("ht{n}"), &x);
+        }
+    }
+
+    #[test]
+    fn view_matches_reference_on_edge_tensors() {
+        // satellite: NaN/±∞, all-zero, constant (σ=1 fallback), single
+        let cases: Vec<(&str, Vec<f32>)> = vec![
+            ("empty", vec![]),
+            ("all-zero", vec![0.0; 64]),
+            ("signed-zeros", vec![-0.0, 0.0, 1.0, -1.0]),
+            ("single", vec![0.7]),
+            ("single-neg", vec![-3.2]),
+            ("constant", vec![2.5; 100]),
+            ("constant-neg", vec![-0.7; 33]),
+            ("denormal", vec![1.0e-40, -1.0e-41, 3.0e-39]),
+            ("huge", vec![1.0e30, -2.0e32, 3.0e28]),
+            ("near-f32-max", vec![3.0e38, -3.3e38, 1.0e37]),
+            ("nan", vec![1.0, f32::NAN, -2.0]),
+            ("pos-inf", vec![1.0, f32::INFINITY, -2.0]),
+            ("neg-inf", vec![f32::NEG_INFINITY, 0.5]),
+            ("both-inf", vec![f32::INFINITY, f32::NEG_INFINITY, 2.0]),
+            ("all-nan", vec![f32::NAN, f32::NAN]),
+        ];
+        for (name, x) in &cases {
+            assert_scales_match(name, x);
+        }
+        // σ=1 fallback is preserved by the view
+        assert_eq!(CalibView::new(&[2.5; 100]).sigma(), 1.0);
+        assert_eq!(CalibView::new(&[]).sigma(), 1.0);
+    }
+
+    #[test]
+    fn prop_view_matches_reference_all_formats_bits() {
+        // tentpole acceptance: randomized heavy-tail tensors across all
+        // supported formats × bitwidths select identical scales
+        check(
+            "calibview-scale-equivalence",
+            25,
+            |r, s| {
+                let n = 1 + (s * 900.0) as usize;
+                heavy_tail(r, n)
+            },
+            |x| {
+                let view = CalibView::new(x);
+                all_fmt_bits().iter().all(|&(fmt, bits)| {
+                    view.calibrate(fmt, bits) == calibrate_scale(x, &fmt.grid(bits))
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_view_matches_reference_on_knife_edge_tensors() {
+        // adversarial tie class: values snapped exactly onto grid points
+        // and decision midpoints, where many ladder candidates are
+        // bit-equal under the reference sum and its first-wins rule must
+        // be reproduced (module docs: tie rule)
+        check(
+            "calibview-knife-edge-ties",
+            20,
+            |r, s| {
+                let (fmt, bits) = {
+                    let all = all_fmt_bits();
+                    all[r.below(all.len())]
+                };
+                let grid = fmt.grid(bits);
+                let scale = [1.0, 0.5, 2.0, 0.37, 0.75][r.below(5)];
+                let mut pool: Vec<f64> = grid.iter().map(|&g| g * scale).collect();
+                pool.extend(
+                    grid.windows(2).map(|w| (w[0] + w[1]) * 0.5 * scale),
+                );
+                let n = 8 + (s * 600.0) as usize;
+                (0..n)
+                    .map(|_| pool[r.below(pool.len())] as f32)
+                    .collect::<Vec<f32>>()
+            },
+            |x| {
+                let view = CalibView::new(x);
+                all_fmt_bits().iter().all(|&(fmt, bits)| {
+                    view.calibrate(fmt, bits) == calibrate_scale(x, &fmt.grid(bits))
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn shared_view_is_query_order_independent() {
+        let mut rng = Rng::new(4);
+        let x = heavy_tail(&mut rng, 800);
+        let view = CalibView::new(&x);
+        let a: Vec<f64> = all_fmt_bits()
+            .iter()
+            .map(|&(f, b)| view.calibrate(f, b))
+            .collect();
+        let b: Vec<f64> = all_fmt_bits()
+            .iter()
+            .rev()
+            .map(|&(f, b)| view.calibrate(f, b))
+            .collect();
+        let b: Vec<f64> = b.into_iter().rev().collect();
+        assert_eq!(a, b);
+    }
+}

@@ -226,13 +226,8 @@ impl GridLut {
 mod tests {
     use super::*;
     use crate::formats::quantizer;
+    use crate::util::proptest::gen::heavy_tail;
     use crate::util::rng::Rng;
-
-    fn heavy_tail(rng: &mut Rng, n: usize) -> Vec<f32> {
-        (0..n)
-            .map(|_| (rng.normal() * (1.0 + 5.0 * rng.uniform().powi(5))) as f32)
-            .collect()
-    }
 
     #[test]
     fn matches_baseline_bit_exactly_all_formats() {

@@ -4,6 +4,7 @@
 //! against `artifacts/formats_golden.json` in `tests/golden.rs`.
 
 pub mod adaptivfloat;
+pub mod calib;
 pub mod dybit;
 pub mod flint;
 pub mod gridlut;
@@ -11,6 +12,7 @@ pub mod intq;
 pub mod posit;
 pub mod quantizer;
 
+pub use calib::CalibView;
 pub use gridlut::GridLut;
 
 /// The LUT interchange width shared with the HLO artifacts (aot.py).

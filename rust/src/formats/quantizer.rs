@@ -6,18 +6,34 @@
 //! multipliers) mirrors `python/compile/formats.py::calibrate_scale` so the
 //! two sides pick identical scales on identical data.
 //!
-//! Two projection paths exist (DESIGN.md §5):
+//! Three calibration/projection tiers exist (DESIGN.md §5, §8):
 //! * [`quantize_to_grid`] / [`calibrate_scale`] — the per-element reference
 //!   (midpoints rebuilt per call, binary search per element), kept as the
 //!   correctness oracle and bench baseline;
-//! * [`GridLut`](super::GridLut)-backed [`fake_quant`] /
-//!   [`calibrate_scale_lut`] — the batched production path, bit-exact with
-//!   the reference; `benches/perf_hotpath.rs` measures the two against
-//!   each other (acceptance floor 2×; before/after in EXPERIMENTS.md
-//!   §Perf).
+//! * [`calibrate_scale_projected`] — the pre-§8 batched ladder (every
+//!   candidate projected through a [`GridLut`](super::GridLut)),
+//!   bit-exact with the reference; kept as the second oracle and the
+//!   "old" side of `benches/perf_calib.rs`;
+//! * [`CalibView`]-backed [`calibrate_scale_lut`] / [`quant_rmse_into`]
+//!   — the production path: sort + prefix sums once per tensor, each
+//!   ladder candidate evaluated from table-sized cell sums
+//!   (DESIGN.md §8; acceptance floor 4× on the 1M-element DyBit-4
+//!   ladder, before/after in EXPERIMENTS.md §Perf).  Projections at the
+//!   *settled* scale still run through the batched `GridLut`, so
+//!   quantized outputs and final RMSE values are bit-exact with the
+//!   reference chain.
 
+use super::calib::CalibView;
 use super::gridlut::GridLut;
 use super::Format;
+
+/// Power-of-two exponents the calibration ladder scans (`2^-j` for `j`
+/// in this range) — one definition shared by the reference, projected,
+/// and [`CalibView`] ladders so the candidate set cannot drift.
+pub(crate) const LADDER_EXPS: std::ops::Range<i32> = -6i32..12;
+
+/// Fine multipliers the ladder applies at every exponent step.
+pub(crate) const LADDER_MULTS: [f64; 3] = [1.0, 0.75, 0.5];
 
 /// Nearest-value projection of `x` onto `scale * grid` (grid ascending).
 ///
@@ -115,8 +131,8 @@ where
 {
     // σ depends only on x: callers compute it once, not once per candidate
     let mut best = (base, f64::INFINITY);
-    for j in -6i32..12 {
-        for mult in [1.0f64, 0.75, 0.5] {
+    for j in LADDER_EXPS {
+        for mult in LADDER_MULTS {
             let s = base * mult * 2f64.powi(-j);
             project(s, x, &mut *out);
             let e = rmse_with_sigma(x, out, sigma);
@@ -147,34 +163,29 @@ pub fn calibrate_scale(x: &[f32], grid: &[f64]) -> f64 {
                  |s, xs, out| quantize_to_grid(xs, grid, s, out))
 }
 
-/// Batched [`calibrate_scale`]: the same ladder (the private
-/// `scale_ladder` is shared), with each candidate projected through
-/// [`GridLut`] tables instead of a fresh midpoint build + per-element
-/// binary search.
+/// Production [`calibrate_scale`]: the identical ladder evaluated
+/// through a freshly built [`CalibView`] — one sort + prefix-sum pass
+/// over the tensor, then 54 table-sized candidate evaluations instead
+/// of 54 full projection+RMSE passes (DESIGN.md §8; scale selection
+/// equivalence incl. the knife-edge tie rule is documented and
+/// property-tested in [`super::calib`]).
 ///
-/// Candidate tables are built *locally* (not via the global cache):
-/// ladder scales are data-dependent and single-use, so caching them would
-/// only evict the genuinely shared entries.  Because
-/// `GridLut::quantize_batch` is bit-exact with [`quantize_to_grid`],
-/// every candidate's RMSE — and therefore the chosen scale — is identical
-/// to the reference ladder (asserted in the tests below).
+/// When the same tensor is calibrated at several `(format, bits)` —
+/// the search engine's cost-table fill, the format-sweep benches —
+/// build the [`CalibView`] once and query it directly instead.
 pub fn calibrate_scale_lut(x: &[f32], fmt: Format, bits: u32) -> f64 {
-    let mut buf = Vec::new();
-    calibrate_scale_lut_into(x, fmt, bits, &mut buf)
+    CalibView::new(x).calibrate(fmt, bits)
 }
 
-/// Allocation-free [`calibrate_scale_lut`]: the caller supplies the
-/// projection buffer (grown as needed, never shrunk), so hot loops like
-/// the search engine's RMSE oracle can reuse one buffer across queries.
-pub fn calibrate_scale_lut_into(x: &[f32], fmt: Format, bits: u32,
-                                buf: &mut Vec<f32>) -> f64 {
-    calibrate_lut_with_sigma(x, fmt, bits, sigma_of(x), buf)
-}
-
-/// Ladder core with the σ normalizer supplied by the caller (so pipelines
-/// that also need σ afterwards — [`quant_rmse_into`] — compute it once).
-fn calibrate_lut_with_sigma(x: &[f32], fmt: Format, bits: u32, sigma: f64,
-                            buf: &mut Vec<f32>) -> f64 {
+/// Pre-§8 batched ladder: every candidate projected through a locally
+/// built [`GridLut`] (bit-exact with [`quantize_to_grid`], so the
+/// selected scale is identical to [`calibrate_scale`]'s).  Superseded as
+/// the production path by the [`CalibView`] ladder; kept as the second
+/// correctness oracle and the "old" side of `benches/perf_calib.rs`.
+/// The caller supplies the projection buffer (grown as needed, never
+/// shrunk) so repeated oracle runs can reuse one allocation.
+pub fn calibrate_scale_projected(x: &[f32], fmt: Format, bits: u32,
+                                 buf: &mut Vec<f32>) -> f64 {
     let grid = fmt.grid(bits);
     let base = maxabs_scale(x, &grid);
     if base == 0.0 {
@@ -183,7 +194,7 @@ fn calibrate_lut_with_sigma(x: &[f32], fmt: Format, bits: u32, sigma: f64,
     if buf.len() < x.len() {
         buf.resize(x.len(), 0.0);
     }
-    scale_ladder(x, base, sigma, &mut buf[..x.len()], |s, xs, out| {
+    scale_ladder(x, base, sigma_of(x), &mut buf[..x.len()], |s, xs, out| {
         GridLut::new(&grid, s).quantize_batch(xs, out)
     })
 }
@@ -219,17 +230,32 @@ pub fn quant_rmse(x: &[f32], fmt: Format, bits: u32) -> f64 {
 /// and every projection written into the caller's buffer.  This is the
 /// single calibrate-project-score pipeline; the search engine's ranking
 /// oracle calls it rather than reimplementing the chain.
+///
+/// Builds a throwaway [`CalibView`] for the §8 ladder; callers that
+/// score the same tensor at several bitwidths (the cost-table fill)
+/// should build the view once and use [`quant_rmse_view`].
 pub fn quant_rmse_into(x: &[f32], fmt: Format, bits: u32,
                        buf: &mut Vec<f32>) -> f64 {
-    let sigma = sigma_of(x);
-    let s = calibrate_lut_with_sigma(x, fmt, bits, sigma, buf);
+    quant_rmse_view(x, &CalibView::new(x), fmt, bits, buf)
+}
+
+/// [`quant_rmse_into`] with a caller-held [`CalibView`] of `x`, so one
+/// sort + prefix-sum pass serves every `(format, bits)` scored on the
+/// tensor.  The settled-scale projection and the final Eqn. 2 pass run
+/// per-element over `x` in its original order — bit-exact with the
+/// reference chain (`engine::tests` asserts this), the ladder only
+/// *selects* the scale through the view.
+pub fn quant_rmse_view(x: &[f32], view: &CalibView, fmt: Format, bits: u32,
+                       buf: &mut Vec<f32>) -> f64 {
+    debug_assert_eq!(view.len(), x.len(), "view built from a different tensor");
+    let s = view.calibrate(fmt, bits);
     let lut = GridLut::from_format(fmt, bits, s);
     if buf.len() < x.len() {
         buf.resize(x.len(), 0.0);
     }
     let out = &mut buf[..x.len()];
     lut.quantize_batch(x, out);
-    rmse_with_sigma(x, out, sigma)
+    rmse_with_sigma(x, out, view.sigma())
 }
 
 #[cfg(test)]
@@ -326,6 +352,7 @@ mod tests {
     fn lut_ladder_picks_identical_scale() {
         let mut rng = Rng::new(77);
         let x = rng.normal_vec(1200);
+        let mut buf = Vec::new();
         for fmt in Format::ALL {
             for bits in [3u32, 4, 8] {
                 if !fmt.supports(bits) {
@@ -335,6 +362,8 @@ mod tests {
                 let s_ref = calibrate_scale(&x, &grid);
                 let s_lut = calibrate_scale_lut(&x, fmt, bits);
                 assert_eq!(s_ref, s_lut, "{fmt:?} bits={bits}");
+                let s_proj = calibrate_scale_projected(&x, fmt, bits, &mut buf);
+                assert_eq!(s_ref, s_proj, "{fmt:?} bits={bits} (projected)");
             }
         }
     }

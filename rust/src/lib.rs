@@ -18,8 +18,10 @@
 //! * [`tensor`], [`util`] — substrates (tensors, IO, JSON, RNG, stats…).
 //!
 //! The quantization hot path shared by [`formats`], [`qat`] and [`search`]
-//! is the batched, cached [`formats::GridLut`] (see EXPERIMENTS.md §Perf
-//! for the before/after against the per-element baseline).
+//! is the batched, cached [`formats::GridLut`] for projection and the
+//! sorted prefix-sum [`formats::CalibView`] for scale calibration
+//! (DESIGN.md §8; see EXPERIMENTS.md §Perf for the before/afters
+//! against the per-element baselines).
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for measured
 //! reproductions of every table/figure in the paper.

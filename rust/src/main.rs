@@ -237,9 +237,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     dybit::coordinator::load_test(&server, clients, requests, img_elems)?;
     let snap = server.shutdown();
     println!(
-        "requests {}  batches {}  mean batch {:.1}  p50 {:.1}ms  p95 {:.1}ms  {:.1} req/s",
-        snap.requests, snap.batches, snap.mean_batch, snap.lat_p50_ms,
-        snap.lat_p95_ms, snap.throughput_rps
+        "requests {}  batches {}  errors {}  mean batch {:.1}  p50 {:.1}ms  \
+         p95 {:.1}ms  {:.1} req/s",
+        snap.requests, snap.batches, snap.errors, snap.mean_batch,
+        snap.lat_p50_ms, snap.lat_p95_ms, snap.throughput_rps
     );
     Ok(())
 }

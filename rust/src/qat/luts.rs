@@ -96,11 +96,12 @@ impl QuantConfig {
     /// Calibrate per-layer activation scales from fwd_acts taps
     /// (RMSE-optimal search on each layer's sample, Fig. 2 adaptation).
     ///
-    /// Runs the batched ladder (`calibrate_scale_lut`): every candidate
-    /// scale is projected through locally-built `GridLut` tables — O(1)
-    /// per element instead of a per-element binary search, without
-    /// touching the shared cache (ladder scales are data-dependent and
-    /// single-use).
+    /// Runs the single-pass ladder (`calibrate_scale_lut`, DESIGN.md
+    /// §8): each layer's tap row is sorted + prefix-summed once and all
+    /// 54 candidate scales are scored from table-sized cell sums —
+    /// selection identical to the per-element reference ladder (each
+    /// row is calibrated at exactly one `(format, bits)`, so there is
+    /// no cross-query view reuse to exploit here).
     pub fn calibrate(&mut self, taps: &Tensor) -> Result<()> {
         ensure!(taps.rank() == 2, "taps must be [L, S]");
         ensure!(taps.shape[0] == self.layers.len(), "taps rows != layers");

@@ -12,7 +12,7 @@
 
 use std::collections::HashMap;
 
-use crate::formats::{quantizer, Format};
+use crate::formats::{quantizer, CalibView, Format};
 use crate::sim::{cell_row, LayerShape, Prec, Simulator};
 use crate::util::threadpool::parallel_map;
 
@@ -28,8 +28,11 @@ pub struct EngineMetrics<'a> {
     acts: Vec<Vec<f32>>,
     fmt: Format,
     rmse_cache: HashMap<(usize, u32, u32), f64>,
-    /// Reused projection buffer for `quant_rmse_into` (no per-query
-    /// allocation on the search hot path).
+    /// Reused projection buffer for `quant_rmse_into`.  (Since §8 the
+    /// dominant per-query cost of an uncached rmse() is the throwaway
+    /// `CalibView` each `quant_rmse_into` builds — this oracle path is
+    /// kept simple because it is the *reference* side; the production
+    /// fill, `build_cost_table`, shares one view per tensor.)
     scratch: Vec<f32>,
 }
 
@@ -75,8 +78,9 @@ impl Metrics for EngineMetrics<'_> {
     /// subsample — Eqn. 2 is a mean, so a 2k sample estimates it within
     /// ~2% (σ/√n), while the full-tensor calibrate ladder dominated the
     /// search wall time.  Scoring runs through the quantizer's single
-    /// batched calibrate-project-score pipeline (`quant_rmse_into`) with
-    /// a reused scratch buffer (see EXPERIMENTS.md §Perf, before/after).
+    /// calibrate-project-score pipeline (`quant_rmse_into`, §8
+    /// CalibView ladder inside) with a reused scratch buffer (see
+    /// EXPERIMENTS.md §Perf, before/after).
     fn rmse(&mut self, i: usize, pw: Prec, pa: Prec) -> f64 {
         let key = (i, pw.bits(), pa.bits());
         if let Some(&e) = self.rmse_cache.get(&key) {
@@ -97,11 +101,17 @@ impl Metrics for EngineMetrics<'_> {
 /// Latency cells run through the pure [`cell_row`] — bypassing the
 /// simulator's per-call memoization HashMap entirely — and RMSE cells
 /// are assembled from the 2·|Prec| per-tensor halves (`ew(pw) + ea(pa)`
-/// via [`quantizer::quant_rmse_into`]): 6 calibration-ladder runs per
+/// via [`quantizer::quant_rmse_view`]): 6 calibration-ladder runs per
 /// layer instead of up to 2 per *touched* (pw, pa) combo on the oracle
-/// path.  Every cell is bit-identical to what [`EngineMetrics`] returns
-/// for the same query, so the table-driven search matches the
-/// oracle-driven reference decision for decision.
+/// path, and since §8 each layer builds ONE [`CalibView`] per tensor
+/// (inside its parallel fill job) and shares the sorted prefix sums
+/// across its |Prec| ladder runs, so the per-layer calibration cost is
+/// one sort + 2·|Prec| table-sized ladders instead of 6 full-tensor
+/// ladder sweeps.  Every cell is bit-identical to what
+/// [`EngineMetrics`] returns for the same query (its
+/// `quant_rmse_into` builds an identical throwaway view), so the
+/// table-driven search matches the oracle-driven reference decision
+/// for decision.
 ///
 /// A fill job that panics surfaces as an `Err` (see
 /// [`parallel_map`], which routes through the borrowed-pool
@@ -128,13 +138,18 @@ pub fn build_cost_table(sim: &Simulator, weights: &[Vec<f32>], acts: &[Vec<f32>]
         .min(n.max(1));
     let rows = parallel_map(jobs, threads, move |(layer, w, a)| {
         let mut scratch = Vec::new();
+        // §8: one CalibView per tensor, shared across the per-precision
+        // ladder runs (view construction itself rides the per-layer
+        // parallel_map jobs)
+        let vw = CalibView::new(&w);
+        let va = CalibView::new(&a);
         let ew: Vec<f64> = Prec::ALL
             .iter()
-            .map(|p| quantizer::quant_rmse_into(&w, fmt, p.bits(), &mut scratch))
+            .map(|p| quantizer::quant_rmse_view(&w, &vw, fmt, p.bits(), &mut scratch))
             .collect();
         let ea: Vec<f64> = Prec::ALL
             .iter()
-            .map(|p| quantizer::quant_rmse_into(&a, fmt, p.bits(), &mut scratch))
+            .map(|p| quantizer::quant_rmse_view(&a, &va, fmt, p.bits(), &mut scratch))
             .collect();
         // cell_row is the single source of truth for the cell order;
         // k decomposes as (wi, ai) in the same Prec::ALL × Prec::ALL walk

@@ -68,6 +68,16 @@ pub mod gen {
         [2usize, 4, 8][rng.below(3)]
     }
 
+    /// Heavy-tailed tensor of exactly `n` elements — the shared
+    /// quantization-stress distribution (normal body, occasional ~6×
+    /// outliers) used by the format/calibration tests and benches, in
+    /// one place so they keep exercising the same tails.
+    pub fn heavy_tail(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| (rng.normal() * (1.0 + 5.0 * rng.uniform().powi(5))) as f32)
+            .collect()
+    }
+
     /// GEMM dims up to ~size * 512.
     pub fn gemm_dims(rng: &mut Rng, size: f64) -> (usize, usize, usize) {
         let top = 2.0 + size * 510.0;
