@@ -131,6 +131,7 @@ fn main() {
             policy: Policy { max_batch: 32, max_wait: Duration::from_millis(2) },
             queue_cap: 256,
             pallas: false,
+            replicas: 1,
         };
         let server = Server::start(&manifest, cfg).expect("server");
         let img_elems: usize = manifest.models["mlp"].input.iter().skip(1).product();
@@ -139,7 +140,7 @@ fn main() {
         let (clients, per) = (4, 128);
         load_test(&server, clients, per, img_elems).unwrap();
         let wall = t0.elapsed().as_secs_f64();
-        let snap = server.shutdown();
+        let snap = server.shutdown().expect("clean shutdown");
         t.row(vec!["serve mlp closed-loop (4 clients)".into(), "L3+L2".into(),
                    format!("p50 {:.1}ms", snap.lat_p50_ms),
                    format!("{:.0} req/s (batch avg {:.1})",

@@ -1,0 +1,184 @@
+//! Bench: §Perf — serving throughput, 1 vs N replicas (DESIGN.md §9).
+//!
+//! Closed-loop load over the artifact-free [`SimBackend`]: each batch
+//! costs a fixed wall time derived from the cycle-accurate simulator
+//! (scaled so a batch is a few ms), so throughput is dominated by how
+//! many batches the pool keeps in flight — exactly the quantity the
+//! multi-replica rework buys.  Replies are checked for completeness and
+//! determinism before any timing is trusted.
+//!
+//! Run: cargo bench --bench perf_serve [-- --smoke]
+//! `--smoke` shrinks the model/load for CI smoke runs
+//! (`ci.sh --bench-smoke`); the 2.5× acceptance floor (4 replicas vs 1)
+//! only applies to the full-size run.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::{Duration, Instant};
+
+use dybit::coordinator::{load_test, Policy, PoolConfig, Server, SimBackend, SimBackendCfg};
+use dybit::models::synthetic_resnet;
+use dybit::util::argparse::Args;
+use dybit::util::json::Json;
+use dybit::util::stats::Table;
+
+const FLOOR: f64 = 2.5;
+
+struct Run {
+    wall_s: f64,
+    rps: f64,
+    p50_ms: f64,
+    mean_batch: f64,
+    warm_class: usize,
+}
+
+/// One closed-loop trial: start a pool, warm it, drive `clients ×
+/// per_client` requests, and return throughput + reply bookkeeping.
+fn trial(cfg: &SimBackendCfg, replicas: usize, clients: usize, per_client: usize) -> Run {
+    let pool = PoolConfig {
+        policy: Policy {
+            max_batch: cfg.batch,
+            max_wait: Duration::from_micros(300),
+        },
+        queue_cap: 1024,
+        replicas,
+    };
+    let server = Server::start_pool(pool, SimBackend::factory(cfg.clone()))
+        .expect("pool start");
+    assert_eq!(server.replicas(), replicas);
+    assert_eq!(server.max_batch(), cfg.batch);
+    // fixed warm-up payload: also the cross-config determinism probe
+    let warm: Vec<f32> = (0..cfg.img_elems).map(|i| (i as f32).sin()).collect();
+    let warm_class = server.infer(warm).expect("warm inference");
+
+    let t0 = Instant::now();
+    load_test(&server, clients, per_client, cfg.img_elems).expect("load test");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snap = server.shutdown().expect("clean shutdown");
+
+    let submitted = (clients * per_client + 1) as u64; // +1 warm-up
+    assert_eq!(
+        snap.requests + snap.failed_requests + snap.rejected,
+        submitted,
+        "every submitted request must be accounted for"
+    );
+    assert_eq!(snap.errors, 0, "sim backend must not fail batches");
+    assert_eq!(snap.queue_depth, 0, "queue must drain");
+    let replica_batches: u64 = snap.per_replica.iter().map(|r| r.batches).sum();
+    assert_eq!(replica_batches, snap.batches);
+    Run {
+        wall_s,
+        rps: (clients * per_client) as f64 / wall_s,
+        p50_ms: snap.lat_p50_ms,
+        mean_batch: snap.mean_batch,
+        warm_class,
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+
+    // simulator-costed model: resnet-like stack; time_scale turns its
+    // simulated batch latency into a target wall cost per batch so the
+    // bench is load-bound, not compute-bound
+    let (depth, batch, target_batch_s) =
+        if smoke { (4, 4, 0.0005) } else { (8, 8, 0.002) };
+    let mut cfg = SimBackendCfg {
+        layers: synthetic_resnet(depth),
+        batch,
+        img_elems: 128,
+        classes: 10,
+        wbits: 4,
+        abits: 8,
+        seed: 13,
+        time_scale: 0.0,
+        fail_on: None,
+    };
+    let probe = SimBackend::new(cfg.clone()).expect("probe backend");
+    cfg.time_scale = target_batch_s / probe.sim_latency_s();
+
+    let (clients, per_client, trials) = if smoke { (8, 6, 1) } else { (32, 60, 3) };
+    let replica_counts = [1usize, 2, 4];
+
+    let mut t = Table::new(&[
+        "replicas", "wall", "req/s", "p50 batch lat", "mean batch", "speedup vs 1",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut best: Vec<(usize, Run)> = Vec::new();
+    for &r in &replica_counts {
+        // best-of-N absorbs scheduler noise on shared CI boxes
+        let mut runs: Vec<Run> = (0..trials)
+            .map(|_| trial(&cfg, r, clients, per_client))
+            .collect();
+        runs.sort_by(|a, b| a.rps.total_cmp(&b.rps));
+        best.push((r, runs.pop().expect("at least one trial")));
+    }
+    // the scorer is seeded per config, not per replica: every pool size
+    // must answer the warm-up payload identically
+    let warm0 = best[0].1.warm_class;
+    assert!(
+        best.iter().all(|(_, run)| run.warm_class == warm0),
+        "replica pools diverged on the same payload"
+    );
+
+    let rps1 = best[0].1.rps;
+    let mut speedup_at_4 = 0.0;
+    for (r, run) in &best {
+        let sp = run.rps / rps1;
+        if *r == 4 {
+            speedup_at_4 = sp;
+        }
+        t.row(vec![
+            r.to_string(),
+            format!("{:.3}s", run.wall_s),
+            format!("{:.0}", run.rps),
+            format!("{:.2}ms", run.p50_ms),
+            format!("{:.1}", run.mean_batch),
+            format!("{sp:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("replicas", Json::num(*r as f64)),
+            ("clients", Json::num(clients as f64)),
+            ("per_client", Json::num(per_client as f64)),
+            ("wall_s", Json::num(run.wall_s)),
+            ("rps", Json::num(run.rps)),
+            ("p50_ms", Json::num(run.p50_ms)),
+            ("mean_batch", Json::num(run.mean_batch)),
+            ("speedup_vs_1", Json::num(sp)),
+        ]));
+    }
+    t.print();
+
+    let floor_ok = smoke || speedup_at_4 >= FLOOR;
+    println!(
+        "\nserving throughput scaling over SimBackend (batch cost {:.1}ms \
+         simulated-cycle-derived); acceptance floor {FLOOR:.2}x at 4 replicas \
+         vs 1: {}",
+        target_batch_s * 1e3,
+        if smoke {
+            "n/a (smoke load)".to_string()
+        } else {
+            format!("{} ({speedup_at_4:.2}x)", if floor_ok { "PASS" } else { "FAIL" })
+        }
+    );
+    common::save_results(
+        "perf_serve",
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke)),
+            ("floor", Json::num(FLOOR)),
+            // null on smoke runs: the floor was never evaluated, and a
+            // persisted `true` would read as a gate that passed
+            ("floor_pass", if smoke { Json::Null } else { Json::Bool(floor_ok) }),
+            ("target_batch_s", Json::num(target_batch_s)),
+            ("rows", Json::Arr(rows)),
+        ]),
+    )
+    .expect("save perf results");
+    println!("perf_serve done");
+    if !floor_ok {
+        // make the floor a real gate: scripted full-size runs must fail
+        std::process::exit(1);
+    }
+}

@@ -4,9 +4,10 @@
 #   ./ci.sh               # fmt + clippy + tier-1 (build + bench build + tests)
 #   ./ci.sh --fast        # tier-1 only
 #   ./ci.sh --bench-smoke # additionally run the perf_search bench on tiny
-#                         # layer stacks and perf_calib on tiny tensors
-#                         # (quick end-to-end bench smoke); fails if any
-#                         # bench result JSON is missing or empty
+#                         # layer stacks, perf_calib on tiny tensors, and
+#                         # perf_serve on a tiny SimBackend pool (quick
+#                         # end-to-end bench smoke); fails if any bench
+#                         # result JSON is missing or empty
 #
 # Tier-1 must stay green; fmt/clippy keep the tree reviewable.  Benches
 # are built (not run) as part of tier-1 so bench bit-rot fails CI.
@@ -43,9 +44,12 @@ if [[ $bench_smoke -eq 1 ]]; then
   echo "==> bench smoke: perf_calib on tiny tensors"
   cargo bench --bench perf_calib -- --smoke
 
+  echo "==> bench smoke: perf_serve on a tiny SimBackend pool"
+  cargo bench --bench perf_serve -- --smoke
+
   # the smoke gate is only meaningful if the benches actually persisted
   # their results: a missing/empty JSON means a silently broken run
-  for name in perf_search perf_calib; do
+  for name in perf_search perf_calib perf_serve; do
     out="artifacts/results/${name}.json"
     if [[ ! -s "$out" ]]; then
       echo "ci.sh: bench smoke produced no usable $out" >&2

@@ -1,18 +1,23 @@
-//! Serving demo: the coordinator under closed-loop load.
+//! Serving demo: the replica pool under closed-loop load.
 //!
 //! Starts the batching server with a DyBit-quantized model and drives it
 //! with concurrent clients sending synthetic images; reports throughput,
-//! batch-formation quality and latency percentiles — the deployment-side
-//! view of the paper's accelerator.
+//! batch-formation quality, per-replica balance and latency percentiles
+//! — the deployment-side view of the paper's accelerator.
 //!
 //! Run: cargo run --release --example serve -- --model mlp --clients 8 \
-//!        --requests 64 [--wbits 4 --abits 8] [--pallas]
+//!        --requests 64 [--replicas 4] [--wbits 4 --abits 8] [--pallas]
+//!
+//! With `--sim` the pool serves the artifact-free simulator backend
+//! (DESIGN.md §9) — no PJRT runtime or compiled artifacts needed.
 
 use std::time::Duration;
 
 use anyhow::Result;
 
-use dybit::coordinator::{load_test, Policy, Server, ServerConfig};
+use dybit::coordinator::{
+    load_test, Policy, PoolConfig, Server, ServerConfig, SimBackend, SimBackendCfg,
+};
 use dybit::formats::Format;
 use dybit::qat::QuantConfig;
 use dybit::runtime::Manifest;
@@ -26,30 +31,55 @@ fn main() -> Result<()> {
     let wbits = args.get_usize("wbits", 4) as u32;
     let abits = args.get_usize("abits", 8) as u32;
     let wait_ms = args.get_usize("max-wait-ms", 5) as u64;
+    let replicas = args.get_usize("replicas", 1);
 
-    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
-    let entry = manifest
-        .models
-        .get(&model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
-    let img_elems: usize = entry.input.iter().skip(1).product();
-
-    let cfg = ServerConfig {
-        model: model.clone(),
-        qcfg: QuantConfig::uniform(entry.n_quant_layers, Format::DyBit, wbits, abits),
-        policy: Policy {
-            max_batch: entry.batch,
-            max_wait: Duration::from_millis(wait_ms),
-        },
-        queue_cap: 512,
-        pallas: args.has("pallas"),
+    let server = if args.has("sim") {
+        let cfg = SimBackendCfg {
+            wbits,
+            abits,
+            // --time-scale > 0 turns simulated cycles into wall time so
+            // replica scaling and latency percentiles become visible
+            time_scale: args.get_f64("time-scale", 0.0),
+            ..SimBackendCfg::tiny(17)
+        };
+        println!(
+            "serving sim backend as DyBit-ish ({wbits}/{abits}), batch<= {}, \
+             wait {wait_ms}ms, {replicas} replica(s), {clients} clients x {requests} reqs",
+            cfg.batch
+        );
+        Server::start_pool(
+            PoolConfig {
+                policy: Policy {
+                    max_batch: cfg.batch,
+                    max_wait: Duration::from_millis(wait_ms),
+                },
+                queue_cap: 512,
+                replicas,
+            },
+            SimBackend::factory(cfg),
+        )?
+    } else {
+        let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+        let entry = manifest.model(&model)?;
+        let cfg = ServerConfig {
+            model: model.clone(),
+            qcfg: QuantConfig::uniform(entry.n_quant_layers, Format::DyBit, wbits, abits),
+            policy: Policy {
+                max_batch: entry.batch,
+                max_wait: Duration::from_millis(wait_ms),
+            },
+            queue_cap: 512,
+            pallas: args.has("pallas"),
+            replicas,
+        };
+        println!(
+            "serving {model} as DyBit({wbits}/{abits}), batch<= {}, wait {wait_ms}ms, \
+             {replicas} replica(s), {clients} clients x {requests} reqs",
+            entry.batch
+        );
+        Server::start(&manifest, cfg)?
     };
-
-    println!(
-        "serving {model} as DyBit({wbits}/{abits}), batch<= {}, wait {}ms, {} clients x {} reqs",
-        entry.batch, wait_ms, clients, requests
-    );
-    let server = Server::start(&manifest, cfg)?;
+    let img_elems = server.img_elems();
 
     // one warm-up request so compile time doesn't pollute the measurement
     let _ = server.infer(vec![0.0; img_elems])?;
@@ -58,11 +88,15 @@ fn main() -> Result<()> {
     load_test(&server, clients, requests, img_elems)?;
     let wall = t0.elapsed().as_secs_f64();
 
-    let snap = server.shutdown();
+    let snap = server.shutdown()?;
     println!("\n== results ==");
     println!("requests          {}", snap.requests);
-    println!("batches           {} (mean size {:.1}, padded slots {}, errors {})",
-             snap.batches, snap.mean_batch, snap.padded_slots, snap.errors);
+    println!("batches           {} (mean size {:.1}, padded slots {}, errors {}, rejected {})",
+             snap.batches, snap.mean_batch, snap.padded_slots, snap.errors, snap.rejected);
+    for (i, r) in snap.per_replica.iter().enumerate() {
+        println!("  replica {i}       {} batches, {} requests, {} errors",
+                 r.batches, r.requests, r.errors);
+    }
     println!("batch latency     p50 {:.1}ms  p95 {:.1}ms  mean {:.1}ms",
              snap.lat_p50_ms, snap.lat_p95_ms, snap.lat_mean_ms);
     println!("throughput        {:.1} req/s (load-test wall {:.1}s)",

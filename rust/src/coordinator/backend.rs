@@ -1,0 +1,358 @@
+//! Pluggable inference backends for the serving pool (DESIGN.md §9).
+//!
+//! The worker's execute step — pad / forward / argmax over a compiled
+//! model — is abstracted behind [`InferenceBackend`] so the coordinator
+//! no longer hard-codes the PJRT artifact path.  Two implementations:
+//!
+//! * [`PjrtBackend`] — the original deployment shape: a `qat::Session` +
+//!   `runtime::Executor` pair executing the AOT-compiled fwd HLO.  Needs
+//!   built artifacts and a real PJRT runtime.
+//! * [`SimBackend`] — a deterministic stand-in that costs each batch with
+//!   the cycle-accurate [`crate::sim::Simulator`] (scaled into wall time)
+//!   and scores it with a seeded linear projection, so the whole serving
+//!   stack is buildable, testable, and benchable with **no artifacts**.
+//!
+//! Backends are constructed *on the replica's own worker thread* through
+//! a factory closure ([`BackendFactory`]): PJRT handles must not cross
+//! threads, and the factory pattern preserves that invariant for every
+//! backend while letting [`super::Server`] own N independent replicas.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::qat::{QuantConfig, Session};
+use crate::runtime::{Executor, Manifest};
+use crate::sim::{HwConfig, LayerShape, Prec, Simulator};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One replica's model executor: takes a padded `[batch, img_elems]`
+/// input tensor, returns `[batch, classes]` logits.  The worker loop
+/// (pad → forward → argmax → reply) lives in [`super::Server`]; a
+/// backend only supplies the forward pass and its static geometry.
+pub trait InferenceBackend {
+    /// Human-readable backend name (logs, error messages).
+    fn name(&self) -> &str;
+    /// Static batch dimension of the compiled/simulated model.
+    fn batch(&self) -> usize;
+    /// Flattened elements per image.
+    fn img_elems(&self) -> usize;
+    /// Forward a padded `[batch, img_elems]` batch to `[batch, classes]`
+    /// logits.  Takes the tensor by value (the worker builds a fresh one
+    /// per chunk, so backends can reshape without copying).  An `Err`
+    /// fails the whole batch (every request in it gets an error reply);
+    /// it must not kill the replica.
+    fn forward(&mut self, x: Tensor) -> Result<Tensor>;
+}
+
+/// Constructs one backend per replica, invoked with the replica id on
+/// that replica's own thread (PJRT handles are not shared across
+/// threads; `Send`/`Sync` is required of the *factory*, not the
+/// backend).
+pub type BackendFactory =
+    Arc<dyn Fn(usize) -> Result<Box<dyn InferenceBackend>> + Send + Sync>;
+
+// ---------------------------------------------------------------------------
+// PJRT-artifact backend
+// ---------------------------------------------------------------------------
+
+/// The artifact-backed backend: `Session` + `Executor` executing the
+/// quantized fwd HLO, exactly the worker preamble the pre-§9 server
+/// inlined.
+pub struct PjrtBackend {
+    exec: Executor,
+    session: Session,
+    qcfg: QuantConfig,
+    pallas: bool,
+    batch: usize,
+    img_elems: usize,
+    input_shape: Vec<usize>,
+}
+
+impl PjrtBackend {
+    /// Build and warm one backend: creates the PJRT client, loads the
+    /// model's parameters, and compiles the fwd artifact so the first
+    /// request isn't a stall.  Every failure here is a *startup* error —
+    /// the server surfaces it from `Server::start` via the readiness
+    /// handshake (DESIGN.md §9).
+    pub fn new(manifest: &Manifest, model: &str, qcfg: QuantConfig,
+               pallas: bool) -> Result<Self> {
+        let entry = manifest.model(model)?;
+        let batch = entry.batch;
+        let input_shape = entry.input.clone();
+        let img_elems: usize = input_shape.iter().skip(1).product();
+        ensure!(batch >= 1, "{model}: batch dim must be >= 1");
+        ensure!(img_elems >= 1, "{model}: empty input shape");
+        let mut exec = Executor::new(&manifest.dir)?;
+        let session = Session::new(manifest, model)?;
+        let tag = if pallas { "fwd_pallas" } else { "fwd" };
+        let art = session.model.artifact(tag)?.file.clone();
+        exec.load(&art)?;
+        Ok(PjrtBackend { exec, session, qcfg, pallas, batch, img_elems, input_shape })
+    }
+
+    /// A [`BackendFactory`] giving each replica its own client/session
+    /// over a shared manifest.
+    pub fn factory(manifest: Manifest, model: String, qcfg: QuantConfig,
+                   pallas: bool) -> BackendFactory {
+        Arc::new(move |_replica| {
+            Ok(Box::new(PjrtBackend::new(&manifest, &model, qcfg.clone(), pallas)?)
+                as Box<dyn InferenceBackend>)
+        })
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn img_elems(&self) -> usize {
+        self.img_elems
+    }
+
+    fn forward(&mut self, x: Tensor) -> Result<Tensor> {
+        // the worker pads to [batch, img_elems]; the HLO wants the
+        // model's full input shape (e.g. NHWC) — reshape in place
+        let x = x.reshape(self.input_shape.clone())?;
+        self.session.forward(&mut self.exec, &self.qcfg, &x, self.pallas)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulator-costed deterministic backend
+// ---------------------------------------------------------------------------
+
+/// Configuration of a [`SimBackend`].
+#[derive(Clone, Debug)]
+pub struct SimBackendCfg {
+    /// Layer stack fed to the cycle-accurate simulator (e.g.
+    /// [`crate::models::synthetic_resnet`]).
+    pub layers: Vec<LayerShape>,
+    /// Static batch dimension (the simulator's M scales with it).
+    pub batch: usize,
+    /// Flattened elements per image.
+    pub img_elems: usize,
+    /// Number of output classes.
+    pub classes: usize,
+    /// Uniform weight/activation bitwidths for the cycle cost (2/4/8).
+    pub wbits: u32,
+    /// See `wbits`.
+    pub abits: u32,
+    /// Seed of the linear scorer; equal seeds ⇒ bit-identical logits,
+    /// so every replica of a pool answers identically.
+    pub seed: u64,
+    /// Wall-seconds slept per simulated second: each `forward` sleeps
+    /// `sim_latency × time_scale`.  `0.0` disables sleeping (unit
+    /// tests); benches pick a scale that makes a batch a few ms so
+    /// replica scaling is measurable.
+    pub time_scale: f64,
+    /// Fault injection: if any input element is bit-equal to this
+    /// sentinel, `forward` fails the whole batch.  Lets tests and
+    /// benches exercise the coordinator's error path deterministically.
+    pub fail_on: Option<f32>,
+}
+
+impl SimBackendCfg {
+    /// A small artifact-free serving model: 6-layer synthetic ResNet
+    /// geometry, batch 4, 64-element images, 10 classes, no sleeping.
+    pub fn tiny(seed: u64) -> Self {
+        SimBackendCfg {
+            layers: crate::models::synthetic_resnet(4),
+            batch: 4,
+            img_elems: 64,
+            classes: 10,
+            wbits: 4,
+            abits: 8,
+            seed,
+            time_scale: 0.0,
+            fail_on: None,
+        }
+    }
+}
+
+/// Deterministic simulator-costed backend (DESIGN.md §9): latency from
+/// the cycle-accurate ZCU102 model at the configured uniform precision,
+/// logits from a seeded random linear projection of the input.
+pub struct SimBackend {
+    cfg: SimBackendCfg,
+    /// `classes × img_elems` scorer weights, row-major.
+    weights: Vec<f32>,
+    /// Wall-clock cost per batch (already `time_scale`-d).
+    cost: Duration,
+    /// Unscaled simulated latency of one batch, for reporting.
+    sim_latency_s: f64,
+}
+
+impl SimBackend {
+    pub fn new(cfg: SimBackendCfg) -> Result<Self> {
+        ensure!(cfg.batch >= 1, "sim backend: batch must be >= 1");
+        ensure!(cfg.img_elems >= 1, "sim backend: img_elems must be >= 1");
+        ensure!(cfg.classes >= 1, "sim backend: classes must be >= 1");
+        ensure!(!cfg.layers.is_empty(), "sim backend: empty layer stack");
+        ensure!(
+            cfg.time_scale.is_finite() && cfg.time_scale >= 0.0,
+            "sim backend: time_scale must be finite and >= 0"
+        );
+        let pw = Prec::from_bits(cfg.wbits)
+            .ok_or_else(|| anyhow!("sim backend: wbits must be 2/4/8, got {}", cfg.wbits))?;
+        let pa = Prec::from_bits(cfg.abits)
+            .ok_or_else(|| anyhow!("sim backend: abits must be 2/4/8, got {}", cfg.abits))?;
+        let mut sim = Simulator::new(HwConfig::zcu102(), cfg.layers.clone(), cfg.batch);
+        let assign = vec![(pw, pa); sim.layers.len()];
+        let sim_latency_s = sim.run(&assign).latency_s;
+        let cost = Duration::from_secs_f64(sim_latency_s * cfg.time_scale);
+        // ~unit-variance logits regardless of img_elems
+        let mut rng = Rng::new(cfg.seed);
+        let norm = 1.0 / (cfg.img_elems as f32).sqrt();
+        let weights = (0..cfg.classes * cfg.img_elems)
+            .map(|_| rng.normal() as f32 * norm)
+            .collect();
+        Ok(SimBackend { cfg, weights, cost, sim_latency_s })
+    }
+
+    /// A [`BackendFactory`] whose replicas share one config (and thus
+    /// one scorer seed — all replicas answer identically).
+    pub fn factory(cfg: SimBackendCfg) -> BackendFactory {
+        Arc::new(move |_replica| {
+            Ok(Box::new(SimBackend::new(cfg.clone())?) as Box<dyn InferenceBackend>)
+        })
+    }
+
+    /// Simulated (unscaled) latency of one batch in seconds.
+    pub fn sim_latency_s(&self) -> f64 {
+        self.sim_latency_s
+    }
+
+    /// Wall-clock sleep applied per batch after `time_scale`.
+    pub fn batch_cost(&self) -> Duration {
+        self.cost
+    }
+}
+
+impl InferenceBackend for SimBackend {
+    fn name(&self) -> &str {
+        "sim"
+    }
+
+    fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn img_elems(&self) -> usize {
+        self.cfg.img_elems
+    }
+
+    fn forward(&mut self, x: Tensor) -> Result<Tensor> {
+        ensure!(
+            x.shape == [self.cfg.batch, self.cfg.img_elems],
+            "sim backend: input shape {:?}, want [{}, {}]",
+            x.shape,
+            self.cfg.batch,
+            self.cfg.img_elems
+        );
+        if let Some(s) = self.cfg.fail_on {
+            if x.data.iter().any(|v| v.to_bits() == s.to_bits()) {
+                bail!("sim backend: injected failure (sentinel {s} in batch)");
+            }
+        }
+        if !self.cost.is_zero() {
+            std::thread::sleep(self.cost);
+        }
+        let (b, d, c) = (self.cfg.batch, self.cfg.img_elems, self.cfg.classes);
+        let mut logits = vec![0.0f32; b * c];
+        for r in 0..b {
+            let row = &x.data[r * d..(r + 1) * d];
+            for k in 0..c {
+                let w = &self.weights[k * d..(k + 1) * d];
+                logits[r * c + k] = row.iter().zip(w).map(|(a, b)| a * b).sum();
+            }
+        }
+        Tensor::new(vec![b, c], logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_backend_is_deterministic_across_instances() {
+        let cfg = SimBackendCfg::tiny(11);
+        let mut a = SimBackend::new(cfg.clone()).unwrap();
+        let mut b = SimBackend::new(cfg).unwrap();
+        let mut rng = Rng::new(5);
+        let x = Tensor::new(vec![4, 64], rng.normal_vec(4 * 64)).unwrap();
+        let la = a.forward(x.clone()).unwrap();
+        let lb = b.forward(x).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(la.shape, vec![4, 10]);
+        assert_eq!(la.argmax_rows(), lb.argmax_rows());
+    }
+
+    #[test]
+    fn sim_backend_costs_batches_with_the_simulator() {
+        let sb = SimBackend::new(SimBackendCfg::tiny(1)).unwrap();
+        assert!(sb.sim_latency_s() > 0.0);
+        assert!(sb.batch_cost().is_zero()); // tiny() has time_scale 0
+        let mut cfg = SimBackendCfg::tiny(1);
+        cfg.time_scale = 2.0;
+        let sb2 = SimBackend::new(cfg).unwrap();
+        let want = Duration::from_secs_f64(sb.sim_latency_s() * 2.0);
+        let got = sb2.batch_cost();
+        let delta = if got > want { got - want } else { want - got };
+        assert!(delta < Duration::from_micros(1), "{got:?} vs {want:?}");
+    }
+
+    #[test]
+    fn lower_precision_costs_fewer_simulated_seconds() {
+        let mut lo = SimBackendCfg::tiny(1);
+        lo.wbits = 2;
+        lo.abits = 2;
+        let mut hi = SimBackendCfg::tiny(1);
+        hi.wbits = 8;
+        hi.abits = 8;
+        let lo = SimBackend::new(lo).unwrap();
+        let hi = SimBackend::new(hi).unwrap();
+        assert!(lo.sim_latency_s() < hi.sim_latency_s());
+    }
+
+    #[test]
+    fn sim_backend_rejects_bad_shapes_and_bits() {
+        let mut b = SimBackend::new(SimBackendCfg::tiny(1)).unwrap();
+        assert!(b.forward(Tensor::zeros(&[4, 63])).is_err());
+        let mut cfg = SimBackendCfg::tiny(1);
+        cfg.wbits = 3;
+        assert!(SimBackend::new(cfg).is_err());
+    }
+
+    #[test]
+    fn fail_sentinel_fails_the_batch() {
+        let mut cfg = SimBackendCfg::tiny(1);
+        cfg.fail_on = Some(42.5);
+        let mut b = SimBackend::new(cfg).unwrap();
+        let mut x = Tensor::zeros(&[4, 64]);
+        assert!(b.forward(x.clone()).is_ok());
+        x.data[100] = 42.5;
+        let err = b.forward(x).unwrap_err();
+        assert!(format!("{err:#}").contains("injected"));
+    }
+
+    #[test]
+    fn factory_builds_per_replica_instances() {
+        let f = SimBackend::factory(SimBackendCfg::tiny(3));
+        let mut a = f(0).unwrap();
+        let mut b = f(1).unwrap();
+        assert_eq!(a.batch(), 4);
+        assert_eq!(a.img_elems(), 64);
+        assert_eq!(a.name(), "sim");
+        let x = Tensor::zeros(&[4, 64]);
+        assert_eq!(a.forward(x.clone()).unwrap(), b.forward(x).unwrap());
+    }
+}

@@ -7,6 +7,7 @@
 //! in a worker loop.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 /// One enqueued inference request.
@@ -78,6 +79,21 @@ pub fn assemble<T, R>(rx: &Receiver<Request<T, R>>, policy: Policy) -> Assembled
         }
     }
     Assembled::Batch(batch)
+}
+
+/// Multi-consumer assembly over one shared intake (DESIGN.md §9): std
+/// mpsc receivers are single-consumer, so pool replicas share the queue
+/// through a mutex.  Exactly one replica assembles at a time — holding
+/// the lock until the first request arrives (unbounded on an idle
+/// queue, where siblings could not have received anything anyway) plus
+/// at most one batch window — and then executes *outside* the lock, so
+/// batch formation pipelines with execution across replicas.  The lock
+/// is poison-recovering like the metrics lock: a replica that panicked
+/// elsewhere must not wedge the others.
+pub fn assemble_shared<T, R>(rx: &Mutex<Receiver<Request<T, R>>>,
+                             policy: Policy) -> Assembled<T, R> {
+    let rx = rx.lock().unwrap_or_else(PoisonError::into_inner);
+    assemble(&rx, policy)
 }
 
 #[cfg(test)]
@@ -155,6 +171,29 @@ mod tests {
             Assembled::Batch(b) => assert_eq!(b.len(), 1),
             _ => panic!("expected batch"),
         }
+    }
+
+    #[test]
+    fn shared_receiver_splits_load_across_consumers() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..6 {
+            tx.send(req(i).0).unwrap();
+        }
+        drop(tx);
+        let rx = Mutex::new(rx);
+        let policy = Policy { max_batch: 2, max_wait: Duration::from_millis(1) };
+        let mut seen = Vec::new();
+        loop {
+            match assemble_shared(&rx, policy) {
+                Assembled::Batch(b) => {
+                    assert!(b.len() <= 2);
+                    seen.extend(b.iter().map(|r| r.payload));
+                }
+                Assembled::Closed => break,
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
     }
 
     #[test]

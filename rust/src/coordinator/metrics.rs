@@ -1,4 +1,14 @@
-//! Serving metrics: request/batch/error counters + latency percentiles.
+//! Serving metrics: request/batch/error counters + latency percentiles,
+//! kept both globally and per replica (DESIGN.md §9), plus a queue-depth
+//! gauge over the shared intake.
+//!
+//! Accounting invariant (asserted by the coordinator e2e tests): every
+//! request the server accepted ends in exactly one of three buckets —
+//! `requests` (answered from a successful batch), `failed_requests`
+//! (slot in a batch whose execution failed; the client got an `Err`
+//! reply), or `rejected` (invalid payload answered `Err` before
+//! execution) — so `requests + failed_requests + rejected` equals the
+//! number of submitted requests once the queue drains.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, PoisonError};
@@ -13,9 +23,17 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-/// Shared, thread-safe metrics sink for the coordinator.
+/// Per-replica counters (one slot per pool worker).
 #[derive(Default)]
+pub struct ReplicaCounters {
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    pub requests: AtomicU64,
+}
+
+/// Shared, thread-safe metrics sink for the coordinator.
 pub struct Metrics {
+    /// Requests answered from successful batches.
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
@@ -23,8 +41,32 @@ pub struct Metrics {
     /// received an error reply).  Success counters above are untouched
     /// by failures.
     pub errors: AtomicU64,
+    /// Requests that sat in failed batches (each got an `Err` reply).
+    pub failed_requests: AtomicU64,
+    /// Requests answered `Err` before execution (invalid payload — the
+    /// worker refuses to zero-pad them into a fabricated class).
+    pub rejected: AtomicU64,
+    /// Gauge: requests accepted into the intake queue and not yet
+    /// pulled into a batch by a replica.  Maintained by
+    /// `queue_push`/`queue_pop`; returns to 0 once the pool drains.
+    pub queue_depth: AtomicU64,
+    per_replica: Vec<ReplicaCounters>,
     latencies_s: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<usize>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new(1)
+    }
+}
+
+/// Per-replica slice of a [`Snapshot`].
+#[derive(Clone, Debug)]
+pub struct ReplicaSnapshot {
+    pub batches: u64,
+    pub errors: u64,
+    pub requests: u64,
 }
 
 /// Immutable snapshot for reporting.
@@ -34,6 +76,10 @@ pub struct Snapshot {
     pub batches: u64,
     pub padded_slots: u64,
     pub errors: u64,
+    pub failed_requests: u64,
+    pub rejected: u64,
+    pub queue_depth: u64,
+    pub per_replica: Vec<ReplicaSnapshot>,
     pub mean_batch: f64,
     pub lat_p50_ms: f64,
     pub lat_p95_ms: f64,
@@ -42,21 +88,74 @@ pub struct Snapshot {
 }
 
 impl Metrics {
-    pub fn record_batch(&self, size: usize, latency_s: f64, padded: usize) {
+    /// Metrics sink with one per-replica counter slot per pool worker.
+    pub fn new(replicas: usize) -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            padded_slots: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            failed_requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            per_replica: (0..replicas.max(1)).map(|_| ReplicaCounters::default()).collect(),
+            latencies_s: Mutex::new(Vec::new()),
+            batch_sizes: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.per_replica.len()
+    }
+
+    /// A successful batch executed by `replica`.
+    pub fn record_batch(&self, replica: usize, size: usize, latency_s: f64, padded: usize) {
         self.requests.fetch_add(size as u64, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.padded_slots.fetch_add(padded as u64, Ordering::Relaxed);
+        if let Some(r) = self.per_replica.get(replica) {
+            r.batches.fetch_add(1, Ordering::Relaxed);
+            r.requests.fetch_add(size as u64, Ordering::Relaxed);
+        }
         lock(&self.latencies_s).push(latency_s);
         lock(&self.batch_sizes).push(size);
     }
 
-    /// A batch that failed end-to-end: count it in `errors` and record
-    /// its latency (failed batches consume worker wall time too, so
-    /// hiding them would bias the percentiles), leaving the
-    /// success-only request/batch/padding counters untouched.
-    pub fn record_error(&self, latency_s: f64) {
+    /// A batch of `size` requests that failed end-to-end on `replica`:
+    /// count it in `errors`/`failed_requests` and record its latency
+    /// (failed batches consume worker wall time too, so hiding them
+    /// would bias the percentiles), leaving the success-only
+    /// request/batch/padding counters untouched.
+    pub fn record_error(&self, replica: usize, size: usize, latency_s: f64) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+        self.failed_requests.fetch_add(size as u64, Ordering::Relaxed);
+        if let Some(r) = self.per_replica.get(replica) {
+            r.errors.fetch_add(1, Ordering::Relaxed);
+        }
         lock(&self.latencies_s).push(latency_s);
+    }
+
+    /// A request answered `Err` before execution (invalid payload).
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request accepted into the intake queue.
+    pub fn queue_push(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` requests pulled from the intake into a batch.  Saturating as
+    /// a defensive backstop (pushes always precede the matching send,
+    /// so a balanced caller never underflows; wrapping would turn any
+    /// future accounting bug into a ~u64::MAX gauge).
+    pub fn queue_pop(&self, n: usize) {
+        let n = n as u64;
+        let _ = self
+            .queue_depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+                Some(d.saturating_sub(n))
+            });
     }
 
     pub fn snapshot(&self, elapsed_s: f64) -> Snapshot {
@@ -68,7 +167,9 @@ impl Metrics {
         let (p50, p95, mean) = if lats.is_empty() {
             (0.0, 0.0, 0.0)
         } else {
-            lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp, not partial_cmp().unwrap(): a NaN latency (e.g.
+            // a clock anomaly) must not panic the metrics path
+            lats.sort_unstable_by(f64::total_cmp);
             (percentile(&lats, 50.0), percentile(&lats, 95.0), summarize(&lats).mean)
         };
         Snapshot {
@@ -76,6 +177,18 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            failed_requests: self.failed_requests.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            per_replica: self
+                .per_replica
+                .iter()
+                .map(|r| ReplicaSnapshot {
+                    batches: r.batches.load(Ordering::Relaxed),
+                    errors: r.errors.load(Ordering::Relaxed),
+                    requests: r.requests.load(Ordering::Relaxed),
+                })
+                .collect(),
             mean_batch: if sizes.is_empty() {
                 0.0
             } else {
@@ -100,8 +213,8 @@ mod tests {
     #[test]
     fn snapshot_aggregates() {
         let m = Metrics::default();
-        m.record_batch(4, 0.010, 28);
-        m.record_batch(2, 0.020, 30);
+        m.record_batch(0, 4, 0.010, 28);
+        m.record_batch(0, 2, 0.020, 30);
         let s = m.snapshot(1.0);
         assert_eq!(s.requests, 6);
         assert_eq!(s.batches, 2);
@@ -117,23 +230,83 @@ mod tests {
         let s = m.snapshot(0.0);
         assert_eq!(s.requests, 0);
         assert_eq!(s.errors, 0);
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.queue_depth, 0);
         assert_eq!(s.lat_p50_ms, 0.0);
+        assert_eq!(s.per_replica.len(), 1);
     }
 
     #[test]
     fn record_error_counts_and_keeps_latency() {
         let m = Metrics::default();
-        m.record_batch(4, 0.010, 0);
-        m.record_error(0.500); // slow failed batch
-        m.record_error(0.400);
+        m.record_batch(0, 4, 0.010, 0);
+        m.record_error(0, 3, 0.500); // slow failed batch
+        m.record_error(0, 1, 0.400);
         let s = m.snapshot(1.0);
         // failures never inflate the success counters…
         assert_eq!(s.requests, 4);
         assert_eq!(s.batches, 1);
         assert_eq!(s.errors, 2);
+        assert_eq!(s.failed_requests, 4);
         assert!((s.mean_batch - 4.0).abs() < 1e-12);
         // …but their wall time shows up in the latency series
         assert!(s.lat_p95_ms > 100.0, "p95 {} must see the failures", s.lat_p95_ms);
         assert!((s.lat_mean_ms - (10.0 + 500.0 + 400.0) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_replica_counters_sum_to_globals() {
+        let m = Metrics::new(3);
+        m.record_batch(0, 4, 0.010, 0);
+        m.record_batch(1, 2, 0.011, 2);
+        m.record_batch(1, 3, 0.012, 1);
+        m.record_error(2, 4, 0.5);
+        let s = m.snapshot(1.0);
+        assert_eq!(s.per_replica.len(), 3);
+        let b: u64 = s.per_replica.iter().map(|r| r.batches).sum();
+        let e: u64 = s.per_replica.iter().map(|r| r.errors).sum();
+        let q: u64 = s.per_replica.iter().map(|r| r.requests).sum();
+        assert_eq!(b, s.batches);
+        assert_eq!(e, s.errors);
+        assert_eq!(q, s.requests);
+        assert_eq!(s.per_replica[1].batches, 2);
+        assert_eq!(s.per_replica[2].errors, 1);
+    }
+
+    #[test]
+    fn out_of_range_replica_still_counts_globally() {
+        // Default() has one slot; recording on a phantom replica id must
+        // not panic and must keep the global counters correct.
+        let m = Metrics::default();
+        m.record_batch(7, 2, 0.01, 0);
+        m.record_error(7, 1, 0.01);
+        let s = m.snapshot(1.0);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.per_replica[0].batches, 0);
+    }
+
+    #[test]
+    fn queue_gauge_tracks_and_saturates() {
+        let m = Metrics::default();
+        m.queue_push();
+        m.queue_push();
+        m.queue_push();
+        assert_eq!(m.snapshot(1.0).queue_depth, 3);
+        m.queue_pop(2);
+        assert_eq!(m.snapshot(1.0).queue_depth, 1);
+        m.queue_pop(5); // unbalanced pop clamps at zero
+        assert_eq!(m.snapshot(1.0).queue_depth, 0);
+    }
+
+    #[test]
+    fn nan_latency_does_not_panic_snapshot() {
+        // regression: the latency sort used partial_cmp().unwrap(), so a
+        // single NaN sample panicked every later snapshot() call
+        let m = Metrics::default();
+        m.record_batch(0, 1, f64::NAN, 0);
+        m.record_batch(0, 1, 0.010, 0);
+        let s = m.snapshot(1.0);
+        assert_eq!(s.requests, 2);
     }
 }

@@ -1,11 +1,15 @@
 //! L3 coordinator: the serving deployment of the quantized model —
-//! bounded intake queue, dynamic batcher (size+deadline), PJRT worker,
-//! latency/throughput metrics.
+//! bounded intake queue, dynamic batcher (size+deadline), a pool of
+//! replica workers over a pluggable [`InferenceBackend`] (PJRT
+//! artifacts or the artifact-free simulator backend), latency/
+//! throughput/per-replica metrics (DESIGN.md §9).
 
+pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod server;
 
+pub use backend::{BackendFactory, InferenceBackend, PjrtBackend, SimBackend, SimBackendCfg};
 pub use batcher::{Policy, Request};
-pub use metrics::{Metrics, Snapshot};
-pub use server::{load_test, Server, ServerConfig};
+pub use metrics::{Metrics, ReplicaSnapshot, Snapshot};
+pub use server::{load_test, PoolConfig, Server, ServerConfig};

@@ -1,32 +1,38 @@
-//! Inference server: bounded intake queue -> dynamic batcher -> PJRT
-//! worker executing the quantized fwd HLO -> per-request responses.
+//! Inference server: bounded intake queue -> dynamic batcher -> a pool
+//! of replica workers over a pluggable [`InferenceBackend`] -> per-
+//! request responses (DESIGN.md §9).
 //!
-//! The worker thread owns the Session + Executor (PJRT handles are not
-//! shared across threads); clients talk through channels.  This is the
-//! deployment shape of the paper's accelerator: DyBit quantization config
-//! is chosen once (by the search framework) and applied as runtime inputs
-//! on every batch.
+//! Each replica thread owns its own backend instance (PJRT handles are
+//! not shared across threads; the factory runs on the replica's thread)
+//! and pulls batches from the shared intake queue, so batching still
+//! amortizes per replica while independent replicas execute in
+//! parallel.  A readiness handshake makes startup failures surface from
+//! [`Server::start_pool`] instead of vanishing into a dead thread, and
+//! [`Server::shutdown`] returns any worker error after the drain.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, SyncSender};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
-use crate::qat::{QuantConfig, Session};
-use crate::runtime::{Executor, Manifest};
+use crate::qat::QuantConfig;
+use crate::runtime::Manifest;
 use crate::tensor::Tensor;
+use crate::util::threadpool::payload_msg;
 
-use super::batcher::{assemble, Assembled, Policy, Request};
+use super::backend::{BackendFactory, InferenceBackend, PjrtBackend};
+use super::batcher::{assemble_shared, Assembled, Policy, Request};
 use super::metrics::{Metrics, Snapshot};
 
 /// One image in, one class index out.
 type Payload = Vec<f32>;
-type Reply = Result<usize, String>;
+type Reply = std::result::Result<usize, String>;
 
-/// Server configuration.
+/// PJRT server configuration ([`Server::start`]).
 #[derive(Clone)]
 pub struct ServerConfig {
     pub model: String,
@@ -35,12 +41,36 @@ pub struct ServerConfig {
     pub queue_cap: usize,
     /// Use the Pallas-kernel fwd artifact if available.
     pub pallas: bool,
+    /// Worker replicas pulling from the shared intake (>= 1).
+    pub replicas: usize,
+}
+
+/// Backend-agnostic pool configuration ([`Server::start_pool`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    pub policy: Policy,
+    pub queue_cap: usize,
+    /// Worker replicas pulling from the shared intake (>= 1).
+    pub replicas: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { policy: Policy::default(), queue_cap: 256, replicas: 1 }
+    }
+}
+
+/// What a replica reports through the readiness handshake once its
+/// backend is constructed and warmed.
+struct Ready {
+    batch: usize,
+    img_elems: usize,
 }
 
 /// Running server handle.
 pub struct Server {
     tx: Option<SyncSender<Request<Payload, Reply>>>,
-    worker: Option<JoinHandle<Result<()>>>,
+    workers: Vec<JoinHandle<Result<()>>>,
     pub metrics: Arc<Metrics>,
     started: Instant,
     img_elems: usize,
@@ -48,73 +78,97 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the worker; compiles the fwd artifact before returning.
+    /// Start a PJRT-backed pool; compiles the fwd artifact on every
+    /// replica before returning.  Convenience wrapper over
+    /// [`Server::start_pool`] with a [`PjrtBackend`] factory.
     pub fn start(manifest: &Manifest, cfg: ServerConfig) -> Result<Server> {
-        let metrics = Arc::new(Metrics::default());
-        let m = metrics.clone();
-        let entry = manifest
-            .models
-            .get(&cfg.model)
-            .ok_or_else(|| anyhow!("unknown model {}", cfg.model))?;
-        let batch = entry.batch;
-        let img_elems: usize = entry.input.iter().skip(1).product();
-        let input_shape = entry.input.clone();
-        let (tx, rx) = sync_channel::<Request<Payload, Reply>>(cfg.queue_cap);
+        let entry = manifest.model(&cfg.model)?;
+        // reconcile the batching policy with the model's static batch
+        // dim up front: a `Policy::default()` of 32 against a smaller
+        // compiled batch used to slice out of bounds in the worker
+        let policy = Policy {
+            max_batch: cfg.policy.max_batch.clamp(1, entry.batch.max(1)),
+            ..cfg.policy
+        };
+        let factory = PjrtBackend::factory(
+            manifest.clone(),
+            cfg.model.clone(),
+            cfg.qcfg.clone(),
+            cfg.pallas,
+        );
+        Server::start_pool(
+            PoolConfig { policy, queue_cap: cfg.queue_cap, replicas: cfg.replicas },
+            factory,
+        )
+    }
 
-        let manifest = manifest.clone();
-        let worker = std::thread::spawn(move || -> Result<()> {
-            let mut exec = Executor::new(&manifest.dir)?;
-            let mut session = Session::new(&manifest, &cfg.model)?;
-            // compile before serving so the first request isn't a stall
-            let tag = if cfg.pallas { "fwd_pallas" } else { "fwd" };
-            let art = session.model.artifact(tag)?.file.clone();
-            exec.load(&art)?;
-            loop {
-                match assemble(&rx, cfg.policy) {
-                    Assembled::Closed => return Ok(()),
-                    Assembled::Batch(reqs) => {
-                        let t0 = Instant::now();
-                        let n = reqs.len();
-                        // pad to the static batch dim
-                        let mut xdata = vec![0.0f32; batch * img_elems];
-                        for (i, r) in reqs.iter().enumerate() {
-                            if r.payload.len() == img_elems {
-                                xdata[i * img_elems..(i + 1) * img_elems]
-                                    .copy_from_slice(&r.payload);
-                            }
-                        }
-                        let x = Tensor::new(input_shape.clone(), xdata)?;
-                        let out = session.forward(&mut exec, &cfg.qcfg, &x, cfg.pallas);
-                        let dt = t0.elapsed().as_secs_f64();
-                        match out {
-                            Ok(logits) => {
-                                let preds = logits.argmax_rows();
-                                for (i, r) in reqs.iter().enumerate() {
-                                    let _ = r.respond.send(Ok(preds[i]));
-                                }
-                                m.record_batch(n, dt, batch - n);
-                            }
-                            Err(e) => {
-                                let msg = format!("{e:#}");
-                                for r in &reqs {
-                                    let _ = r.respond.send(Err(msg.clone()));
-                                }
-                                // failed batches are accounted too: the
-                                // error counter + their wall time
-                                m.record_error(dt);
-                            }
-                        }
+    /// Start `pool.replicas` workers over `factory`-built backends, all
+    /// pulling from one bounded intake queue.  Blocks until every
+    /// replica reports ready; any replica's startup failure (backend
+    /// construction error or panic) fails the whole start.
+    pub fn start_pool(pool: PoolConfig, factory: BackendFactory) -> Result<Server> {
+        ensure!(pool.replicas >= 1, "server needs at least one replica");
+        ensure!(pool.queue_cap >= 1, "server needs a non-zero queue");
+        let metrics = Arc::new(Metrics::new(pool.replicas));
+        let (tx, rx) = sync_channel::<Request<Payload, Reply>>(pool.queue_cap);
+        let rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) =
+            std::sync::mpsc::channel::<(usize, std::result::Result<Ready, String>)>();
+
+        let mut workers = Vec::with_capacity(pool.replicas);
+        for id in 0..pool.replicas {
+            let rx = Arc::clone(&rx);
+            let factory = Arc::clone(&factory);
+            let m = Arc::clone(&metrics);
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                replica_main(id, &rx, pool.policy, &factory, &m, ready)
+            }));
+        }
+        drop(ready_tx);
+
+        // readiness handshake: collect one report per replica; the
+        // handshake channel closes early only if a worker died without
+        // reporting (a panic outside the guarded factory call)
+        let mut batch = usize::MAX;
+        let mut img_elems: Option<usize> = None;
+        let mut failures: Vec<String> = Vec::new();
+        for _ in 0..pool.replicas {
+            match ready_rx.recv() {
+                Ok((id, Ok(r))) => {
+                    batch = batch.min(r.batch);
+                    match img_elems {
+                        None => img_elems = Some(r.img_elems),
+                        Some(e) if e != r.img_elems => failures.push(format!(
+                            "replica {id}: backend img_elems {} disagrees with {e}",
+                            r.img_elems
+                        )),
+                        Some(_) => {}
                     }
                 }
+                Ok((id, Err(msg))) => failures.push(format!("replica {id}: {msg}")),
+                Err(_) => {
+                    failures.push("a replica died before reporting readiness".into());
+                    break;
+                }
             }
-        });
+        }
+        if !failures.is_empty() || img_elems.is_none() {
+            // close the intake and reap every worker before failing so
+            // no thread outlives the failed start
+            drop(tx);
+            for w in workers {
+                let _ = w.join();
+            }
+            return Err(anyhow!("server start failed: {}", failures.join("; ")));
+        }
 
         Ok(Server {
             tx: Some(tx),
-            worker: Some(worker),
+            workers,
             metrics,
             started: Instant::now(),
-            img_elems,
+            img_elems: img_elems.unwrap(),
             batch,
         })
     }
@@ -127,32 +181,71 @@ impl Server {
             .map_err(|e| anyhow!(e))
     }
 
-    /// Async submit; returns the response channel.
+    /// Async submit; returns the response channel.  Rejects payloads of
+    /// the wrong length before they enter the queue.
     pub fn submit(&self, image: Vec<f32>) -> Result<std::sync::mpsc::Receiver<Reply>> {
         if image.len() != self.img_elems {
             return Err(anyhow!("image must have {} elements", self.img_elems));
         }
+        self.submit_unchecked(image)
+    }
+
+    /// Async submit without the payload-length precheck.  The worker
+    /// validates defensively and answers `Err` for malformed payloads —
+    /// it never zero-pads them into a fabricated class — so this is
+    /// safe for callers that assemble [`Request`]s from untrusted
+    /// sources (and for tests of exactly that path).
+    pub fn submit_unchecked(&self, image: Vec<f32>)
+                            -> Result<std::sync::mpsc::Receiver<Reply>> {
         let (rtx, rrx) = std::sync::mpsc::channel();
-        self.tx
-            .as_ref()
-            .ok_or_else(|| anyhow!("server stopped"))?
-            .send(Request { payload: image, enqueued: Instant::now(), respond: rtx })
-            .map_err(|_| anyhow!("server worker exited"))?;
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("server stopped"))?;
+        // gauge up BEFORE send: a replica may dequeue the request the
+        // instant send returns, and its queue_pop must never observe
+        // the gauge without this request counted (the pop saturates, so
+        // a lost decrement would otherwise stick forever)
+        self.metrics.queue_push();
+        tx.send(Request { payload: image, enqueued: Instant::now(), respond: rtx })
+            .map_err(|_| {
+                self.metrics.queue_pop(1);
+                anyhow!("server worker exited")
+            })?;
         Ok(rrx)
     }
 
+    /// Smallest static batch dim across replicas.
     pub fn max_batch(&self) -> usize {
         self.batch
     }
 
-    /// Stop accepting requests, drain, and return final metrics.
-    pub fn shutdown(mut self) -> Snapshot {
+    /// Flattened elements per image, as reported by the replicas.
+    pub fn img_elems(&self) -> usize {
+        self.img_elems
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Stop accepting requests, drain the queue, join every replica,
+    /// and return the final metrics — or the first worker error, which
+    /// the pre-§9 server silently discarded.
+    pub fn shutdown(mut self) -> Result<Snapshot> {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        let mut errs: Vec<String> = Vec::new();
+        for (id, w) in self.workers.drain(..).enumerate() {
+            match w.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => errs.push(format!("replica {id}: {e:#}")),
+                Err(p) => errs.push(format!("replica {id} panicked: {}", payload_msg(&*p))),
+            }
         }
         let elapsed = self.started.elapsed().as_secs_f64();
-        self.metrics.snapshot(elapsed)
+        let snap = self.metrics.snapshot(elapsed);
+        if errs.is_empty() {
+            Ok(snap)
+        } else {
+            Err(anyhow!("server shutdown with worker errors: {}", errs.join("; ")))
+        }
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -164,8 +257,131 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+/// One replica thread: construct the backend (reporting the outcome
+/// through the readiness handshake), then assemble/execute until the
+/// intake closes and drains.
+fn replica_main(id: usize, rx: &Mutex<Receiver<Request<Payload, Reply>>>,
+                policy: Policy, factory: &BackendFactory, m: &Metrics,
+                ready: Sender<(usize, std::result::Result<Ready, String>)>)
+                -> Result<()> {
+    // the whole pre-report prelude (factory AND the geometry calls on
+    // the fresh trait object) is guarded: a panic anywhere before the
+    // handshake message would otherwise leave start_pool blocked on a
+    // report that never comes
+    let prelude = catch_unwind(AssertUnwindSafe(
+        || -> Result<(Box<dyn InferenceBackend>, usize, usize)> {
+            let backend = (**factory)(id)?;
+            let batch = backend.batch().max(1);
+            let img_elems = backend.img_elems();
+            Ok((backend, batch, img_elems))
+        },
+    ));
+    let (mut backend, batch, img_elems) = match prelude {
+        Ok(Ok(t)) => t,
+        Ok(Err(e)) => {
+            let msg = format!("{e:#}");
+            let _ = ready.send((id, Err(msg.clone())));
+            return Err(anyhow!("backend startup failed: {msg}"));
+        }
+        Err(p) => {
+            let msg = format!("backend startup panicked: {}", payload_msg(&*p));
+            let _ = ready.send((id, Err(msg.clone())));
+            return Err(anyhow!(msg));
+        }
+    };
+    // per-replica clamp of the batching policy to this backend's static
+    // batch dim (`Server::start` clamps from the manifest too; custom
+    // factories get the same guarantee here)
+    let policy = Policy { max_batch: policy.max_batch.clamp(1, batch), ..policy };
+    let _ = ready.send((id, Ok(Ready { batch, img_elems })));
+    // release the handshake channel NOW: holding it for the serving
+    // lifetime would keep start_pool's recv() from ever seeing closure
+    // if a sibling replica died without reporting
+    drop(ready);
+    loop {
+        match assemble_shared(rx, policy) {
+            Assembled::Closed => return Ok(()),
+            Assembled::Batch(reqs) => {
+                m.queue_pop(reqs.len());
+                execute_assembly(backend.as_mut(), id, &reqs, m);
+            }
+        }
+    }
+}
+
+/// Execute one assembled batch on a backend: validate payloads, split
+/// oversized assemblies, pad, forward, argmax, reply.  Infallible by
+/// construction — every request gets exactly one reply and backend
+/// errors/panics are converted into error replies, never worker death.
+fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
+                    reqs: &[Request<Payload, Reply>], m: &Metrics) {
+    let batch = backend.batch().max(1);
+    let img_elems = backend.img_elems();
+    // a request whose payload length is wrong gets an Err reply; it is
+    // never zero-padded and answered with a fabricated class (submit
+    // validates, but `Request` is public and the batcher is reusable)
+    let (valid, invalid): (Vec<_>, Vec<_>) = reqs
+        .iter()
+        .partition(|r| r.payload.len() == img_elems);
+    for r in invalid {
+        let _ = r.respond.send(Err(format!(
+            "payload has {} elements, model wants {img_elems}",
+            r.payload.len()
+        )));
+        m.record_rejected();
+    }
+    // defensive split: an assembly larger than the backend's static
+    // batch dim (mis-clamped policy, future policy bugs) is executed in
+    // chunks instead of slicing `xdata` out of bounds
+    for chunk in valid.chunks(batch) {
+        let t0 = Instant::now();
+        let n = chunk.len();
+        // pad to the static batch dim
+        let mut xdata = vec![0.0f32; batch * img_elems];
+        for (i, r) in chunk.iter().enumerate() {
+            xdata[i * img_elems..(i + 1) * img_elems].copy_from_slice(&r.payload);
+        }
+        let out = Tensor::new(vec![batch, img_elems], xdata)
+            .and_then(|x| {
+                // a backend panic fails the chunk, not the replica: the
+                // queued clients behind it must still be answered
+                match catch_unwind(AssertUnwindSafe(|| backend.forward(x))) {
+                    Ok(r) => r,
+                    Err(p) => Err(anyhow!("backend panicked: {}", payload_msg(&*p))),
+                }
+            })
+            .and_then(|logits| {
+                ensure!(
+                    logits.rank() == 2 && logits.shape[0] >= n,
+                    "backend returned logits shaped {:?} for a {n}-request chunk",
+                    logits.shape
+                );
+                Ok(logits)
+            });
+        let dt = t0.elapsed().as_secs_f64();
+        match out {
+            Ok(logits) => {
+                let preds = logits.argmax_rows();
+                for (i, r) in chunk.iter().enumerate() {
+                    let _ = r.respond.send(Ok(preds[i]));
+                }
+                m.record_batch(id, n, dt, batch - n);
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in chunk {
+                    let _ = r.respond.send(Err(msg.clone()));
+                }
+                // failed batches are accounted too: the error counters
+                // + their wall time
+                m.record_error(id, n, dt);
+            }
         }
     }
 }

@@ -13,7 +13,9 @@
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled HLO artifacts
 //!   produced by `python/compile/aot.py` (build-time only python).
 //! * [`qat`] — quantization-aware training driver + top-1 evaluation.
-//! * [`coordinator`] — inference service: dynamic batcher + worker loop.
+//! * [`coordinator`] — inference service: dynamic batcher + a replica
+//!   pool over pluggable backends (PJRT artifacts or the artifact-free
+//!   simulator backend; DESIGN.md §9).
 //! * [`models`] — per-model layer descriptors for the simulator.
 //! * [`tensor`], [`util`] — substrates (tensors, IO, JSON, RNG, stats…).
 //!

@@ -6,7 +6,9 @@
 //!   search    --model M     run Algorithm 1 (either strategy)
 //!   train     --model M     FP32 pre-train via the AOT train-step
 //!   qat       --model M     QAT fine-tune at a (format, W/A) config + eval
-//!   serve     --model M     start the batching server and run a load test
+//!   serve     --model M     start the replica pool and run a load test
+//!                           (--replicas N; --sim serves the artifact-free
+//!                           simulator backend)
 //!   report                  dump manifest summary
 //!
 //! Everything executes from compiled artifacts; run `make artifacts` once.
@@ -15,7 +17,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use dybit::coordinator::{Policy, Server, ServerConfig};
+use dybit::coordinator::{Policy, PoolConfig, Server, ServerConfig, SimBackend, SimBackendCfg};
 use dybit::formats::dybit as dybit_fmt;
 use dybit::formats::Format;
 use dybit::qat::{QuantConfig, Session};
@@ -42,7 +44,8 @@ fn main() {
                  common flags: --artifacts DIR --model NAME --format dybit --wbits 4 --abits 4\n\
                  search: --strategy speedup|rmse --alpha 4.0 --beta 2.0 --topk 3\n\
                  train/qat: --steps N --lr 0.05 --eval-batches 16\n\
-                 serve: --clients 4 --requests 64 --max-wait-ms 5"
+                 serve: --clients 4 --requests 64 --max-wait-ms 5 --max-batch N \
+                 --replicas 1 [--sim]"
             );
             std::process::exit(2);
         }
@@ -206,42 +209,75 @@ fn cmd_train(args: &Args, qat: bool) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let m = manifest(args)?;
-    let name = args.get_or("model", "mlp");
-    let nl = m
-        .models
-        .get(&name)
-        .ok_or_else(|| anyhow!("unknown model {name}"))?
-        .n_quant_layers;
-    let fmt = parse_format(args)?;
     let wbits = args.get_usize("wbits", 4) as u32;
     let abits = args.get_usize("abits", 8) as u32;
-    let qcfg = QuantConfig::uniform(nl, fmt, wbits, abits);
-    let cfg = ServerConfig {
-        model: name.clone(),
-        qcfg,
-        policy: Policy {
-            max_batch: m.models[&name].batch,
-            max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64),
-        },
-        queue_cap: args.get_usize("queue-cap", 256),
-        pallas: args.has("pallas"),
+    let replicas = args.get_usize("replicas", 1);
+    // default max-batch is "the backend's static batch dim": the pool
+    // clamps per replica, so MAX means "fill whatever the model takes"
+    let policy = Policy {
+        max_batch: args.get_usize("max-batch", usize::MAX),
+        max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64),
     };
+    let queue_cap = args.get_usize("queue-cap", 256);
     let clients = args.get_usize("clients", 4);
     let requests = args.get_usize("requests", 64);
-    let img_elems: usize = m.models[&name].input.iter().skip(1).product();
 
-    println!("serving {name} ({}W{}A {}), load test: {clients} clients x {requests} reqs",
-             wbits, abits, fmt.name());
-    let server = Server::start(&m, cfg)?;
+    let server = if args.has("sim") {
+        // artifact-free serving over the simulator-costed backend
+        // (DESIGN.md §9): cycle-costed batches, seeded linear scorer
+        let cfg = SimBackendCfg {
+            batch: args.get_usize("batch", 8),
+            wbits,
+            abits,
+            time_scale: args.get_f64("time-scale", 0.0),
+            ..SimBackendCfg::tiny(17)
+        };
+        println!(
+            "serving sim backend ({}W{}A, batch {}, {replicas} replica(s)), \
+             load test: {clients} clients x {requests} reqs",
+            wbits, abits, cfg.batch
+        );
+        Server::start_pool(
+            PoolConfig { policy, queue_cap, replicas },
+            SimBackend::factory(cfg),
+        )?
+    } else {
+        let m = manifest(args)?;
+        let name = args.get_or("model", "mlp");
+        let entry = m.model(&name)?;
+        let fmt = parse_format(args)?;
+        let qcfg = QuantConfig::uniform(entry.n_quant_layers, fmt, wbits, abits);
+        let cfg = ServerConfig {
+            model: name.clone(),
+            qcfg,
+            // honor an explicit --max-batch below the model's batch dim;
+            // Server::start clamps the upper bound to entry.batch
+            policy: Policy { max_batch: policy.max_batch.min(entry.batch.max(1)), ..policy },
+            queue_cap,
+            pallas: args.has("pallas"),
+            replicas,
+        };
+        println!(
+            "serving {name} ({}W{}A {}, {replicas} replica(s)), \
+             load test: {clients} clients x {requests} reqs",
+            wbits, abits, fmt.name()
+        );
+        Server::start(&m, cfg)?
+    };
+
+    let img_elems = server.img_elems();
     dybit::coordinator::load_test(&server, clients, requests, img_elems)?;
-    let snap = server.shutdown();
+    let snap = server.shutdown()?;
     println!(
-        "requests {}  batches {}  errors {}  mean batch {:.1}  p50 {:.1}ms  \
-         p95 {:.1}ms  {:.1} req/s",
-        snap.requests, snap.batches, snap.errors, snap.mean_batch,
-        snap.lat_p50_ms, snap.lat_p95_ms, snap.throughput_rps
+        "requests {}  batches {}  errors {}  rejected {}  mean batch {:.1}  \
+         p50 {:.1}ms  p95 {:.1}ms  {:.1} req/s  (queue depth {})",
+        snap.requests, snap.batches, snap.errors, snap.rejected, snap.mean_batch,
+        snap.lat_p50_ms, snap.lat_p95_ms, snap.throughput_rps, snap.queue_depth
     );
+    for (i, r) in snap.per_replica.iter().enumerate() {
+        println!("  replica {i}: {} batches, {} requests, {} errors",
+                 r.batches, r.requests, r.errors);
+    }
     Ok(())
 }
 

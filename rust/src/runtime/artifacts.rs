@@ -142,6 +142,17 @@ impl Manifest {
         })
     }
 
+    /// The entry for `name`, or a listing of known models on miss (the
+    /// lookup every serving/CLI path repeats).
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown model '{name}' (manifest has: {})",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
     fn model_entry(name: &str, j: &Json) -> Result<ModelEntry> {
         let layers = j
             .get("layers")

@@ -93,6 +93,11 @@ impl Tensor {
     }
 
     /// argmax over the last axis of a rank-2 tensor -> per-row indices.
+    ///
+    /// Total order (`f32::total_cmp`), so NaN logits pick a
+    /// deterministic index instead of panicking — a serving worker must
+    /// answer every request even when a model emits NaNs (NaN sorts
+    /// above +∞ in the total order, so a NaN slot wins its row).
     pub fn argmax_rows(&self) -> Vec<usize> {
         assert_eq!(self.rank(), 2);
         (0..self.shape[0])
@@ -100,7 +105,7 @@ impl Tensor {
                 let r = self.row(i);
                 r.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(j, _)| j)
                     .unwrap_or(0)
             })
@@ -136,6 +141,22 @@ mod tests {
     fn argmax() {
         let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 1.0, -1.0, 0.5]).unwrap();
         assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_survives_nan_logits() {
+        // regression: partial_cmp().unwrap() panicked on NaN, killing
+        // the serving worker and hanging every queued client
+        let t = Tensor::new(
+            vec![3, 3],
+            vec![0.1, f32::NAN, 0.0, 1.0, -1.0, 0.5, f32::NAN, f32::NAN, f32::NAN],
+        )
+        .unwrap();
+        let idx = t.argmax_rows();
+        assert_eq!(idx.len(), 3);
+        assert_eq!(idx[0], 1); // NaN sorts above every finite value
+        assert_eq!(idx[1], 0); // finite rows unaffected
+        assert!(idx[2] < 3);
     }
 
     #[test]

@@ -24,7 +24,9 @@ pub fn summarize(xs: &[f64]) -> Summary {
     let mean = xs.iter().sum::<f64>() / n as f64;
     let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (e.g. a bad latency reading) must not
+    // panic the summary path; NaNs sort last and surface in max/mean
+    s.sort_unstable_by(f64::total_cmp);
     Summary {
         n,
         mean,

@@ -138,8 +138,9 @@ where
 }
 
 /// Best-effort human-readable panic payload (`panic!` with a literal or
-/// with format args; anything else is opaque).
-fn payload_msg(p: &(dyn Any + Send)) -> &str {
+/// with format args; anything else is opaque).  Shared with the serving
+/// pool's panic containment (DESIGN.md §9).
+pub fn payload_msg(p: &(dyn Any + Send)) -> &str {
     if let Some(s) = p.downcast_ref::<&'static str>() {
         s
     } else if let Some(s) = p.downcast_ref::<String>() {

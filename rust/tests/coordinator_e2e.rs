@@ -1,0 +1,269 @@
+//! Coordinator end-to-end tests over the artifact-free [`SimBackend`]
+//! (DESIGN.md §9): replica-pool behaviour, the panic/hang bug sweep, and
+//! the metrics accounting invariant — all runnable in CI with no PJRT
+//! artifacts.
+//!
+//! Accounting invariant under test: every submitted request ends in
+//! exactly one of `requests` (success), `failed_requests` (slot of a
+//! failed batch), or `rejected` (invalid payload), and every submit's
+//! receiver observes exactly one reply — no hung clients, ever.
+
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use dybit::coordinator::{
+    InferenceBackend, Policy, PoolConfig, Server, SimBackend, SimBackendCfg, Snapshot,
+};
+use dybit::tensor::Tensor;
+use dybit::util::rng::Rng;
+
+type Reply = std::result::Result<usize, String>;
+
+const IMG: usize = 64;
+
+fn pool(replicas: usize) -> PoolConfig {
+    PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 64,
+        replicas,
+    }
+}
+
+/// Receive with a deadline: a hang here is exactly the bug class this
+/// suite exists to catch, so fail loudly instead of wedging the test.
+fn must_reply(rx: &Receiver<Reply>) -> Reply {
+    rx.recv_timeout(Duration::from_secs(10))
+        .expect("client must receive a reply (worker hung or died)")
+}
+
+fn assert_accounted(snap: &Snapshot, submitted: u64) {
+    assert_eq!(
+        snap.requests + snap.failed_requests + snap.rejected,
+        submitted,
+        "accounting invariant violated: {snap:?}"
+    );
+    assert_eq!(snap.queue_depth, 0, "queue must drain: {snap:?}");
+    let b: u64 = snap.per_replica.iter().map(|r| r.batches).sum();
+    let e: u64 = snap.per_replica.iter().map(|r| r.errors).sum();
+    assert_eq!(b, snap.batches, "per-replica batches must sum to global");
+    assert_eq!(e, snap.errors, "per-replica errors must sum to global");
+}
+
+#[test]
+fn pool_answers_mixed_good_and_bad_payloads_under_load() {
+    let server =
+        Server::start_pool(pool(3), SimBackend::factory(SimBackendCfg::tiny(7))).unwrap();
+    let (clients, per_client) = (6, 10);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = &server;
+            s.spawn(move || {
+                let mut rng = Rng::new(c as u64 + 1);
+                for i in 0..per_client {
+                    if i % 3 == 2 {
+                        // wrong length: must get an Err reply, never a
+                        // fabricated class from zero-padding
+                        let rx = server.submit_unchecked(rng.normal_vec(IMG / 2)).unwrap();
+                        let err = must_reply(&rx).unwrap_err();
+                        assert!(err.contains("elements"), "{err}");
+                    } else {
+                        let rx = server.submit(rng.normal_vec(IMG)).unwrap();
+                        let pred = must_reply(&rx).expect("valid payload must succeed");
+                        assert!(pred < 10);
+                    }
+                }
+            });
+        }
+    });
+    let snap = server.shutdown().unwrap();
+    let submitted = (clients * per_client) as u64;
+    assert_accounted(&snap, submitted);
+    assert_eq!(snap.rejected, (clients * 3) as u64); // i = 2, 5, 8 per client
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.per_replica.len(), 3);
+}
+
+#[test]
+fn oversized_policy_is_clamped_and_assemblies_split() {
+    // regression (coordinator/server.rs pre-§9): Policy::default() is
+    // max_batch 32; against a model with a smaller static batch dim the
+    // worker sliced `xdata[i * img_elems..]` out of bounds and
+    // underflowed `batch - n`, killing the worker and hanging every
+    // queued client.  The pool clamps at start and splits defensively.
+    let cfg = SimBackendCfg::tiny(3); // backend batch = 4
+    let p = PoolConfig {
+        policy: Policy { max_batch: 32, max_wait: Duration::from_millis(20) },
+        queue_cap: 64,
+        replicas: 1,
+    };
+    let server = Server::start_pool(p, SimBackend::factory(cfg)).unwrap();
+    assert_eq!(server.max_batch(), 4, "start must reconcile policy with the model");
+    let mut rng = Rng::new(9);
+    let rxs: Vec<_> = (0..12)
+        .map(|_| server.submit(rng.normal_vec(IMG)).unwrap())
+        .collect();
+    for rx in &rxs {
+        let pred = must_reply(rx).expect("clamped batches must still answer");
+        assert!(pred < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, 12);
+    assert!(snap.batches >= 3, "12 requests cannot fit fewer than 3 batches of 4");
+    assert!(snap.mean_batch <= 4.0 + 1e-9, "no assembly may exceed the model batch");
+}
+
+#[test]
+fn nan_payloads_still_answer_every_request() {
+    // regression (tensor/mod.rs): argmax_rows used partial_cmp().unwrap()
+    // — one NaN logit panicked the worker and every queued client hung
+    // on a dead channel.  NaN inputs × seeded weights ⇒ NaN logits.
+    let server =
+        Server::start_pool(pool(2), SimBackend::factory(SimBackendCfg::tiny(5))).unwrap();
+    let rxs: Vec<_> = (0..8)
+        .map(|_| server.submit(vec![f32::NAN; IMG]).unwrap())
+        .collect();
+    for rx in &rxs {
+        let pred = must_reply(rx).expect("NaN logits must still pick a class");
+        assert!(pred < 10);
+    }
+    // the pool survives: ordinary traffic still flows afterwards
+    let mut rng = Rng::new(2);
+    assert!(server.infer(rng.normal_vec(IMG)).unwrap() < 10);
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, 9);
+    assert_eq!(snap.errors, 0);
+}
+
+#[test]
+fn startup_failure_surfaces_from_start() {
+    // regression (coordinator/server.rs pre-§9): a failing worker
+    // preamble returned Ok from Server::start and clients only ever saw
+    // "server dropped request"; the readiness handshake surfaces it.
+    let factory: dybit::coordinator::BackendFactory =
+        std::sync::Arc::new(|id| Err(anyhow!("boom on replica {id}")));
+    let err = Server::start_pool(pool(2), factory).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("boom on replica"), "{msg}");
+
+    // one bad replica out of several still fails the whole start
+    let factory: dybit::coordinator::BackendFactory = std::sync::Arc::new(|id| {
+        if id == 1 {
+            Err(anyhow!("replica 1 exploded"))
+        } else {
+            Ok(Box::new(SimBackend::new(SimBackendCfg::tiny(1))?)
+                as Box<dyn InferenceBackend>)
+        }
+    });
+    let err = Server::start_pool(pool(3), factory).unwrap_err();
+    assert!(format!("{err:#}").contains("replica 1 exploded"));
+}
+
+#[test]
+fn panicking_factory_does_not_deadlock_start() {
+    let factory: dybit::coordinator::BackendFactory =
+        std::sync::Arc::new(|_| panic!("constructor panic"));
+    let err = Server::start_pool(pool(2), factory).unwrap_err();
+    assert!(format!("{err:#}").contains("constructor panic"));
+}
+
+/// A backend that panics when the first payload element is a sentinel —
+/// the "model code blows up mid-request" case.
+struct PanickyBackend(SimBackend);
+
+impl InferenceBackend for PanickyBackend {
+    fn name(&self) -> &str {
+        "panicky"
+    }
+
+    fn batch(&self) -> usize {
+        self.0.batch()
+    }
+
+    fn img_elems(&self) -> usize {
+        self.0.img_elems()
+    }
+
+    fn forward(&mut self, x: Tensor) -> Result<Tensor> {
+        assert!(x.data[0] != 1234.5, "panicky backend tripped");
+        self.0.forward(x)
+    }
+}
+
+#[test]
+fn backend_panic_fails_the_batch_not_the_replica() {
+    let factory: dybit::coordinator::BackendFactory = std::sync::Arc::new(|_| {
+        Ok(Box::new(PanickyBackend(SimBackend::new(SimBackendCfg::tiny(4))?))
+            as Box<dyn InferenceBackend>)
+    });
+    let server = Server::start_pool(pool(1), factory).unwrap();
+    let mut bad = vec![0.0f32; IMG];
+    bad[0] = 1234.5;
+    let rx = server.submit(bad).unwrap();
+    let err = must_reply(&rx).unwrap_err();
+    assert!(err.contains("panicked"), "{err}");
+    // the replica survived the panic and keeps serving
+    let mut rng = Rng::new(6);
+    assert!(server.infer(rng.normal_vec(IMG)).unwrap() < 10);
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, 2);
+    assert_eq!(snap.errors, 1);
+    assert_eq!(snap.failed_requests, 1);
+}
+
+#[test]
+fn injected_backend_errors_reply_err_and_count() {
+    let mut cfg = SimBackendCfg::tiny(8);
+    cfg.fail_on = Some(77.0);
+    let server = Server::start_pool(pool(1), SimBackend::factory(cfg)).unwrap();
+    // sequential so each failing payload forms its own batch
+    let mut bad = vec![0.0f32; IMG];
+    bad[10] = 77.0;
+    let rx = server.submit(bad).unwrap();
+    let err = must_reply(&rx).unwrap_err();
+    assert!(err.contains("injected"), "{err}");
+    // a clean payload right after the failed batch still succeeds
+    assert!(server.infer(vec![0.5; IMG]).unwrap() < 10);
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, 2);
+    assert_eq!(snap.errors, 1);
+    assert_eq!(snap.requests, 1);
+}
+
+#[test]
+fn shutdown_drains_a_full_queue() {
+    // slow the backend down so the queue genuinely backs up, then shut
+    // down with requests still queued: every receiver must get a reply
+    let mut cfg = SimBackendCfg::tiny(2);
+    let probe = SimBackend::new(cfg.clone()).unwrap();
+    cfg.time_scale = 0.002 / probe.sim_latency_s(); // ~2ms per batch
+    let server = Server::start_pool(pool(2), SimBackend::factory(cfg)).unwrap();
+    let mut rng = Rng::new(3);
+    let rxs: Vec<_> = (0..32)
+        .map(|_| server.submit(rng.normal_vec(IMG)).unwrap())
+        .collect();
+    let snap = server.shutdown().unwrap(); // closes intake, drains, joins
+    for rx in &rxs {
+        // replies were produced during the drain; they sit in the
+        // per-request channels even though the server is gone
+        let pred = rx.try_recv().expect("drained request must have a reply");
+        assert!(pred.expect("drained request must succeed") < 10);
+    }
+    assert_accounted(&snap, 32);
+    assert_eq!(snap.requests, 32);
+}
+
+#[test]
+fn replicas_share_one_seeded_scorer_and_agree() {
+    let server =
+        Server::start_pool(pool(4), SimBackend::factory(SimBackendCfg::tiny(21))).unwrap();
+    let img: Vec<f32> = (0..IMG).map(|i| (i as f32 * 0.37).cos()).collect();
+    // enough sequential repeats that several replicas serve the payload
+    let first = server.infer(img.clone()).unwrap();
+    for _ in 0..16 {
+        assert_eq!(server.infer(img.clone()).unwrap(), first);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, 17);
+}

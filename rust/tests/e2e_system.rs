@@ -57,6 +57,7 @@ fn server_round_trip_under_load() {
         policy: Policy { max_batch: m.models["mlp"].batch, max_wait: Duration::from_millis(3) },
         queue_cap: 64,
         pallas: false,
+        replicas: 2,
     };
     let img_elems: usize = m.models["mlp"].input.iter().skip(1).product();
     let server = Server::start(&m, cfg).unwrap();
@@ -75,7 +76,7 @@ fn server_round_trip_under_load() {
             });
         }
     });
-    let snap = server.shutdown();
+    let snap = server.shutdown().expect("clean shutdown");
     assert_eq!(snap.requests, 16);
     assert!(snap.batches >= 1);
     assert!(snap.lat_p50_ms > 0.0);
@@ -94,6 +95,7 @@ fn rejects_wrong_image_size() {
         policy: Policy::default(),
         queue_cap: 8,
         pallas: false,
+        replicas: 1,
     };
     let server = Server::start(&m, cfg).unwrap();
     assert!(server.infer(vec![0.0; 3]).is_err());
