@@ -1,0 +1,290 @@
+//! Bench: §Perf — heterogeneous-precision routing, mixed pool vs the
+//! all-8-bit pool at equal replica count (DESIGN.md §10).
+//!
+//! Closed-loop load over the artifact-free [`SimBackend`] where each
+//! replica's batch cost comes from the §3 cycle simulator *at its own
+//! precision*: three DyBit-4 replicas cost ~2.6× less per batch than an
+//! 8-bit one on the ResNet-like stack, so a 3×(4,4) + 1×(8,8) pool
+//! should beat 4×(8,8) by ~(3·2.6 + 1)/4 ≈ 2.2× — the Fig. 6
+//! accuracy/speedup trade-off moved to the serving tier.  A second
+//! phase drives a seeded low-margin workload through the
+//! confidence-escalation router and asserts the escalation accounting.
+//!
+//! Run: cargo bench --bench perf_route [-- --smoke]
+//! `--smoke` shrinks the model/load for CI smoke runs
+//! (`ci.sh --bench-smoke`); the 1.8× acceptance floor (mixed vs all-8)
+//! only applies to the full-size run.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dybit::coordinator::{
+    load_test, Escalate, Fastest, Policy, PoolConfig, ReplicaPrecision, Server, SimBackend,
+    SimBackendCfg,
+};
+use dybit::models::synthetic_resnet;
+use dybit::util::argparse::Args;
+use dybit::util::json::Json;
+use dybit::util::stats::Table;
+
+const FLOOR: f64 = 1.8;
+
+struct Run {
+    wall_s: f64,
+    rps: f64,
+    p50_ms: f64,
+    warm_class: usize,
+}
+
+/// One closed-loop trial of a pool with the given per-replica precision
+/// mix under the Fastest router; panics on any accounting violation.
+fn trial(cfg: &SimBackendCfg, mix: &[ReplicaPrecision], clients: usize,
+         per_client: usize) -> Run {
+    let pool = PoolConfig {
+        policy: Policy {
+            max_batch: cfg.batch,
+            max_wait: Duration::from_micros(300),
+        },
+        queue_cap: 1024,
+        replicas: mix.len(),
+        precisions: mix.to_vec(),
+        router: Arc::new(Fastest::new()),
+        work_stealing: true,
+    };
+    let server = Server::start_pool(pool, SimBackend::mixed_factory(cfg.clone(), mix.to_vec()))
+        .expect("pool start");
+    assert_eq!(server.replicas(), mix.len());
+    // fixed warm-up payload: also the cross-pool determinism probe
+    let warm: Vec<f32> = (0..cfg.img_elems).map(|i| (i as f32).sin()).collect();
+    let warm_class = server.infer(warm).expect("warm inference");
+
+    let t0 = Instant::now();
+    load_test(&server, clients, per_client, cfg.img_elems).expect("load test");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snap = server.shutdown().expect("clean shutdown");
+
+    let submitted = (clients * per_client + 1) as u64; // +1 warm-up
+    assert_eq!(
+        snap.requests + snap.failed_requests + snap.rejected,
+        submitted,
+        "every submitted request must be accounted for"
+    );
+    assert_eq!(snap.errors, 0, "sim backend must not fail batches");
+    assert_eq!(snap.escalations, 0, "the Fastest router never escalates");
+    assert_eq!(snap.queue_depth, 0, "queues must drain");
+    let routed: u64 = snap.per_replica.iter().map(|r| r.routed).sum();
+    assert_eq!(routed, submitted, "every request is routed exactly once");
+    assert!(
+        snap.per_replica.iter().all(|r| r.routed > 0),
+        "weighted round-robin must feed every replica: {:?}",
+        snap.per_replica
+    );
+    Run {
+        wall_s,
+        rps: (clients * per_client) as f64 / wall_s,
+        p50_ms: snap.lat_p50_ms,
+        warm_class,
+    }
+}
+
+/// Escalation phase: a mixed pool under the confidence-escalation
+/// router.  `scale` controls the payload norm and thereby the argmax
+/// margin — near-zero payloads have near-zero margins and must all
+/// escalate; large payloads almost never do.  Stealing is off so the
+/// accurate tier cannot absorb primary traffic before it escalates.
+fn escalation_rate(cfg: &SimBackendCfg, mix: &[ReplicaPrecision], n: usize,
+                   scale: f32) -> (f64, u64) {
+    let pool = PoolConfig {
+        policy: Policy {
+            max_batch: cfg.batch,
+            max_wait: Duration::from_micros(200),
+        },
+        queue_cap: 1024,
+        replicas: mix.len(),
+        precisions: mix.to_vec(),
+        router: Arc::new(Escalate::new(0.05)),
+        work_stealing: false,
+    };
+    let server = Server::start_pool(pool, SimBackend::mixed_factory(cfg.clone(), mix.to_vec()))
+        .expect("pool start");
+    let mut rng = dybit::util::rng::Rng::new(4242);
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let img: Vec<f32> =
+                rng.normal_vec(cfg.img_elems).iter().map(|v| v * scale).collect();
+            server.submit(img).expect("submit")
+        })
+        .collect();
+    for rx in &rxs {
+        rx.recv_timeout(Duration::from_secs(60))
+            .expect("reply")
+            .expect("class");
+    }
+    let snap = server.shutdown().expect("clean shutdown");
+    assert_eq!(
+        snap.requests + snap.failed_requests + snap.rejected,
+        n as u64,
+        "escalated requests must still be answered exactly once"
+    );
+    let initiated: u64 = snap.per_replica.iter().map(|r| r.escalations).sum();
+    assert_eq!(initiated, snap.escalations, "per-replica escalations must sum to global");
+    (snap.escalations as f64 / n as f64, snap.escalations)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+
+    // simulator-costed model: resnet-like stack; time_scale pins the
+    // *8-bit* batch cost to a target wall time, and every other tier
+    // scales by its own simulated cycle count — the per-precision cost
+    // ratio is the simulator's, not hand-picked.  16 ms (vs perf_serve's
+    // 2 ms) amortizes the per-batch scheduling overhead that compresses
+    // the tier ratio on small CI boxes: a C/pthreads transliteration of
+    // the pool dynamics on a loaded 2-core box measured 1.3–1.85×
+    // single-run at 8 ms batches but 1.7–2.1× at 16 ms (ideal 2.23×);
+    // the best-of-`trials` pairing below is what gates — closed-loop
+    // noise only lowers rps below pool capacity, never above
+    let (depth, batch, target_batch8_s) =
+        if smoke { (4, 4, 0.0005) } else { (8, 8, 0.016) };
+    let mut cfg = SimBackendCfg {
+        layers: synthetic_resnet(depth),
+        batch,
+        img_elems: 128,
+        classes: 10,
+        wbits: 8,
+        abits: 8,
+        seed: 13,
+        time_scale: 0.0,
+        fail_on: None,
+    };
+    let probe8 = SimBackend::new(cfg.clone()).expect("8-bit probe");
+    cfg.time_scale = target_batch8_s / probe8.sim_latency_s();
+    let probe4 = SimBackend::new(SimBackendCfg { wbits: 4, abits: 4, ..cfg.clone() })
+        .expect("4-bit probe");
+    let tier_ratio = probe8.sim_latency_s() / probe4.sim_latency_s();
+
+    let mixed: Vec<ReplicaPrecision> = vec![
+        ReplicaPrecision::uniform(4),
+        ReplicaPrecision::uniform(4),
+        ReplicaPrecision::uniform(4),
+        ReplicaPrecision::uniform(8),
+    ];
+    let all8: Vec<ReplicaPrecision> = vec![ReplicaPrecision::uniform(8); 4];
+
+    // enough closed-loop clients to saturate BOTH pools: the mixed
+    // pool's capacity is ~2.2× the all-8 one's, and an under-offered
+    // comparison is client-latency-bound and shows no routing effect
+    let (clients, per_client, trials) = if smoke { (8, 6, 1) } else { (64, 40, 3) };
+
+    let mut t = Table::new(&["pool", "wall", "req/s", "p50 batch lat", "speedup vs all-8"]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut best: Vec<(&str, Run)> = Vec::new();
+    for (name, mix) in [("all-8bit", &all8), ("mixed 3x4b+1x8b", &mixed)] {
+        // best-of-N absorbs scheduler noise on shared CI boxes
+        let mut runs: Vec<Run> = (0..trials)
+            .map(|_| trial(&cfg, mix, clients, per_client))
+            .collect();
+        runs.sort_by(|a, b| a.rps.total_cmp(&b.rps));
+        best.push((name, runs.pop().expect("at least one trial")));
+    }
+    // the scorer is seeded per config, not per precision tier: both
+    // pools must answer the warm-up payload identically
+    assert_eq!(
+        best[0].1.warm_class, best[1].1.warm_class,
+        "heterogeneous pool diverged on the same payload"
+    );
+
+    let rps8 = best[0].1.rps;
+    let mut speedup = 0.0;
+    for (name, run) in &best {
+        let sp = run.rps / rps8;
+        if *name != "all-8bit" {
+            speedup = sp;
+        }
+        t.row(vec![
+            name.to_string(),
+            format!("{:.3}s", run.wall_s),
+            format!("{:.0}", run.rps),
+            format!("{:.2}ms", run.p50_ms),
+            format!("{sp:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("pool", Json::str(name)),
+            ("clients", Json::num(clients as f64)),
+            ("per_client", Json::num(per_client as f64)),
+            ("wall_s", Json::num(run.wall_s)),
+            ("rps", Json::num(run.rps)),
+            ("p50_ms", Json::num(run.p50_ms)),
+            ("speedup_vs_all8", Json::num(sp)),
+        ]));
+    }
+    t.print();
+
+    // escalation accounting under the confidence router: near-zero
+    // payloads have near-zero argmax margins — every one served by a
+    // fast replica must re-run on the accurate tier; large payloads
+    // have O(1)-margin logits and must (almost) never escalate
+    let esc_n = if smoke { 40 } else { 200 };
+    let (low_rate, low_escalations) = escalation_rate(&cfg, &mixed, esc_n, 1e-6);
+    let (high_rate, _) = escalation_rate(&cfg, &mixed, esc_n, 100.0);
+    println!(
+        "\nescalation rate (margin 0.05): low-margin workload {:.0}% ({low_escalations} \
+         re-runs / {esc_n}), high-margin workload {:.1}%",
+        low_rate * 100.0,
+        high_rate * 100.0
+    );
+    assert!(
+        (low_rate - 1.0).abs() < 1e-12,
+        "every low-margin request lands on a fast replica (escalate routes primary \
+         traffic there, stealing off) and must escalate; rate {low_rate}"
+    );
+    assert!(
+        high_rate < 0.05,
+        "high-margin workload must (almost) never escalate; rate {high_rate}"
+    );
+
+    let floor_ok = smoke || speedup >= FLOOR;
+    println!(
+        "\nheterogeneous routing over SimBackend (8-bit batch cost {:.1}ms, \
+         simulated 8b/4b tier ratio {tier_ratio:.2}x); acceptance floor \
+         {FLOOR:.2}x mixed vs all-8 at 4 replicas: {}",
+        target_batch8_s * 1e3,
+        if smoke {
+            "n/a (smoke load)".to_string()
+        } else {
+            format!("{} ({speedup:.2}x)", if floor_ok { "PASS" } else { "FAIL" })
+        }
+    );
+    common::save_results(
+        "perf_route",
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke)),
+            ("floor", Json::num(FLOOR)),
+            // null on smoke runs: the floor was never evaluated, and a
+            // persisted `true` would read as a gate that passed
+            ("floor_pass", if smoke { Json::Null } else { Json::Bool(floor_ok) }),
+            ("target_batch8_s", Json::num(target_batch8_s)),
+            ("tier_ratio", Json::num(tier_ratio)),
+            ("rows", Json::Arr(rows)),
+            (
+                "escalation",
+                Json::obj(vec![
+                    ("margin", Json::num(0.05)),
+                    ("submitted", Json::num(esc_n as f64)),
+                    ("low_margin_rate", Json::num(low_rate)),
+                    ("high_margin_rate", Json::num(high_rate)),
+                ]),
+            ),
+        ]),
+    )
+    .expect("save perf results");
+    println!("perf_route done");
+    if !floor_ok {
+        // make the floor a real gate: scripted full-size runs must fail
+        std::process::exit(1);
+    }
+}

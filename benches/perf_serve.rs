@@ -43,6 +43,7 @@ fn trial(cfg: &SimBackendCfg, replicas: usize, clients: usize, per_client: usize
         },
         queue_cap: 1024,
         replicas,
+        ..PoolConfig::default()
     };
     let server = Server::start_pool(pool, SimBackend::factory(cfg.clone()))
         .expect("pool start");

@@ -1,16 +1,18 @@
 #!/usr/bin/env bash
 # Local CI gate for the DyBit workspace (see README.md).
 #
-#   ./ci.sh               # fmt + clippy + tier-1 (build + bench build + tests)
+#   ./ci.sh               # fmt + clippy + tier-1 (build + bench build +
+#                         # tests + docs)
 #   ./ci.sh --fast        # tier-1 only
 #   ./ci.sh --bench-smoke # additionally run the perf_search bench on tiny
 #                         # layer stacks, perf_calib on tiny tensors, and
-#                         # perf_serve on a tiny SimBackend pool (quick
-#                         # end-to-end bench smoke); fails if any bench
-#                         # result JSON is missing or empty
+#                         # perf_serve/perf_route on tiny SimBackend pools
+#                         # (quick end-to-end bench smoke); fails if any
+#                         # bench result JSON is missing or empty
 #
 # Tier-1 must stay green; fmt/clippy keep the tree reviewable.  Benches
-# are built (not run) as part of tier-1 so bench bit-rot fails CI.
+# are built (not run) as part of tier-1 so bench bit-rot fails CI, and
+# `cargo doc --no-deps` runs with warnings denied so doc rot does too.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -37,6 +39,9 @@ cargo build --release
 cargo build --benches --release
 cargo test -q
 
+echo "==> tier-1: cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p dybit --quiet
+
 if [[ $bench_smoke -eq 1 ]]; then
   echo "==> bench smoke: perf_search on tiny layer stacks"
   cargo bench --bench perf_search -- --smoke
@@ -47,9 +52,12 @@ if [[ $bench_smoke -eq 1 ]]; then
   echo "==> bench smoke: perf_serve on a tiny SimBackend pool"
   cargo bench --bench perf_serve -- --smoke
 
+  echo "==> bench smoke: perf_route on a tiny mixed-precision pool"
+  cargo bench --bench perf_route -- --smoke
+
   # the smoke gate is only meaningful if the benches actually persisted
   # their results: a missing/empty JSON means a silently broken run
-  for name in perf_search perf_calib perf_serve; do
+  for name in perf_search perf_calib perf_serve perf_route; do
     out="artifacts/results/${name}.json"
     if [[ ! -s "$out" ]]; then
       echo "ci.sh: bench smoke produced no usable $out" >&2

@@ -1,22 +1,28 @@
-//! Serving demo: the replica pool under closed-loop load.
+//! Serving demo: the (optionally heterogeneous) replica pool under
+//! closed-loop load.
 //!
 //! Starts the batching server with a DyBit-quantized model and drives it
 //! with concurrent clients sending synthetic images; reports throughput,
-//! batch-formation quality, per-replica balance and latency percentiles
-//! — the deployment-side view of the paper's accelerator.
+//! batch-formation quality, per-replica balance (routing, stealing,
+//! escalations) and latency percentiles — the deployment-side view of
+//! the paper's accelerator (DESIGN.md §9–§10).
 //!
 //! Run: cargo run --release --example serve -- --model mlp --clients 8 \
 //!        --requests 64 [--replicas 4] [--wbits 4 --abits 8] [--pallas]
 //!
 //! With `--sim` the pool serves the artifact-free simulator backend
-//! (DESIGN.md §9) — no PJRT runtime or compiled artifacts needed.
+//! (DESIGN.md §9) — no PJRT runtime or compiled artifacts needed — and
+//! `--precision-mix 4,4,4,8 --router escalate` makes it a heterogeneous
+//! pool: three DyBit-4 replicas plus an 8-bit accurate replica with
+//! low-margin replies escalated to the accurate tier (DESIGN.md §10).
 
 use std::time::Duration;
 
 use anyhow::Result;
 
 use dybit::coordinator::{
-    load_test, Policy, PoolConfig, Server, ServerConfig, SimBackend, SimBackendCfg,
+    load_test, parse_precision_mix, resolve_precision_mix, router_from_spec, Policy,
+    PoolConfig, ReplicaPrecision, Server, ServerConfig, SimBackend, SimBackendCfg,
 };
 use dybit::formats::Format;
 use dybit::qat::QuantConfig;
@@ -31,22 +37,35 @@ fn main() -> Result<()> {
     let wbits = args.get_usize("wbits", 4) as u32;
     let abits = args.get_usize("abits", 8) as u32;
     let wait_ms = args.get_usize("max-wait-ms", 5) as u64;
-    let replicas = args.get_usize("replicas", 1);
+    let mix: Vec<ReplicaPrecision> = match args.get("precision-mix") {
+        Some(s) => parse_precision_mix(s)?,
+        None => Vec::new(),
+    };
+    let had_mix = !mix.is_empty();
+    let precisions = resolve_precision_mix(mix, wbits, abits, args.get_usize("replicas", 1));
+    let replicas = precisions.len();
+    let router = router_from_spec(&args.get_or("router", "fastest"))?;
 
     let server = if args.has("sim") {
         let cfg = SimBackendCfg {
             wbits,
             abits,
             // --time-scale > 0 turns simulated cycles into wall time so
-            // replica scaling and latency percentiles become visible
+            // replica scaling, routing effects and latency percentiles
+            // become visible
             time_scale: args.get_f64("time-scale", 0.0),
             ..SimBackendCfg::tiny(17)
         };
         println!(
-            "serving sim backend as DyBit-ish ({wbits}/{abits}), batch<= {}, \
-             wait {wait_ms}ms, {replicas} replica(s), {clients} clients x {requests} reqs",
-            cfg.batch
+            "serving sim backend (precision mix [{}]), batch<= {}, wait {wait_ms}ms, \
+             {replicas} replica(s), router {}, {clients} clients x {requests} reqs",
+            precisions.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(", "),
+            cfg.batch,
+            router.name()
         );
+        // mixed_factory with a uniform mix IS the homogeneous pool, and
+        // the results table always labels replicas with their real bits
+        let factory = SimBackend::mixed_factory(cfg.clone(), precisions.clone());
         Server::start_pool(
             PoolConfig {
                 policy: Policy {
@@ -55,10 +74,23 @@ fn main() -> Result<()> {
                 },
                 queue_cap: 512,
                 replicas,
+                precisions,
+                router,
+                work_stealing: !args.has("no-steal"),
             },
-            SimBackend::factory(cfg),
+            factory,
         )?
     } else {
+        // this demo keeps the PJRT path homogeneous; the `dybit serve`
+        // CLI implements the heterogeneous PJRT pool (per-replica
+        // QuantConfigs over one artifact, DESIGN.md §2/§10) — reject the
+        // flags rather than half-apply them
+        if had_mix || args.get("router").is_some() || args.has("no-steal") {
+            anyhow::bail!(
+                "--precision-mix/--router/--no-steal need --sim in this example; \
+                 for a heterogeneous PJRT pool use `dybit serve --precision-mix …`"
+            );
+        }
         let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
         let entry = manifest.model(&model)?;
         let cfg = ServerConfig {
@@ -80,6 +112,7 @@ fn main() -> Result<()> {
         Server::start(&manifest, cfg)?
     };
     let img_elems = server.img_elems();
+    let precisions = server.precisions().to_vec();
 
     // one warm-up request so compile time doesn't pollute the measurement
     let _ = server.infer(vec![0.0; img_elems])?;
@@ -91,12 +124,13 @@ fn main() -> Result<()> {
     let snap = server.shutdown()?;
     println!("\n== results ==");
     println!("requests          {}", snap.requests);
-    println!("batches           {} (mean size {:.1}, padded slots {}, errors {}, rejected {})",
-             snap.batches, snap.mean_batch, snap.padded_slots, snap.errors, snap.rejected);
-    for (i, r) in snap.per_replica.iter().enumerate() {
-        println!("  replica {i}       {} batches, {} requests, {} errors",
-                 r.batches, r.requests, r.errors);
-    }
+    println!(
+        "batches           {} (mean size {:.1}, padded slots {}, errors {}, \
+         rejected {}, escalations {})",
+        snap.batches, snap.mean_batch, snap.padded_slots, snap.errors, snap.rejected,
+        snap.escalations
+    );
+    print!("{}", snap.replica_report(&precisions));
     println!("batch latency     p50 {:.1}ms  p95 {:.1}ms  mean {:.1}ms",
              snap.lat_p50_ms, snap.lat_p95_ms, snap.lat_mean_ms);
     println!("throughput        {:.1} req/s (load-test wall {:.1}s)",

@@ -28,6 +28,8 @@ use crate::sim::{HwConfig, LayerShape, Prec, Simulator};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
+use super::router::ReplicaPrecision;
+
 /// One replica's model executor: takes a padded `[batch, img_elems]`
 /// input tensor, returns `[batch, classes]` logits.  The worker loop
 /// (pad → forward → argmax → reply) lives in [`super::Server`]; a
@@ -225,6 +227,26 @@ impl SimBackend {
         })
     }
 
+    /// A heterogeneous-pool [`BackendFactory`] (DESIGN.md §10): replica
+    /// `i` runs `base` at `mix[i]`'s bitwidths, so its batch cost is the
+    /// §3 simulator's cycle count *at that precision* — a DyBit-4
+    /// replica really is ~2.6× faster per batch than an 8-bit one on the
+    /// ResNet-like stack, making routing effects measurable with no
+    /// artifacts.  The scorer seed stays shared, so every replica (fast
+    /// or accurate) answers a given payload identically; SimBackend
+    /// models the *latency* side of precision — the accuracy side is the
+    /// paper's Fig. 6, not simulated.
+    pub fn mixed_factory(base: SimBackendCfg, mix: Vec<ReplicaPrecision>) -> BackendFactory {
+        Arc::new(move |replica| {
+            let p = match mix.is_empty() {
+                true => ReplicaPrecision::default(),
+                false => mix[replica % mix.len()],
+            };
+            let cfg = SimBackendCfg { wbits: p.wbits, abits: p.abits, ..base.clone() };
+            Ok(Box::new(SimBackend::new(cfg)?) as Box<dyn InferenceBackend>)
+        })
+    }
+
     /// Simulated (unscaled) latency of one batch in seconds.
     pub fn sim_latency_s(&self) -> f64 {
         self.sim_latency_s
@@ -342,6 +364,31 @@ mod tests {
         x.data[100] = 42.5;
         let err = b.forward(x).unwrap_err();
         assert!(format!("{err:#}").contains("injected"));
+    }
+
+    #[test]
+    fn mixed_factory_costs_by_replica_precision_but_answers_identically() {
+        let mut base = SimBackendCfg::tiny(9);
+        base.time_scale = 1.0; // expose the per-precision cost difference
+        let mix = vec![
+            ReplicaPrecision::uniform(4),
+            ReplicaPrecision::uniform(4),
+            ReplicaPrecision::uniform(8),
+        ];
+        let fast = SimBackend::new(SimBackendCfg { wbits: 4, abits: 4, ..base.clone() }).unwrap();
+        let slow = SimBackend::new(SimBackendCfg { wbits: 8, abits: 8, ..base.clone() }).unwrap();
+        assert!(
+            fast.batch_cost() < slow.batch_cost(),
+            "per-precision cycle costs must separate the tiers"
+        );
+        let f = SimBackend::mixed_factory(base, mix);
+        let mut r0 = f(0).unwrap();
+        let mut r2 = f(2).unwrap();
+        // same seed ⇒ identical logits across the precision tiers, so an
+        // escalation re-run cannot change a deterministic answer
+        let mut rng = Rng::new(3);
+        let x = Tensor::new(vec![4, 64], rng.normal_vec(4 * 64)).unwrap();
+        assert_eq!(r0.forward(x.clone()).unwrap(), r2.forward(x).unwrap());
     }
 
     #[test]

@@ -1,14 +1,37 @@
-//! Dynamic batcher: size + deadline policy over a bounded request queue.
+//! Dynamic batcher over per-replica intake queues with tail stealing
+//! (DESIGN.md §9–§10).
 //!
-//! The compiled fwd HLO has a static batch dimension (32); the batcher
-//! fills a batch up to that size or until the oldest request has waited
-//! `max_wait`, then pads the remainder with zero images.  The assembly
-//! logic is pure (no threads) so it is unit-testable; the server wraps it
-//! in a worker loop.
+//! Pre-§10 the pool shared one mpsc intake behind a mutex; routing was
+//! impossible (whoever locked first took the oldest request) and a
+//! precision-aware scheduler had nowhere to stand.  [`ShardedIntake`]
+//! gives every replica its own bounded FIFO: the [`super::Router`]
+//! (DESIGN.md §10) picks the shard per request, the owning replica
+//! assembles batches from its queue front under the same size+deadline
+//! policy as before, and an *idle* replica steals from the tail of the
+//! most loaded sibling so skewed routing cannot idle half the pool.
+//!
+//! Queue invariants (asserted by the tests here and in
+//! `rust/tests/coordinator_routing.rs`):
+//!
+//! * **Owner order.**  A replica serves its own queue strictly FIFO
+//!   (front pops).  Thieves take from the *tail* only, so the relative
+//!   order of everything left in the victim's queue is preserved —
+//!   stealing never reorders a replica's own FIFO.
+//! * **Steal gate.**  An [`Item`] tagged `min_bits > 0` (accuracy-floor
+//!   routing, escalation re-runs) is only stolen by replicas whose
+//!   precision floor meets it.  The owner serves its queue regardless of
+//!   tags — routing already honored the floor when it picked the shard.
+//! * **Bounded, blocking.**  Each shard holds at most `cap` items;
+//!   `push` blocks until space or the intake closes (the same
+//!   backpressure the old `sync_channel` gave `submit`).  Every pop
+//!   notifies, so a blocked pusher never outlives the capacity it waits
+//!   for (regression test `blocked_pusher_wakes_on_pop`).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::sync::{Mutex, PoisonError};
-use std::time::{Duration, Instant};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use crate::util::lock;
 
 /// One enqueued inference request.
 pub struct Request<T, R> {
@@ -22,78 +45,216 @@ pub struct Request<T, R> {
 #[derive(Clone, Copy, Debug)]
 pub struct Policy {
     pub max_batch: usize,
-    pub max_wait: Duration,
+    pub max_wait: std::time::Duration,
 }
 
 impl Default for Policy {
     fn default() -> Self {
-        Policy { max_batch: 32, max_wait: Duration::from_millis(5) }
+        Policy { max_batch: 32, max_wait: std::time::Duration::from_millis(5) }
+    }
+}
+
+/// A [`Request`] plus its routing tags (DESIGN.md §10).
+pub struct Item<T, R> {
+    pub req: Request<T, R>,
+    /// Accuracy floor: replicas with a lower precision floor may not
+    /// steal this item ([`super::Router::min_bits`], escalation
+    /// re-runs).  `0` = anyone.
+    pub min_bits: u32,
+    /// Set on escalation re-runs: reply with the result, never
+    /// re-escalate (bounds every request to at most two executions).
+    pub escalated: bool,
+    /// Set by [`ShardedIntake::pop_batch`] when the item was taken from
+    /// a sibling's tail — feeds the per-replica `stolen` counter.
+    pub stolen: bool,
+}
+
+impl<T, R> Item<T, R> {
+    /// An untagged item (stealable by anyone, first run).
+    pub fn new(req: Request<T, R>) -> Self {
+        Item { req, min_bits: 0, escalated: false, stolen: false }
     }
 }
 
 /// Outcome of one assembly round.
 pub enum Assembled<T, R> {
-    /// A batch ready to execute (1..=max_batch requests).
-    Batch(Vec<Request<T, R>>),
-    /// Queue closed and drained — worker should exit.
+    /// A batch ready to execute (1..=max_batch items).
+    Batch(Vec<Item<T, R>>),
+    /// Intake closed and fully drained — worker should exit.
     Closed,
 }
 
-/// Block until a batch is ready per the policy (or the channel closes).
-pub fn assemble<T, R>(rx: &Receiver<Request<T, R>>, policy: Policy) -> Assembled<T, R> {
-    // block for the first request
-    let first = match rx.recv() {
-        Ok(r) => r,
-        Err(_) => return Assembled::Closed,
-    };
-    // Window end: effectively (enqueued ⌄ (now − max_wait)) + max_wait.
-    // `Instant::now() - max_wait` can panic early in process life on
-    // platforms where Instant's epoch is process start (and everywhere
-    // for huge waits like Duration::MAX), and `+ max_wait` can overflow
-    // Instant's range — use checked arithmetic with safe fallbacks
-    // instead: an unrepresentable deadline means "no deadline"
-    // (regression tests below).
-    let anchor = match Instant::now().checked_sub(policy.max_wait) {
-        Some(floor) => first.enqueued.max(floor),
-        None => first.enqueued,
-    };
-    let deadline = anchor.checked_add(policy.max_wait);
-    let mut batch = vec![first];
-    while batch.len() < policy.max_batch {
-        let recvd = match deadline {
-            Some(d) => {
-                let now = Instant::now();
-                if now >= d {
-                    break;
-                }
-                rx.recv_timeout(d - now)
-            }
-            // no finite deadline: wait until the batch fills or the
-            // queue closes
-            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
-        };
-        match recvd {
-            Ok(r) => batch.push(r),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-    }
-    Assembled::Batch(batch)
+struct Shards<T, R> {
+    queues: Vec<VecDeque<Item<T, R>>>,
+    closed: bool,
 }
 
-/// Multi-consumer assembly over one shared intake (DESIGN.md §9): std
-/// mpsc receivers are single-consumer, so pool replicas share the queue
-/// through a mutex.  Exactly one replica assembles at a time — holding
-/// the lock until the first request arrives (unbounded on an idle
-/// queue, where siblings could not have received anything anyway) plus
-/// at most one batch window — and then executes *outside* the lock, so
-/// batch formation pipelines with execution across replicas.  The lock
-/// is poison-recovering like the metrics lock: a replica that panicked
-/// elsewhere must not wedge the others.
-pub fn assemble_shared<T, R>(rx: &Mutex<Receiver<Request<T, R>>>,
-                             policy: Policy) -> Assembled<T, R> {
-    let rx = rx.lock().unwrap_or_else(PoisonError::into_inner);
-    assemble(&rx, policy)
+/// Per-replica bounded FIFO queues with tail stealing (DESIGN.md §10).
+///
+/// One mutex + condvar pair guards all shards: assembly holds the lock
+/// for pointer moves only (execution happens outside), and a shared
+/// condvar is what lets an idle replica wake on a *sibling's* push —
+/// per-shard condvars would strand thieves.  Pushers and poppers share
+/// the condvar too, so every state change `notify_all`s.
+pub struct ShardedIntake<T, R> {
+    state: Mutex<Shards<T, R>>,
+    cv: Condvar,
+    cap: usize,
+    /// Per-replica precision floor (min(wbits, abits)); gates stealing.
+    floor_bits: Vec<u32>,
+    steal: bool,
+}
+
+impl<T, R> ShardedIntake<T, R> {
+    /// `floor_bits` has one entry per shard/replica; `cap` bounds each
+    /// shard; `steal` enables tail stealing between shards.
+    pub fn new(cap: usize, floor_bits: Vec<u32>, steal: bool) -> Self {
+        assert!(!floor_bits.is_empty(), "intake needs at least one shard");
+        assert!(cap >= 1, "intake needs a non-zero capacity");
+        let queues = floor_bits.iter().map(|_| VecDeque::new()).collect();
+        ShardedIntake {
+            state: Mutex::new(Shards { queues, closed: false }),
+            cv: Condvar::new(),
+            cap,
+            floor_bits,
+            steal,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.floor_bits.len()
+    }
+
+    /// Blocking bounded push onto `shard`'s tail.  Returns the item back
+    /// if the intake is closed (caller decides how to answer it).
+    pub fn push(&self, shard: usize, item: Item<T, R>)
+                -> std::result::Result<(), Item<T, R>> {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        let mut g = lock(&self.state);
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.queues[shard].len() < self.cap {
+                g.queues[shard].push_back(item);
+                self.cv.notify_all();
+                return Ok(());
+            }
+            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Stop accepting pushes; replicas drain what is queued and then see
+    /// [`Assembled::Closed`].
+    pub fn close(&self) {
+        lock(&self.state).closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Items currently queued across all shards (diagnostics).
+    pub fn len(&self) -> usize {
+        lock(&self.state).queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Assemble one batch for `shard`: block for a first item (own front
+    /// first, else a sibling tail if stealing is on), then fill from the
+    /// same sources until `max_batch` or the deadline.  Returns
+    /// [`Assembled::Closed`] once the intake is closed and nothing this
+    /// replica may serve remains.
+    pub fn pop_batch(&self, shard: usize, policy: Policy) -> Assembled<T, R> {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        let max_batch = policy.max_batch.max(1);
+        let mut g = lock(&self.state);
+        let first = loop {
+            if let Some(it) = self.take(&mut g, shard) {
+                break it;
+            }
+            if g.closed {
+                return Assembled::Closed;
+            }
+            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+        };
+        // Window end: effectively (enqueued ⌄ (now − max_wait)) + max_wait.
+        // `Instant::now() - max_wait` can panic early in process life on
+        // platforms where Instant's epoch is process start (and everywhere
+        // for huge waits like Duration::MAX), and `+ max_wait` can
+        // overflow Instant's range — checked arithmetic with safe
+        // fallbacks instead: an unrepresentable deadline means "no
+        // deadline" (regression tests below).
+        let anchor = match Instant::now().checked_sub(policy.max_wait) {
+            Some(floor) => first.req.enqueued.max(floor),
+            None => first.req.enqueued,
+        };
+        let deadline = anchor.checked_add(policy.max_wait);
+        let mut batch = vec![first];
+        while batch.len() < max_batch {
+            if let Some(it) = self.take(&mut g, shard) {
+                batch.push(it);
+                continue;
+            }
+            if g.closed {
+                break;
+            }
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        break;
+                    }
+                    g = self
+                        .cv
+                        .wait_timeout(g, d - now)
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .0;
+                }
+                // no finite deadline: wait until the batch fills or the
+                // intake closes
+                None => g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner),
+            }
+        }
+        drop(g);
+        self.cv.notify_all();
+        Assembled::Batch(batch)
+    }
+
+    /// One item for `shard`: its own front, else — with stealing on —
+    /// the tail of the most loaded sibling whose tail item this
+    /// replica's precision floor may serve (ties → lowest index).
+    /// Notifies on success so a pusher blocked on the freed capacity
+    /// wakes even while this replica keeps assembling.
+    fn take(&self, g: &mut MutexGuard<'_, Shards<T, R>>, shard: usize)
+            -> Option<Item<T, R>> {
+        if let Some(it) = g.queues[shard].pop_front() {
+            self.cv.notify_all();
+            return Some(it);
+        }
+        if !self.steal {
+            return None;
+        }
+        let my_floor = self.floor_bits[shard];
+        let mut victim: Option<(usize, usize)> = None;
+        for (i, q) in g.queues.iter().enumerate() {
+            if i == shard {
+                continue;
+            }
+            let Some(tail) = q.back() else { continue };
+            if tail.min_bits > my_floor {
+                continue;
+            }
+            if victim.map_or(true, |(_, best)| q.len() > best) {
+                victim = Some((i, q.len()));
+            }
+        }
+        let (v, _) = victim?;
+        let mut it = g.queues[v].pop_back()?;
+        it.stolen = true;
+        self.cv.notify_all();
+        Some(it)
+    }
 }
 
 #[cfg(test)]
@@ -101,35 +262,49 @@ mod tests {
     use super::*;
     use std::sync::mpsc;
     use std::thread;
+    use std::time::Duration;
 
     fn req(v: u32) -> (Request<u32, u32>, mpsc::Receiver<u32>) {
         let (tx, rx) = mpsc::channel();
         (Request { payload: v, enqueued: Instant::now(), respond: tx }, rx)
     }
 
+    fn item(v: u32) -> Item<u32, u32> {
+        Item::new(req(v).0)
+    }
+
+    fn single(cap: usize) -> ShardedIntake<u32, u32> {
+        ShardedIntake::new(cap, vec![8], true)
+    }
+
+    fn payloads(b: &[Item<u32, u32>]) -> Vec<u32> {
+        b.iter().map(|i| i.req.payload).collect()
+    }
+
     #[test]
-    fn fills_to_max_batch() {
-        let (tx, rx) = mpsc::channel();
+    fn fills_to_max_batch_in_fifo_order() {
+        let q = single(64);
         for i in 0..5 {
-            tx.send(req(i).0).unwrap();
+            q.push(0, item(i)).ok().unwrap();
         }
         let policy = Policy { max_batch: 3, max_wait: Duration::from_secs(5) };
-        match assemble(&rx, policy) {
+        match q.pop_batch(0, policy) {
             Assembled::Batch(b) => {
-                assert_eq!(b.len(), 3);
-                assert_eq!(b[0].payload, 0);
+                assert_eq!(payloads(&b), vec![0, 1, 2]);
+                assert!(b.iter().all(|i| !i.stolen));
             }
             _ => panic!("expected batch"),
         }
+        assert_eq!(q.len(), 2);
     }
 
     #[test]
     fn deadline_flushes_partial_batch() {
-        let (tx, rx) = mpsc::channel::<Request<u32, u32>>();
-        tx.send(req(7).0).unwrap();
+        let q = single(64);
+        q.push(0, item(7)).ok().unwrap();
         let policy = Policy { max_batch: 32, max_wait: Duration::from_millis(10) };
         let t0 = Instant::now();
-        match assemble(&rx, policy) {
+        match q.pop_batch(0, policy) {
             Assembled::Batch(b) => {
                 assert_eq!(b.len(), 1);
                 assert!(t0.elapsed() < Duration::from_secs(1));
@@ -139,76 +314,169 @@ mod tests {
     }
 
     #[test]
-    fn closed_channel_reports_closed() {
-        let (tx, rx) = mpsc::channel::<Request<u32, u32>>();
-        drop(tx);
-        assert!(matches!(assemble(&rx, Policy::default()), Assembled::Closed));
+    fn closed_intake_drains_then_reports_closed() {
+        let q = single(64);
+        q.push(0, item(1)).ok().unwrap();
+        q.close();
+        assert!(q.push(0, item(2)).is_err(), "push after close must fail");
+        match q.pop_batch(0, Policy::default()) {
+            Assembled::Batch(b) => assert_eq!(payloads(&b), vec![1]),
+            _ => panic!("expected the drain batch"),
+        }
+        assert!(matches!(q.pop_batch(0, Policy::default()), Assembled::Closed));
     }
 
     #[test]
     fn huge_max_wait_does_not_panic() {
-        // regression: the old deadline math did `Instant::now() - max_wait`
-        // unchecked, which panics whenever max_wait exceeds the Instant
-        // epoch (early process life on some platforms; Duration::MAX
-        // everywhere) — and the `+ max_wait` side can overflow too.
-        let (tx, rx) = mpsc::channel();
-        tx.send(req(1).0).unwrap();
-        tx.send(req(2).0).unwrap();
+        // regression: unchecked `Instant::now() - max_wait` panics when
+        // max_wait exceeds the Instant epoch (early process life on some
+        // platforms; Duration::MAX everywhere), and `+ max_wait` can
+        // overflow — the checked-math fallback treats both as "no
+        // deadline"
+        let q = single(64);
+        q.push(0, item(1)).ok().unwrap();
+        q.push(0, item(2)).ok().unwrap();
         let policy = Policy { max_batch: 2, max_wait: Duration::MAX };
-        match assemble(&rx, policy) {
+        match q.pop_batch(0, policy) {
             Assembled::Batch(b) => assert_eq!(b.len(), 2),
             _ => panic!("expected batch"),
         }
     }
 
     #[test]
-    fn huge_max_wait_still_flushes_when_queue_closes() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(req(7).0).unwrap();
-        drop(tx); // queue closes with a partial batch pending
+    fn huge_max_wait_still_flushes_when_intake_closes() {
+        let q = single(64);
+        q.push(0, item(7)).ok().unwrap();
+        q.close(); // closes with a partial batch pending
         let policy = Policy { max_batch: 8, max_wait: Duration::MAX };
-        match assemble(&rx, policy) {
+        match q.pop_batch(0, policy) {
             Assembled::Batch(b) => assert_eq!(b.len(), 1),
             _ => panic!("expected batch"),
         }
     }
 
     #[test]
-    fn shared_receiver_splits_load_across_consumers() {
-        let (tx, rx) = mpsc::channel();
-        for i in 0..6 {
-            tx.send(req(i).0).unwrap();
+    fn thief_takes_the_tail_owner_keeps_fifo_order() {
+        let q = ShardedIntake::new(64, vec![8, 8], true);
+        for i in 0..3 {
+            q.push(0, item(i)).ok().unwrap();
         }
-        drop(tx);
-        let rx = Mutex::new(rx);
-        let policy = Policy { max_batch: 2, max_wait: Duration::from_millis(1) };
-        let mut seen = Vec::new();
-        loop {
-            match assemble_shared(&rx, policy) {
-                Assembled::Batch(b) => {
-                    assert!(b.len() <= 2);
-                    seen.extend(b.iter().map(|r| r.payload));
-                }
-                Assembled::Closed => break,
+        let policy = Policy { max_batch: 1, max_wait: Duration::from_millis(1) };
+        // shard 1 is empty: it steals shard 0's *newest* item
+        match q.pop_batch(1, policy) {
+            Assembled::Batch(b) => {
+                assert_eq!(payloads(&b), vec![2]);
+                assert!(b[0].stolen);
             }
+            _ => panic!("expected stolen batch"),
         }
-        seen.sort_unstable();
-        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        // the victim's remaining FIFO is untouched and in order
+        let policy = Policy { max_batch: 4, max_wait: Duration::from_millis(1) };
+        match q.pop_batch(0, policy) {
+            Assembled::Batch(b) => {
+                assert_eq!(payloads(&b), vec![0, 1]);
+                assert!(b.iter().all(|i| !i.stolen));
+            }
+            _ => panic!("expected owner batch"),
+        }
+    }
+
+    #[test]
+    fn thief_fills_a_whole_batch_from_the_victim_tail() {
+        let q = ShardedIntake::new(64, vec![8, 8], true);
+        for i in 0..6 {
+            q.push(0, item(i)).ok().unwrap();
+        }
+        let policy = Policy { max_batch: 4, max_wait: Duration::from_millis(1) };
+        match q.pop_batch(1, policy) {
+            Assembled::Batch(b) => {
+                // tail-first, one steal per take
+                assert_eq!(payloads(&b), vec![5, 4, 3, 2]);
+                assert!(b.iter().all(|i| i.stolen));
+            }
+            _ => panic!("expected stolen batch"),
+        }
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn steal_respects_the_min_bits_gate() {
+        // shard 0 floors at 8 bits, shard 1 at 4
+        let q = ShardedIntake::new(64, vec![8, 4], true);
+        let mut it = item(9);
+        it.min_bits = 8;
+        q.push(0, it).ok().unwrap();
+        q.close();
+        // the 4-bit replica may not steal an 8-bit-floor item…
+        assert!(matches!(q.pop_batch(1, Policy::default()), Assembled::Closed));
+        // …but the owner serves its own queue regardless of tags
+        match q.pop_batch(0, Policy::default()) {
+            Assembled::Batch(b) => assert_eq!(payloads(&b), vec![9]),
+            _ => panic!("owner must serve its own queue"),
+        }
+    }
+
+    #[test]
+    fn stealing_disabled_leaves_siblings_idle() {
+        let q = ShardedIntake::new(64, vec![8, 8], false);
+        q.push(0, item(1)).ok().unwrap();
+        q.close();
+        assert!(matches!(q.pop_batch(1, Policy::default()), Assembled::Closed));
+        assert!(matches!(q.pop_batch(0, Policy::default()), Assembled::Batch(_)));
+    }
+
+    #[test]
+    fn bounded_push_blocks_until_a_pop_frees_space() {
+        let q = std::sync::Arc::new(single(2));
+        q.push(0, item(0)).ok().unwrap();
+        q.push(0, item(1)).ok().unwrap();
+        let q2 = std::sync::Arc::clone(&q);
+        let pusher = thread::spawn(move || q2.push(0, item(2)).is_ok());
+        thread::sleep(Duration::from_millis(20)); // let the pusher block
+        // regression (deadlock): with an unbounded window the assembler
+        // must wake the blocked pusher the moment a pop frees capacity,
+        // or both sides wait on the same condvar forever
+        let policy = Policy { max_batch: 3, max_wait: Duration::MAX };
+        match q.pop_batch(0, policy) {
+            Assembled::Batch(b) => assert_eq!(payloads(&b), vec![0, 1, 2]),
+            _ => panic!("expected batch"),
+        }
+        assert!(pusher.join().unwrap(), "blocked pusher must complete");
     }
 
     #[test]
     fn late_arrivals_join_within_deadline() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(req(1).0).unwrap();
+        let q = std::sync::Arc::new(single(64));
+        q.push(0, item(1)).ok().unwrap();
+        let q2 = std::sync::Arc::clone(&q);
         let h = thread::spawn(move || {
             thread::sleep(Duration::from_millis(5));
-            tx.send(req(2).0).unwrap();
+            q2.push(0, item(2)).ok().unwrap();
         });
         let policy = Policy { max_batch: 8, max_wait: Duration::from_millis(200) };
-        match assemble(&rx, policy) {
-            Assembled::Batch(b) => assert!(b.len() >= 1), // 2 on a fast box
+        match q.pop_batch(0, policy) {
+            Assembled::Batch(b) => assert!(!b.is_empty()), // 2 on a fast box
             _ => panic!(),
         }
         h.join().unwrap();
+    }
+
+    #[test]
+    fn skewed_pushes_drain_across_thieving_consumers() {
+        let q = ShardedIntake::new(64, vec![8, 8, 8], true);
+        for i in 0..9 {
+            q.push(0, item(i)).ok().unwrap();
+        }
+        q.close();
+        let policy = Policy { max_batch: 2, max_wait: Duration::from_millis(1) };
+        let mut seen = Vec::new();
+        for shard in [1, 2, 0, 1, 2, 0] {
+            if let Assembled::Batch(b) = q.pop_batch(shard, policy) {
+                seen.extend(payloads(&b));
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..9).collect::<Vec<_>>(), "no item lost or duplicated");
+        assert!(q.is_empty());
     }
 }

@@ -1,6 +1,7 @@
 //! Serving metrics: request/batch/error counters + latency percentiles,
-//! kept both globally and per replica (DESIGN.md §9), plus a queue-depth
-//! gauge over the shared intake.
+//! kept both globally and per replica (DESIGN.md §9), a queue-depth
+//! gauge over the sharded intake, and the routing/stealing/escalation
+//! counters of the heterogeneous pool (DESIGN.md §10).
 //!
 //! Accounting invariant (asserted by the coordinator e2e tests): every
 //! request the server accepted ends in exactly one of three buckets —
@@ -8,20 +9,18 @@
 //! (slot in a batch whose execution failed; the client got an `Err`
 //! reply), or `rejected` (invalid payload answered `Err` before
 //! execution) — so `requests + failed_requests + rejected` equals the
-//! number of submitted requests once the queue drains.
+//! number of submitted requests once the queue drains.  An escalated
+//! request (DESIGN.md §10) executes twice but is *answered* once: its
+//! first run counts in the fast replica's `batches` only (never
+//! `requests` — [`Metrics::record_batch_answered`] splits batch size
+//! from replies sent), its re-run counts wherever it finally replies,
+//! and the `escalations` counter records the hand-off itself.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::sync::Mutex;
 
+use crate::util::lock;
 use crate::util::stats::{percentile, summarize};
-
-/// Poison-recovering lock (same pattern as `GridLut::from_format`): a
-/// worker that panicked mid-push can at worst leave a half-recorded
-/// batch behind, which is strictly better than poisoning every future
-/// metrics call in the server.
-fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
 
 /// Per-replica counters (one slot per pool worker).
 #[derive(Default)]
@@ -29,6 +28,15 @@ pub struct ReplicaCounters {
     pub batches: AtomicU64,
     pub errors: AtomicU64,
     pub requests: AtomicU64,
+    /// Requests the router assigned to this replica's queue at submit
+    /// time (DESIGN.md §10).  Deterministic for the built-in routers:
+    /// same seeded workload ⇒ same counts.
+    pub routed: AtomicU64,
+    /// Requests this replica pulled from sibling queue tails.
+    pub stolen: AtomicU64,
+    /// Escalation re-runs this replica *initiated* (low-margin replies
+    /// it handed to the accurate tier instead of answering).
+    pub escalations: AtomicU64,
 }
 
 /// Shared, thread-safe metrics sink for the coordinator.
@@ -46,6 +54,10 @@ pub struct Metrics {
     /// Requests answered `Err` before execution (invalid payload — the
     /// worker refuses to zero-pad them into a fabricated class).
     pub rejected: AtomicU64,
+    /// Escalation re-runs enqueued on the accurate tier (DESIGN.md §10).
+    /// Counted when the hand-off lands in the target queue, so this is
+    /// exactly the number of second executions the pool performed.
+    pub escalations: AtomicU64,
     /// Gauge: requests accepted into the intake queue and not yet
     /// pulled into a batch by a replica.  Maintained by
     /// `queue_push`/`queue_pop`; returns to 0 once the pool drains.
@@ -67,6 +79,9 @@ pub struct ReplicaSnapshot {
     pub batches: u64,
     pub errors: u64,
     pub requests: u64,
+    pub routed: u64,
+    pub stolen: u64,
+    pub escalations: u64,
 }
 
 /// Immutable snapshot for reporting.
@@ -78,6 +93,7 @@ pub struct Snapshot {
     pub errors: u64,
     pub failed_requests: u64,
     pub rejected: u64,
+    pub escalations: u64,
     pub queue_depth: u64,
     pub per_replica: Vec<ReplicaSnapshot>,
     pub mean_batch: f64,
@@ -85,6 +101,25 @@ pub struct Snapshot {
     pub lat_p95_ms: f64,
     pub lat_mean_ms: f64,
     pub throughput_rps: f64,
+}
+
+impl Snapshot {
+    /// Multi-line per-replica report (one indented line per replica,
+    /// labeled with its precision) — the single formatter behind the
+    /// `dybit serve` printout and the serve example, so the shape the
+    /// README documents cannot drift between them.
+    pub fn replica_report(&self, precisions: &[super::router::ReplicaPrecision]) -> String {
+        let mut out = String::new();
+        for (i, r) in self.per_replica.iter().enumerate() {
+            let p = precisions.get(i).copied().unwrap_or_default();
+            out.push_str(&format!(
+                "  replica {i} ({p}): {} routed, {} batches, {} requests, \
+                 {} stolen, {} escalated-away, {} errors\n",
+                r.routed, r.batches, r.requests, r.stolen, r.escalations, r.errors
+            ));
+        }
+        out
+    }
 }
 
 impl Metrics {
@@ -97,6 +132,7 @@ impl Metrics {
             errors: AtomicU64::new(0),
             failed_requests: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            escalations: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             per_replica: (0..replicas.max(1)).map(|_| ReplicaCounters::default()).collect(),
             latencies_s: Mutex::new(Vec::new()),
@@ -108,17 +144,51 @@ impl Metrics {
         self.per_replica.len()
     }
 
-    /// A successful batch executed by `replica`.
+    /// A successful batch executed by `replica` in which every request
+    /// was answered (no escalations).
     pub fn record_batch(&self, replica: usize, size: usize, latency_s: f64, padded: usize) {
-        self.requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.record_batch_answered(replica, size, size, latency_s, padded);
+    }
+
+    /// A successful batch of `size` requests executed by `replica`, of
+    /// which `answered` received replies here — the remaining
+    /// `size - answered` were escalated to the accurate tier and count
+    /// in `requests` only when their re-run replies (DESIGN.md §10;
+    /// keeps `requests + failed_requests + rejected == submitted`).
+    pub fn record_batch_answered(&self, replica: usize, size: usize, answered: usize,
+                                 latency_s: f64, padded: usize) {
+        let answered = answered.min(size);
+        self.requests.fetch_add(answered as u64, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.padded_slots.fetch_add(padded as u64, Ordering::Relaxed);
         if let Some(r) = self.per_replica.get(replica) {
             r.batches.fetch_add(1, Ordering::Relaxed);
-            r.requests.fetch_add(size as u64, Ordering::Relaxed);
+            r.requests.fetch_add(answered as u64, Ordering::Relaxed);
         }
         lock(&self.latencies_s).push(latency_s);
         lock(&self.batch_sizes).push(size);
+    }
+
+    /// The router assigned one request to `replica`'s queue.
+    pub fn record_routed(&self, replica: usize) {
+        if let Some(r) = self.per_replica.get(replica) {
+            r.routed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// `replica` pulled `n` requests from sibling queue tails.
+    pub fn record_stolen(&self, replica: usize, n: usize) {
+        if let Some(r) = self.per_replica.get(replica) {
+            r.stolen.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// `replica` handed `n` low-margin replies to the accurate tier.
+    pub fn record_escalated(&self, replica: usize, n: usize) {
+        self.escalations.fetch_add(n as u64, Ordering::Relaxed);
+        if let Some(r) = self.per_replica.get(replica) {
+            r.escalations.fetch_add(n as u64, Ordering::Relaxed);
+        }
     }
 
     /// A batch of `size` requests that failed end-to-end on `replica`:
@@ -179,6 +249,7 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             failed_requests: self.failed_requests.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            escalations: self.escalations.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             per_replica: self
                 .per_replica
@@ -187,6 +258,9 @@ impl Metrics {
                     batches: r.batches.load(Ordering::Relaxed),
                     errors: r.errors.load(Ordering::Relaxed),
                     requests: r.requests.load(Ordering::Relaxed),
+                    routed: r.routed.load(Ordering::Relaxed),
+                    stolen: r.stolen.load(Ordering::Relaxed),
+                    escalations: r.escalations.load(Ordering::Relaxed),
                 })
                 .collect(),
             mean_batch: if sizes.is_empty() {
@@ -297,6 +371,44 @@ mod tests {
         assert_eq!(m.snapshot(1.0).queue_depth, 1);
         m.queue_pop(5); // unbalanced pop clamps at zero
         assert_eq!(m.snapshot(1.0).queue_depth, 0);
+    }
+
+    #[test]
+    fn batch_answered_splits_size_from_replies() {
+        // a 4-request batch where 3 escalated: only 1 counts as answered,
+        // the batch itself still counts (and its size feeds mean_batch)
+        let m = Metrics::new(2);
+        m.record_batch_answered(0, 4, 1, 0.010, 0);
+        m.record_escalated(0, 3);
+        // the accurate replica answers the 3 re-runs
+        m.record_batch_answered(1, 3, 3, 0.020, 1);
+        let s = m.snapshot(1.0);
+        assert_eq!(s.requests, 4, "each submitted request answered exactly once");
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.escalations, 3);
+        assert_eq!(s.per_replica[0].requests, 1);
+        assert_eq!(s.per_replica[0].escalations, 3);
+        assert_eq!(s.per_replica[1].requests, 3);
+        assert!((s.mean_batch - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn routed_and_stolen_counters_track() {
+        let m = Metrics::new(3);
+        m.record_routed(0);
+        m.record_routed(0);
+        m.record_routed(2);
+        m.record_stolen(1, 2);
+        let s = m.snapshot(1.0);
+        assert_eq!(s.per_replica[0].routed, 2);
+        assert_eq!(s.per_replica[1].routed, 0);
+        assert_eq!(s.per_replica[2].routed, 1);
+        assert_eq!(s.per_replica[1].stolen, 2);
+        // phantom replica ids stay safe (same contract as record_batch)
+        m.record_routed(9);
+        m.record_stolen(9, 1);
+        m.record_escalated(9, 1);
+        assert_eq!(m.snapshot(1.0).escalations, 1);
     }
 
     #[test]

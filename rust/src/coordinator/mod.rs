@@ -1,15 +1,55 @@
-//! L3 coordinator: the serving deployment of the quantized model —
-//! bounded intake queue, dynamic batcher (size+deadline), a pool of
-//! replica workers over a pluggable [`InferenceBackend`] (PJRT
-//! artifacts or the artifact-free simulator backend), latency/
-//! throughput/per-replica metrics (DESIGN.md §9).
+//! L3 coordinator: the serving deployment of the quantized model
+//! (DESIGN.md §9–§10).
+//!
+//! Request flow: [`Server::submit`] → [`Router`] picks a replica queue →
+//! per-replica bounded FIFO ([`batcher::ShardedIntake`]) → dynamic
+//! batching (size + deadline, idle replicas steal from sibling tails) →
+//! a pool of replica workers over a pluggable [`InferenceBackend`]
+//! (PJRT artifacts or the artifact-free simulator backend) → argmax +
+//! margin → reply, or a one-shot escalation to the most accurate
+//! replica when the margin is low.  [`Metrics`] tracks latency/
+//! throughput plus per-replica batches, routing, stealing and
+//! escalations.
+//!
+//! Replicas may differ in precision ([`ReplicaPrecision`]): a pool of
+//! fast DyBit-4 replicas plus one 8-bit accurate replica recovers the
+//! paper's Fig. 6 accuracy/latency trade-off at *serving* time
+//! (DESIGN.md §10).  Module map:
+//!
+//! | module | role | DESIGN.md |
+//! |---|---|---|
+//! | [`router`] | precision-aware queue selection + escalation policy | §10 |
+//! | [`batcher`] | per-replica queues, batching, tail stealing | §9–§10 |
+//! | [`backend`] | pluggable execution (`PjrtBackend`, `SimBackend`) | §9 |
+//! | [`server`] | pool lifecycle, readiness, escalation plumbing | §9–§10 |
+//! | [`metrics`] | counters, gauges, latency percentiles | §9–§10 |
+//!
+//! A minimal artifact-free pool (doc-tested; see [`Server::start_pool`]
+//! for the heterogeneous version):
+//!
+//! ```
+//! use dybit::coordinator::{PoolConfig, Server, SimBackend, SimBackendCfg};
+//!
+//! let pool = PoolConfig { replicas: 2, ..PoolConfig::default() };
+//! let server = Server::start_pool(pool, SimBackend::factory(SimBackendCfg::tiny(1)))
+//!     .unwrap();
+//! assert_eq!(server.replicas(), 2);
+//! let class = server.infer(vec![0.5; server.img_elems()]).unwrap();
+//! assert!(class < 10);
+//! let snap = server.shutdown().unwrap();
+//! assert_eq!(snap.requests, 1);
+//! assert_eq!(snap.queue_depth, 0);
+//! ```
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
+pub mod router;
 pub mod server;
 
 pub use backend::{BackendFactory, InferenceBackend, PjrtBackend, SimBackend, SimBackendCfg};
-pub use batcher::{Policy, Request};
+pub use batcher::{Assembled, Item, Policy, Request, ShardedIntake};
 pub use metrics::{Metrics, ReplicaSnapshot, Snapshot};
+pub use router::{parse_precision_mix, resolve_precision_mix, router_from_spec, AccuracyFloor,
+                 Escalate, Fastest, ReplicaPrecision, Router, DEFAULT_ESCALATE_MARGIN};
 pub use server::{load_test, PoolConfig, Server, ServerConfig};

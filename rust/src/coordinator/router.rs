@@ -1,0 +1,513 @@
+//! Request routing over heterogeneous-precision replicas (DESIGN.md §10).
+//!
+//! PR 4 gave the pool N *identical* replicas behind one shared intake;
+//! the paper's accuracy/latency trade-off (Fig. 6) stopped at the model
+//! boundary.  PrecisionBatching (arXiv 2003.00822) and Bit Fusion
+//! (arXiv 1712.01507) both treat precision as a *scheduling* dimension —
+//! this module does the same at serving time: each replica carries a
+//! [`ReplicaPrecision`], each has its own intake queue
+//! ([`super::batcher::ShardedIntake`]), and a [`Router`] picks the queue
+//! per request.
+//!
+//! Built-in policies ([`router_from_spec`] parses their CLI names):
+//!
+//! * [`Fastest`] — deterministic weighted round-robin, share ∝
+//!   1/(wbits·abits) (the BitFusion throughput model: a (Pw, Pa) PE mode
+//!   executes 64/(Pw·Pa) multiplies per cycle, DESIGN.md §3).  Memory-
+//!   bound layers compress the true ratio below that proxy; work
+//!   stealing absorbs the error (DESIGN.md §10).
+//! * [`AccuracyFloor`] — only replicas whose precision floor
+//!   (min(wbits, abits)) meets `min_bits` receive traffic; routed items
+//!   are tagged so lower-precision replicas cannot *steal* them either.
+//! * [`Escalate`] — primary traffic goes to the fast (below-max-floor)
+//!   replicas; a reply whose argmax margin (winner − runner-up logit)
+//!   falls under the threshold is re-enqueued once on the most accurate
+//!   replica, which answers instead — the serving-time analogue of the
+//!   paper's "fall back to higher precision where the distribution
+//!   demands it".
+//!
+//! All built-ins are deterministic: the routed shard is a pure function
+//! of the pick count (stride scheduling under a mutex), never of wall
+//! clock or queue races, so a seeded workload reproduces its per-replica
+//! assignment counts exactly (`rust/tests/coordinator_routing.rs`).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::util::lock;
+
+/// Default [`Escalate`] margin threshold: logits gaps under this re-run
+/// on the accurate replica.
+pub const DEFAULT_ESCALATE_MARGIN: f32 = 0.1;
+
+/// One replica's serving precision: the (weights, activations) bitwidths
+/// its backend quantizes to.  Routing metadata — the backend factory is
+/// built from the same list (`SimBackend::mixed_factory`, or a
+/// per-replica `QuantConfig` for PJRT pools).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicaPrecision {
+    pub wbits: u32,
+    pub abits: u32,
+}
+
+impl ReplicaPrecision {
+    pub fn new(wbits: u32, abits: u32) -> Self {
+        ReplicaPrecision { wbits, abits }
+    }
+
+    /// Same bitwidth for weights and activations.
+    pub fn uniform(bits: u32) -> Self {
+        ReplicaPrecision { wbits: bits, abits: bits }
+    }
+
+    /// The replica's accuracy floor: min(wbits, abits).  Accuracy is
+    /// limited by the weaker operand, so floor comparisons gate both
+    /// [`AccuracyFloor`] routing and queue stealing.
+    pub fn floor_bits(&self) -> u32 {
+        self.wbits.min(self.abits)
+    }
+
+    /// Stride-scheduler charge per routed request: wbits·abits, i.e. the
+    /// inverse of the BitFusion per-cycle multiply count (DESIGN.md §3),
+    /// so shares come out ∝ 1/(wbits·abits).
+    pub fn stride(&self) -> u64 {
+        (self.wbits as u64) * (self.abits as u64)
+    }
+}
+
+impl Default for ReplicaPrecision {
+    /// The 8/8 baseline — homogeneous pools degrade to plain round-robin.
+    fn default() -> Self {
+        ReplicaPrecision { wbits: 8, abits: 8 }
+    }
+}
+
+impl std::fmt::Display for ReplicaPrecision {
+    /// The `4W8A` tier label every banner and report uses.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}W{}A", self.wbits, self.abits)
+    }
+}
+
+/// Parse a `--precision-mix` CLI value: comma-separated per-replica
+/// entries, each `B` (uniform) or `W:A`, e.g. `4,4,4,8` or `4:8,8:8`.
+pub fn parse_precision_mix(s: &str) -> Result<Vec<ReplicaPrecision>> {
+    let mut mix = Vec::new();
+    for tok in s.split(',').filter(|t| !t.trim().is_empty()) {
+        let tok = tok.trim();
+        let p = match tok.split_once(':') {
+            Some((w, a)) => ReplicaPrecision::new(
+                w.trim().parse().map_err(|_| anyhow!("bad wbits '{w}' in '{tok}'"))?,
+                a.trim().parse().map_err(|_| anyhow!("bad abits '{a}' in '{tok}'"))?,
+            ),
+            None => ReplicaPrecision::uniform(
+                tok.parse().map_err(|_| anyhow!("bad bits '{tok}' in precision mix"))?,
+            ),
+        };
+        ensure!(p.wbits >= 1 && p.abits >= 1, "precision bits must be >= 1, got '{tok}'");
+        mix.push(p);
+    }
+    ensure!(!mix.is_empty(), "empty precision mix");
+    Ok(mix)
+}
+
+/// Resolve a CLI `--precision-mix` against the homogeneous fallback:
+/// an empty mix means `replicas` copies of `(wbits, abits)`; otherwise
+/// the mix itself (whose length is the pool's replica count).  Shared
+/// by `dybit serve` and the serve example so the fallback cannot drift
+/// between them.
+pub fn resolve_precision_mix(mix: Vec<ReplicaPrecision>, wbits: u32, abits: u32,
+                             replicas: usize) -> Vec<ReplicaPrecision> {
+    if mix.is_empty() {
+        vec![ReplicaPrecision::new(wbits, abits); replicas.max(1)]
+    } else {
+        mix
+    }
+}
+
+/// Per-request routing policy over the per-replica queues
+/// (DESIGN.md §10).  Implementations must be deterministic in the pick
+/// count (no wall clock, no queue-depth races) so seeded workloads
+/// reproduce their assignment counts.
+pub trait Router: Send + Sync {
+    /// Policy name for logs and `Debug` output.
+    fn name(&self) -> &str;
+
+    /// Queue index for the next accepted request.  `precisions` has one
+    /// entry per replica; the server clamps out-of-range returns.
+    fn route(&self, precisions: &[ReplicaPrecision]) -> usize;
+
+    /// Accuracy-floor tag stamped on routed items: replicas whose
+    /// [`ReplicaPrecision::floor_bits`] is below this may not *steal*
+    /// them (the owning queue serves its items regardless — routing
+    /// already honored the floor).
+    fn min_bits(&self) -> u32 {
+        0
+    }
+
+    /// Post-inference escalation decision: given the replica that served
+    /// the request and the argmax margin of its reply, return the
+    /// replica to re-run on (strictly higher floor than `served`), or
+    /// `None` to reply as-is.  Called only for first runs — escalated
+    /// re-runs always reply.
+    fn escalate(&self, _served: usize, _margin: f32,
+                _precisions: &[ReplicaPrecision]) -> Option<usize> {
+        None
+    }
+}
+
+/// First replica with the maximal precision floor (deterministic
+/// tie-break: lowest index).
+fn most_accurate(precisions: &[ReplicaPrecision]) -> usize {
+    let mut best = 0;
+    for (i, p) in precisions.iter().enumerate().skip(1) {
+        if p.floor_bits() > precisions[best].floor_bits() {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Deterministic stride scheduler (weighted round-robin): pick the
+/// eligible replica with minimal accumulated credit (ties → lowest
+/// index), then charge it its [`ReplicaPrecision::stride`].  The pick
+/// sequence is a pure function of the pick count, so concurrent
+/// submitters change interleaving but never the counts after N picks.
+struct Wrr {
+    credits: Mutex<Vec<u64>>,
+}
+
+impl Wrr {
+    fn new() -> Self {
+        Wrr { credits: Mutex::new(Vec::new()) }
+    }
+
+    fn pick(&self, precisions: &[ReplicaPrecision],
+            eligible: impl Fn(usize) -> bool) -> usize {
+        let mut c = lock(&self.credits);
+        if c.len() != precisions.len() {
+            // lazily (re)sized: routers are built before the pool, so the
+            // replica count is first known here
+            *c = vec![0; precisions.len()];
+        }
+        let mut best: Option<usize> = None;
+        for i in 0..precisions.len() {
+            if !eligible(i) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => c[i] < c[b],
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else { return 0 };
+        c[i] = c[i].saturating_add(precisions[i].stride().max(1));
+        i
+    }
+}
+
+/// Weighted round-robin by replica speed: share ∝ 1/(wbits·abits).  On a
+/// homogeneous pool this is plain round-robin.
+pub struct Fastest {
+    wrr: Wrr,
+}
+
+impl Fastest {
+    pub fn new() -> Self {
+        Fastest { wrr: Wrr::new() }
+    }
+}
+
+impl Default for Fastest {
+    fn default() -> Self {
+        Fastest::new()
+    }
+}
+
+impl Router for Fastest {
+    fn name(&self) -> &str {
+        "fastest"
+    }
+
+    fn route(&self, precisions: &[ReplicaPrecision]) -> usize {
+        if precisions.is_empty() {
+            return 0;
+        }
+        self.wrr.pick(precisions, |_| true)
+    }
+}
+
+/// Route only to replicas whose precision floor meets `min_bits`
+/// (weighted round-robin among them); items are tagged so lower-floor
+/// replicas cannot steal them.  If no replica satisfies the floor, the
+/// most accurate replica takes everything (a clamped floor beats a dead
+/// pool).
+pub struct AccuracyFloor {
+    pub min_bits: u32,
+    wrr: Wrr,
+    name: String,
+}
+
+impl AccuracyFloor {
+    pub fn new(min_bits: u32) -> Self {
+        AccuracyFloor { min_bits, wrr: Wrr::new(), name: format!("floor:{min_bits}") }
+    }
+}
+
+impl Router for AccuracyFloor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn route(&self, precisions: &[ReplicaPrecision]) -> usize {
+        if precisions.is_empty() {
+            return 0;
+        }
+        if precisions.iter().any(|p| p.floor_bits() >= self.min_bits) {
+            self.wrr.pick(precisions, |i| precisions[i].floor_bits() >= self.min_bits)
+        } else {
+            most_accurate(precisions)
+        }
+    }
+
+    fn min_bits(&self) -> u32 {
+        self.min_bits
+    }
+}
+
+/// Confidence escalation (DESIGN.md §10): primary traffic runs on the
+/// fast (below-max-floor) replicas; replies whose argmax margin falls
+/// under `margin` re-run once on the most accurate replica, which
+/// answers instead.  NaN margins (NaN logits) never escalate — the
+/// backends are deterministic, so a re-run cannot help.
+pub struct Escalate {
+    pub margin: f32,
+    wrr: Wrr,
+    name: String,
+}
+
+impl Escalate {
+    pub fn new(margin: f32) -> Self {
+        Escalate { margin, wrr: Wrr::new(), name: format!("escalate:{margin}") }
+    }
+}
+
+impl Router for Escalate {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn route(&self, precisions: &[ReplicaPrecision]) -> usize {
+        if precisions.is_empty() {
+            return 0;
+        }
+        let max = most_accurate(precisions);
+        let max_floor = precisions[max].floor_bits();
+        if precisions.iter().any(|p| p.floor_bits() < max_floor) {
+            self.wrr.pick(precisions, |i| precisions[i].floor_bits() < max_floor)
+        } else {
+            // homogeneous pool: no accurate tier to hold back
+            self.wrr.pick(precisions, |_| true)
+        }
+    }
+
+    fn escalate(&self, served: usize, margin: f32,
+                precisions: &[ReplicaPrecision]) -> Option<usize> {
+        if precisions.is_empty() || served >= precisions.len() {
+            return None;
+        }
+        let target = most_accurate(precisions);
+        if precisions[served].floor_bits() >= precisions[target].floor_bits() {
+            return None; // already served at the accurate tier
+        }
+        // NaN < margin is false, so NaN margins fall through to None
+        if margin < self.margin {
+            Some(target)
+        } else {
+            None
+        }
+    }
+}
+
+/// Parse a `--router` CLI value: `fastest`, `floor:<bits>` (alias
+/// `accuracy-floor:<bits>`), or `escalate[:<margin>]` (default margin
+/// [`DEFAULT_ESCALATE_MARGIN`]).
+pub fn router_from_spec(spec: &str) -> Result<Arc<dyn Router>> {
+    let (head, arg) = match spec.split_once(':') {
+        Some((h, a)) => (h, Some(a)),
+        None => (spec, None),
+    };
+    match head {
+        "fastest" => {
+            ensure!(arg.is_none(), "router 'fastest' takes no argument");
+            Ok(Arc::new(Fastest::new()))
+        }
+        "floor" | "accuracy-floor" => {
+            let bits: u32 = arg
+                .ok_or_else(|| anyhow!("router 'floor' needs bits, e.g. floor:8"))?
+                .parse()
+                .map_err(|_| anyhow!("bad floor bits in '{spec}'"))?;
+            ensure!(bits >= 1, "floor bits must be >= 1");
+            Ok(Arc::new(AccuracyFloor::new(bits)))
+        }
+        "escalate" => {
+            let margin: f32 = match arg {
+                Some(a) => a.parse().map_err(|_| anyhow!("bad margin in '{spec}'"))?,
+                None => DEFAULT_ESCALATE_MARGIN,
+            };
+            ensure!(margin.is_finite() && margin >= 0.0, "margin must be finite and >= 0");
+            Ok(Arc::new(Escalate::new(margin)))
+        }
+        other => Err(anyhow!("unknown router '{other}' (fastest|floor:<bits>|escalate[:m])")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix(specs: &[(u32, u32)]) -> Vec<ReplicaPrecision> {
+        specs.iter().map(|&(w, a)| ReplicaPrecision::new(w, a)).collect()
+    }
+
+    /// Route `n` requests and return per-replica counts.
+    fn counts(r: &dyn Router, p: &[ReplicaPrecision], n: usize) -> Vec<usize> {
+        let mut c = vec![0usize; p.len()];
+        for _ in 0..n {
+            c[r.route(p).min(p.len() - 1)] += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn fastest_is_round_robin_on_homogeneous_pools() {
+        let p = mix(&[(8, 8), (8, 8), (8, 8)]);
+        let r = Fastest::new();
+        assert_eq!(counts(&r, &p, 9), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn fastest_weights_by_inverse_bit_product() {
+        // strides 16 vs 64: the (4,4) replica gets 4x the (8,8) share
+        let p = mix(&[(4, 4), (8, 8)]);
+        let r = Fastest::new();
+        let c = counts(&r, &p, 100);
+        assert_eq!(c.iter().sum::<usize>(), 100);
+        assert_eq!(c[0], 80, "got {c:?}");
+        assert_eq!(c[1], 20, "got {c:?}");
+    }
+
+    #[test]
+    fn fastest_is_deterministic_across_instances() {
+        let p = mix(&[(4, 4), (4, 8), (8, 8)]);
+        let a = counts(&Fastest::new(), &p, 77);
+        let b = counts(&Fastest::new(), &p, 77);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn accuracy_floor_excludes_fast_replicas() {
+        let p = mix(&[(4, 4), (8, 8), (8, 8)]);
+        let r = AccuracyFloor::new(8);
+        let c = counts(&r, &p, 10);
+        assert_eq!(c, vec![0, 5, 5]);
+        assert_eq!(r.min_bits(), 8);
+    }
+
+    #[test]
+    fn accuracy_floor_uses_min_of_w_and_a() {
+        // (4,8) floors at 4: ineligible under floor:8
+        let p = mix(&[(4, 8), (8, 8)]);
+        let c = counts(&AccuracyFloor::new(8), &p, 6);
+        assert_eq!(c, vec![0, 6]);
+    }
+
+    #[test]
+    fn unsatisfiable_floor_clamps_to_most_accurate() {
+        let p = mix(&[(2, 2), (4, 4)]);
+        let c = counts(&AccuracyFloor::new(8), &p, 5);
+        assert_eq!(c, vec![0, 5]);
+    }
+
+    #[test]
+    fn escalate_routes_primary_traffic_to_fast_set() {
+        let p = mix(&[(4, 4), (4, 4), (8, 8)]);
+        let r = Escalate::new(0.1);
+        let c = counts(&r, &p, 10);
+        assert_eq!(c[2], 0, "accurate tier must not take primary traffic: {c:?}");
+        assert_eq!(c[0] + c[1], 10);
+    }
+
+    #[test]
+    fn escalate_decision_thresholds_on_margin() {
+        let p = mix(&[(4, 4), (8, 8)]);
+        let r = Escalate::new(0.1);
+        assert_eq!(r.escalate(0, 0.05, &p), Some(1));
+        assert_eq!(r.escalate(0, 0.0, &p), Some(1));
+        assert_eq!(r.escalate(0, 0.5, &p), None);
+        // the accurate replica never escalates its own replies
+        assert_eq!(r.escalate(1, 0.0, &p), None);
+        // NaN and +inf margins never escalate
+        assert_eq!(r.escalate(0, f32::NAN, &p), None);
+        assert_eq!(r.escalate(0, f32::INFINITY, &p), None);
+    }
+
+    #[test]
+    fn escalate_on_homogeneous_pool_is_round_robin_no_escalation() {
+        let p = mix(&[(8, 8), (8, 8)]);
+        let r = Escalate::new(0.1);
+        assert_eq!(counts(&r, &p, 4), vec![2, 2]);
+        assert_eq!(r.escalate(0, 0.0, &p), None);
+    }
+
+    #[test]
+    fn precision_mix_parses_both_forms() {
+        let m = parse_precision_mix("4,4,4,8").unwrap();
+        assert_eq!(m.len(), 4);
+        assert_eq!(m[0], ReplicaPrecision::uniform(4));
+        assert_eq!(m[3], ReplicaPrecision::uniform(8));
+        let m = parse_precision_mix("4:8, 8:8").unwrap();
+        assert_eq!(m[0], ReplicaPrecision::new(4, 8));
+        assert_eq!(m[0].floor_bits(), 4);
+        assert_eq!(m[1], ReplicaPrecision::new(8, 8));
+        assert!(parse_precision_mix("").is_err());
+        assert!(parse_precision_mix("4,x").is_err());
+        assert!(parse_precision_mix("0").is_err());
+    }
+
+    #[test]
+    fn resolve_mix_falls_back_to_uniform_tiers() {
+        let r = resolve_precision_mix(Vec::new(), 4, 8, 3);
+        assert_eq!(r, vec![ReplicaPrecision::new(4, 8); 3]);
+        assert_eq!(resolve_precision_mix(Vec::new(), 8, 8, 0).len(), 1);
+        let m = vec![ReplicaPrecision::uniform(4), ReplicaPrecision::uniform(8)];
+        assert_eq!(resolve_precision_mix(m.clone(), 2, 2, 9), m);
+    }
+
+    #[test]
+    fn router_specs_parse() {
+        assert_eq!(router_from_spec("fastest").unwrap().name(), "fastest");
+        let f = router_from_spec("floor:8").unwrap();
+        assert_eq!(f.name(), "floor:8");
+        assert_eq!(f.min_bits(), 8);
+        assert_eq!(router_from_spec("accuracy-floor:4").unwrap().min_bits(), 4);
+        assert_eq!(router_from_spec("escalate").unwrap().name(), "escalate:0.1");
+        assert_eq!(router_from_spec("escalate:0.25").unwrap().name(), "escalate:0.25");
+        assert!(router_from_spec("bogus").is_err());
+        assert!(router_from_spec("floor").is_err());
+        assert!(router_from_spec("escalate:nope").is_err());
+        assert!(router_from_spec("fastest:1").is_err());
+    }
+
+    #[test]
+    fn most_accurate_breaks_ties_to_lowest_index() {
+        let p = mix(&[(4, 4), (8, 8), (8, 8)]);
+        assert_eq!(most_accurate(&p), 1);
+        let p = mix(&[(8, 8)]);
+        assert_eq!(most_accurate(&p), 0);
+    }
+}

@@ -1,19 +1,50 @@
-//! Inference server: bounded intake queue -> dynamic batcher -> a pool
-//! of replica workers over a pluggable [`InferenceBackend`] -> per-
-//! request responses (DESIGN.md §9).
+//! Inference server: router → per-replica bounded queues → dynamic
+//! batcher (with tail stealing) → a pool of replica workers over a
+//! pluggable [`InferenceBackend`] → per-request responses
+//! (DESIGN.md §9–§10).
 //!
 //! Each replica thread owns its own backend instance (PJRT handles are
 //! not shared across threads; the factory runs on the replica's thread)
-//! and pulls batches from the shared intake queue, so batching still
-//! amortizes per replica while independent replicas execute in
-//! parallel.  A readiness handshake makes startup failures surface from
+//! and assembles batches from *its own* intake queue — the
+//! [`super::Router`] in [`PoolConfig`] picks the queue per request, so a
+//! pool can mix fast low-bit replicas with an accurate high-bit one and
+//! schedule between them (DESIGN.md §10).  Idle replicas steal from the
+//! tails of sibling queues (never reordering the victim's FIFO), and a
+//! low-margin reply from a fast replica can be escalated — re-enqueued
+//! once on the most accurate replica, which answers instead.  A
+//! readiness handshake makes startup failures surface from
 //! [`Server::start_pool`] instead of vanishing into a dead thread, and
 //! [`Server::shutdown`] returns any worker error after the drain.
+//!
+//! ```
+//! use dybit::coordinator::{Escalate, PoolConfig, ReplicaPrecision, Server,
+//!                          SimBackend, SimBackendCfg};
+//! use std::sync::Arc;
+//!
+//! // three DyBit-4 replicas + one 8-bit accurate replica, low-margin
+//! // replies escalated to the accurate tier
+//! let mut mix = vec![ReplicaPrecision::uniform(4); 3];
+//! mix.push(ReplicaPrecision::uniform(8));
+//! let pool = PoolConfig {
+//!     replicas: 4,
+//!     precisions: mix.clone(),
+//!     router: Arc::new(Escalate::new(0.1)),
+//!     ..PoolConfig::default()
+//! };
+//! let server = Server::start_pool(
+//!     pool,
+//!     SimBackend::mixed_factory(SimBackendCfg::tiny(17), mix),
+//! ).unwrap();
+//! let class = server.infer(vec![0.25; 64]).unwrap();
+//! assert!(class < 10);
+//! let snap = server.shutdown().unwrap();
+//! assert_eq!(snap.requests + snap.failed_requests + snap.rejected, 1);
+//! ```
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -25,12 +56,14 @@ use crate::tensor::Tensor;
 use crate::util::threadpool::payload_msg;
 
 use super::backend::{BackendFactory, InferenceBackend, PjrtBackend};
-use super::batcher::{assemble_shared, Assembled, Policy, Request};
+use super::batcher::{Assembled, Item, Policy, Request, ShardedIntake};
 use super::metrics::{Metrics, Snapshot};
+use super::router::{Fastest, ReplicaPrecision, Router};
 
 /// One image in, one class index out.
 type Payload = Vec<f32>;
 type Reply = std::result::Result<usize, String>;
+type Intake = ShardedIntake<Payload, Reply>;
 
 /// PJRT server configuration ([`Server::start`]).
 #[derive(Clone)]
@@ -41,22 +74,56 @@ pub struct ServerConfig {
     pub queue_cap: usize,
     /// Use the Pallas-kernel fwd artifact if available.
     pub pallas: bool,
-    /// Worker replicas pulling from the shared intake (>= 1).
+    /// Worker replicas, each with its own intake queue (>= 1).
     pub replicas: usize,
 }
 
 /// Backend-agnostic pool configuration ([`Server::start_pool`]).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone)]
 pub struct PoolConfig {
     pub policy: Policy,
+    /// Per-replica intake queue capacity (submit blocks when the routed
+    /// queue is full — the same backpressure the shared intake gave).
     pub queue_cap: usize,
-    /// Worker replicas pulling from the shared intake (>= 1).
+    /// Worker replicas (>= 1).
     pub replicas: usize,
+    /// Per-replica precision (DESIGN.md §10).  Empty = homogeneous pool
+    /// at the [`ReplicaPrecision`] default (8/8); otherwise one entry
+    /// per replica, and the backend factory must realize the same mix
+    /// (e.g. [`super::SimBackend::mixed_factory`]).
+    pub precisions: Vec<ReplicaPrecision>,
+    /// Per-request queue selection ([`super::router`]).  The default
+    /// [`Fastest`] degrades to round-robin on homogeneous pools.
+    pub router: Arc<dyn Router>,
+    /// Idle replicas steal from sibling queue tails (DESIGN.md §10).
+    /// Disable only to *measure* routing skew; a production pool wants
+    /// this on.
+    pub work_stealing: bool,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        PoolConfig { policy: Policy::default(), queue_cap: 256, replicas: 1 }
+        PoolConfig {
+            policy: Policy::default(),
+            queue_cap: 256,
+            replicas: 1,
+            precisions: Vec::new(),
+            router: Arc::new(Fastest::new()),
+            work_stealing: true,
+        }
+    }
+}
+
+impl std::fmt::Debug for PoolConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolConfig")
+            .field("policy", &self.policy)
+            .field("queue_cap", &self.queue_cap)
+            .field("replicas", &self.replicas)
+            .field("precisions", &self.precisions)
+            .field("router", &self.router.name())
+            .field("work_stealing", &self.work_stealing)
+            .finish()
     }
 }
 
@@ -67,11 +134,25 @@ struct Ready {
     img_elems: usize,
 }
 
+/// Everything a replica worker shares with its siblings.
+struct WorkerCtx {
+    queues: Arc<Intake>,
+    metrics: Arc<Metrics>,
+    router: Arc<dyn Router>,
+    precisions: Arc<Vec<ReplicaPrecision>>,
+}
+
 /// Running server handle.
 pub struct Server {
-    tx: Option<SyncSender<Request<Payload, Reply>>>,
+    queues: Arc<Intake>,
     workers: Vec<JoinHandle<Result<()>>>,
     pub metrics: Arc<Metrics>,
+    router: Arc<dyn Router>,
+    precisions: Arc<Vec<ReplicaPrecision>>,
+    /// Highest precision floor in the pool; steal tags are clamped to it
+    /// (a tag above every replica's floor would make items unstealable
+    /// by replicas *equal* to the one allowed to serve them).
+    max_floor: u32,
     started: Instant,
     img_elems: usize,
     batch: usize,
@@ -80,7 +161,11 @@ pub struct Server {
 impl Server {
     /// Start a PJRT-backed pool; compiles the fwd artifact on every
     /// replica before returning.  Convenience wrapper over
-    /// [`Server::start_pool`] with a [`PjrtBackend`] factory.
+    /// [`Server::start_pool`] with a [`PjrtBackend`] factory (a
+    /// homogeneous pool — for a heterogeneous PJRT pool, build
+    /// per-replica `QuantConfig`s in a custom factory; precision is an
+    /// *input* of the compiled graph, DESIGN.md §2, so one artifact
+    /// serves every mix).
     pub fn start(manifest: &Manifest, cfg: ServerConfig) -> Result<Server> {
         let entry = manifest.model(&cfg.model)?;
         // reconcile the batching policy with the model's static batch
@@ -90,6 +175,10 @@ impl Server {
             max_batch: cfg.policy.max_batch.clamp(1, entry.batch.max(1)),
             ..cfg.policy
         };
+        // label the homogeneous pool with the qcfg's real bitwidths, not
+        // the 8/8 placeholder: `Server::precisions` is documented as the
+        // resolved pool precision, and the steal floors derive from it
+        let precision = qcfg_precision(&cfg.qcfg);
         let factory = PjrtBackend::factory(
             manifest.clone(),
             cfg.model.clone(),
@@ -97,32 +186,59 @@ impl Server {
             cfg.pallas,
         );
         Server::start_pool(
-            PoolConfig { policy, queue_cap: cfg.queue_cap, replicas: cfg.replicas },
+            PoolConfig {
+                policy,
+                queue_cap: cfg.queue_cap,
+                replicas: cfg.replicas,
+                precisions: vec![precision; cfg.replicas.max(1)],
+                ..PoolConfig::default()
+            },
             factory,
         )
     }
 
-    /// Start `pool.replicas` workers over `factory`-built backends, all
-    /// pulling from one bounded intake queue.  Blocks until every
-    /// replica reports ready; any replica's startup failure (backend
-    /// construction error or panic) fails the whole start.
+    /// Start `pool.replicas` workers over `factory`-built backends, each
+    /// with its own bounded intake queue fronted by `pool.router`.
+    /// Blocks until every replica reports ready; any replica's startup
+    /// failure (backend construction error or panic) fails the whole
+    /// start.
     pub fn start_pool(pool: PoolConfig, factory: BackendFactory) -> Result<Server> {
         ensure!(pool.replicas >= 1, "server needs at least one replica");
         ensure!(pool.queue_cap >= 1, "server needs a non-zero queue");
+        let precisions: Vec<ReplicaPrecision> = if pool.precisions.is_empty() {
+            vec![ReplicaPrecision::default(); pool.replicas]
+        } else {
+            ensure!(
+                pool.precisions.len() == pool.replicas,
+                "precision mix has {} entries for {} replicas",
+                pool.precisions.len(),
+                pool.replicas
+            );
+            pool.precisions.clone()
+        };
+        for p in &precisions {
+            ensure!(p.wbits >= 1 && p.abits >= 1, "replica precision bits must be >= 1");
+        }
         let metrics = Arc::new(Metrics::new(pool.replicas));
-        let (tx, rx) = sync_channel::<Request<Payload, Reply>>(pool.queue_cap);
-        let rx = Arc::new(Mutex::new(rx));
+        let floors: Vec<u32> = precisions.iter().map(|p| p.floor_bits()).collect();
+        let queues = Arc::new(Intake::new(pool.queue_cap, floors, pool.work_stealing));
+        let precisions = Arc::new(precisions);
         let (ready_tx, ready_rx) =
             std::sync::mpsc::channel::<(usize, std::result::Result<Ready, String>)>();
 
+        let policy = pool.policy;
         let mut workers = Vec::with_capacity(pool.replicas);
         for id in 0..pool.replicas {
-            let rx = Arc::clone(&rx);
+            let ctx = WorkerCtx {
+                queues: Arc::clone(&queues),
+                metrics: Arc::clone(&metrics),
+                router: Arc::clone(&pool.router),
+                precisions: Arc::clone(&precisions),
+            };
             let factory = Arc::clone(&factory);
-            let m = Arc::clone(&metrics);
             let ready = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
-                replica_main(id, &rx, pool.policy, &factory, &m, ready)
+                replica_main(id, ctx, policy, &factory, ready)
             }));
         }
         drop(ready_tx);
@@ -156,17 +272,21 @@ impl Server {
         if !failures.is_empty() || img_elems.is_none() {
             // close the intake and reap every worker before failing so
             // no thread outlives the failed start
-            drop(tx);
+            queues.close();
             for w in workers {
                 let _ = w.join();
             }
             return Err(anyhow!("server start failed: {}", failures.join("; ")));
         }
 
+        let max_floor = precisions.iter().map(|p| p.floor_bits()).max().unwrap_or(8);
         Ok(Server {
-            tx: Some(tx),
+            queues,
             workers,
             metrics,
+            router: pool.router,
+            precisions,
+            max_floor,
             started: Instant::now(),
             img_elems: img_elems.unwrap(),
             batch,
@@ -182,7 +302,7 @@ impl Server {
     }
 
     /// Async submit; returns the response channel.  Rejects payloads of
-    /// the wrong length before they enter the queue.
+    /// the wrong length before they enter a queue.
     pub fn submit(&self, image: Vec<f32>) -> Result<std::sync::mpsc::Receiver<Reply>> {
         if image.len() != self.img_elems {
             return Err(anyhow!("image must have {} elements", self.img_elems));
@@ -198,18 +318,34 @@ impl Server {
     pub fn submit_unchecked(&self, image: Vec<f32>)
                             -> Result<std::sync::mpsc::Receiver<Reply>> {
         let (rtx, rrx) = std::sync::mpsc::channel();
-        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("server stopped"))?;
-        // gauge up BEFORE send: a replica may dequeue the request the
-        // instant send returns, and its queue_pop must never observe
-        // the gauge without this request counted (the pop saturates, so
-        // a lost decrement would otherwise stick forever)
+        // deterministic queue pick; clamp defensively against custom
+        // routers returning out-of-range shards
+        let shard = self.router.route(&self.precisions) % self.precisions.len();
+        let mut item = Item::new(Request {
+            payload: image,
+            enqueued: Instant::now(),
+            respond: rtx,
+        });
+        // clamp the steal tag to the pool's best floor: an unsatisfiable
+        // AccuracyFloor routes everything to the most accurate replica,
+        // and an unclamped tag would then gate its *equal-floor*
+        // siblings out of stealing — silently serializing the pool
+        item.min_bits = self.router.min_bits().min(self.max_floor);
+        // gauge up BEFORE push: a replica may dequeue the item the
+        // instant it lands, and its queue_pop must never observe the
+        // gauge without this request counted (the pop saturates, so a
+        // lost decrement would otherwise stick forever)
         self.metrics.queue_push();
-        tx.send(Request { payload: image, enqueued: Instant::now(), respond: rtx })
-            .map_err(|_| {
+        match self.queues.push(shard, item) {
+            Ok(()) => {
+                self.metrics.record_routed(shard);
+                Ok(rrx)
+            }
+            Err(_) => {
                 self.metrics.queue_pop(1);
-                anyhow!("server worker exited")
-            })?;
-        Ok(rrx)
+                Err(anyhow!("server stopped"))
+            }
+        }
     }
 
     /// Smallest static batch dim across replicas.
@@ -223,14 +359,19 @@ impl Server {
     }
 
     pub fn replicas(&self) -> usize {
-        self.workers.len()
+        self.precisions.len()
     }
 
-    /// Stop accepting requests, drain the queue, join every replica,
+    /// Per-replica precision of the pool (resolved; never empty).
+    pub fn precisions(&self) -> &[ReplicaPrecision] {
+        &self.precisions
+    }
+
+    /// Stop accepting requests, drain every queue, join every replica,
     /// and return the final metrics — or the first worker error, which
     /// the pre-§9 server silently discarded.
     pub fn shutdown(mut self) -> Result<Snapshot> {
-        drop(self.tx.take());
+        self.queues.close();
         let mut errs: Vec<String> = Vec::new();
         for (id, w) in self.workers.drain(..).enumerate() {
             match w.join() {
@@ -256,18 +397,41 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        self.queues.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
+/// The serving precision a whole-model [`QuantConfig`] amounts to: the
+/// weakest *enabled* layer's bitwidths (a replica's accuracy floor is
+/// its least precise quantized layer).  A fully-FP32 config reports
+/// 32/32 — unquantized, above every floor.
+fn qcfg_precision(qcfg: &QuantConfig) -> ReplicaPrecision {
+    let mut p: Option<(u32, u32)> = None;
+    for l in &qcfg.layers {
+        if !l.w_en && !l.a_en {
+            continue;
+        }
+        let w = if l.w_en { l.wbits.max(1) } else { 32 };
+        let a = if l.a_en { l.abits.max(1) } else { 32 };
+        p = Some(match p {
+            None => (w, a),
+            Some((pw, pa)) => (pw.min(w), pa.min(a)),
+        });
+    }
+    match p {
+        Some((w, a)) => ReplicaPrecision::new(w, a),
+        None => ReplicaPrecision::new(32, 32),
+    }
+}
+
 /// One replica thread: construct the backend (reporting the outcome
-/// through the readiness handshake), then assemble/execute until the
-/// intake closes and drains.
-fn replica_main(id: usize, rx: &Mutex<Receiver<Request<Payload, Reply>>>,
-                policy: Policy, factory: &BackendFactory, m: &Metrics,
+/// through the readiness handshake), then assemble/execute from its own
+/// queue — stealing from sibling tails when idle — until the intake
+/// closes and drains.
+fn replica_main(id: usize, ctx: WorkerCtx, policy: Policy, factory: &BackendFactory,
                 ready: Sender<(usize, std::result::Result<Ready, String>)>)
                 -> Result<()> {
     // the whole pre-report prelude (factory AND the geometry calls on
@@ -305,47 +469,56 @@ fn replica_main(id: usize, rx: &Mutex<Receiver<Request<Payload, Reply>>>,
     // if a sibling replica died without reporting
     drop(ready);
     loop {
-        match assemble_shared(rx, policy) {
+        match ctx.queues.pop_batch(id, policy) {
             Assembled::Closed => return Ok(()),
-            Assembled::Batch(reqs) => {
-                m.queue_pop(reqs.len());
-                execute_assembly(backend.as_mut(), id, &reqs, m);
+            Assembled::Batch(items) => {
+                ctx.metrics.queue_pop(items.len());
+                let stolen = items.iter().filter(|i| i.stolen).count();
+                if stolen > 0 {
+                    ctx.metrics.record_stolen(id, stolen);
+                }
+                execute_assembly(backend.as_mut(), id, items, &ctx);
             }
         }
     }
 }
 
 /// Execute one assembled batch on a backend: validate payloads, split
-/// oversized assemblies, pad, forward, argmax, reply.  Infallible by
-/// construction — every request gets exactly one reply and backend
-/// errors/panics are converted into error replies, never worker death.
+/// oversized assemblies, pad, forward, argmax(+margin), escalate or
+/// reply.  Infallible by construction — every item either gets exactly
+/// one reply here or is re-enqueued exactly once on the accurate tier
+/// (which always replies: escalated items never re-escalate), and
+/// backend errors/panics are converted into error replies, never worker
+/// death.
 fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
-                    reqs: &[Request<Payload, Reply>], m: &Metrics) {
+                    items: Vec<Item<Payload, Reply>>, ctx: &WorkerCtx) {
     let batch = backend.batch().max(1);
     let img_elems = backend.img_elems();
-    // a request whose payload length is wrong gets an Err reply; it is
+    // an item whose payload length is wrong gets an Err reply; it is
     // never zero-padded and answered with a fabricated class (submit
     // validates, but `Request` is public and the batcher is reusable)
-    let (valid, invalid): (Vec<_>, Vec<_>) = reqs
-        .iter()
-        .partition(|r| r.payload.len() == img_elems);
-    for r in invalid {
-        let _ = r.respond.send(Err(format!(
+    let (mut valid, invalid): (Vec<_>, Vec<_>) = items
+        .into_iter()
+        .partition(|it| it.req.payload.len() == img_elems);
+    for it in invalid {
+        let _ = it.req.respond.send(Err(format!(
             "payload has {} elements, model wants {img_elems}",
-            r.payload.len()
+            it.req.payload.len()
         )));
-        m.record_rejected();
+        ctx.metrics.record_rejected();
     }
     // defensive split: an assembly larger than the backend's static
     // batch dim (mis-clamped policy, future policy bugs) is executed in
     // chunks instead of slicing `xdata` out of bounds
-    for chunk in valid.chunks(batch) {
+    while !valid.is_empty() {
+        let take = batch.min(valid.len());
+        let chunk: Vec<Item<Payload, Reply>> = valid.drain(..take).collect();
         let t0 = Instant::now();
         let n = chunk.len();
         // pad to the static batch dim
         let mut xdata = vec![0.0f32; batch * img_elems];
-        for (i, r) in chunk.iter().enumerate() {
-            xdata[i * img_elems..(i + 1) * img_elems].copy_from_slice(&r.payload);
+        for (i, it) in chunk.iter().enumerate() {
+            xdata[i * img_elems..(i + 1) * img_elems].copy_from_slice(&it.req.payload);
         }
         let out = Tensor::new(vec![batch, img_elems], xdata)
             .and_then(|x| {
@@ -367,22 +540,85 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
         let dt = t0.elapsed().as_secs_f64();
         match out {
             Ok(logits) => {
-                let preds = logits.argmax_rows();
-                for (i, r) in chunk.iter().enumerate() {
-                    let _ = r.respond.send(Ok(preds[i]));
+                let preds = logits.argmax_margin_rows();
+                let mut answered = 0usize;
+                let mut escalated = 0usize;
+                for (i, it) in chunk.into_iter().enumerate() {
+                    let (pred, margin) = preds[i];
+                    // escalate at most once per request, and only ever
+                    // strictly *up* in precision — the top tier never
+                    // blocks pushing, so the hand-off chain is acyclic
+                    // and always drains (DESIGN.md §10)
+                    let target = match it.escalated {
+                        true => None,
+                        false => ctx.router.escalate(id, margin, &ctx.precisions),
+                    };
+                    match target {
+                        Some(t)
+                            if t != id
+                                && t < ctx.precisions.len()
+                                && ctx.precisions[t].floor_bits()
+                                    > ctx.precisions[id].floor_bits() =>
+                        {
+                            let mut it = it;
+                            it.escalated = true;
+                            it.min_bits = ctx.precisions[t].floor_bits();
+                            it.stolen = false;
+                            ctx.metrics.queue_push();
+                            match ctx.queues.push(t, it) {
+                                Ok(()) => escalated += 1,
+                                Err(it) => {
+                                    // intake closed mid-drain: a
+                                    // low-confidence fast answer beats a
+                                    // dropped request
+                                    ctx.metrics.queue_pop(1);
+                                    let _ = it.req.respond.send(Ok(pred));
+                                    answered += 1;
+                                }
+                            }
+                        }
+                        _ => {
+                            let _ = it.req.respond.send(Ok(pred));
+                            answered += 1;
+                        }
+                    }
                 }
-                m.record_batch(id, n, dt, batch - n);
+                if escalated > 0 {
+                    ctx.metrics.record_escalated(id, escalated);
+                }
+                ctx.metrics.record_batch_answered(id, n, answered, dt, batch - n);
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                for r in chunk {
-                    let _ = r.respond.send(Err(msg.clone()));
+                for it in &chunk {
+                    let _ = it.req.respond.send(Err(msg.clone()));
                 }
                 // failed batches are accounted too: the error counters
-                // + their wall time
-                m.record_error(id, n, dt);
+                // + their wall time (escalated items in a failed chunk
+                // get their one reply here, as an Err)
+                ctx.metrics.record_error(id, n, dt);
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Format;
+
+    #[test]
+    fn qcfg_precision_reports_the_weakest_enabled_layer() {
+        let q = QuantConfig::uniform(3, Format::DyBit, 4, 8);
+        assert_eq!(qcfg_precision(&q), ReplicaPrecision::new(4, 8));
+        // FP32 (all layers disabled) is unquantized: above every floor
+        let fp = QuantConfig::fp32(2);
+        assert_eq!(qcfg_precision(&fp), ReplicaPrecision::new(32, 32));
+        // mixed per-layer assignment floors at the weakest layer
+        let mut q = QuantConfig::uniform(3, Format::DyBit, 8, 8);
+        q.layers[1].wbits = 2;
+        q.layers[2].abits = 4;
+        assert_eq!(qcfg_precision(&q), ReplicaPrecision::new(2, 4));
     }
 }
 

@@ -111,9 +111,7 @@ impl GridLut {
     pub fn from_format(fmt: Format, bits: u32, scale: f64) -> Arc<GridLut> {
         type Key = (Format, u32, u64);
         static CACHE: OnceLock<Mutex<HashMap<Key, Arc<GridLut>>>> = OnceLock::new();
-        fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-            m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
-        }
+        use crate::util::lock;
         let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
         let key = (fmt, bits, scale.to_bits());
         if let Some(lut) = lock(cache).get(&key) {

@@ -13,9 +13,11 @@
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled HLO artifacts
 //!   produced by `python/compile/aot.py` (build-time only python).
 //! * [`qat`] — quantization-aware training driver + top-1 evaluation.
-//! * [`coordinator`] — inference service: dynamic batcher + a replica
-//!   pool over pluggable backends (PJRT artifacts or the artifact-free
-//!   simulator backend; DESIGN.md §9).
+//! * [`coordinator`] — inference service: precision-aware router +
+//!   per-replica queues with work stealing + dynamic batcher + a
+//!   (possibly heterogeneous-precision) replica pool over pluggable
+//!   backends (PJRT artifacts or the artifact-free simulator backend;
+//!   DESIGN.md §9–§10).
 //! * [`models`] — per-model layer descriptors for the simulator.
 //! * [`tensor`], [`util`] — substrates (tensors, IO, JSON, RNG, stats…).
 //!

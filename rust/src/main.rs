@@ -8,7 +8,10 @@
 //!   qat       --model M     QAT fine-tune at a (format, W/A) config + eval
 //!   serve     --model M     start the replica pool and run a load test
 //!                           (--replicas N; --sim serves the artifact-free
-//!                           simulator backend)
+//!                           simulator backend; --precision-mix 4,4,4,8
+//!                           makes the pool heterogeneous and --router
+//!                           fastest|floor:<bits>|escalate[:margin] picks
+//!                           the scheduling policy, DESIGN.md §10)
 //!   report                  dump manifest summary
 //!
 //! Everything executes from compiled artifacts; run `make artifacts` once.
@@ -17,7 +20,11 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use dybit::coordinator::{Policy, PoolConfig, Server, ServerConfig, SimBackend, SimBackendCfg};
+use dybit::coordinator::{
+    parse_precision_mix, resolve_precision_mix, router_from_spec, BackendFactory,
+    InferenceBackend, PjrtBackend, Policy, PoolConfig, ReplicaPrecision, Server, SimBackend,
+    SimBackendCfg, Snapshot,
+};
 use dybit::formats::dybit as dybit_fmt;
 use dybit::formats::Format;
 use dybit::qat::{QuantConfig, Session};
@@ -45,7 +52,8 @@ fn main() {
                  search: --strategy speedup|rmse --alpha 4.0 --beta 2.0 --topk 3\n\
                  train/qat: --steps N --lr 0.05 --eval-batches 16\n\
                  serve: --clients 4 --requests 64 --max-wait-ms 5 --max-batch N \
-                 --replicas 1 [--sim]"
+                 --replicas 1 [--sim] [--precision-mix 4,4,4,8] \
+                 [--router fastest|floor:<bits>|escalate[:margin]] [--no-steal]"
             );
             std::process::exit(2);
         }
@@ -208,10 +216,34 @@ fn cmd_train(args: &Args, qat: bool) -> Result<()> {
     Ok(())
 }
 
+/// The serve metrics printout shared by both backends (the README's
+/// worked example shows this shape).
+fn print_serve_snapshot(snap: &Snapshot, precisions: &[ReplicaPrecision]) {
+    println!(
+        "requests {}  batches {}  errors {}  rejected {}  escalations {}  \
+         mean batch {:.1}  p50 {:.1}ms  p95 {:.1}ms  {:.1} req/s  (queue depth {})",
+        snap.requests, snap.batches, snap.errors, snap.rejected, snap.escalations,
+        snap.mean_batch, snap.lat_p50_ms, snap.lat_p95_ms, snap.throughput_rps,
+        snap.queue_depth
+    );
+    print!("{}", snap.replica_report(precisions));
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let wbits = args.get_usize("wbits", 4) as u32;
     let abits = args.get_usize("abits", 8) as u32;
-    let replicas = args.get_usize("replicas", 1);
+    // --precision-mix makes the pool heterogeneous (DESIGN.md §10): one
+    // entry per replica, overriding --replicas with the mix length; no
+    // mix means --replicas uniform (wbits, abits) tiers
+    let mix: Vec<ReplicaPrecision> = match args.get("precision-mix") {
+        Some(s) => parse_precision_mix(s)?,
+        None => Vec::new(),
+    };
+    let precisions =
+        resolve_precision_mix(mix, wbits, abits, args.get_usize("replicas", 1));
+    let replicas = precisions.len();
+    let router = router_from_spec(&args.get_or("router", "fastest"))?;
+    let work_stealing = !args.has("no-steal");
     // default max-batch is "the backend's static batch dim": the pool
     // clamps per replica, so MAX means "fill whatever the model takes"
     let policy = Policy {
@@ -221,6 +253,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let queue_cap = args.get_usize("queue-cap", 256);
     let clients = args.get_usize("clients", 4);
     let requests = args.get_usize("requests", 64);
+    let router_name = router.name().to_string();
 
     let server = if args.has("sim") {
         // artifact-free serving over the simulator-costed backend
@@ -232,52 +265,81 @@ fn cmd_serve(args: &Args) -> Result<()> {
             time_scale: args.get_f64("time-scale", 0.0),
             ..SimBackendCfg::tiny(17)
         };
+        let tiers: Vec<String> = precisions.iter().map(|p| p.to_string()).collect();
         println!(
-            "serving sim backend ({}W{}A, batch {}, {replicas} replica(s)), \
-             load test: {clients} clients x {requests} reqs",
-            wbits, abits, cfg.batch
+            "serving sim backend (mix [{}], batch {}, {replicas} replica(s), \
+             router {router_name}), load test: {clients} clients x {requests} reqs",
+            tiers.join(", "),
+            cfg.batch
         );
+        // mixed_factory with a uniform mix IS the homogeneous pool, so
+        // one factory path serves both (and the per-replica printout +
+        // steal floors always reflect the backend's real bits)
+        let factory = SimBackend::mixed_factory(cfg, precisions.clone());
         Server::start_pool(
-            PoolConfig { policy, queue_cap, replicas },
-            SimBackend::factory(cfg),
+            PoolConfig {
+                policy,
+                queue_cap,
+                replicas,
+                precisions,
+                router,
+                work_stealing,
+            },
+            factory,
         )?
     } else {
         let m = manifest(args)?;
         let name = args.get_or("model", "mlp");
         let entry = m.model(&name)?;
         let fmt = parse_format(args)?;
-        let qcfg = QuantConfig::uniform(entry.n_quant_layers, fmt, wbits, abits);
-        let cfg = ServerConfig {
-            model: name.clone(),
-            qcfg,
-            // honor an explicit --max-batch below the model's batch dim;
-            // Server::start clamps the upper bound to entry.batch
-            policy: Policy { max_batch: policy.max_batch.min(entry.batch.max(1)), ..policy },
-            queue_cap,
-            pallas: args.has("pallas"),
-            replicas,
+        // honor an explicit --max-batch below the model's batch dim; the
+        // pool clamps the upper bound to entry.batch
+        let policy = Policy {
+            max_batch: policy.max_batch.clamp(1, entry.batch.max(1)),
+            ..policy
         };
+        let tiers: Vec<String> = precisions.iter().map(|p| p.to_string()).collect();
         println!(
-            "serving {name} ({}W{}A {}, {replicas} replica(s)), \
-             load test: {clients} clients x {requests} reqs",
-            wbits, abits, fmt.name()
+            "serving {name} (mix [{}] {}, {replicas} replica(s), router \
+             {router_name}), load test: {clients} clients x {requests} reqs",
+            tiers.join(", "),
+            fmt.name()
         );
-        Server::start(&m, cfg)?
+        // a homogeneous pool is just a mix of identical tiers, so one
+        // start_pool path serves both — this also keeps --router and
+        // --no-steal honored without --precision-mix (Server::start
+        // would silently fall back to the defaults).  Precision is an
+        // *input* of the compiled graph (DESIGN.md §2), so one artifact
+        // serves every tier — each replica just gets its own uniform
+        // QuantConfig
+        let nl = entry.n_quant_layers;
+        let pallas = args.has("pallas");
+        let fmix = precisions.clone();
+        let (m2, name2) = (m.clone(), name.clone());
+        let factory: BackendFactory = std::sync::Arc::new(move |id| {
+            let p = fmix[id % fmix.len()];
+            let qcfg = QuantConfig::uniform(nl, fmt, p.wbits, p.abits);
+            Ok(Box::new(PjrtBackend::new(&m2, &name2, qcfg, pallas)?)
+                as Box<dyn InferenceBackend>)
+        });
+        Server::start_pool(
+            PoolConfig {
+                policy,
+                queue_cap,
+                replicas,
+                precisions,
+                router,
+                work_stealing,
+            },
+            factory,
+        )?
     };
 
     let img_elems = server.img_elems();
+    let precisions = server.precisions().to_vec();
     dybit::coordinator::load_test(&server, clients, requests, img_elems)?;
     let snap = server.shutdown()?;
-    println!(
-        "requests {}  batches {}  errors {}  rejected {}  mean batch {:.1}  \
-         p50 {:.1}ms  p95 {:.1}ms  {:.1} req/s  (queue depth {})",
-        snap.requests, snap.batches, snap.errors, snap.rejected, snap.mean_batch,
-        snap.lat_p50_ms, snap.lat_p95_ms, snap.throughput_rps, snap.queue_depth
-    );
-    for (i, r) in snap.per_replica.iter().enumerate() {
-        println!("  replica {i}: {} batches, {} requests, {} errors",
-                 r.batches, r.requests, r.errors);
-    }
+    print_serve_snapshot(&snap, &precisions);
     Ok(())
 }
 

@@ -111,6 +111,51 @@ impl Tensor {
             })
             .collect()
     }
+
+    /// Per-row `(argmax, margin)` over the last axis of a rank-2 tensor,
+    /// where margin = winner minus runner-up — the confidence signal the
+    /// serving escalation router thresholds on (DESIGN.md §10).
+    ///
+    /// The winner is chosen under the same total order as
+    /// [`Tensor::argmax_rows`] (ties → last maximal index, NaN above
+    /// +∞), so both paths always agree on the predicted class.  A
+    /// single-column row has no runner-up and reports +∞ (maximally
+    /// confident); a NaN winner or runner-up yields a NaN margin, and
+    /// NaN compares false against any threshold — NaN logits never look
+    /// "low-confidence" to an escalation policy.
+    pub fn argmax_margin_rows(&self) -> Vec<(usize, f32)> {
+        assert_eq!(self.rank(), 2);
+        (0..self.shape[0])
+            .map(|i| {
+                let r = self.row(i);
+                let mut best = 0usize;
+                for (j, v) in r.iter().enumerate().skip(1) {
+                    // `!= Less` keeps the LAST maximal index, matching
+                    // max_by in argmax_rows
+                    if v.total_cmp(&r[best]) != std::cmp::Ordering::Less {
+                        best = j;
+                    }
+                }
+                let mut second: Option<f32> = None;
+                for (j, &v) in r.iter().enumerate() {
+                    if j == best {
+                        continue;
+                    }
+                    let wins = match second {
+                        None => true,
+                        Some(s) => v.total_cmp(&s) == std::cmp::Ordering::Greater,
+                    };
+                    if wins {
+                        second = Some(v);
+                    }
+                }
+                match second {
+                    Some(s) => (best, r[best] - s),
+                    None => (best, f32::INFINITY),
+                }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -157,6 +202,50 @@ mod tests {
         assert_eq!(idx[0], 1); // NaN sorts above every finite value
         assert_eq!(idx[1], 0); // finite rows unaffected
         assert!(idx[2] < 3);
+    }
+
+    #[test]
+    fn argmax_margin_matches_argmax_and_measures_the_gap() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 1.0, -1.0, 0.5]).unwrap();
+        let pm = t.argmax_margin_rows();
+        assert_eq!(
+            pm.iter().map(|&(p, _)| p).collect::<Vec<_>>(),
+            t.argmax_rows()
+        );
+        assert!((pm[0].1 - 0.8).abs() < 1e-6);
+        assert!((pm[1].1 - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_margin_ties_nan_and_single_class() {
+        // exact tie: winner matches argmax_rows (last maximal index) and
+        // the margin is zero
+        let tie = Tensor::new(vec![1, 3], vec![0.5, 0.7, 0.7]).unwrap();
+        let pm = tie.argmax_margin_rows();
+        assert_eq!(pm[0].0, tie.argmax_rows()[0]);
+        assert_eq!(pm[0].1, 0.0);
+        // NaN rows agree with argmax_rows and report NaN margins, which
+        // compare false against any escalation threshold
+        let nan = Tensor::new(
+            vec![3, 3],
+            vec![0.1, f32::NAN, 0.0, 1.0, -1.0, 0.5, f32::NAN, f32::NAN, f32::NAN],
+        )
+        .unwrap();
+        let pm = nan.argmax_margin_rows();
+        assert_eq!(
+            pm.iter().map(|&(p, _)| p).collect::<Vec<_>>(),
+            nan.argmax_rows()
+        );
+        assert!(pm[0].1.is_nan());
+        assert!(!(pm[0].1 < 0.5), "NaN margin must not look low-confidence");
+        assert!((pm[1].1 - 0.5).abs() < 1e-6);
+        assert!(pm[2].1.is_nan());
+        // one class: no runner-up, maximally confident
+        let one = Tensor::new(vec![2, 1], vec![3.0, -1.0]).unwrap();
+        for (p, m) in one.argmax_margin_rows() {
+            assert_eq!(p, 0);
+            assert_eq!(m, f32::INFINITY);
+        }
     }
 
     #[test]

@@ -8,3 +8,12 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+
+/// Poison-recovering mutex lock, the crate-wide policy (DESIGN.md §9):
+/// a thread that panicked while holding a lock can at worst leave a
+/// half-recorded update behind, which every consumer here (metrics
+/// sinks, LUT caches, intake queues, router credits) prefers over
+/// poisoning all later calls.
+pub fn lock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

@@ -28,6 +28,7 @@ fn pool(replicas: usize) -> PoolConfig {
         policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
         queue_cap: 64,
         replicas,
+        ..PoolConfig::default()
     }
 }
 
@@ -97,6 +98,7 @@ fn oversized_policy_is_clamped_and_assemblies_split() {
         policy: Policy { max_batch: 32, max_wait: Duration::from_millis(20) },
         queue_cap: 64,
         replicas: 1,
+        ..PoolConfig::default()
     };
     let server = Server::start_pool(p, SimBackend::factory(cfg)).unwrap();
     assert_eq!(server.max_batch(), 4, "start must reconcile policy with the model");

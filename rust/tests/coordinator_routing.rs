@@ -1,0 +1,364 @@
+//! Heterogeneous-precision routing + work-stealing e2e tests over the
+//! artifact-free [`SimBackend`] (DESIGN.md §10): skewed-load stealing,
+//! the steal precision gate, router determinism, and escalation
+//! accounting — all runnable in CI with no PJRT artifacts.
+//!
+//! The §9 accounting invariant still holds with two-execution requests:
+//! an escalated request counts in `requests` only when its re-run
+//! replies, so `requests + failed_requests + rejected == submitted`
+//! stays exact (asserted in every test here).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dybit::coordinator::{
+    AccuracyFloor, Escalate, Policy, PoolConfig, ReplicaPrecision, Router, Server,
+    SimBackend, SimBackendCfg, Snapshot,
+};
+use dybit::util::rng::Rng;
+
+const IMG: usize = 64;
+
+/// Test router that pins every request to one shard — the maximally
+/// skewed workload the work-stealing satellite task calls for.
+struct Pin(usize);
+
+impl Router for Pin {
+    fn name(&self) -> &str {
+        "pin"
+    }
+
+    fn route(&self, _precisions: &[ReplicaPrecision]) -> usize {
+        self.0
+    }
+}
+
+fn assert_accounted(snap: &Snapshot, submitted: u64) {
+    assert_eq!(
+        snap.requests + snap.failed_requests + snap.rejected,
+        submitted,
+        "accounting invariant violated: {snap:?}"
+    );
+    assert_eq!(snap.queue_depth, 0, "queues must drain: {snap:?}");
+    let b: u64 = snap.per_replica.iter().map(|r| r.batches).sum();
+    assert_eq!(b, snap.batches, "per-replica batches must sum to global");
+    let e: u64 = snap.per_replica.iter().map(|r| r.escalations).sum();
+    assert_eq!(e, snap.escalations, "per-replica escalations must sum to global");
+}
+
+/// A pool whose batches take real wall time (~1 ms) so queues actually
+/// build up and idle replicas get a chance to steal.
+fn slow_cfg(seed: u64) -> SimBackendCfg {
+    let mut cfg = SimBackendCfg::tiny(seed);
+    let probe = SimBackend::new(cfg.clone()).unwrap();
+    cfg.time_scale = 0.001 / probe.sim_latency_s();
+    cfg
+}
+
+#[test]
+fn skewed_routing_is_rescued_by_work_stealing() {
+    // 100% of traffic pinned to replica 0's queue: the other replicas
+    // only ever see work by stealing from its tail
+    let pool = PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 256,
+        replicas: 4,
+        router: Arc::new(Pin(0)),
+        ..PoolConfig::default()
+    };
+    let server =
+        Server::start_pool(pool, SimBackend::factory(slow_cfg(7))).unwrap();
+    let mut rng = Rng::new(11);
+    let n = 120;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| server.submit(rng.normal_vec(IMG)).unwrap())
+        .collect();
+    for rx in &rxs {
+        let pred = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("stolen requests must still be answered")
+            .expect("valid payloads succeed");
+        assert!(pred < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, n as u64);
+    // the router really was skewed…
+    assert_eq!(snap.per_replica[0].routed, n as u64);
+    for r in &snap.per_replica[1..] {
+        assert_eq!(r.routed, 0);
+    }
+    // …and stealing kept the whole pool busy anyway
+    for (i, r) in snap.per_replica.iter().enumerate() {
+        assert!(r.batches > 0, "replica {i} idled under skewed load: {snap:?}");
+    }
+    let stolen: u64 = snap.per_replica.iter().map(|r| r.stolen).sum();
+    assert!(stolen > 0, "siblings must have stolen from the hot queue");
+    assert_eq!(snap.per_replica[0].stolen, 0, "the hot replica has nothing to steal");
+}
+
+#[test]
+fn disabling_work_stealing_serializes_a_skewed_pool() {
+    let pool = PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 256,
+        replicas: 3,
+        router: Arc::new(Pin(0)),
+        work_stealing: false,
+        ..PoolConfig::default()
+    };
+    let server =
+        Server::start_pool(pool, SimBackend::factory(SimBackendCfg::tiny(3))).unwrap();
+    let mut rng = Rng::new(5);
+    let n = 24;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| server.submit(rng.normal_vec(IMG)).unwrap())
+        .collect();
+    for rx in &rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap() < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, n as u64);
+    assert_eq!(snap.per_replica[0].requests, n as u64);
+    for r in &snap.per_replica[1..] {
+        assert_eq!(r.batches, 0, "stealing is off: siblings must stay idle");
+        assert_eq!(r.stolen, 0);
+    }
+}
+
+/// Mixed 2-tier pool: one fast DyBit-4 replica, one accurate 8-bit one.
+fn two_tier() -> Vec<ReplicaPrecision> {
+    vec![ReplicaPrecision::uniform(4), ReplicaPrecision::uniform(8)]
+}
+
+#[test]
+fn low_margin_replies_escalate_exactly_once_and_are_counted() {
+    let mix = two_tier();
+    let pool = PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 256,
+        replicas: 2,
+        precisions: mix.clone(),
+        router: Arc::new(Escalate::new(0.05)),
+        work_stealing: false, // the accurate tier must not pre-steal the probe
+        ..PoolConfig::default()
+    };
+    let server =
+        Server::start_pool(pool, SimBackend::mixed_factory(SimBackendCfg::tiny(21), mix))
+            .unwrap();
+    // zero payloads ⇒ all-zero logits ⇒ margin exactly 0 < 0.05: every
+    // request lands on the fast tier (escalate routes primary traffic
+    // there) and must re-run on the accurate tier
+    let n = 20;
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(vec![0.0; IMG]).unwrap()).collect();
+    for rx in &rxs {
+        let pred = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("escalated requests must still be answered")
+            .expect("escalation is a re-run, not a failure");
+        assert!(pred < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, n as u64);
+    assert_eq!(snap.escalations, n as u64, "every low-margin reply must escalate: {snap:?}");
+    assert_eq!(snap.per_replica[0].escalations, n as u64);
+    // the fast tier answered nothing; the accurate tier answered all
+    assert_eq!(snap.per_replica[0].requests, 0);
+    assert_eq!(snap.per_replica[1].requests, n as u64);
+    assert!(snap.per_replica[0].batches > 0, "the fast tier did run first passes");
+    assert_eq!(snap.per_replica[0].stolen, 0);
+}
+
+#[test]
+fn high_margin_replies_do_not_escalate() {
+    let mix = two_tier();
+    let pool = PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 256,
+        replicas: 2,
+        precisions: mix.clone(),
+        router: Arc::new(Escalate::new(0.05)),
+        work_stealing: false,
+        ..PoolConfig::default()
+    };
+    let server =
+        Server::start_pool(pool, SimBackend::mixed_factory(SimBackendCfg::tiny(21), mix))
+            .unwrap();
+    // huge-norm payloads ⇒ O(100)-margin logits ⇒ no escalations
+    let mut rng = Rng::new(77);
+    let n = 20;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let img: Vec<f32> = rng.normal_vec(IMG).iter().map(|v| v * 100.0).collect();
+            server.submit(img).unwrap()
+        })
+        .collect();
+    for rx in &rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap() < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, n as u64);
+    assert_eq!(snap.escalations, 0, "{snap:?}");
+    assert_eq!(snap.per_replica[0].requests, n as u64, "fast tier answers directly");
+}
+
+#[test]
+fn accuracy_floor_routing_and_steal_gate_keep_fast_replicas_out() {
+    let mix = two_tier();
+    let pool = PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 256,
+        replicas: 2,
+        precisions: mix.clone(),
+        router: Arc::new(AccuracyFloor::new(8)),
+        work_stealing: true, // stealing on: the gate, not the flag, must hold
+        ..PoolConfig::default()
+    };
+    // slow backend so the accurate queue builds up while the fast
+    // replica idles next to it, hungry to steal
+    let server =
+        Server::start_pool(pool, SimBackend::mixed_factory(slow_cfg(9), mix)).unwrap();
+    let mut rng = Rng::new(13);
+    let n = 40;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| server.submit(rng.normal_vec(IMG)).unwrap())
+        .collect();
+    for rx in &rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap() < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, n as u64);
+    assert_eq!(snap.per_replica[1].routed, n as u64, "floor:8 routes to the 8-bit tier");
+    assert_eq!(snap.per_replica[0].routed, 0);
+    // the 4-bit replica may not serve floor-tagged items — not even by
+    // stealing from the loaded queue beside it
+    assert_eq!(snap.per_replica[0].batches, 0, "steal gate violated: {snap:?}");
+    assert_eq!(snap.per_replica[0].stolen, 0);
+    assert_eq!(snap.per_replica[1].requests, n as u64);
+}
+
+#[test]
+fn unsatisfiable_floor_clamps_and_siblings_still_steal() {
+    // regression: floor:8 over an all-4-bit pool routes everything to
+    // replica 0 (the clamped fallback) — the steal tag must be clamped
+    // to the pool's best floor too, or the equal-floor siblings are
+    // gated out of stealing and the pool silently serializes
+    let mix = vec![ReplicaPrecision::uniform(4); 3];
+    let pool = PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 256,
+        replicas: 3,
+        precisions: mix.clone(),
+        router: Arc::new(AccuracyFloor::new(8)),
+        ..PoolConfig::default()
+    };
+    let server =
+        Server::start_pool(pool, SimBackend::mixed_factory(slow_cfg(17), mix)).unwrap();
+    let mut rng = Rng::new(23);
+    let n = 120;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| server.submit(rng.normal_vec(IMG)).unwrap())
+        .collect();
+    for rx in &rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap() < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, n as u64);
+    assert_eq!(snap.per_replica[0].routed, n as u64, "clamped floor pins routing");
+    let stolen: u64 = snap.per_replica.iter().map(|r| r.stolen).sum();
+    assert!(stolen > 0, "equal-floor siblings must steal the clamped items: {snap:?}");
+    for (i, r) in snap.per_replica.iter().enumerate() {
+        assert!(r.batches > 0, "replica {i} idled despite the clamped tag: {snap:?}");
+    }
+}
+
+#[test]
+fn routing_and_escalations_are_deterministic_for_a_seeded_workload() {
+    // same seed ⇒ identical per-replica assignment counts, identical
+    // escalation counts, identical answers — across two fresh pools
+    let run = || {
+        let mix = vec![
+            ReplicaPrecision::uniform(4),
+            ReplicaPrecision::uniform(4),
+            ReplicaPrecision::uniform(8),
+        ];
+        let pool = PoolConfig {
+            policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            queue_cap: 256,
+            replicas: 3,
+            precisions: mix.clone(),
+            router: Arc::new(Escalate::new(0.3)),
+            work_stealing: false, // stealing is load-dependent; routing is not
+            ..PoolConfig::default()
+        };
+        let server = Server::start_pool(
+            pool,
+            SimBackend::mixed_factory(SimBackendCfg::tiny(2), mix),
+        )
+        .unwrap();
+        let mut rng = Rng::new(31);
+        let n = 60;
+        let rxs: Vec<_> = (0..n)
+            .map(|_| server.submit(rng.normal_vec(IMG)).unwrap())
+            .collect();
+        let answers: Vec<usize> = rxs
+            .iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap())
+            .collect();
+        let snap = server.shutdown().unwrap();
+        assert_accounted(&snap, n as u64);
+        let routed: Vec<u64> = snap.per_replica.iter().map(|r| r.routed).collect();
+        (routed, snap.escalations, answers)
+    };
+    let (routed_a, esc_a, answers_a) = run();
+    let (routed_b, esc_b, answers_b) = run();
+    assert_eq!(routed_a, routed_b, "same seed must reproduce assignment counts");
+    assert_eq!(esc_a, esc_b, "same seed must reproduce escalation counts");
+    assert_eq!(answers_a, answers_b, "same seed must reproduce answers");
+    // the escalate router never routes primary traffic to the accurate tier
+    assert_eq!(routed_a[2], 0);
+    assert_eq!(routed_a.iter().sum::<u64>(), 60);
+}
+
+#[test]
+fn precision_mix_length_must_match_replicas() {
+    let pool = PoolConfig {
+        replicas: 2,
+        precisions: vec![ReplicaPrecision::uniform(4); 3],
+        ..PoolConfig::default()
+    };
+    let err = Server::start_pool(pool, SimBackend::factory(SimBackendCfg::tiny(1)))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("precision mix"), "{err:#}");
+}
+
+#[test]
+fn heterogeneous_pool_answers_identically_across_tiers() {
+    // the scorer seed is shared: a request served by the fast tier and
+    // one served by the accurate tier pick the same class, so routing
+    // (and stealing, and escalation) never changes a deterministic
+    // answer — SimBackend models the latency side of precision only
+    let mix = two_tier();
+    let pool = PoolConfig {
+        policy: Policy { max_batch: 2, max_wait: Duration::from_millis(1) },
+        queue_cap: 64,
+        replicas: 2,
+        precisions: mix.clone(),
+        // stealing off so the WRR pick sequence alone decides who serves
+        // what — with it on, an idle sibling may race the owner for a
+        // sequential request and the per-replica split becomes racy
+        work_stealing: false,
+        ..PoolConfig::default()
+    };
+    let server =
+        Server::start_pool(pool, SimBackend::mixed_factory(SimBackendCfg::tiny(17), mix))
+            .unwrap();
+    let img: Vec<f32> = (0..IMG).map(|i| (i as f32 * 0.37).cos()).collect();
+    let first = server.infer(img.clone()).unwrap();
+    // the weighted round-robin feeds both tiers within a few picks
+    for _ in 0..8 {
+        assert_eq!(server.infer(img.clone()).unwrap(), first);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, 9);
+    assert!(snap.per_replica.iter().all(|r| r.requests > 0));
+}
