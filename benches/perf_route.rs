@@ -9,6 +9,10 @@
 //! accuracy/speedup trade-off moved to the serving tier.  A second
 //! phase drives a seeded low-margin workload through the
 //! confidence-escalation router and asserts the escalation accounting.
+//! A third phase widens the mixed pool to 16 replicas (12×4b + 4×8b)
+//! over the §11 intake: weighted round-robin must still feed every
+//! replica, the accounting must stay exact, and the wide pool must beat
+//! the 4-replica all-8 baseline.
 //!
 //! Run: cargo bench --bench perf_route [-- --smoke]
 //! `--smoke` shrinks the model/load for CI smoke runs
@@ -223,6 +227,42 @@ fn main() {
         ]));
     }
     t.print();
+
+    // ---- wide mixed pool over the §11 intake: 16 replicas, 12 fast +
+    // 4 accurate.  trial() asserts WRR feeds every replica and the
+    // accounting stays exact at this width; throughput must clearly
+    // beat the 4-replica all-8 baseline
+    let wide: Vec<ReplicaPrecision> = (0..16)
+        .map(|i| ReplicaPrecision::uniform(if i % 4 == 3 { 8 } else { 4 }))
+        .collect();
+    let (w_clients, w_per_client) = if smoke { (12, 4) } else { (128, 16) };
+    let mut wide_runs: Vec<Run> = (0..trials)
+        .map(|_| trial(&cfg, &wide, w_clients, w_per_client))
+        .collect();
+    wide_runs.sort_by(|a, b| a.rps.total_cmp(&b.rps));
+    let wide_run = wide_runs.pop().expect("at least one trial");
+    let wide_sp = wide_run.rps / rps8;
+    println!(
+        "\nwide mixed pool 12x4b+4x8b (16 replicas): {:.0} req/s, {wide_sp:.2}x \
+         vs all-8bit at 4 replicas",
+        wide_run.rps
+    );
+    assert_eq!(wide_run.warm_class, best[0].1.warm_class, "wide pool diverged");
+    assert!(
+        smoke || wide_run.rps > rps8,
+        "a 16-replica mixed pool must beat the 4-replica all-8 pool \
+         ({:.0} vs {rps8:.0} req/s)",
+        wide_run.rps
+    );
+    rows.push(Json::obj(vec![
+        ("pool", Json::str("mixed 12x4b+4x8b (16r)")),
+        ("clients", Json::num(w_clients as f64)),
+        ("per_client", Json::num(w_per_client as f64)),
+        ("wall_s", Json::num(wide_run.wall_s)),
+        ("rps", Json::num(wide_run.rps)),
+        ("p50_ms", Json::num(wide_run.p50_ms)),
+        ("speedup_vs_all8", Json::num(wide_sp)),
+    ]));
 
     // escalation accounting under the confidence router: near-zero
     // payloads have near-zero argmax margins — every one served by a

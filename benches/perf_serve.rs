@@ -11,6 +11,14 @@
 //! `--smoke` shrinks the model/load for CI smoke runs
 //! (`ci.sh --bench-smoke`); the 2.5× acceptance floor (4 replicas vs 1)
 //! only applies to the full-size run.
+//!
+//! A second phase measures *scheduling* overhead at pool scale
+//! (DESIGN.md §11): `time_scale = 0` makes batches free, so wall time is
+//! pure submit/route/queue/batch/reply bookkeeping.  A fixed offered
+//! load is driven through 4/16/32/64-replica pools — mostly-idle wide
+//! pools are exactly the regime where the pre-§11 `notify_all` intake
+//! drowned in wakeups — and per-item overhead must stay flat (within 2×
+//! of the 4-replica pool, full-size runs only).
 
 #[path = "common/mod.rs"]
 mod common;
@@ -152,6 +160,59 @@ fn main() {
     }
     t.print();
 
+    // ---- phase 2: scheduling overhead at pool scale (DESIGN.md §11)
+    // free batches (time_scale 0) + fixed offered load across growing
+    // pools: wall time is pure scheduler bookkeeping, and per-item
+    // overhead must not grow with the replica count
+    let sched_cfg = SimBackendCfg { time_scale: 0.0, ..cfg.clone() };
+    let sched_counts: &[usize] = if smoke { &[4, 16] } else { &[4, 16, 32, 64] };
+    let (s_clients, s_per_client) = if smoke { (6, 10) } else { (16, 400) };
+    let mut st = Table::new(&["replicas", "wall", "req/s", "overhead/item", "vs 4"]);
+    let mut sched_rows: Vec<Json> = Vec::new();
+    let mut overheads: Vec<(usize, Run, f64)> = Vec::new();
+    for &r in sched_counts {
+        let mut runs: Vec<Run> = (0..trials)
+            .map(|_| trial(&sched_cfg, r, s_clients, s_per_client))
+            .collect();
+        runs.sort_by(|a, b| a.rps.total_cmp(&b.rps));
+        let run = runs.pop().expect("at least one trial");
+        let us_item = run.wall_s * 1e6 / (s_clients * s_per_client) as f64;
+        overheads.push((r, run, us_item));
+    }
+    let base = overheads[0].2;
+    for (r, run, us_item) in &overheads {
+        let ratio = us_item / base;
+        st.row(vec![
+            r.to_string(),
+            format!("{:.3}s", run.wall_s),
+            format!("{:.0}", run.rps),
+            format!("{us_item:.1}us"),
+            format!("{ratio:.2}x"),
+        ]);
+        sched_rows.push(Json::obj(vec![
+            ("replicas", Json::num(*r as f64)),
+            ("clients", Json::num(s_clients as f64)),
+            ("per_client", Json::num(s_per_client as f64)),
+            ("wall_s", Json::num(run.wall_s)),
+            ("us_per_item", Json::num(*us_item)),
+            ("ratio_vs_4", Json::num(ratio)),
+        ]));
+    }
+    println!("\nscheduling overhead (free batches, fixed load, growing pool):");
+    st.print();
+    let worst_ratio = overheads.iter().map(|(_, _, o)| o / base).fold(0.0, f64::max);
+    let sched_ok = smoke || worst_ratio <= 2.0;
+    println!(
+        "per-item scheduling overhead 4 -> {} replicas; acceptance: within \
+         2.00x of the 4-replica pool: {}",
+        sched_counts.last().unwrap(),
+        if smoke {
+            "n/a (smoke load)".to_string()
+        } else {
+            format!("{} (worst {worst_ratio:.2}x)", if sched_ok { "PASS" } else { "FAIL" })
+        }
+    );
+
     let floor_ok = smoke || speedup_at_4 >= FLOOR;
     println!(
         "\nserving throughput scaling over SimBackend (batch cost {:.1}ms \
@@ -174,12 +235,15 @@ fn main() {
             ("floor_pass", if smoke { Json::Null } else { Json::Bool(floor_ok) }),
             ("target_batch_s", Json::num(target_batch_s)),
             ("rows", Json::Arr(rows)),
+            // null on smoke runs, same contract as floor_pass
+            ("sched_flat_pass", if smoke { Json::Null } else { Json::Bool(sched_ok) }),
+            ("sched_rows", Json::Arr(sched_rows)),
         ]),
     )
     .expect("save perf results");
     println!("perf_serve done");
-    if !floor_ok {
-        // make the floor a real gate: scripted full-size runs must fail
+    if !floor_ok || !sched_ok {
+        // make the floors real gates: scripted full-size runs must fail
         std::process::exit(1);
     }
 }

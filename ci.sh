@@ -9,6 +9,14 @@
 #                         # perf_serve/perf_route on tiny SimBackend pools
 #                         # (quick end-to-end bench smoke); fails if any
 #                         # bench result JSON is missing or empty
+#   ./ci.sh --stress      # additionally run the full coordinator_stress
+#                         # sweep (8 seeds x {4,16,64} shards + tiny-cap
+#                         # shutdown runs) against both intake
+#                         # implementations (DESIGN.md §11)
+#
+# Note tier-1's `cargo test -q` already runs coordinator_stress with its
+# small default seed set, so the concurrency interleavings are exercised
+# on every CI run; --stress widens the sweep via STRESS_FULL=1.
 #
 # Tier-1 must stay green; fmt/clippy keep the tree reviewable.  Benches
 # are built (not run) as part of tier-1 so bench bit-rot fails CI, and
@@ -18,10 +26,12 @@ cd "$(dirname "$0")"
 
 fast=0
 bench_smoke=0
+stress=0
 for arg in "$@"; do
   case "$arg" in
     --fast) fast=1 ;;
     --bench-smoke) bench_smoke=1 ;;
+    --stress) stress=1 ;;
     *) echo "ci.sh: unknown flag '$arg'" >&2; exit 2 ;;
   esac
 done
@@ -41,6 +51,11 @@ cargo test -q
 
 echo "==> tier-1: cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p dybit --quiet
+
+if [[ $stress -eq 1 ]]; then
+  echo "==> stress: coordinator_stress full sweep (8 seeds x {4,16,64} shards)"
+  STRESS_FULL=1 cargo test --release --test coordinator_stress -- --nocapture
+fi
 
 if [[ $bench_smoke -eq 1 ]]; then
   echo "==> bench smoke: perf_search on tiny layer stacks"

@@ -1,5 +1,5 @@
 //! Dynamic batcher over per-replica intake queues with tail stealing
-//! (DESIGN.md §9–§10).
+//! (DESIGN.md §9–§11).
 //!
 //! Pre-§10 the pool shared one mpsc intake behind a mutex; routing was
 //! impossible (whoever locked first took the oldest request) and a
@@ -10,8 +10,31 @@
 //! policy as before, and an *idle* replica steals from the tail of the
 //! most loaded sibling so skewed routing cannot idle half the pool.
 //!
-//! Queue invariants (asserted by the tests here and in
-//! `rust/tests/coordinator_routing.rs`):
+//! §11 rescaled the intake for big pools.  The §10 implementation —
+//! kept here as [`CoarseIntake`], the reference that certifies the
+//! stress harness (`rust/tests/coordinator_stress.rs`) — serialized
+//! every queue on one mutex and `notify_all`ed one shared condvar on
+//! every push *and* pop, waking every blocked pusher and popper per
+//! item: O(threads) spurious wakeups, quadratic wakeup traffic on a
+//! saturated 16–64-replica pool.  [`ShardedIntake`] splits the state:
+//!
+//! * **Per-shard mutex + `not_full` condvar.**  A pusher blocks on its
+//!   own shard's capacity only; each pop from that shard `notify_one`s
+//!   exactly one blocked pusher.
+//! * **Parked-popper registry (the `not_empty` side).**  An idle
+//!   replica parks on its own condvar; a push wakes exactly one popper —
+//!   the shard's owner if parked, else one parked thief whose precision
+//!   floor admits the pushed item.  An epoch counter bumped inside the
+//!   push critical section closes the check-then-park race (§11 walks
+//!   the interleavings).
+//! * **Top-K load board.**  Victim selection reads a
+//!   [`crate::util::loadheap::LoadHeap`] maintained O(log n) from
+//!   push/pop-side depth updates instead of walking every sibling.
+//!
+//! Queue invariants (asserted by the unit tests here, by
+//! `rust/tests/coordinator_routing.rs`, and under seeded concurrent
+//! load by `rust/tests/coordinator_stress.rs` against BOTH
+//! implementations):
 //!
 //! * **Owner order.**  A replica serves its own queue strictly FIFO
 //!   (front pops).  Thieves take from the *tail* only, so the relative
@@ -25,13 +48,18 @@
 //!   `push` blocks until space or the intake closes (the same
 //!   backpressure the old `sync_channel` gave `submit`).  Every pop
 //!   notifies, so a blocked pusher never outlives the capacity it waits
-//!   for (regression test `blocked_pusher_wakes_on_pop`).
+//!   for (regression test `bounded_push_blocks_until_a_pop_frees_space`).
+//! * **No lost items.**  Every `push` that returns `Ok` is served by
+//!   some replica before the poppers see [`Assembled::Closed`] — the
+//!   close/push/park interleavings are epoch-guarded (DESIGN.md §11).
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
-use crate::util::lock;
+use crate::util::loadheap::LoadHeap;
+use crate::util::{lock, wait, wait_timeout};
 
 /// One enqueued inference request.
 pub struct Request<T, R> {
@@ -64,8 +92,8 @@ pub struct Item<T, R> {
     /// Set on escalation re-runs: reply with the result, never
     /// re-escalate (bounds every request to at most two executions).
     pub escalated: bool,
-    /// Set by [`ShardedIntake::pop_batch`] when the item was taken from
-    /// a sibling's tail — feeds the per-replica `stolen` counter.
+    /// Set by `pop_batch` when the item was taken from a sibling's
+    /// tail — feeds the per-replica `stolen` counter.
     pub stolen: bool,
 }
 
@@ -84,21 +112,117 @@ pub enum Assembled<T, R> {
     Closed,
 }
 
-struct Shards<T, R> {
-    queues: Vec<VecDeque<Item<T, R>>>,
+/// The intake contract shared by [`ShardedIntake`] and the pre-§11
+/// [`CoarseIntake`] reference — what the stress harness
+/// (`rust/tests/coordinator_stress.rs`) drives so the old
+/// implementation certifies the harness before the new one must pass
+/// it (DESIGN.md §11).
+pub trait IntakeQueue<T, R>: Send + Sync {
+    /// Number of per-replica shards.
+    fn shards(&self) -> usize;
+
+    /// Blocking bounded push onto `shard`'s tail.  Returns the item
+    /// back if the intake is closed (caller decides how to answer it).
+    fn push(&self, shard: usize, item: Item<T, R>)
+            -> std::result::Result<(), Item<T, R>>;
+
+    /// Stop accepting pushes; replicas drain what is queued and then
+    /// see [`Assembled::Closed`].
+    fn close(&self);
+
+    /// Items currently queued across all shards (diagnostics).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Assemble one batch for `shard`: block for a first item (own
+    /// front first, else a sibling tail if stealing is on), then fill
+    /// from the same sources until `max_batch` or the deadline.
+    fn pop_batch(&self, shard: usize, policy: Policy) -> Assembled<T, R>;
+}
+
+/// Window end for one assembly: effectively
+/// `(enqueued ⌄ (now − max_wait)) + max_wait`.
+/// `Instant::now() - max_wait` can panic early in process life on
+/// platforms where Instant's epoch is process start (and everywhere for
+/// huge waits like `Duration::MAX`), and `+ max_wait` can overflow
+/// Instant's range — checked arithmetic with safe fallbacks instead: an
+/// unrepresentable deadline means "no deadline" (§9 regression, shared
+/// by both intakes).
+fn batch_deadline(enqueued: Instant, max_wait: Duration) -> Option<Instant> {
+    let anchor = match Instant::now().checked_sub(max_wait) {
+        Some(floor) => enqueued.max(floor),
+        None => enqueued,
+    };
+    anchor.checked_add(max_wait)
+}
+
+// ---------------------------------------------------------------------
+// §11 ShardedIntake: split locks, targeted wakeups, load-board stealing
+// ---------------------------------------------------------------------
+
+/// One shard's queue behind its own lock.
+struct ShardQ<T, R> {
+    q: VecDeque<Item<T, R>>,
+    /// Set under this shard's lock by `close()`, so a push and a close
+    /// serialize per shard — the drain proof (DESIGN.md §11) needs a
+    /// successful push to strictly precede the shard's closure.
     closed: bool,
 }
 
-/// Per-replica bounded FIFO queues with tail stealing (DESIGN.md §10).
-///
-/// One mutex + condvar pair guards all shards: assembly holds the lock
-/// for pointer moves only (execution happens outside), and a shared
-/// condvar is what lets an idle replica wake on a *sibling's* push —
-/// per-shard condvars would strand thieves.  Pushers and poppers share
-/// the condvar too, so every state change `notify_all`s.
+struct Shard<T, R> {
+    state: Mutex<ShardQ<T, R>>,
+    /// Pushers blocked on THIS shard's capacity; each pop from the
+    /// shard `notify_one`s it — one free slot, one woken pusher.
+    not_full: Condvar,
+}
+
+/// Shard depths + tail tags, exactly maintained under `shard lock →
+/// board lock` (the only nested lock order in the intake), so victim
+/// selection and the closed-drain check read consistent state.
+struct Board {
+    /// shard → queue depth, indexed max-heap (tie → lowest shard).
+    heap: LoadHeap,
+    /// `min_bits` of each shard's tail item (meaningful when depth>0);
+    /// lets `select` apply the steal gate without touching shard locks.
+    tail_bits: Vec<u32>,
+}
+
+/// Parked-popper registry: `parked[r]` means replica `r` is blocked on
+/// its bell with nothing to serve and no wakeup targeted at it yet.
+struct ParkState {
+    parked: Vec<bool>,
+    /// Debug contract check: at most one concurrent `pop_batch` per
+    /// shard id (the pool runs one worker per shard; a second popper on
+    /// the same bell could sleep through its wakeup).
+    active: Vec<bool>,
+}
+
+/// Per-replica bounded FIFO queues with tail stealing, scaled for big
+/// pools (DESIGN.md §11): per-shard mutexes, split `not_full`/parked-
+/// popper condvars with targeted `notify_one`, and an O(log n) load
+/// board for victim selection.  See the module docs for the invariants
+/// and `rust/tests/coordinator_stress.rs` for the seeded certification.
 pub struct ShardedIntake<T, R> {
-    state: Mutex<Shards<T, R>>,
-    cv: Condvar,
+    shards: Vec<Shard<T, R>>,
+    board: Mutex<Board>,
+    park: Mutex<ParkState>,
+    /// One bell per replica, all paired with `park` — a push rings
+    /// exactly one.
+    bells: Vec<Condvar>,
+    /// Bumped inside the push critical section (before the shard lock
+    /// is released).  A popper records the epoch before scanning and
+    /// parks (or returns Closed) only if it is unchanged under the park
+    /// lock — any push it might have missed forces a rescan, so no
+    /// check-then-park lost wakeup and no stranded item on close
+    /// (DESIGN.md §11).
+    epoch: AtomicU64,
+    /// Mirror of the per-shard `closed` flags, stored after ALL shards
+    /// are closed — by then no further push can bump the epoch, which
+    /// is what makes the epoch-stable Closed decision sound.
+    closed: AtomicBool,
     cap: usize,
     /// Per-replica precision floor (min(wbits, abits)); gates stealing.
     floor_bits: Vec<u32>,
@@ -111,10 +235,19 @@ impl<T, R> ShardedIntake<T, R> {
     pub fn new(cap: usize, floor_bits: Vec<u32>, steal: bool) -> Self {
         assert!(!floor_bits.is_empty(), "intake needs at least one shard");
         assert!(cap >= 1, "intake needs a non-zero capacity");
-        let queues = floor_bits.iter().map(|_| VecDeque::new()).collect();
+        let n = floor_bits.len();
         ShardedIntake {
-            state: Mutex::new(Shards { queues, closed: false }),
-            cv: Condvar::new(),
+            shards: (0..n)
+                .map(|_| Shard {
+                    state: Mutex::new(ShardQ { q: VecDeque::new(), closed: false }),
+                    not_full: Condvar::new(),
+                })
+                .collect(),
+            board: Mutex::new(Board { heap: LoadHeap::new(n), tail_bits: vec![0; n] }),
+            park: Mutex::new(ParkState { parked: vec![false; n], active: vec![false; n] }),
+            bells: (0..n).map(|_| Condvar::new()).collect(),
+            epoch: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
             cap,
             floor_bits,
             steal,
@@ -130,30 +263,57 @@ impl<T, R> ShardedIntake<T, R> {
     pub fn push(&self, shard: usize, item: Item<T, R>)
                 -> std::result::Result<(), Item<T, R>> {
         let shard = shard.min(self.floor_bits.len() - 1);
-        let mut g = lock(&self.state);
+        let slot = &self.shards[shard];
+        let mut g = lock(&slot.state);
         loop {
             if g.closed {
                 return Err(item);
             }
-            if g.queues[shard].len() < self.cap {
-                g.queues[shard].push_back(item);
-                self.cv.notify_all();
-                return Ok(());
+            if g.q.len() < self.cap {
+                break;
             }
-            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+            g = wait(&slot.not_full, g);
         }
+        let bits = item.min_bits;
+        g.q.push_back(item);
+        self.board_update(shard, &g.q);
+        // bump inside the critical section: close() sets this shard's
+        // flag only after we release the lock, so the bump is ordered
+        // before the intake reads as closed — an exiting popper either
+        // saw this item or sees the epoch change and rescans (§11)
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        drop(g);
+        self.ring_one_bell(shard, bits);
+        Ok(())
     }
 
     /// Stop accepting pushes; replicas drain what is queued and then see
     /// [`Assembled::Closed`].
     pub fn close(&self) {
-        lock(&self.state).closed = true;
-        self.cv.notify_all();
+        // close every shard under its own lock first (serializing with
+        // in-flight pushes), THEN publish the global flag poppers use
+        // for their epoch-stable exit decision
+        for slot in &self.shards {
+            let mut g = lock(&slot.state);
+            g.closed = true;
+            // blocked pushers wake, re-check `closed`, and get their
+            // item back
+            slot.not_full.notify_all();
+        }
+        self.closed.store(true, Ordering::SeqCst);
+        let mut p = lock(&self.park);
+        for (r, bell) in self.bells.iter().enumerate() {
+            if p.parked[r] {
+                p.parked[r] = false;
+                bell.notify_one();
+            }
+        }
     }
 
-    /// Items currently queued across all shards (diagnostics).
+    /// Items currently queued across all shards (diagnostics; one board
+    /// read instead of n queue locks).
     pub fn len(&self) -> usize {
-        lock(&self.state).queues.iter().map(|q| q.len()).sum()
+        lock(&self.board).heap.total() as usize
     }
 
     pub fn is_empty(&self) -> bool {
@@ -165,6 +325,346 @@ impl<T, R> ShardedIntake<T, R> {
     /// same sources until `max_batch` or the deadline.  Returns
     /// [`Assembled::Closed`] once the intake is closed and nothing this
     /// replica may serve remains.
+    ///
+    /// Contract: at most one concurrent `pop_batch` per shard id (the
+    /// pool runs one worker per shard).  Violations are caught by a
+    /// debug assertion; in release they cost latency, never items.
+    pub fn pop_batch(&self, shard: usize, policy: Policy) -> Assembled<T, R> {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        let _active = PopGuard::enter(self, shard);
+        let max_batch = policy.max_batch.max(1);
+        // -- first item: block until work arrives or the intake is
+        //    provably drained for this replica
+        let first = loop {
+            let e = self.epoch.load(Ordering::SeqCst);
+            if let Some(it) = self.take(shard) {
+                break it;
+            }
+            let mut p = lock(&self.park);
+            // order matters: read `closed` BEFORE re-reading the epoch.
+            // close() publishes `closed` after the last possible push
+            // bump, so `epoch stable ∧ closed` proves the scan above
+            // saw every item this replica may serve (§11)
+            let closed = self.closed.load(Ordering::SeqCst);
+            if self.epoch.load(Ordering::SeqCst) != e {
+                continue; // a push landed mid-scan; rescan
+            }
+            if closed {
+                return Assembled::Closed;
+            }
+            p.parked[shard] = true;
+            let mut p = wait(&self.bells[shard], p);
+            p.parked[shard] = false;
+        };
+        let deadline = batch_deadline(first.req.enqueued, policy.max_wait);
+        let mut batch = vec![first];
+        while batch.len() < max_batch {
+            let e = self.epoch.load(Ordering::SeqCst);
+            if let Some(it) = self.take(shard) {
+                batch.push(it);
+                continue;
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                break; // flush the partial batch on close
+            }
+            let wait_for = match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        break;
+                    }
+                    Some(d - now)
+                }
+                // no finite deadline: wait until the batch fills or the
+                // intake closes
+                None => None,
+            };
+            let mut p = lock(&self.park);
+            // same closed-before-epoch order as the first-item loop: a
+            // close() landing after the check above would find us
+            // unparked and never ring our bell — without this re-check
+            // a deadline-less fill (max_wait unrepresentable) would
+            // park forever instead of flushing
+            let closed = self.closed.load(Ordering::SeqCst);
+            if self.epoch.load(Ordering::SeqCst) != e {
+                continue;
+            }
+            if closed {
+                break; // flush the partial batch
+            }
+            p.parked[shard] = true;
+            let mut p = match wait_for {
+                Some(dur) => wait_timeout(&self.bells[shard], p, dur).0,
+                None => wait(&self.bells[shard], p),
+            };
+            p.parked[shard] = false;
+        }
+        // hand the baton on: a push may have targeted its one wakeup at
+        // this replica right as the deadline expired — if queued work
+        // remains, ring a parked sibling so it is not delayed by a full
+        // batch execution
+        self.rewake(shard);
+        Assembled::Batch(batch)
+    }
+
+    /// One item for `shard`: its own front, else — with stealing on —
+    /// the tail of the most loaded sibling whose tail item this
+    /// replica's precision floor may serve (ties → lowest index, via
+    /// the load board).  Pops `notify_one` the shard's `not_full` so a
+    /// blocked pusher wakes per freed slot.
+    fn take(&self, shard: usize) -> Option<Item<T, R>> {
+        if let Some(it) = self.take_own(shard) {
+            return Some(it);
+        }
+        self.try_steal(shard)
+    }
+
+    fn take_own(&self, shard: usize) -> Option<Item<T, R>> {
+        let slot = &self.shards[shard];
+        let mut g = lock(&slot.state);
+        let it = g.q.pop_front()?;
+        self.board_update(shard, &g.q);
+        drop(g);
+        slot.not_full.notify_one();
+        Some(it)
+    }
+
+    fn try_steal(&self, shard: usize) -> Option<Item<T, R>> {
+        if !self.steal {
+            return None;
+        }
+        let my_floor = self.floor_bits[shard];
+        loop {
+            let victim = {
+                let b = lock(&self.board);
+                let Board { heap, tail_bits } = &*b;
+                heap.select(|s| s != shard && tail_bits[s] <= my_floor)
+            };
+            let v = victim?;
+            let slot = &self.shards[v];
+            let mut g = lock(&slot.state);
+            // the board is read without the victim's lock, so re-check
+            // under it; a mismatch means someone pushed/popped in
+            // between — their progress, our retry
+            let steal_ok = g.q.back().map_or(false, |t| t.min_bits <= my_floor);
+            if !steal_ok {
+                continue;
+            }
+            let mut it = g.q.pop_back().expect("non-empty: tail just checked");
+            self.board_update(v, &g.q);
+            drop(g);
+            slot.not_full.notify_one();
+            it.stolen = true;
+            return Some(it);
+        }
+    }
+
+    /// Refresh the board for `shard` from its queue; caller holds the
+    /// shard lock (lock order: shard → board, the only nesting here).
+    fn board_update(&self, shard: usize, q: &VecDeque<Item<T, R>>) {
+        let mut b = lock(&self.board);
+        b.tail_bits[shard] = q.back().map_or(0, |t| t.min_bits);
+        b.heap.update(shard, q.len() as u64);
+    }
+
+    /// Wake exactly one parked popper for a push onto `shard` carrying
+    /// `bits`: the owner if parked, else one parked thief whose floor
+    /// admits the item.  Nobody parked means every replica is busy and
+    /// will rescan when it finishes — the item cannot be lost.
+    fn ring_one_bell(&self, shard: usize, bits: u32) {
+        let mut p = lock(&self.park);
+        if p.parked[shard] {
+            p.parked[shard] = false;
+            self.bells[shard].notify_one();
+            return;
+        }
+        if !self.steal {
+            return;
+        }
+        for r in 0..self.floor_bits.len() {
+            if r != shard && p.parked[r] && self.floor_bits[r] >= bits {
+                p.parked[r] = false;
+                self.bells[r].notify_one();
+                return;
+            }
+        }
+    }
+
+    /// Best-effort baton pass after a batch returns: for every shard
+    /// that still has queued work, wake its owner or one eligible
+    /// parked thief.  O(shards) at batch granularity, not per item.
+    fn rewake(&self, me: usize) {
+        let (depths, tails): (Vec<u64>, Vec<u32>) = {
+            let b = lock(&self.board);
+            ((0..b.heap.len()).map(|s| b.heap.key(s)).collect(), b.tail_bits.clone())
+        };
+        let mut p = lock(&self.park);
+        for s in 0..depths.len() {
+            if depths[s] == 0 {
+                continue;
+            }
+            if p.parked[s] {
+                p.parked[s] = false;
+                self.bells[s].notify_one();
+                continue;
+            }
+            if !self.steal {
+                continue;
+            }
+            for r in 0..self.floor_bits.len() {
+                if r != s && r != me && p.parked[r] && self.floor_bits[r] >= tails[s] {
+                    p.parked[r] = false;
+                    self.bells[r].notify_one();
+                    break;
+                }
+            }
+        }
+    }
+}
+
+impl<T: Send, R: Send> ShardedIntake<T, R> {
+    /// Test hook (DESIGN.md §11 poison regression): panic a thread
+    /// while it holds every intake lock in turn, poisoning them all.
+    /// The pool must keep serving through `util::{lock, wait}` — a
+    /// panicked worker must not wedge its siblings.
+    #[doc(hidden)]
+    pub fn poison_locks_for_test(&self, shard: usize) {
+        std::thread::scope(|scope| {
+            let h = scope.spawn(move || {
+                let _s = self.shards[shard].state.lock().unwrap();
+                let _b = self.board.lock().unwrap();
+                let _p = self.park.lock().unwrap();
+                panic!("poisoning intake locks on purpose (test)");
+            });
+            assert!(h.join().is_err(), "poisoner must panic");
+        });
+        assert!(self.shards[shard].state.is_poisoned());
+        assert!(self.board.is_poisoned());
+        assert!(self.park.is_poisoned());
+    }
+}
+
+/// RAII guard for the one-popper-per-shard debug contract.
+struct PopGuard<'a, T, R> {
+    intake: &'a ShardedIntake<T, R>,
+    shard: usize,
+}
+
+impl<'a, T, R> PopGuard<'a, T, R> {
+    fn enter(intake: &'a ShardedIntake<T, R>, shard: usize) -> Self {
+        let mut p = lock(&intake.park);
+        debug_assert!(
+            !p.active[shard],
+            "concurrent pop_batch on shard {shard}: one popper per shard"
+        );
+        p.active[shard] = true;
+        PopGuard { intake, shard }
+    }
+}
+
+impl<T, R> Drop for PopGuard<'_, T, R> {
+    fn drop(&mut self) {
+        lock(&self.intake.park).active[self.shard] = false;
+    }
+}
+
+impl<T: Send, R: Send> IntakeQueue<T, R> for ShardedIntake<T, R> {
+    fn shards(&self) -> usize {
+        ShardedIntake::shards(self)
+    }
+
+    fn push(&self, shard: usize, item: Item<T, R>)
+            -> std::result::Result<(), Item<T, R>> {
+        ShardedIntake::push(self, shard, item)
+    }
+
+    fn close(&self) {
+        ShardedIntake::close(self)
+    }
+
+    fn len(&self) -> usize {
+        ShardedIntake::len(self)
+    }
+
+    fn pop_batch(&self, shard: usize, policy: Policy) -> Assembled<T, R> {
+        ShardedIntake::pop_batch(self, shard, policy)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pre-§11 reference: one mutex, one condvar, notify_all everywhere
+// ---------------------------------------------------------------------
+
+struct Shards<T, R> {
+    queues: Vec<VecDeque<Item<T, R>>>,
+    closed: bool,
+}
+
+/// The §10 intake, verbatim: one mutex + one shared condvar over all
+/// shards, every push/pop `notify_all`.  Correct but O(threads)
+/// wakeups per item — kept as the reference implementation that
+/// certifies the stress harness (`rust/tests/coordinator_stress.rs`)
+/// before [`ShardedIntake`] must pass it, exactly like
+/// `search::reference` and `calibrate_scale_projected` anchor the §7/§8
+/// rewrites (DESIGN.md §11).
+pub struct CoarseIntake<T, R> {
+    state: Mutex<Shards<T, R>>,
+    cv: Condvar,
+    cap: usize,
+    /// Per-replica precision floor (min(wbits, abits)); gates stealing.
+    floor_bits: Vec<u32>,
+    steal: bool,
+}
+
+impl<T, R> CoarseIntake<T, R> {
+    /// Same constructor contract as [`ShardedIntake::new`].
+    pub fn new(cap: usize, floor_bits: Vec<u32>, steal: bool) -> Self {
+        assert!(!floor_bits.is_empty(), "intake needs at least one shard");
+        assert!(cap >= 1, "intake needs a non-zero capacity");
+        let queues = floor_bits.iter().map(|_| VecDeque::new()).collect();
+        CoarseIntake {
+            state: Mutex::new(Shards { queues, closed: false }),
+            cv: Condvar::new(),
+            cap,
+            floor_bits,
+            steal,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.floor_bits.len()
+    }
+
+    pub fn push(&self, shard: usize, item: Item<T, R>)
+                -> std::result::Result<(), Item<T, R>> {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        let mut g = lock(&self.state);
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.queues[shard].len() < self.cap {
+                g.queues[shard].push_back(item);
+                self.cv.notify_all();
+                return Ok(());
+            }
+            g = wait(&self.cv, g);
+        }
+    }
+
+    pub fn close(&self) {
+        lock(&self.state).closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        lock(&self.state).queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     pub fn pop_batch(&self, shard: usize, policy: Policy) -> Assembled<T, R> {
         let shard = shard.min(self.floor_bits.len() - 1);
         let max_batch = policy.max_batch.max(1);
@@ -176,20 +676,9 @@ impl<T, R> ShardedIntake<T, R> {
             if g.closed {
                 return Assembled::Closed;
             }
-            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+            g = wait(&self.cv, g);
         };
-        // Window end: effectively (enqueued ⌄ (now − max_wait)) + max_wait.
-        // `Instant::now() - max_wait` can panic early in process life on
-        // platforms where Instant's epoch is process start (and everywhere
-        // for huge waits like Duration::MAX), and `+ max_wait` can
-        // overflow Instant's range — checked arithmetic with safe
-        // fallbacks instead: an unrepresentable deadline means "no
-        // deadline" (regression tests below).
-        let anchor = match Instant::now().checked_sub(policy.max_wait) {
-            Some(floor) => first.req.enqueued.max(floor),
-            None => first.req.enqueued,
-        };
-        let deadline = anchor.checked_add(policy.max_wait);
+        let deadline = batch_deadline(first.req.enqueued, policy.max_wait);
         let mut batch = vec![first];
         while batch.len() < max_batch {
             if let Some(it) = self.take(&mut g, shard) {
@@ -205,15 +694,9 @@ impl<T, R> ShardedIntake<T, R> {
                     if now >= d {
                         break;
                     }
-                    g = self
-                        .cv
-                        .wait_timeout(g, d - now)
-                        .unwrap_or_else(PoisonError::into_inner)
-                        .0;
+                    g = wait_timeout(&self.cv, g, d - now).0;
                 }
-                // no finite deadline: wait until the batch fills or the
-                // intake closes
-                None => g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner),
+                None => g = wait(&self.cv, g),
             }
         }
         drop(g);
@@ -221,11 +704,8 @@ impl<T, R> ShardedIntake<T, R> {
         Assembled::Batch(batch)
     }
 
-    /// One item for `shard`: its own front, else — with stealing on —
-    /// the tail of the most loaded sibling whose tail item this
-    /// replica's precision floor may serve (ties → lowest index).
-    /// Notifies on success so a pusher blocked on the freed capacity
-    /// wakes even while this replica keeps assembling.
+    /// One item for `shard`: own front, else the most loaded sibling's
+    /// tail (linear scan — the walk the §11 load board replaces).
     fn take(&self, g: &mut MutexGuard<'_, Shards<T, R>>, shard: usize)
             -> Option<Item<T, R>> {
         if let Some(it) = g.queues[shard].pop_front() {
@@ -257,226 +737,444 @@ impl<T, R> ShardedIntake<T, R> {
     }
 }
 
+impl<T: Send, R: Send> IntakeQueue<T, R> for CoarseIntake<T, R> {
+    fn shards(&self) -> usize {
+        CoarseIntake::shards(self)
+    }
+
+    fn push(&self, shard: usize, item: Item<T, R>)
+            -> std::result::Result<(), Item<T, R>> {
+        CoarseIntake::push(self, shard, item)
+    }
+
+    fn close(&self) {
+        CoarseIntake::close(self)
+    }
+
+    fn len(&self) -> usize {
+        CoarseIntake::len(self)
+    }
+
+    fn pop_batch(&self, shard: usize, policy: Policy) -> Assembled<T, R> {
+        CoarseIntake::pop_batch(self, shard, policy)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
-    use std::thread;
-    use std::time::Duration;
 
-    fn req(v: u32) -> (Request<u32, u32>, mpsc::Receiver<u32>) {
-        let (tx, rx) = mpsc::channel();
-        (Request { payload: v, enqueued: Instant::now(), respond: tx }, rx)
-    }
+    /// The behavioral contract both intakes must satisfy — every test
+    /// here runs against [`ShardedIntake`] AND [`CoarseIntake`], so the
+    /// §11 rewrite cannot drift from the reference on the single-
+    /// threaded interleavings (the concurrent ones live in
+    /// `rust/tests/coordinator_stress.rs`).
+    macro_rules! intake_contract_tests {
+        ($m:ident, $I:ident) => {
+            mod $m {
+                use super::super::*;
+                use std::sync::{mpsc, Arc};
+                use std::thread;
+                use std::time::{Duration, Instant};
 
-    fn item(v: u32) -> Item<u32, u32> {
-        Item::new(req(v).0)
-    }
+                fn req(v: u32) -> (Request<u32, u32>, mpsc::Receiver<u32>) {
+                    let (tx, rx) = mpsc::channel();
+                    (Request { payload: v, enqueued: Instant::now(), respond: tx }, rx)
+                }
 
-    fn single(cap: usize) -> ShardedIntake<u32, u32> {
-        ShardedIntake::new(cap, vec![8], true)
-    }
+                fn item(v: u32) -> Item<u32, u32> {
+                    Item::new(req(v).0)
+                }
 
-    fn payloads(b: &[Item<u32, u32>]) -> Vec<u32> {
-        b.iter().map(|i| i.req.payload).collect()
-    }
+                fn single(cap: usize) -> $I<u32, u32> {
+                    $I::new(cap, vec![8], true)
+                }
 
-    #[test]
-    fn fills_to_max_batch_in_fifo_order() {
-        let q = single(64);
-        for i in 0..5 {
-            q.push(0, item(i)).ok().unwrap();
-        }
-        let policy = Policy { max_batch: 3, max_wait: Duration::from_secs(5) };
-        match q.pop_batch(0, policy) {
-            Assembled::Batch(b) => {
-                assert_eq!(payloads(&b), vec![0, 1, 2]);
-                assert!(b.iter().all(|i| !i.stolen));
+                fn payloads(b: &[Item<u32, u32>]) -> Vec<u32> {
+                    b.iter().map(|i| i.req.payload).collect()
+                }
+
+                #[test]
+                fn fills_to_max_batch_in_fifo_order() {
+                    let q = single(64);
+                    for i in 0..5 {
+                        q.push(0, item(i)).ok().unwrap();
+                    }
+                    let policy = Policy { max_batch: 3, max_wait: Duration::from_secs(5) };
+                    match q.pop_batch(0, policy) {
+                        Assembled::Batch(b) => {
+                            assert_eq!(payloads(&b), vec![0, 1, 2]);
+                            assert!(b.iter().all(|i| !i.stolen));
+                        }
+                        _ => panic!("expected batch"),
+                    }
+                    assert_eq!(q.len(), 2);
+                }
+
+                #[test]
+                fn deadline_flushes_partial_batch() {
+                    let q = single(64);
+                    q.push(0, item(7)).ok().unwrap();
+                    let policy = Policy { max_batch: 32, max_wait: Duration::from_millis(10) };
+                    let t0 = Instant::now();
+                    match q.pop_batch(0, policy) {
+                        Assembled::Batch(b) => {
+                            assert_eq!(b.len(), 1);
+                            assert!(t0.elapsed() < Duration::from_secs(1));
+                        }
+                        _ => panic!("expected batch"),
+                    }
+                }
+
+                #[test]
+                fn closed_intake_drains_then_reports_closed() {
+                    let q = single(64);
+                    q.push(0, item(1)).ok().unwrap();
+                    q.close();
+                    assert!(q.push(0, item(2)).is_err(), "push after close must fail");
+                    match q.pop_batch(0, Policy::default()) {
+                        Assembled::Batch(b) => assert_eq!(payloads(&b), vec![1]),
+                        _ => panic!("expected the drain batch"),
+                    }
+                    assert!(matches!(q.pop_batch(0, Policy::default()), Assembled::Closed));
+                }
+
+                #[test]
+                fn huge_max_wait_does_not_panic() {
+                    // regression: unchecked `Instant::now() - max_wait` panics
+                    // when max_wait exceeds the Instant epoch (early process
+                    // life on some platforms; Duration::MAX everywhere), and
+                    // `+ max_wait` can overflow — the checked-math fallback
+                    // treats both as "no deadline"
+                    let q = single(64);
+                    q.push(0, item(1)).ok().unwrap();
+                    q.push(0, item(2)).ok().unwrap();
+                    let policy = Policy { max_batch: 2, max_wait: Duration::MAX };
+                    match q.pop_batch(0, policy) {
+                        Assembled::Batch(b) => assert_eq!(b.len(), 2),
+                        _ => panic!("expected batch"),
+                    }
+                }
+
+                #[test]
+                fn huge_max_wait_still_flushes_when_intake_closes() {
+                    let q = single(64);
+                    q.push(0, item(7)).ok().unwrap();
+                    q.close(); // closes with a partial batch pending
+                    let policy = Policy { max_batch: 8, max_wait: Duration::MAX };
+                    match q.pop_batch(0, policy) {
+                        Assembled::Batch(b) => assert_eq!(b.len(), 1),
+                        _ => panic!("expected batch"),
+                    }
+                }
+
+                #[test]
+                fn close_wakes_a_parked_deadline_less_fill() {
+                    // regression (§11): a popper filling with no finite
+                    // deadline (max_wait unrepresentable) parks between
+                    // items; a concurrent close() must wake it and flush
+                    // the partial batch, not strand it
+                    let q = Arc::new(single(64));
+                    q.push(0, item(1)).ok().unwrap();
+                    let q2 = Arc::clone(&q);
+                    let popper = thread::spawn(move || {
+                        let policy = Policy { max_batch: 8, max_wait: Duration::MAX };
+                        match q2.pop_batch(0, policy) {
+                            Assembled::Batch(b) => payloads(&b),
+                            _ => panic!("expected the flushed batch"),
+                        }
+                    });
+                    thread::sleep(Duration::from_millis(20)); // let it park mid-fill
+                    q.close();
+                    assert_eq!(popper.join().unwrap(), vec![1]);
+                }
+
+                #[test]
+                fn thief_takes_the_tail_owner_keeps_fifo_order() {
+                    let q = $I::new(64, vec![8, 8], true);
+                    for i in 0..3 {
+                        q.push(0, item(i)).ok().unwrap();
+                    }
+                    let policy = Policy { max_batch: 1, max_wait: Duration::from_millis(1) };
+                    // shard 1 is empty: it steals shard 0's *newest* item
+                    match q.pop_batch(1, policy) {
+                        Assembled::Batch(b) => {
+                            assert_eq!(payloads(&b), vec![2]);
+                            assert!(b[0].stolen);
+                        }
+                        _ => panic!("expected stolen batch"),
+                    }
+                    // the victim's remaining FIFO is untouched and in order
+                    let policy = Policy { max_batch: 4, max_wait: Duration::from_millis(1) };
+                    match q.pop_batch(0, policy) {
+                        Assembled::Batch(b) => {
+                            assert_eq!(payloads(&b), vec![0, 1]);
+                            assert!(b.iter().all(|i| !i.stolen));
+                        }
+                        _ => panic!("expected owner batch"),
+                    }
+                }
+
+                #[test]
+                fn thief_fills_a_whole_batch_from_the_victim_tail() {
+                    let q = $I::new(64, vec![8, 8], true);
+                    for i in 0..6 {
+                        q.push(0, item(i)).ok().unwrap();
+                    }
+                    let policy = Policy { max_batch: 4, max_wait: Duration::from_millis(1) };
+                    match q.pop_batch(1, policy) {
+                        Assembled::Batch(b) => {
+                            // tail-first, one steal per take
+                            assert_eq!(payloads(&b), vec![5, 4, 3, 2]);
+                            assert!(b.iter().all(|i| i.stolen));
+                        }
+                        _ => panic!("expected stolen batch"),
+                    }
+                    assert_eq!(q.len(), 2);
+                }
+
+                #[test]
+                fn thief_prefers_the_deepest_sibling_ties_to_lowest_index() {
+                    let q = $I::new(64, vec![8, 8, 8, 8], true);
+                    q.push(1, item(10)).ok().unwrap();
+                    q.push(2, item(20)).ok().unwrap();
+                    q.push(2, item(21)).ok().unwrap();
+                    let policy = Policy { max_batch: 1, max_wait: Duration::from_millis(1) };
+                    // shard 2 is deepest: its tail goes first
+                    match q.pop_batch(0, policy) {
+                        Assembled::Batch(b) => assert_eq!(payloads(&b), vec![21]),
+                        _ => panic!("expected stolen batch"),
+                    }
+                    // now depths tie at 1: the lowest-index sibling wins
+                    match q.pop_batch(0, policy) {
+                        Assembled::Batch(b) => assert_eq!(payloads(&b), vec![10]),
+                        _ => panic!("expected stolen batch"),
+                    }
+                    match q.pop_batch(0, policy) {
+                        Assembled::Batch(b) => assert_eq!(payloads(&b), vec![20]),
+                        _ => panic!("expected stolen batch"),
+                    }
+                }
+
+                #[test]
+                fn steal_respects_the_min_bits_gate() {
+                    // shard 0 floors at 8 bits, shard 1 at 4
+                    let q = $I::new(64, vec![8, 4], true);
+                    let mut it = item(9);
+                    it.min_bits = 8;
+                    q.push(0, it).ok().unwrap();
+                    q.close();
+                    // the 4-bit replica may not steal an 8-bit-floor item…
+                    assert!(matches!(q.pop_batch(1, Policy::default()), Assembled::Closed));
+                    // …but the owner serves its own queue regardless of tags
+                    match q.pop_batch(0, Policy::default()) {
+                        Assembled::Batch(b) => assert_eq!(payloads(&b), vec![9]),
+                        _ => panic!("owner must serve its own queue"),
+                    }
+                }
+
+                #[test]
+                fn stealing_disabled_leaves_siblings_idle() {
+                    let q = $I::new(64, vec![8, 8], false);
+                    q.push(0, item(1)).ok().unwrap();
+                    q.close();
+                    assert!(matches!(q.pop_batch(1, Policy::default()), Assembled::Closed));
+                    assert!(matches!(q.pop_batch(0, Policy::default()), Assembled::Batch(_)));
+                }
+
+                #[test]
+                fn bounded_push_blocks_until_a_pop_frees_space() {
+                    let q = Arc::new(single(2));
+                    q.push(0, item(0)).ok().unwrap();
+                    q.push(0, item(1)).ok().unwrap();
+                    let q2 = Arc::clone(&q);
+                    let pusher = thread::spawn(move || q2.push(0, item(2)).is_ok());
+                    thread::sleep(Duration::from_millis(20)); // let the pusher block
+                    // regression (deadlock): with an unbounded window the
+                    // assembler must wake the blocked pusher the moment a pop
+                    // frees capacity, or both sides wait forever
+                    let policy = Policy { max_batch: 3, max_wait: Duration::MAX };
+                    match q.pop_batch(0, policy) {
+                        Assembled::Batch(b) => assert_eq!(payloads(&b), vec![0, 1, 2]),
+                        _ => panic!("expected batch"),
+                    }
+                    assert!(pusher.join().unwrap(), "blocked pusher must complete");
+                }
+
+                #[test]
+                fn late_arrivals_join_within_deadline() {
+                    let q = Arc::new(single(64));
+                    q.push(0, item(1)).ok().unwrap();
+                    let q2 = Arc::clone(&q);
+                    let h = thread::spawn(move || {
+                        thread::sleep(Duration::from_millis(5));
+                        q2.push(0, item(2)).ok().unwrap();
+                    });
+                    let policy = Policy { max_batch: 8, max_wait: Duration::from_millis(200) };
+                    match q.pop_batch(0, policy) {
+                        Assembled::Batch(b) => assert!(!b.is_empty()), // 2 on a fast box
+                        _ => panic!(),
+                    }
+                    h.join().unwrap();
+                }
+
+                #[test]
+                fn skewed_pushes_drain_across_thieving_consumers() {
+                    let q = $I::new(64, vec![8, 8, 8], true);
+                    for i in 0..9 {
+                        q.push(0, item(i)).ok().unwrap();
+                    }
+                    q.close();
+                    let policy = Policy { max_batch: 2, max_wait: Duration::from_millis(1) };
+                    let mut seen = Vec::new();
+                    for shard in [1, 2, 0, 1, 2, 0] {
+                        if let Assembled::Batch(b) = q.pop_batch(shard, policy) {
+                            seen.extend(payloads(&b));
+                        }
+                    }
+                    seen.sort_unstable();
+                    assert_eq!(seen, (0..9).collect::<Vec<_>>(), "no item lost or duplicated");
+                    assert!(q.is_empty());
+                }
             }
-            _ => panic!("expected batch"),
-        }
-        assert_eq!(q.len(), 2);
+        };
     }
 
-    #[test]
-    fn deadline_flushes_partial_batch() {
-        let q = single(64);
-        q.push(0, item(7)).ok().unwrap();
-        let policy = Policy { max_batch: 32, max_wait: Duration::from_millis(10) };
-        let t0 = Instant::now();
-        match q.pop_batch(0, policy) {
-            Assembled::Batch(b) => {
-                assert_eq!(b.len(), 1);
-                assert!(t0.elapsed() < Duration::from_secs(1));
+    intake_contract_tests!(sharded_contract, ShardedIntake);
+    intake_contract_tests!(coarse_contract, CoarseIntake);
+
+    mod sharded_only {
+        use super::super::*;
+        use std::sync::{mpsc, Arc};
+        use std::thread;
+        use std::time::{Duration, Instant};
+
+        fn item(v: u32) -> Item<u32, u32> {
+            let (tx, _rx) = mpsc::channel();
+            Item::new(Request { payload: v, enqueued: Instant::now(), respond: tx })
+        }
+
+        #[test]
+        fn poisoned_locks_keep_serving() {
+            // regression (DESIGN.md §11): a worker that panics while
+            // holding an intake lock poisons it; every later push/pop
+            // must recover via util::{lock, wait} instead of cascading
+            // the poison through the pool
+            let q = Arc::new(ShardedIntake::<u32, u32>::new(8, vec![8, 8], true));
+            q.poison_locks_for_test(0);
+            q.push(0, item(1)).ok().unwrap();
+            q.push(1, item(2)).ok().unwrap();
+            let policy = Policy { max_batch: 2, max_wait: Duration::from_millis(1) };
+            let mut seen = Vec::new();
+            for shard in [0, 1] {
+                if let Assembled::Batch(b) = q.pop_batch(shard, policy) {
+                    seen.extend(b.iter().map(|i| i.req.payload));
+                }
             }
-            _ => panic!("expected batch"),
+            seen.sort_unstable();
+            assert_eq!(seen, vec![1, 2], "poisoned intake must keep serving");
+            q.close();
+            assert!(matches!(q.pop_batch(0, policy), Assembled::Closed));
         }
-    }
 
-    #[test]
-    fn closed_intake_drains_then_reports_closed() {
-        let q = single(64);
-        q.push(0, item(1)).ok().unwrap();
-        q.close();
-        assert!(q.push(0, item(2)).is_err(), "push after close must fail");
-        match q.pop_batch(0, Policy::default()) {
-            Assembled::Batch(b) => assert_eq!(payloads(&b), vec![1]),
-            _ => panic!("expected the drain batch"),
+        #[test]
+        fn parked_owner_wakes_on_push() {
+            let q = Arc::new(ShardedIntake::<u32, u32>::new(8, vec![8, 8], true));
+            let q2 = Arc::clone(&q);
+            let popper = thread::spawn(move || {
+                match q2.pop_batch(1, Policy { max_batch: 1, max_wait: Duration::ZERO }) {
+                    Assembled::Batch(b) => b[0].req.payload,
+                    _ => panic!("expected batch"),
+                }
+            });
+            thread::sleep(Duration::from_millis(20)); // let it park
+            q.push(1, item(7)).ok().unwrap();
+            assert_eq!(popper.join().unwrap(), 7);
         }
-        assert!(matches!(q.pop_batch(0, Policy::default()), Assembled::Closed));
-    }
 
-    #[test]
-    fn huge_max_wait_does_not_panic() {
-        // regression: unchecked `Instant::now() - max_wait` panics when
-        // max_wait exceeds the Instant epoch (early process life on some
-        // platforms; Duration::MAX everywhere), and `+ max_wait` can
-        // overflow — the checked-math fallback treats both as "no
-        // deadline"
-        let q = single(64);
-        q.push(0, item(1)).ok().unwrap();
-        q.push(0, item(2)).ok().unwrap();
-        let policy = Policy { max_batch: 2, max_wait: Duration::MAX };
-        match q.pop_batch(0, policy) {
-            Assembled::Batch(b) => assert_eq!(b.len(), 2),
-            _ => panic!("expected batch"),
+        #[test]
+        fn parked_thief_wakes_on_sibling_push() {
+            let q = Arc::new(ShardedIntake::<u32, u32>::new(8, vec![8, 8], true));
+            let q2 = Arc::clone(&q);
+            let thief = thread::spawn(move || {
+                match q2.pop_batch(1, Policy { max_batch: 1, max_wait: Duration::ZERO }) {
+                    Assembled::Batch(b) => (b[0].req.payload, b[0].stolen),
+                    _ => panic!("expected batch"),
+                }
+            });
+            thread::sleep(Duration::from_millis(20)); // let it park
+            q.push(0, item(9)).ok().unwrap();
+            let (v, stolen) = thief.join().unwrap();
+            assert_eq!(v, 9);
+            assert!(stolen);
         }
-    }
 
-    #[test]
-    fn huge_max_wait_still_flushes_when_intake_closes() {
-        let q = single(64);
-        q.push(0, item(7)).ok().unwrap();
-        q.close(); // closes with a partial batch pending
-        let policy = Policy { max_batch: 8, max_wait: Duration::MAX };
-        match q.pop_batch(0, policy) {
-            Assembled::Batch(b) => assert_eq!(b.len(), 1),
-            _ => panic!("expected batch"),
-        }
-    }
-
-    #[test]
-    fn thief_takes_the_tail_owner_keeps_fifo_order() {
-        let q = ShardedIntake::new(64, vec![8, 8], true);
-        for i in 0..3 {
-            q.push(0, item(i)).ok().unwrap();
-        }
-        let policy = Policy { max_batch: 1, max_wait: Duration::from_millis(1) };
-        // shard 1 is empty: it steals shard 0's *newest* item
-        match q.pop_batch(1, policy) {
-            Assembled::Batch(b) => {
-                assert_eq!(payloads(&b), vec![2]);
-                assert!(b[0].stolen);
-            }
-            _ => panic!("expected stolen batch"),
-        }
-        // the victim's remaining FIFO is untouched and in order
-        let policy = Policy { max_batch: 4, max_wait: Duration::from_millis(1) };
-        match q.pop_batch(0, policy) {
-            Assembled::Batch(b) => {
-                assert_eq!(payloads(&b), vec![0, 1]);
-                assert!(b.iter().all(|i| !i.stolen));
-            }
-            _ => panic!("expected owner batch"),
-        }
-    }
-
-    #[test]
-    fn thief_fills_a_whole_batch_from_the_victim_tail() {
-        let q = ShardedIntake::new(64, vec![8, 8], true);
-        for i in 0..6 {
-            q.push(0, item(i)).ok().unwrap();
-        }
-        let policy = Policy { max_batch: 4, max_wait: Duration::from_millis(1) };
-        match q.pop_batch(1, policy) {
-            Assembled::Batch(b) => {
-                // tail-first, one steal per take
-                assert_eq!(payloads(&b), vec![5, 4, 3, 2]);
-                assert!(b.iter().all(|i| i.stolen));
-            }
-            _ => panic!("expected stolen batch"),
-        }
-        assert_eq!(q.len(), 2);
-    }
-
-    #[test]
-    fn steal_respects_the_min_bits_gate() {
-        // shard 0 floors at 8 bits, shard 1 at 4
-        let q = ShardedIntake::new(64, vec![8, 4], true);
-        let mut it = item(9);
-        it.min_bits = 8;
-        q.push(0, it).ok().unwrap();
-        q.close();
-        // the 4-bit replica may not steal an 8-bit-floor item…
-        assert!(matches!(q.pop_batch(1, Policy::default()), Assembled::Closed));
-        // …but the owner serves its own queue regardless of tags
-        match q.pop_batch(0, Policy::default()) {
-            Assembled::Batch(b) => assert_eq!(payloads(&b), vec![9]),
-            _ => panic!("owner must serve its own queue"),
-        }
-    }
-
-    #[test]
-    fn stealing_disabled_leaves_siblings_idle() {
-        let q = ShardedIntake::new(64, vec![8, 8], false);
-        q.push(0, item(1)).ok().unwrap();
-        q.close();
-        assert!(matches!(q.pop_batch(1, Policy::default()), Assembled::Closed));
-        assert!(matches!(q.pop_batch(0, Policy::default()), Assembled::Batch(_)));
-    }
-
-    #[test]
-    fn bounded_push_blocks_until_a_pop_frees_space() {
-        let q = std::sync::Arc::new(single(2));
-        q.push(0, item(0)).ok().unwrap();
-        q.push(0, item(1)).ok().unwrap();
-        let q2 = std::sync::Arc::clone(&q);
-        let pusher = thread::spawn(move || q2.push(0, item(2)).is_ok());
-        thread::sleep(Duration::from_millis(20)); // let the pusher block
-        // regression (deadlock): with an unbounded window the assembler
-        // must wake the blocked pusher the moment a pop frees capacity,
-        // or both sides wait on the same condvar forever
-        let policy = Policy { max_batch: 3, max_wait: Duration::MAX };
-        match q.pop_batch(0, policy) {
-            Assembled::Batch(b) => assert_eq!(payloads(&b), vec![0, 1, 2]),
-            _ => panic!("expected batch"),
-        }
-        assert!(pusher.join().unwrap(), "blocked pusher must complete");
-    }
-
-    #[test]
-    fn late_arrivals_join_within_deadline() {
-        let q = std::sync::Arc::new(single(64));
-        q.push(0, item(1)).ok().unwrap();
-        let q2 = std::sync::Arc::clone(&q);
-        let h = thread::spawn(move || {
-            thread::sleep(Duration::from_millis(5));
-            q2.push(0, item(2)).ok().unwrap();
-        });
-        let policy = Policy { max_batch: 8, max_wait: Duration::from_millis(200) };
-        match q.pop_batch(0, policy) {
-            Assembled::Batch(b) => assert!(!b.is_empty()), // 2 on a fast box
-            _ => panic!(),
-        }
-        h.join().unwrap();
-    }
-
-    #[test]
-    fn skewed_pushes_drain_across_thieving_consumers() {
-        let q = ShardedIntake::new(64, vec![8, 8, 8], true);
-        for i in 0..9 {
-            q.push(0, item(i)).ok().unwrap();
-        }
-        q.close();
-        let policy = Policy { max_batch: 2, max_wait: Duration::from_millis(1) };
-        let mut seen = Vec::new();
-        for shard in [1, 2, 0, 1, 2, 0] {
-            if let Assembled::Batch(b) = q.pop_batch(shard, policy) {
-                seen.extend(payloads(&b));
+        #[test]
+        fn gated_push_does_not_wake_an_ineligible_thief() {
+            // a parked 4-bit thief must sleep through an 8-bit-floor push
+            // it could never serve; close() is what finally wakes it
+            let q = Arc::new(ShardedIntake::<u32, u32>::new(8, vec![8, 4], true));
+            let q2 = Arc::clone(&q);
+            let thief = thread::spawn(move || {
+                matches!(q2.pop_batch(1, Policy::default()), Assembled::Closed)
+            });
+            thread::sleep(Duration::from_millis(20)); // let it park
+            let mut it = item(3);
+            it.min_bits = 8;
+            q.push(0, it).ok().unwrap();
+            thread::sleep(Duration::from_millis(20));
+            assert_eq!(q.len(), 1, "gated item must stay queued for its owner");
+            q.close();
+            assert!(thief.join().unwrap(), "close must wake the gated thief");
+            // the owner drains its queue regardless of tags
+            match q.pop_batch(0, Policy::default()) {
+                Assembled::Batch(b) => assert_eq!(b[0].req.payload, 3),
+                _ => panic!("owner must drain"),
             }
         }
-        seen.sort_unstable();
-        assert_eq!(seen, (0..9).collect::<Vec<_>>(), "no item lost or duplicated");
-        assert!(q.is_empty());
+
+        #[test]
+        fn concurrent_push_pop_conserves_items() {
+            // a miniature of the stress suite, cheap enough for tier-1
+            // unit runs: 3 shards, 3 poppers, 2 pushers, every item
+            // consumed exactly once
+            let q = Arc::new(ShardedIntake::<u32, u32>::new(4, vec![8, 8, 8], true));
+            let total = 300u32;
+            let mut handles = Vec::new();
+            for p in 0..2u32 {
+                let q = Arc::clone(&q);
+                handles.push(thread::spawn(move || {
+                    for i in 0..total / 2 {
+                        let v = p * (total / 2) + i;
+                        q.push((v as usize) % 3, item(v)).ok().unwrap();
+                    }
+                }));
+            }
+            let mut poppers = Vec::new();
+            for shard in 0..3usize {
+                let q = Arc::clone(&q);
+                poppers.push(thread::spawn(move || {
+                    let mut got = Vec::new();
+                    let policy = Policy { max_batch: 4, max_wait: Duration::from_micros(200) };
+                    loop {
+                        match q.pop_batch(shard, policy) {
+                            Assembled::Batch(b) => {
+                                got.extend(b.iter().map(|i| i.req.payload))
+                            }
+                            Assembled::Closed => return got,
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            q.close();
+            let mut seen: Vec<u32> =
+                poppers.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..total).collect::<Vec<_>>(), "lost or duplicated items");
+            assert!(q.is_empty());
+        }
     }
 }

@@ -19,7 +19,7 @@
 //! | module | role | DESIGN.md |
 //! |---|---|---|
 //! | [`router`] | precision-aware queue selection + escalation policy | §10 |
-//! | [`batcher`] | per-replica queues, batching, tail stealing | §9–§10 |
+//! | [`batcher`] | per-replica queues, batching, tail stealing | §9–§11 |
 //! | [`backend`] | pluggable execution (`PjrtBackend`, `SimBackend`) | §9 |
 //! | [`server`] | pool lifecycle, readiness, escalation plumbing | §9–§10 |
 //! | [`metrics`] | counters, gauges, latency percentiles | §9–§10 |
@@ -48,7 +48,7 @@ pub mod router;
 pub mod server;
 
 pub use backend::{BackendFactory, InferenceBackend, PjrtBackend, SimBackend, SimBackendCfg};
-pub use batcher::{Assembled, Item, Policy, Request, ShardedIntake};
+pub use batcher::{Assembled, CoarseIntake, IntakeQueue, Item, Policy, Request, ShardedIntake};
 pub use metrics::{Metrics, ReplicaSnapshot, Snapshot};
 pub use router::{parse_precision_mix, resolve_precision_mix, router_from_spec, AccuracyFloor,
                  Escalate, Fastest, ReplicaPrecision, Router, DEFAULT_ESCALATE_MARGIN};

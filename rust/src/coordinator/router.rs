@@ -503,6 +503,60 @@ mod tests {
         assert!(router_from_spec("fastest:1").is_err());
     }
 
+    /// Satellite of the §11 PR: every malformed spec must come back as
+    /// a descriptive `Err` — never a panic, never a silently-defaulted
+    /// router — because these strings arrive straight from the CLI.
+    #[test]
+    fn precision_mix_error_paths_are_descriptive_not_panics() {
+        // empty / whitespace-only specs
+        for s in ["", " ", ",", " , ,  "] {
+            let e = parse_precision_mix(s).unwrap_err().to_string();
+            assert!(e.contains("empty"), "spec {s:?}: {e}");
+        }
+        // non-numeric tokens name the offending token
+        let e = parse_precision_mix("4,eight").unwrap_err().to_string();
+        assert!(e.contains("eight"), "{e}");
+        let e = parse_precision_mix("4:a").unwrap_err().to_string();
+        assert!(e.contains('a'), "{e}");
+        // half-formed W:A pairs
+        assert!(parse_precision_mix("4:").is_err());
+        assert!(parse_precision_mix(":8").is_err());
+        assert!(parse_precision_mix("4:8:2").is_err());
+        // zero bits rejected in either position
+        let e = parse_precision_mix("0:8").unwrap_err().to_string();
+        assert!(e.contains(">= 1"), "{e}");
+        assert!(parse_precision_mix("8:0").is_err());
+        assert!(parse_precision_mix("4,0,8").is_err());
+        // negative and overflowing numbers are parse errors, not wraps
+        assert!(parse_precision_mix("-4").is_err());
+        assert!(parse_precision_mix("99999999999999999999").is_err());
+    }
+
+    #[test]
+    fn router_spec_error_paths_are_descriptive_not_panics() {
+        // unknown router names the candidate and the grammar
+        let e = router_from_spec("bogus").unwrap_err().to_string();
+        assert!(e.contains("bogus") && e.contains("fastest"), "{e}");
+        assert!(router_from_spec("").is_err());
+        // floor: missing, empty, non-numeric, zero, negative bits
+        let e = router_from_spec("floor").unwrap_err().to_string();
+        assert!(e.contains("floor:8"), "suggest the fix: {e}");
+        assert!(router_from_spec("floor:").is_err());
+        assert!(router_from_spec("floor:x").is_err());
+        let e = router_from_spec("floor:0").unwrap_err().to_string();
+        assert!(e.contains(">= 1"), "{e}");
+        assert!(router_from_spec("floor:-8").is_err());
+        // escalate: non-numeric, non-finite, negative margins
+        assert!(router_from_spec("escalate:nope").is_err());
+        let e = router_from_spec("escalate:inf").unwrap_err().to_string();
+        assert!(e.contains("finite"), "{e}");
+        assert!(router_from_spec("escalate:nan").is_err());
+        assert!(router_from_spec("escalate:-0.5").is_err());
+        // extra argument where none is allowed
+        let e = router_from_spec("fastest:1").unwrap_err().to_string();
+        assert!(e.contains("no argument"), "{e}");
+    }
+
     #[test]
     fn most_accurate_breaks_ties_to_lowest_index() {
         let p = mix(&[(4, 4), (8, 8), (8, 8)]);

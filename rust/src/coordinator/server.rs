@@ -620,6 +620,42 @@ mod tests {
         q.layers[2].abits = 4;
         assert_eq!(qcfg_precision(&q), ReplicaPrecision::new(2, 4));
     }
+
+    /// Satellite of the §11 PR: the config error paths must reject with
+    /// descriptive `Err`s before any worker spawns, never panic.
+    #[test]
+    fn start_pool_rejects_bad_configs_descriptively() {
+        use super::super::{SimBackend, SimBackendCfg};
+
+        let factory = || SimBackend::factory(SimBackendCfg::tiny(1));
+        // mix length ≠ replicas
+        let pool = PoolConfig {
+            replicas: 3,
+            precisions: vec![ReplicaPrecision::uniform(4); 2],
+            ..PoolConfig::default()
+        };
+        let e = Server::start_pool(pool, factory()).unwrap_err().to_string();
+        assert!(e.contains("2 entries") && e.contains("3 replicas"), "{e}");
+        // zero-bit precision entry
+        let pool = PoolConfig {
+            replicas: 1,
+            precisions: vec![ReplicaPrecision::new(0, 8)],
+            ..PoolConfig::default()
+        };
+        let e = Server::start_pool(pool, factory()).unwrap_err().to_string();
+        assert!(e.contains(">= 1"), "{e}");
+        // zero replicas / zero queue
+        let e = Server::start_pool(PoolConfig { replicas: 0, ..PoolConfig::default() },
+                                   factory())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("replica"), "{e}");
+        let e = Server::start_pool(PoolConfig { queue_cap: 0, ..PoolConfig::default() },
+                                   factory())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("queue"), "{e}");
+    }
 }
 
 /// Closed-loop load generator: `clients` threads each issue `per_client`

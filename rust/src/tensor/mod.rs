@@ -248,6 +248,65 @@ mod tests {
         }
     }
 
+    /// Satellite of the §11 PR: the escalation trigger had only
+    /// example-based coverage.  Naive per-row reference (independent
+    /// construction: lexicographic (value, index) max + max-over-rest),
+    /// randomized tensors with NaN/±∞ logits, signed zeros, and exact
+    /// ties mixed in.
+    #[test]
+    fn argmax_margin_matches_naive_reference_property() {
+        use crate::util::proptest::check;
+
+        fn naive_row(r: &[f32]) -> (usize, f32) {
+            let best = (0..r.len())
+                .max_by(|&a, &b| r[a].total_cmp(&r[b]).then(a.cmp(&b)))
+                .unwrap();
+            let second = (0..r.len())
+                .filter(|&j| j != best)
+                .map(|j| r[j])
+                .max_by(|a, b| a.total_cmp(b));
+            match second {
+                Some(s) => (best, r[best] - s),
+                None => (best, f32::INFINITY),
+            }
+        }
+
+        check(
+            "argmax-margin-vs-naive",
+            300,
+            |rng, size| {
+                let rows = 1 + rng.below(1 + (size * 6.0) as usize);
+                let cols = 1 + rng.below(1 + (size * 10.0) as usize);
+                let specials =
+                    [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0, 1.0, -1.0];
+                let data: Vec<f32> = (0..rows * cols)
+                    .map(|_| match rng.below(3) {
+                        0 => specials[rng.below(specials.len())],
+                        // tiny integer palette: forces exact ties
+                        1 => rng.below(5) as f32 - 2.0,
+                        _ => rng.normal() as f32,
+                    })
+                    .collect();
+                (rows, cols, data)
+            },
+            |(rows, cols, data)| {
+                let t = Tensor::new(vec![*rows, *cols], data.clone()).unwrap();
+                let got = t.argmax_margin_rows();
+                let idx = t.argmax_rows();
+                (0..*rows).all(|i| {
+                    let (bi, bm) = naive_row(&data[i * cols..(i + 1) * cols]);
+                    let (gi, gm) = got[i];
+                    // both paths must agree with each other AND the
+                    // reference on the class; margins bit-agree except
+                    // that any NaN margin matches any NaN
+                    gi == bi
+                        && gi == idx[i]
+                        && (gm == bm || (gm.is_nan() && bm.is_nan()))
+                })
+            },
+        );
+    }
+
     #[test]
     fn scalar_and_row() {
         assert_eq!(Tensor::scalar(2.5).numel(), 1);

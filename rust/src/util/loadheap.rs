@@ -1,0 +1,247 @@
+//! Indexed max-heap over a fixed id set — the top-K load board behind
+//! the sharded intake's victim selection (DESIGN.md §11).
+//!
+//! The pre-§11 thief walked every sibling queue to find the most loaded
+//! one: O(shards) per steal, under the one global intake lock.  This
+//! heap keeps the shard → depth map *indexed* (each id knows its heap
+//! position), so a push/pop-side depth change is one O(log n) sift, and
+//! a thief asks for "the deepest shard that passes my filter" with a
+//! best-first descent that usually terminates at the root — the
+//! `min_max_heap` top-K shape carmen-core's coalesce uses for grid
+//! contexts, specialized to a dense id universe.
+//!
+//! Ordering is total and deterministic: ids compare by key descending,
+//! then id ascending — equal-depth victims resolve to the lowest index,
+//! matching the pre-§11 linear scan exactly (asserted by the property
+//! test below).
+
+/// Indexed max-heap over ids `0..n` with `u64` keys (tie → lowest id).
+#[derive(Clone, Debug)]
+pub struct LoadHeap {
+    /// key per id (dense).
+    key: Vec<u64>,
+    /// heap of ids, max at `heap[0]` under [`LoadHeap::before`].
+    heap: Vec<u32>,
+    /// id → its index in `heap`.
+    pos: Vec<u32>,
+}
+
+impl LoadHeap {
+    /// Heap over ids `0..n`, all keys 0.
+    pub fn new(n: usize) -> Self {
+        assert!(n <= u32::MAX as usize, "load heap id space overflow");
+        LoadHeap {
+            key: vec![0; n],
+            heap: (0..n as u32).collect(),
+            pos: (0..n as u32).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.key.is_empty()
+    }
+
+    pub fn key(&self, id: usize) -> u64 {
+        self.key[id]
+    }
+
+    /// Largest key in the heap (0 for an empty id set).
+    pub fn max_key(&self) -> u64 {
+        self.heap.first().map_or(0, |&id| self.key[id as usize])
+    }
+
+    /// Sum of all keys (the intake's `len()` gauge reads this).
+    pub fn total(&self) -> u64 {
+        self.key.iter().sum()
+    }
+
+    /// Strict ordering: `a` before `b` ⇔ larger key, tie → lower id.
+    #[inline]
+    fn before(&self, a: u32, b: u32) -> bool {
+        let (ka, kb) = (self.key[a as usize], self.key[b as usize]);
+        ka > kb || (ka == kb && a < b)
+    }
+
+    /// Set `id`'s key and restore the heap in O(log n).
+    pub fn update(&mut self, id: usize, key: u64) {
+        let old = self.key[id];
+        self.key[id] = key;
+        let i = self.pos[id] as usize;
+        // key rose, or same key with... ordering vs parent can only be
+        // disturbed in one direction; sift the right way (equal keys
+        // keep the node in place: `before` is strict and ties are on the
+        // immutable id)
+        if key > old {
+            self.sift_up(i);
+        } else if key < old {
+            self.sift_down(i);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if self.before(self.heap[i], self.heap[p]) {
+                self.swap(i, p);
+                i = p;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut best = i;
+            if l < n && self.before(self.heap[l], self.heap[best]) {
+                best = l;
+            }
+            if r < n && self.before(self.heap[r], self.heap[best]) {
+                best = r;
+            }
+            if best == i {
+                break;
+            }
+            self.swap(i, best);
+            i = best;
+        }
+    }
+
+    fn swap(&mut self, i: usize, j: usize) {
+        self.heap.swap(i, j);
+        self.pos[self.heap[i] as usize] = i as u32;
+        self.pos[self.heap[j] as usize] = j as u32;
+    }
+
+    /// Best-first top-K walk: the id with the largest key (tie → lowest
+    /// id) among those with `key > 0` that satisfy `keep`, or `None`.
+    ///
+    /// Descends the heap lazily with a small frontier: each rejected
+    /// candidate opens its two children, so the cost is O(rejections ·
+    /// log(frontier)) and the common case (root passes) touches one
+    /// node.  Zero-key subtrees are pruned — a child's key never
+    /// exceeds its parent's.
+    pub fn select(&self, keep: impl Fn(usize) -> bool) -> Option<usize> {
+        // frontier of heap indices; linear selection is fine — it only
+        // grows past a handful when many deep shards are filtered out
+        let mut frontier: Vec<usize> = Vec::with_capacity(8);
+        if !self.heap.is_empty() {
+            frontier.push(0);
+        }
+        while !frontier.is_empty() {
+            // take the frontier's best node under the same total order
+            let mut bi = 0;
+            for i in 1..frontier.len() {
+                if self.before(self.heap[frontier[i]], self.heap[frontier[bi]]) {
+                    bi = i;
+                }
+            }
+            let hi = frontier.swap_remove(bi);
+            let id = self.heap[hi] as usize;
+            if self.key[id] == 0 {
+                // max of the remaining frontier is below every positive
+                // key already rejected; nothing with key > 0 is left
+                return None;
+            }
+            if keep(id) {
+                return Some(id);
+            }
+            for c in [2 * hi + 1, 2 * hi + 2] {
+                if c < self.heap.len() && self.key[self.heap[c] as usize] > 0 {
+                    frontier.push(c);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    /// The oracle the heap replaces: linear scan, max key, tie → lowest
+    /// id, zero keys and filtered ids excluded.
+    fn naive_select(keys: &[u64], keep: impl Fn(usize) -> bool) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, &k) in keys.iter().enumerate() {
+            if k == 0 || !keep(i) {
+                continue;
+            }
+            if best.map_or(true, |b| k > keys[b]) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn update_and_select_basics() {
+        let mut h = LoadHeap::new(4);
+        assert_eq!(h.max_key(), 0);
+        assert_eq!(h.select(|_| true), None, "all-zero heap has no victim");
+        h.update(2, 5);
+        h.update(1, 7);
+        h.update(3, 7);
+        assert_eq!(h.max_key(), 7);
+        assert_eq!(h.total(), 19);
+        assert_eq!(h.select(|_| true), Some(1), "tie resolves to the lowest id");
+        assert_eq!(h.select(|i| i != 1), Some(3));
+        assert_eq!(h.select(|i| i != 1 && i != 3), Some(2));
+        h.update(1, 0);
+        assert_eq!(h.select(|_| true), Some(3));
+        assert_eq!(h.select(|i| i % 2 == 0), Some(2));
+        assert_eq!(h.select(|_| false), None);
+    }
+
+    #[test]
+    fn zero_key_subtrees_are_pruned_not_returned() {
+        let mut h = LoadHeap::new(8);
+        h.update(6, 3);
+        assert_eq!(h.select(|_| true), Some(6));
+        assert_eq!(h.select(|i| i != 6), None, "every other key is 0");
+    }
+
+    #[test]
+    fn matches_naive_scan_under_random_updates_and_filters() {
+        check(
+            "loadheap-vs-scan",
+            300,
+            |rng: &mut Rng, size| {
+                let n = 1 + rng.below(1 + (size * 64.0) as usize);
+                let ops: Vec<(usize, u64)> = (0..rng.below(200) + 1)
+                    .map(|_| (rng.below(n), rng.next_u64() % 5))
+                    .collect();
+                let mask: u64 = rng.next_u64();
+                (n, ops, mask)
+            },
+            |(n, ops, mask)| {
+                let mut h = LoadHeap::new(*n);
+                let mut keys = vec![0u64; *n];
+                for &(id, k) in ops {
+                    h.update(id, k);
+                    keys[id] = k;
+                    let keep = |i: usize| mask >> (i % 64) & 1 == 1;
+                    if h.select(keep) != naive_select(&keys, keep) {
+                        return false;
+                    }
+                    if h.select(|_| true) != naive_select(&keys, |_| true) {
+                        return false;
+                    }
+                    if h.max_key() != keys.iter().copied().max().unwrap_or(0) {
+                        return false;
+                    }
+                }
+                h.total() == keys.iter().sum::<u64>()
+            },
+        );
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod argparse;
 pub mod json;
+pub mod loadheap;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
@@ -16,4 +17,65 @@ pub mod threadpool;
 /// poisoning all later calls.
 pub fn lock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Poison-recovering condvar wait — the companion of [`lock`] for code
+/// that blocks on a [`std::sync::Condvar`] (the intake queues,
+/// DESIGN.md §11).  Pre-§11 this `unwrap_or_else(PoisonError::
+/// into_inner)` dance was copy-pasted at every wait site in the batcher.
+pub fn wait<'a, T>(cv: &std::sync::Condvar, g: std::sync::MutexGuard<'a, T>)
+                   -> std::sync::MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Poison-recovering bounded condvar wait; returns the guard and
+/// whether the wait timed out (see [`wait`]).
+pub fn wait_timeout<'a, T>(cv: &std::sync::Condvar, g: std::sync::MutexGuard<'a, T>,
+                           dur: std::time::Duration)
+                           -> (std::sync::MutexGuard<'a, T>, bool) {
+    let (g, to) = cv
+        .wait_timeout(g, dur)
+        .unwrap_or_else(std::sync::PoisonError::into_inner);
+    (g, to.timed_out())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::time::Duration;
+
+    /// Regression (DESIGN.md §11): a thread that panics while holding a
+    /// mutex poisons it; `lock`/`wait`/`wait_timeout` must keep working
+    /// on the poisoned primitives instead of propagating the poison to
+    /// every later caller (the serving pool keeps serving).
+    #[test]
+    fn lock_and_waits_recover_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let cv = Arc::new(Condvar::new());
+        let m2 = Arc::clone(&m);
+        let poisoner = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock on purpose");
+        });
+        assert!(poisoner.join().is_err());
+        assert!(m.is_poisoned());
+        let g = super::lock(&m);
+        assert_eq!(*g, 7);
+        let (g, timed_out) = super::wait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(timed_out);
+        drop(g);
+        // a waiter on the poisoned pair still gets woken
+        let (m3, cv3) = (Arc::clone(&m), Arc::clone(&cv));
+        let waiter = std::thread::spawn(move || {
+            let mut g = super::lock(&m3);
+            while *g != 42 {
+                g = super::wait(&cv3, g);
+            }
+            *g
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        *super::lock(&m) = 42;
+        cv.notify_all();
+        assert_eq!(waiter.join().unwrap(), 42);
+    }
 }

@@ -37,7 +37,7 @@ impl ThreadPool {
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 thread::spawn(move || loop {
-                    let job = { rx.lock().unwrap().recv() };
+                    let job = { crate::util::lock(&rx).recv() };
                     match job {
                         Ok(job) => job(),
                         Err(_) => break, // channel closed

@@ -1,0 +1,526 @@
+//! Seeded concurrency stress suite for the intake queues (DESIGN.md
+//! §11) — the correctness oracle behind the §11 `ShardedIntake`
+//! rewrite.
+//!
+//! A seeded workload generator drives mixed push / pop / steal /
+//! escalate / shutdown interleavings across 4–64 shards.  Thread
+//! scheduling is of course nondeterministic, but the *workload* —
+//! item ids, min-bits tags, escalation decisions, queue shapes — is
+//! reproducible per seed, and every invariant is checked post-hoc over
+//! the recorded trace, so a failure names the seed that produced it and
+//! the violated invariant:
+//!
+//! 1. **Conservation** — every item whose push returned `Ok` is
+//!    consumed exactly once (no lost, no duplicated items).
+//! 2. **Owner FIFO** — per shard, the owner's non-stolen consumption of
+//!    its dedicated pusher's items is in push order (tail stealing and
+//!    interleaved escalation pushes must never reorder a replica's own
+//!    FIFO).
+//! 3. **Steal gate** — every stolen item satisfies
+//!    `floor_bits[thief] >= item.min_bits`.
+//! 4. **Shutdown** — `close()` with full queues and blocked pushers
+//!    deadlocks nobody (a watchdog converts a hang into a failure) and
+//!    drains every accepted item before poppers see `Closed`.
+//! 5. **Accounting** — a live [`Metrics`] sink fed by the poppers ends
+//!    with `requests == consumed`, per-replica sums equal to the
+//!    globals, and a zero queue-depth gauge.
+//!
+//! The harness runs against BOTH implementations: the pre-§11
+//! [`CoarseIntake`] certifies the harness (if the reference fails, the
+//! harness is wrong), then the §11 [`ShardedIntake`] must pass the same
+//! sweep.  `checker_detects_planted_violations` certifies the oracle
+//! itself against hand-corrupted traces.
+//!
+//! Tier-1 runs a small seed set so CI always exercises the
+//! interleavings; `ci.sh --stress` sets `STRESS_FULL=1` for the full
+//! ≥8-seed × {4, 16, 64}-shard sweep.  `STRESS_SEEDS=a,b,c` overrides
+//! the seed list.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use dybit::coordinator::{Assembled, CoarseIntake, IntakeQueue, Item, Metrics, Policy, Request,
+                         ShardedIntake};
+use dybit::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Probe ids: gen(8 bits) | src(8 bits) | seq(48 bits)
+// ---------------------------------------------------------------------
+
+fn pid(gen: u64, src: usize, seq: u64) -> u64 {
+    assert!(src < 256 && seq < 1 << 48);
+    gen << 56 | (src as u64) << 48 | seq
+}
+
+fn gen_of(id: u64) -> u64 {
+    id >> 56
+}
+
+fn src_of(id: u64) -> usize {
+    (id >> 48 & 0xFF) as usize
+}
+
+fn seq_of(id: u64) -> u64 {
+    id & 0xFFFF_FFFF_FFFF
+}
+
+/// One consumption record, in per-popper consumption order.
+#[derive(Clone, Copy, Debug)]
+struct Consumed {
+    id: u64,
+    stolen: bool,
+    min_bits: u32,
+}
+
+/// Deterministic per-item coin for the escalation decision (splitmix64
+/// finalizer over id ⊕ seed, so the workload is seed-reproducible
+/// regardless of which popper sees the item).
+fn escalates(id: u64, seed: u64) -> bool {
+    let mut x = id ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ x >> 30).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ x >> 27).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (x ^ x >> 31) % 10 == 0
+}
+
+// ---------------------------------------------------------------------
+// Post-hoc invariant checker (the oracle; certified below)
+// ---------------------------------------------------------------------
+
+/// Check conservation, owner FIFO, and the steal gate over a recorded
+/// trace.  `consumed_by[s]` is popper `s`'s consumption in order.
+fn check_invariants(floors: &[u32], pushed_ok: &[u64], consumed_by: &[Vec<Consumed>])
+                    -> Result<(), String> {
+    let pushed: HashSet<u64> = pushed_ok.iter().copied().collect();
+    if pushed.len() != pushed_ok.len() {
+        return Err("harness bug: duplicate pushed ids".into());
+    }
+    let mut seen: HashSet<u64> = HashSet::with_capacity(pushed.len());
+    for (s, trace) in consumed_by.iter().enumerate() {
+        let mut last_seq: Option<u64> = None;
+        for c in trace {
+            if !pushed.contains(&c.id) {
+                return Err(format!("popper {s} consumed id {:#x} that was never pushed", c.id));
+            }
+            if !seen.insert(c.id) {
+                return Err(format!("id {:#x} consumed twice (second time by popper {s})", c.id));
+            }
+            if c.stolen && floors[s] < c.min_bits {
+                return Err(format!(
+                    "steal gate violated: popper {s} (floor {}) stole id {:#x} with min_bits {}",
+                    floors[s], c.id, c.min_bits
+                ));
+            }
+            // owner FIFO over the dedicated pusher's (gen 0) items; the
+            // interleaved escalation pushes (gen 1) are separate ids
+            if !c.stolen && gen_of(c.id) == 0 && src_of(c.id) == s {
+                let seq = seq_of(c.id);
+                if let Some(prev) = last_seq {
+                    if seq <= prev {
+                        return Err(format!(
+                            "owner FIFO violated on shard {s}: seq {seq} after {prev}"
+                        ));
+                    }
+                }
+                last_seq = Some(seq);
+            }
+        }
+    }
+    if seen.len() != pushed.len() {
+        return Err(format!("{} item(s) lost (pushed Ok, never consumed)", pushed.len() - seen.len()));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// The seeded workload
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct StressCfg {
+    shards: usize,
+    cap: usize,
+    per_pusher: u64,
+    seed: u64,
+    /// Close mid-flight with blocked pushers (tiny caps) instead of
+    /// after the pushers finish.
+    close_early: bool,
+}
+
+/// Heterogeneous floors with at least one accurate (8-bit) tier, like
+/// the serve pools: every 4th replica floors at 8, the rest at 4.
+fn floors(n: usize) -> Vec<u32> {
+    (0..n).map(|i| if i % 4 == 3 || n < 4 { 8 } else { 4 }).collect()
+}
+
+fn probe_item(id: u64, min_bits: u32, escalated: bool) -> Item<u64, u64> {
+    let (tx, _rx) = mpsc::channel();
+    let mut it = Item::new(Request { payload: id, enqueued: Instant::now(), respond: tx });
+    it.min_bits = min_bits;
+    it.escalated = escalated;
+    it
+}
+
+/// One full run: a dedicated pusher and popper per shard, escalation
+/// re-pushes to the accurate tier, close, drain, then every invariant.
+fn stress_once<I: IntakeQueue<u64, u64>>(q: &I, cfg: StressCfg) {
+    let floors = floors(cfg.shards);
+    let esc_target = (0..cfg.shards).rev().find(|&s| floors[s] == 8).unwrap();
+    let metrics = Metrics::new(cfg.shards);
+    let esc_seq = AtomicU64::new(0);
+    let policy = Policy { max_batch: 4, max_wait: Duration::from_micros(200) };
+
+    let (pushed, consumed) = thread::scope(|scope| {
+        // -- dedicated pushers: one per shard so owner FIFO is assertable
+        let mut pushers = Vec::new();
+        for s in 0..cfg.shards {
+            let (q, metrics, floors) = (&q, &metrics, &floors);
+            pushers.push(scope.spawn(move || {
+                let mut rng = Rng::new(cfg.seed ^ (s as u64).wrapping_mul(0x9E37_79B9));
+                let mut ok = Vec::new();
+                for seq in 0..cfg.per_pusher {
+                    // ~30% of items carry the shard's own floor as an
+                    // accuracy tag (what the router would do), gating
+                    // who may steal them
+                    let bits = if rng.below(10) < 3 { floors[s] } else { 0 };
+                    let id = pid(0, s, seq);
+                    match q.push(s, probe_item(id, bits, false)) {
+                        Ok(()) => {
+                            metrics.queue_push();
+                            ok.push(id);
+                        }
+                        Err(_) => break, // closed under us (close_early)
+                    }
+                }
+                ok
+            }));
+        }
+
+        // -- poppers: one per shard (the intake contract), recording
+        //    every consumption and escalating a seeded ~10% of untagged
+        //    first-run items from the fast tiers
+        let mut poppers = Vec::new();
+        for s in 0..cfg.shards {
+            let (q, metrics, floors, esc_seq) = (&q, &metrics, &floors, &esc_seq);
+            poppers.push(scope.spawn(move || {
+                let mut trace: Vec<Consumed> = Vec::new();
+                let mut esc_pushed: Vec<u64> = Vec::new();
+                loop {
+                    let batch = match q.pop_batch(s, policy) {
+                        Assembled::Batch(b) => b,
+                        Assembled::Closed => return (trace, esc_pushed),
+                    };
+                    metrics.queue_pop(batch.len());
+                    let n = batch.len();
+                    let stolen_n = batch.iter().filter(|i| i.stolen).count();
+                    if stolen_n > 0 {
+                        metrics.record_stolen(s, stolen_n);
+                    }
+                    let mut answered = 0;
+                    for it in batch {
+                        let id = it.req.payload;
+                        trace.push(Consumed { id, stolen: it.stolen, min_bits: it.min_bits });
+                        // escalate strictly up (fast tier → accurate
+                        // tier, never back), mirroring the server: an
+                        // acyclic hand-off graph cannot deadlock on the
+                        // bounded blocking pushes
+                        let esc = !it.escalated
+                            && floors[s] < 8
+                            && it.min_bits == 0
+                            && escalates(id, cfg.seed);
+                        if esc {
+                            let nid = pid(1, s, esc_seq.fetch_add(1, Ordering::Relaxed));
+                            match q.push(esc_target, probe_item(nid, 8, true)) {
+                                Ok(()) => {
+                                    metrics.queue_push();
+                                    metrics.record_escalated(s, 1);
+                                    esc_pushed.push(nid);
+                                }
+                                // closed: answer directly instead of
+                                // re-running, like the server does
+                                Err(_) => answered += 1,
+                            }
+                        } else {
+                            answered += 1;
+                        }
+                    }
+                    metrics.record_batch_answered(s, n, answered, 1e-4, 0);
+                }
+            }));
+        }
+
+        if cfg.close_early {
+            thread::sleep(Duration::from_millis(15));
+            q.close();
+        }
+        let mut pushed: Vec<u64> = Vec::new();
+        for h in pushers {
+            pushed.extend(h.join().expect("pusher panicked"));
+        }
+        if !cfg.close_early {
+            q.close();
+        }
+        let mut consumed: Vec<Vec<Consumed>> = Vec::new();
+        for h in poppers {
+            let (trace, esc) = h.join().expect("popper panicked");
+            pushed.extend(esc);
+            consumed.push(trace);
+        }
+        (pushed, consumed)
+    });
+
+    let label = format!("seed {} shards {} close_early {}", cfg.seed, cfg.shards, cfg.close_early);
+    if let Err(e) = check_invariants(&floors, &pushed, &consumed) {
+        panic!("[{label}] invariant violated: {e}");
+    }
+    assert_eq!(q.len(), 0, "[{label}] intake not drained");
+    assert!(matches!(q.pop_batch(0, policy), Assembled::Closed));
+
+    // exact accounting over the live sink the poppers fed
+    let total: u64 = consumed.iter().map(|t| t.len() as u64).sum();
+    let snap = metrics.snapshot(1.0);
+    assert_eq!(snap.requests + snap.escalations, total, "[{label}] answered + escalated-away");
+    assert_eq!(snap.queue_depth, 0, "[{label}] queue gauge must return to zero");
+    let per_req: u64 = snap.per_replica.iter().map(|r| r.requests).sum();
+    let per_esc: u64 = snap.per_replica.iter().map(|r| r.escalations).sum();
+    let per_stolen: u64 = snap.per_replica.iter().map(|r| r.stolen).sum();
+    assert_eq!(per_req, snap.requests, "[{label}] per-replica requests sum");
+    assert_eq!(per_esc, snap.escalations, "[{label}] per-replica escalations sum");
+    let stolen_total: u64 =
+        consumed.iter().map(|t| t.iter().filter(|c| c.stolen).count() as u64).sum();
+    assert_eq!(per_stolen, stolen_total, "[{label}] stolen counter");
+}
+
+/// Run `f` under a watchdog: a hang (deadlock, lost wakeup) becomes a
+/// named failure instead of a CI timeout with no diagnostics.
+fn with_watchdog(label: &str, limit: Duration, f: impl FnOnce() + Send + 'static) {
+    let (tx, rx) = mpsc::channel();
+    let h = thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(limit) {
+        // Ok = finished; Disconnected = panicked — join() propagates it
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("[{label}] deadlock suspected: no completion within {limit:?}")
+        }
+    }
+}
+
+fn seed_list(default: &[u64]) -> Vec<u64> {
+    match std::env::var("STRESS_SEEDS") {
+        Ok(s) => s
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| t.trim().parse().expect("STRESS_SEEDS: comma-separated u64s"))
+            .collect(),
+        Err(_) => default.to_vec(),
+    }
+}
+
+fn sweep<I: IntakeQueue<u64, u64> + 'static>(
+    name: &'static str,
+    make: fn(usize, Vec<u32>, bool) -> I,
+    seeds: &[u64],
+    shard_counts: &[usize],
+) {
+    for &seed in seeds {
+        for &shards in shard_counts {
+            let per_pusher = (2000 / shards as u64).max(40);
+            for close_early in [false, true] {
+                let cfg = StressCfg { shards, cap: 4, per_pusher, seed, close_early };
+                let label = format!("{name} seed {seed} shards {shards} early {close_early}");
+                with_watchdog(&label, Duration::from_secs(60), move || {
+                    let q = make(cfg.cap, floors(cfg.shards), true);
+                    stress_once(&q, cfg);
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tier-1: small seed set, both implementations
+// ---------------------------------------------------------------------
+
+/// The §11 intake under the default CI sweep.
+#[test]
+fn stress_sharded_intake_small_sweep() {
+    let seeds = seed_list(&[1, 2, 3]);
+    sweep("sharded", ShardedIntake::<u64, u64>::new, &seeds, &[4, 16]);
+}
+
+/// The pre-§11 reference under the same sweep — this run certifies the
+/// harness: the coarse intake's single-lock implementation is trivially
+/// linearizable, so a failure here indicts the harness, not the queue.
+#[test]
+fn stress_coarse_intake_certifies_harness() {
+    let seeds = seed_list(&[1, 2, 3]);
+    sweep("coarse", CoarseIntake::<u64, u64>::new, &seeds, &[4, 16]);
+}
+
+/// Full-queue shutdown: capacity 1, pushers blocked on backpressure
+/// when `close()` lands.  Every `Ok` push must still be served.
+#[test]
+fn stress_shutdown_with_blocked_pushers() {
+    for seed in seed_list(&[7, 8]) {
+        for shards in [4usize, 8] {
+            let cfg = StressCfg { shards, cap: 1, per_pusher: 1 << 40, seed, close_early: true };
+            with_watchdog(&format!("tiny-cap sharded seed {seed}"), Duration::from_secs(60),
+                          move || {
+                let q = ShardedIntake::new(cfg.cap, floors(cfg.shards), true);
+                stress_once(&q, cfg);
+            });
+            with_watchdog(&format!("tiny-cap coarse seed {seed}"), Duration::from_secs(60),
+                          move || {
+                let q = CoarseIntake::new(cfg.cap, floors(cfg.shards), true);
+                stress_once(&q, cfg);
+            });
+        }
+    }
+}
+
+/// The `ci.sh --stress` sweep: ≥8 seeds × {4, 16, 64} shards on the
+/// §11 intake (plus the coarse reference at the smaller counts — its
+/// single lock makes 64 coarse shards pointlessly slow).  A fast no-op
+/// unless `STRESS_FULL=1`, so tier-1 cost stays flat.
+#[test]
+fn stress_full_sweep() {
+    if std::env::var("STRESS_FULL").is_err() {
+        eprintln!("stress_full_sweep: skipped (set STRESS_FULL=1 or run ci.sh --stress)");
+        return;
+    }
+    let seeds = seed_list(&[1, 2, 3, 4, 5, 6, 7, 8]);
+    sweep("sharded-full", ShardedIntake::<u64, u64>::new, &seeds, &[4, 16, 64]);
+    sweep("coarse-full", CoarseIntake::<u64, u64>::new, &seeds, &[4, 16]);
+}
+
+// ---------------------------------------------------------------------
+// Oracle certification: planted violations must be caught
+// ---------------------------------------------------------------------
+
+#[test]
+fn checker_detects_planted_violations() {
+    let floors = vec![4, 8];
+    let c = |id, stolen, min_bits| Consumed { id, stolen, min_bits };
+    let pushed = vec![pid(0, 0, 0), pid(0, 0, 1), pid(0, 1, 0)];
+
+    // clean trace passes
+    let clean = vec![vec![c(pid(0, 0, 0), false, 0), c(pid(0, 0, 1), false, 0)],
+                     vec![c(pid(0, 1, 0), false, 0)]];
+    check_invariants(&floors, &pushed, &clean).expect("clean trace must pass");
+
+    // lost item
+    let lost = vec![vec![c(pid(0, 0, 0), false, 0)], vec![c(pid(0, 1, 0), false, 0)]];
+    let e = check_invariants(&floors, &pushed, &lost).unwrap_err();
+    assert!(e.contains("lost"), "{e}");
+
+    // duplicated item
+    let dup = vec![vec![c(pid(0, 0, 0), false, 0), c(pid(0, 0, 1), false, 0)],
+                   vec![c(pid(0, 1, 0), false, 0), c(pid(0, 0, 1), true, 0)]];
+    let e = check_invariants(&floors, &pushed, &dup).unwrap_err();
+    assert!(e.contains("twice"), "{e}");
+
+    // phantom item (consumed, never pushed)
+    let phantom = vec![clean[0].clone(),
+                       vec![c(pid(0, 1, 0), false, 0), c(pid(0, 1, 7), false, 0)]];
+    let e = check_invariants(&floors, &pushed, &phantom).unwrap_err();
+    assert!(e.contains("never pushed"), "{e}");
+
+    // owner FIFO inversion (seq 1 before seq 0, both non-stolen, gen 0)
+    let inverted = vec![vec![c(pid(0, 0, 1), false, 0), c(pid(0, 0, 0), false, 0)],
+                        vec![c(pid(0, 1, 0), false, 0)]];
+    let e = check_invariants(&floors, &pushed, &inverted).unwrap_err();
+    assert!(e.contains("FIFO"), "{e}");
+
+    // …but the same order IS legal when the older item was stolen away
+    // and re-observed as stolen by a sibling (tail stealing reorders
+    // global, never per-owner, order)
+    let stolen_ok = vec![vec![c(pid(0, 0, 1), false, 0)],
+                         vec![c(pid(0, 1, 0), false, 0), c(pid(0, 0, 0), true, 0)]];
+    check_invariants(&floors, &pushed, &stolen_ok).expect("steal reorder is legal");
+
+    // steal-gate violation: popper 0 (floor 4) stole an 8-bit item
+    let gated = vec![vec![c(pid(0, 0, 0), false, 0), c(pid(0, 1, 0), true, 8)],
+                     vec![c(pid(0, 0, 1), true, 0)]];
+    let e = check_invariants(&floors, &pushed, &gated).unwrap_err();
+    assert!(e.contains("gate"), "{e}");
+}
+
+// ---------------------------------------------------------------------
+// Metrics accounting fuzz (ISSUE 6 satellite): seeded multi-threaded
+// op mix over the real sink, then the §9 invariant exactly
+// ---------------------------------------------------------------------
+
+#[test]
+fn metrics_accounting_fuzz() {
+    let replicas = 5;
+    let accurate = replicas - 1;
+    for seed in seed_list(&[11, 12, 13]) {
+        let m = Metrics::new(replicas);
+        let submitted = AtomicU64::new(0);
+        thread::scope(|scope| {
+            for t in 0..8u64 {
+                let (m, submitted) = (&m, &submitted);
+                scope.spawn(move || {
+                    let mut rng = Rng::new(seed.wrapping_mul(0x0123_4567_89AB_CDEF) ^ t);
+                    for _ in 0..400 {
+                        let roll = rng.below(100);
+                        if roll < 10 {
+                            // invalid payload: rejected before execution
+                            m.record_rejected();
+                            submitted.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                        let r = rng.below(replicas);
+                        let size = 1 + rng.below(8);
+                        for _ in 0..size {
+                            m.queue_push();
+                        }
+                        m.queue_pop(size);
+                        submitted.fetch_add(size as u64, Ordering::Relaxed);
+                        if roll < 25 {
+                            // the whole batch failed: every slot is a
+                            // failed request
+                            m.record_error(r, size, 1e-3);
+                            continue;
+                        }
+                        // success, with a seeded share escalated away and
+                        // answered by the accurate tier's re-run batch
+                        let esc = if r == accurate { 0 } else { rng.below(size) };
+                        m.record_batch_answered(r, size, size - esc, 1e-4, 0);
+                        if esc > 0 {
+                            m.record_escalated(r, esc);
+                            m.record_batch_answered(accurate, esc, esc, 2e-4, 0);
+                        }
+                    }
+                });
+            }
+        });
+        let s = m.snapshot(1.0);
+        assert_eq!(
+            s.requests + s.failed_requests + s.rejected,
+            submitted.load(Ordering::Relaxed),
+            "seed {seed}: §9 accounting invariant"
+        );
+        assert_eq!(s.queue_depth, 0, "seed {seed}: gauge must drain");
+        let (mut pb, mut pe, mut pr, mut pesc) = (0, 0, 0, 0);
+        for r in &s.per_replica {
+            pb += r.batches;
+            pe += r.errors;
+            pr += r.requests;
+            pesc += r.escalations;
+        }
+        assert_eq!(pb, s.batches, "seed {seed}: per-replica batches sum");
+        assert_eq!(pe, s.errors, "seed {seed}: per-replica errors sum");
+        assert_eq!(pr, s.requests, "seed {seed}: per-replica requests sum");
+        assert_eq!(pesc, s.escalations, "seed {seed}: per-replica escalations sum");
+    }
+}
