@@ -14,10 +14,19 @@
 //! replica, the accounting must stay exact, and the wide pool must beat
 //! the 4-replica all-8 baseline.
 //!
+//! Two §12 phases close the overload story.  The *overload* phase
+//! offers open-loop arrival at ~1.5× the pool's simulated capacity with
+//! a per-request SLA, once with SLA-aware admission and once with plain
+//! blocking submits: admission must convert the queue-delay collapse
+//! into cheap typed rejects and hold goodput (on-time replies/s) at
+//! ≥1.3× the admission-off run.  The *controller* phase runs
+//! `Escalate::auto_tuned()` under a margin-uniform workload and asserts
+//! the PI-tuned escalation rate settles within ±20% of its budget.
+//!
 //! Run: cargo bench --bench perf_route [-- --smoke]
 //! `--smoke` shrinks the model/load for CI smoke runs
-//! (`ci.sh --bench-smoke`); the 1.8× acceptance floor (mixed vs all-8)
-//! only applies to the full-size run.
+//! (`ci.sh --bench-smoke`); the 1.8× routing floor, the 1.3× goodput
+//! floor, and the ±20% controller band only gate the full-size run.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -26,15 +35,21 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dybit::coordinator::{
-    load_test, Escalate, Fastest, Policy, PoolConfig, ReplicaPrecision, Server, SimBackend,
-    SimBackendCfg,
+    load_test, AdmissionCfg, Escalate, EscalationController, Fastest, InferenceBackend,
+    Policy, PoolConfig, Reject, ReplicaPrecision, Router, Server, SimBackend, SimBackendCfg,
+    SubmitOpts,
 };
 use dybit::models::synthetic_resnet;
+use dybit::tensor::Tensor;
 use dybit::util::argparse::Args;
 use dybit::util::json::Json;
+use dybit::util::rng::Rng;
 use dybit::util::stats::Table;
 
 const FLOOR: f64 = 1.8;
+/// Goodput-under-SLA floor: admission-on must beat admission-off by
+/// this factor in the overload phase (full-size runs only).
+const GOODPUT_FLOOR: f64 = 1.3;
 
 struct Run {
     wall_s: f64,
@@ -57,6 +72,7 @@ fn trial(cfg: &SimBackendCfg, mix: &[ReplicaPrecision], clients: usize,
         precisions: mix.to_vec(),
         router: Arc::new(Fastest::new()),
         work_stealing: true,
+        ..PoolConfig::default()
     };
     let server = Server::start_pool(pool, SimBackend::mixed_factory(cfg.clone(), mix.to_vec()))
         .expect("pool start");
@@ -72,7 +88,7 @@ fn trial(cfg: &SimBackendCfg, mix: &[ReplicaPrecision], clients: usize,
 
     let submitted = (clients * per_client + 1) as u64; // +1 warm-up
     assert_eq!(
-        snap.requests + snap.failed_requests + snap.rejected,
+        snap.requests + snap.failed_requests + snap.rejected + snap.deadline_drops,
         submitted,
         "every submitted request must be accounted for"
     );
@@ -111,6 +127,7 @@ fn escalation_rate(cfg: &SimBackendCfg, mix: &[ReplicaPrecision], n: usize,
         precisions: mix.to_vec(),
         router: Arc::new(Escalate::new(0.05)),
         work_stealing: false,
+        ..PoolConfig::default()
     };
     let server = Server::start_pool(pool, SimBackend::mixed_factory(cfg.clone(), mix.to_vec()))
         .expect("pool start");
@@ -129,13 +146,227 @@ fn escalation_rate(cfg: &SimBackendCfg, mix: &[ReplicaPrecision], n: usize,
     }
     let snap = server.shutdown().expect("clean shutdown");
     assert_eq!(
-        snap.requests + snap.failed_requests + snap.rejected,
+        snap.requests + snap.failed_requests + snap.rejected + snap.deadline_drops,
         n as u64,
         "escalated requests must still be answered exactly once"
     );
     let initiated: u64 = snap.per_replica.iter().map(|r| r.escalations).sum();
     assert_eq!(initiated, snap.escalations, "per-replica escalations must sum to global");
     (snap.escalations as f64 / n as f64, snap.escalations)
+}
+
+struct Overload {
+    submitted: u64,
+    rejected: u64,
+    on_time: u64,
+    goodput: f64,
+    deadline_drops: u64,
+}
+
+/// §12 overload phase: open-loop arrival at `arrival_rps` with a
+/// per-request SLA.  With admission off every request is accepted and
+/// queue delay alone blows the deadline; with SLA-aware admission the
+/// infeasible tail is rejected at submit (a cheap typed `Err`) and the
+/// accepted stream stays inside its deadline.  Eight paced generators
+/// each feed a paired consumer so submission cadence never blocks on
+/// `recv`; a reply counts toward goodput only if it arrives `Ok` before
+/// the deadline measured from the submit attempt.
+fn overload_trial(cfg: &SimBackendCfg, mix: &[ReplicaPrecision], admission_on: bool,
+                  deadline: Duration, arrival_rps: f64, dur: Duration) -> Overload {
+    let admission = if admission_on {
+        AdmissionCfg {
+            batch_cost: cfg.projected_batch_costs(mix).expect("cost projection"),
+            tenants: 4,
+            // headroom: admit only when the projection clears the
+            // deadline with 50% margin, so admitted ≈ on-time
+            slack: 1.5,
+        }
+    } else {
+        AdmissionCfg::default()
+    };
+    let pool = PoolConfig {
+        policy: Policy {
+            max_batch: cfg.batch,
+            max_wait: Duration::from_micros(300),
+        },
+        queue_cap: 256,
+        replicas: mix.len(),
+        precisions: mix.to_vec(),
+        router: Arc::new(Fastest::new()),
+        work_stealing: true,
+        admission,
+        ..PoolConfig::default()
+    };
+    let server = Server::start_pool(pool, SimBackend::mixed_factory(cfg.clone(), mix.to_vec()))
+        .expect("pool start");
+    let gens = 8usize;
+    let interval = Duration::from_secs_f64(gens as f64 / arrival_rps);
+    let t0 = Instant::now();
+    let (submitted, rejected, on_time) = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..gens)
+            .map(|g| {
+                let server = &server;
+                scope.spawn(move || {
+                    type Reply = std::result::Result<usize, String>;
+                    let (tx, feed) =
+                        std::sync::mpsc::channel::<(std::sync::mpsc::Receiver<Reply>, Instant)>();
+                    let consumer = std::thread::spawn(move || {
+                        let mut on_time = 0u64;
+                        for (rx, dl) in feed {
+                            let reply = rx
+                                .recv_timeout(Duration::from_secs(60))
+                                .expect("every accepted receiver must resolve");
+                            if reply.is_ok() && Instant::now() <= dl {
+                                on_time += 1;
+                            }
+                        }
+                        on_time
+                    });
+                    let mut rng = Rng::new(900 + g as u64);
+                    let (mut submitted, mut rejected) = (0u64, 0u64);
+                    let phase = interval.mul_f64(g as f64 / gens as f64);
+                    for i in 0u64.. {
+                        let due = t0 + phase + interval.mul_f64(i as f64);
+                        if due.duration_since(t0) >= dur {
+                            break;
+                        }
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        let img = rng.normal_vec(cfg.img_elems);
+                        submitted += 1;
+                        // the SLA clock starts at the submit *attempt*:
+                        // a blocking submit spends it in the queue's stead
+                        let dl = Instant::now() + deadline;
+                        if admission_on {
+                            let opts = SubmitOpts { deadline: Some(deadline), tenant: g as u32 };
+                            match server.submit_with(img, opts) {
+                                Ok(rx) => tx.send((rx, dl)).expect("feed consumer"),
+                                Err(
+                                    Reject::QueueFull { .. }
+                                    | Reject::DeadlineInfeasible { .. }
+                                    | Reject::TenantThrottled { .. },
+                                ) => rejected += 1,
+                                Err(other) => panic!("unexpected reject: {other}"),
+                            }
+                        } else {
+                            let rx = server.submit(img).expect("plain submit");
+                            tx.send((rx, dl)).expect("feed consumer");
+                        }
+                    }
+                    drop(tx);
+                    let on_time = consumer.join().expect("consumer thread");
+                    (submitted, rejected, on_time)
+                })
+            })
+            .collect();
+        handles.into_iter().fold((0, 0, 0), |acc, h| {
+            let (s, r, o) = h.join().expect("generator thread");
+            (acc.0 + s, acc.1 + r, acc.2 + o)
+        })
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snap = server.shutdown().expect("clean shutdown");
+    assert_eq!(
+        snap.requests + snap.failed_requests + snap.rejected + snap.deadline_drops,
+        submitted,
+        "overload accounting must cover every submit attempt"
+    );
+    assert_eq!(snap.rejected, rejected, "admission rejects must all be counted");
+    Overload {
+        submitted,
+        rejected,
+        on_time,
+        goodput: on_time as f64 / wall_s,
+        deadline_drops: snap.deadline_drops,
+    }
+}
+
+/// §12 controller phase: `Escalate::auto_tuned()` with the PI margin
+/// tuner steering the escalation rate onto `budget`.  Payload norms are
+/// drawn so the argmax margin is ~uniform on [0, 2] (normalized by a
+/// probed unit-payload margin): the rate is then a smooth, near-linear
+/// function of the margin knob and a converged controller sits at the
+/// budget.  Runs the load twice; returns (rate over the settled second
+/// half, final knob margin).
+fn controller_trial(cfg: &SimBackendCfg, mix: &[ReplicaPrecision], budget: f64,
+                    clients: usize, per_half: usize) -> (f64, f64) {
+    // probe the argmax margin of a unit-normal payload so the workload
+    // can be normalized to margin ≈ scale, model- and seed-independent
+    let mut probe = SimBackend::new(SimBackendCfg { time_scale: 0.0, ..cfg.clone() })
+        .expect("margin probe");
+    let mut rng = Rng::new(321);
+    let rows = cfg.batch;
+    let mut xdata = Vec::with_capacity(rows * cfg.img_elems);
+    for _ in 0..rows {
+        xdata.extend(rng.normal_vec(cfg.img_elems));
+    }
+    let logits = probe
+        .forward(Tensor::new(vec![rows, cfg.img_elems], xdata).expect("probe tensor"))
+        .expect("probe forward");
+    let mut margins: Vec<f32> = logits.argmax_margin_rows().iter().map(|&(_, m)| m).collect();
+    margins.sort_by(f32::total_cmp);
+    let unit_margin = margins[rows / 2].max(1e-6);
+
+    let router = Arc::new(Escalate::auto_tuned());
+    let knob = router.margin_knob().expect("auto-tuned escalate exposes its knob");
+    let mut ctl = EscalationController::with_budget(budget);
+    ctl.interval = Duration::from_millis(5);
+    ctl.min_samples = 64;
+    // the margin-uniform workload has a gentle rate-vs-margin slope
+    // (~0.5 per margin unit), so a stiffer integral still converges in
+    // well under one load half while staying far from instability
+    ctl.ki = 12.0;
+    let pool = PoolConfig {
+        policy: Policy {
+            max_batch: cfg.batch,
+            max_wait: Duration::from_micros(200),
+        },
+        queue_cap: 1024,
+        replicas: mix.len(),
+        precisions: mix.to_vec(),
+        router: router.clone(),
+        work_stealing: false, // fast tiers must make the first-run decisions
+        escalation: Some(ctl),
+        ..PoolConfig::default()
+    };
+    let server = Server::start_pool(pool, SimBackend::mixed_factory(cfg.clone(), mix.to_vec()))
+        .expect("pool start");
+    let load = |half: u64| {
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let server = &server;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(1 + half * 1000 + c as u64);
+                    for _ in 0..per_half {
+                        let scale = rng.uniform_in(0.0, 2.0) / unit_margin;
+                        let img: Vec<f32> =
+                            rng.normal_vec(cfg.img_elems).iter().map(|v| v * scale).collect();
+                        let rx = server.submit(img).expect("submit");
+                        rx.recv_timeout(Duration::from_secs(60))
+                            .expect("reply")
+                            .expect("class");
+                    }
+                });
+            }
+        });
+    };
+    load(0); // settle: the controller walks the knob onto the budget
+    let snap0 = server.snapshot();
+    load(1); // measure: rate over the settled half only
+    let snap1 = server.snapshot();
+    let firsts = (snap1.first_runs - snap0.first_runs).max(1);
+    let rate = (snap1.escalations - snap0.escalations) as f64 / firsts as f64;
+    let margin = f64::from(knob.get());
+    let snap = server.shutdown().expect("clean shutdown");
+    let total = (2 * clients * per_half) as u64;
+    assert_eq!(
+        snap.requests + snap.failed_requests + snap.rejected + snap.deadline_drops,
+        total,
+        "controller phase accounting"
+    );
+    (rate, margin)
 }
 
 fn main() {
@@ -287,6 +518,67 @@ fn main() {
         "high-margin workload must (almost) never escalate; rate {high_rate}"
     );
 
+    // ---- §12 overload: open-loop arrival at ~1.5× the simulated pool
+    // capacity with a per-request SLA; SLA-aware admission must turn
+    // the queue-delay collapse into typed rejects and hold goodput
+    let costs = cfg.projected_batch_costs(&mixed).expect("cost projection");
+    let capacity: f64 = costs
+        .iter()
+        .map(|c| cfg.batch as f64 / c.as_secs_f64().max(1e-12))
+        .sum();
+    let arrival = 1.5 * capacity;
+    let (deadline, dur) = if smoke {
+        (Duration::from_millis(8), Duration::from_millis(250))
+    } else {
+        (Duration::from_millis(50), Duration::from_secs(2))
+    };
+    let on = overload_trial(&cfg, &mixed, true, deadline, arrival, dur);
+    let off = overload_trial(&cfg, &mixed, false, deadline, arrival, dur);
+    let goodput_ratio = on.goodput / off.goodput.max(1e-9);
+    let goodput_ok = smoke || goodput_ratio >= GOODPUT_FLOOR;
+    println!(
+        "\noverload: {}ms SLA at {arrival:.0}/s offered (~1.5x capacity {capacity:.0}/s)\n  \
+         admission on : {} on-time of {} submitted ({} rejected, {} dropped) -> \
+         {:.0} good/s\n  admission off: {} on-time of {} submitted -> {:.0} good/s\n  \
+         goodput ratio {goodput_ratio:.2}x (floor {GOODPUT_FLOOR:.2}x): {}",
+        deadline.as_millis(),
+        on.on_time,
+        on.submitted,
+        on.rejected,
+        on.deadline_drops,
+        on.goodput,
+        off.on_time,
+        off.submitted,
+        off.goodput,
+        if smoke {
+            "n/a (smoke load)".to_string()
+        } else if goodput_ok {
+            "PASS".to_string()
+        } else {
+            "FAIL".to_string()
+        }
+    );
+
+    // ---- §12 closed-loop margin tuning, run at a fast time scale: the
+    // controller steers decision *counts*, not batch wall time
+    let mut pi_cfg = cfg.clone();
+    pi_cfg.time_scale = 0.0005 / probe8.sim_latency_s();
+    let budget = 0.25;
+    let (pi_clients, per_half) = if smoke { (4, 100) } else { (16, 1500) };
+    let (pi_rate, pi_margin) = controller_trial(&pi_cfg, &mixed, budget, pi_clients, per_half);
+    let controller_ok = smoke || (pi_rate - budget).abs() <= 0.2 * budget;
+    println!(
+        "escalation budget {budget:.2}: settled rate {pi_rate:.3} \
+         (tuned margin {pi_margin:.4}): {}",
+        if smoke {
+            "n/a (smoke load)".to_string()
+        } else if controller_ok {
+            "PASS (within +/-20%)".to_string()
+        } else {
+            "FAIL".to_string()
+        }
+    );
+
     let floor_ok = smoke || speedup >= FLOOR;
     println!(
         "\nheterogeneous routing over SimBackend (8-bit batch cost {:.1}ms, \
@@ -304,9 +596,15 @@ fn main() {
         Json::obj(vec![
             ("smoke", Json::Bool(smoke)),
             ("floor", Json::num(FLOOR)),
-            // null on smoke runs: the floor was never evaluated, and a
+            // null on smoke runs: the gates were never evaluated, and a
             // persisted `true` would read as a gate that passed
             ("floor_pass", if smoke { Json::Null } else { Json::Bool(floor_ok) }),
+            ("goodput_floor", Json::num(GOODPUT_FLOOR)),
+            ("goodput_pass", if smoke { Json::Null } else { Json::Bool(goodput_ok) }),
+            (
+                "controller_pass",
+                if smoke { Json::Null } else { Json::Bool(controller_ok) },
+            ),
             ("target_batch8_s", Json::num(target_batch8_s)),
             ("tier_ratio", Json::num(tier_ratio)),
             ("rows", Json::Arr(rows)),
@@ -319,12 +617,37 @@ fn main() {
                     ("high_margin_rate", Json::num(high_rate)),
                 ]),
             ),
+            (
+                "overload",
+                Json::obj(vec![
+                    ("deadline_ms", Json::num(deadline.as_secs_f64() * 1e3)),
+                    ("capacity_rps", Json::num(capacity)),
+                    ("arrival_rps", Json::num(arrival)),
+                    ("goodput_on", Json::num(on.goodput)),
+                    ("goodput_off", Json::num(off.goodput)),
+                    ("goodput_ratio", Json::num(goodput_ratio)),
+                    ("on_time_on", Json::num(on.on_time as f64)),
+                    ("on_time_off", Json::num(off.on_time as f64)),
+                    ("submitted_on", Json::num(on.submitted as f64)),
+                    ("submitted_off", Json::num(off.submitted as f64)),
+                    ("rejected_on", Json::num(on.rejected as f64)),
+                    ("deadline_drops_on", Json::num(on.deadline_drops as f64)),
+                ]),
+            ),
+            (
+                "controller",
+                Json::obj(vec![
+                    ("budget", Json::num(budget)),
+                    ("settled_rate", Json::num(pi_rate)),
+                    ("tuned_margin", Json::num(pi_margin)),
+                ]),
+            ),
         ]),
     )
     .expect("save perf results");
     println!("perf_route done");
-    if !floor_ok {
-        // make the floor a real gate: scripted full-size runs must fail
+    if !(floor_ok && goodput_ok && controller_ok) {
+        // make the floors real gates: scripted full-size runs must fail
         std::process::exit(1);
     }
 }

@@ -8,11 +8,15 @@
 #                         # layer stacks, perf_calib on tiny tensors, and
 #                         # perf_serve/perf_route on tiny SimBackend pools
 #                         # (quick end-to-end bench smoke); fails if any
-#                         # bench result JSON is missing or empty
+#                         # bench result JSON is missing or empty, or if
+#                         # perf_route persisted a failed goodput/PI gate
+#                         # (full-size runs write goodput_pass /
+#                         # controller_pass; smoke writes null)
 #   ./ci.sh --stress      # additionally run the full coordinator_stress
 #                         # sweep (8 seeds x {4,16,64} shards + tiny-cap
-#                         # shutdown runs) against both intake
-#                         # implementations (DESIGN.md §11)
+#                         # shutdown runs + seeded §12 overload scenarios
+#                         # with deadline-drop conservation) against both
+#                         # intake implementations (DESIGN.md §11–§12)
 #
 # Note tier-1's `cargo test -q` already runs coordinator_stress with its
 # small default seed set, so the concurrency interleavings are exercised
@@ -76,6 +80,17 @@ if [[ $bench_smoke -eq 1 ]]; then
     out="artifacts/results/${name}.json"
     if [[ ! -s "$out" ]]; then
       echo "ci.sh: bench smoke produced no usable $out" >&2
+      exit 1
+    fi
+  done
+
+  # perf_route persists its gate verdicts (goodput_pass /
+  # controller_pass / floor_pass: bool on full-size runs, null on
+  # smoke).  Gate on the JSON, not just the exit code, so a run that
+  # records a failed verdict can never slip through as green
+  for gate in goodput_pass controller_pass floor_pass; do
+    if grep -q "\"${gate}\": false" artifacts/results/perf_route.json; then
+      echo "ci.sh: perf_route persisted ${gate}=false (SLA/overload gate)" >&2
       exit 1
     fi
   done

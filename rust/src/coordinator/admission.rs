@@ -1,0 +1,549 @@
+//! Overload-safe admission control + closed-loop escalation tuning
+//! (DESIGN.md §12).
+//!
+//! Under overload a blocking intake degrades the worst way possible:
+//! every client waits, queue delay grows without bound, and by the
+//! time a reply arrives its SLA is long gone — throughput stays high
+//! while *goodput* (on-time answers) collapses.  This module makes the
+//! pool refuse work it cannot serve in time, at the only moment that
+//! is cheap: submit.
+//!
+//! Three cooperating mechanisms:
+//!
+//! * **SLA-aware admission.**  `Server::submit_with` carries an
+//!   optional relative deadline.  Admission projects the queue delay
+//!   of the routed shard as
+//!   `(⌊depth/max_batch⌋ + 1) · ĉ_r · slack`
+//!   where `depth` comes off the §11 load board ([`shard_len`]) and
+//!   `ĉ_r` is the per-batch cost estimate for that replica's precision
+//!   — seeded from the §3 cycle model like the §7 cost table
+//!   (`SimBackendCfg::projected_batch_costs`), then refined online by
+//!   an EWMA over observed batch wall times.  An infeasible request is
+//!   rejected immediately with a typed reason instead of blocking;
+//!   an admitted request that still expires in the queue is dropped at
+//!   assembly with an `Err` reply and counted in `deadline_drops` —
+//!   every submission resolves exactly once:
+//!   `requests + failed_requests + rejected + deadline_drops ==
+//!   submitted`.
+//!
+//! * **Per-tenant fair queuing.**  Each shard's capacity is split into
+//!   per-tenant occupancy quotas (`⌈cap/tenants⌉` slots): a tenant at
+//!   its quota on a shard is throttled with
+//!   [`Reject::TenantThrottled`] while other tenants keep landing —
+//!   one hot tenant can fill at most its share of every queue, never
+//!   the pool.  Occupancy is charged at submit and released when the
+//!   item leaves the queue, so the quota bounds *queue depth*, not
+//!   throughput: a lone tenant on an idle pool still runs at full
+//!   speed (work-conserving).  The occupancy table is a flat array of
+//!   atomics — no lock is held with any intake lock, so the §11
+//!   `shard → board` order is untouched.
+//!
+//! * **Closed-loop margin tuning.**  The Fig. 6 accuracy/latency
+//!   operating point becomes a feedback loop: `escalate:auto` exposes
+//!   its margin as a shared [`MarginKnob`] and a background PI
+//!   controller ([`EscalationController`]) steers the observed
+//!   escalation rate (Δ`escalations` / Δ`first_runs` per window, a
+//!   sliding window over the `Metrics` counters) onto a configured
+//!   budget.  Velocity form — `m += kp·Δerr + ki·err·dt` — so the
+//!   clamp to `bounds` doubles as anti-windup.
+//!
+//! [`shard_len`]: super::batcher::IntakeQueue::shard_len
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use super::metrics::Metrics;
+use super::router::MarginKnob;
+
+/// Per-request options for `Server::submit_with` (DESIGN.md §12).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOpts {
+    /// Relative SLA deadline: reject at submit when the projected
+    /// queue delay already exceeds it; drop (with an `Err` reply) at
+    /// assembly when it expires in the queue.  `None` = no SLA.
+    pub deadline: Option<Duration>,
+    /// Tenant id for fair queuing (`0` = the default tenant).  Mapped
+    /// onto `AdmissionCfg::tenants` buckets by modulo.
+    pub tenant: u32,
+}
+
+impl SubmitOpts {
+    /// Deadline-only options for the common single-tenant case.
+    pub fn with_deadline(deadline: Duration) -> Self {
+        SubmitOpts { deadline: Some(deadline), tenant: 0 }
+    }
+}
+
+/// Typed admission refusal: why `submit_with` did not enqueue.  Every
+/// variant is returned *before* a reply channel exists, so no client
+/// is ever left holding a dead `Receiver`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Reject {
+    /// The routed shard is at capacity — a deadline-less `submit`
+    /// would have blocked here; admission refuses instead.
+    QueueFull { shard: usize, depth: usize, cap: usize },
+    /// The projected queue delay already exceeds the request's
+    /// deadline; executing it would only burn capacity on a reply the
+    /// client will discard.
+    DeadlineInfeasible { projected: Duration, deadline: Duration },
+    /// The tenant already holds its fair share of the routed shard's
+    /// queue slots.
+    TenantThrottled { tenant: u32, shard: usize, held: usize, quota: usize },
+    /// Payload length mismatch (checked before routing, mirrors
+    /// `submit`'s length error).
+    InvalidPayload { got: usize, want: usize },
+    /// The server stopped (mirrors `submit`'s "server stopped").
+    Closed,
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reject::QueueFull { shard, depth, cap } => {
+                write!(f, "queue full: shard {shard} at {depth}/{cap}")
+            }
+            Reject::DeadlineInfeasible { projected, deadline } => write!(
+                f,
+                "deadline infeasible: projected queue delay {:.3}ms exceeds deadline {:.3}ms",
+                projected.as_secs_f64() * 1e3,
+                deadline.as_secs_f64() * 1e3
+            ),
+            Reject::TenantThrottled { tenant, shard, held, quota } => write!(
+                f,
+                "tenant {tenant} throttled: holds {held}/{quota} slots of shard {shard}"
+            ),
+            Reject::InvalidPayload { got, want } => {
+                write!(f, "invalid payload: {got} elements, image needs {want}")
+            }
+            Reject::Closed => write!(f, "server stopped"),
+        }
+    }
+}
+
+impl std::error::Error for Reject {}
+
+/// Admission configuration (`PoolConfig::admission`).  The default
+/// admits everything a plain `submit` would: no cost seed (estimates
+/// learn online from observed batches), one tenant (quota = whole
+/// queue), unit slack.
+#[derive(Clone, Debug)]
+pub struct AdmissionCfg {
+    /// Per-replica seed for the batch-cost estimate `ĉ_r` — one entry
+    /// per replica, normally `SimBackendCfg::projected_batch_costs`
+    /// (the §7-style cycle projection at each replica's precision).
+    /// Empty = start at zero and learn from the first observed batch.
+    pub batch_cost: Vec<Duration>,
+    /// Declared tenant buckets for fair queuing; each tenant may hold
+    /// at most `⌈queue_cap/tenants⌉` slots of any one shard.  `1`
+    /// disables the quota.
+    pub tenants: u32,
+    /// Safety factor on the delay projection (finite, > 0).  Above 1
+    /// rejects earlier (conservative), below 1 admits optimistically.
+    pub slack: f64,
+}
+
+impl Default for AdmissionCfg {
+    fn default() -> Self {
+        AdmissionCfg { batch_cost: Vec::new(), tenants: 1, slack: 1.0 }
+    }
+}
+
+/// EWMA weight of a newly observed batch cost (the seed keeps 1 − α).
+const COST_EWMA_ALPHA: f64 = 0.2;
+
+/// Runtime admission state shared between `submit_with` (charge +
+/// project) and the replica workers (release + observe).  All state is
+/// atomics: nothing here is ever held across an intake lock
+/// (DESIGN.md §12 lock-order note).
+pub struct Admission {
+    /// Per-replica batch-cost estimate, f64 seconds in atomic bits.
+    cost_bits: Vec<AtomicU64>,
+    /// Occupancy table, `shard * tenants + (tenant % tenants)`.
+    held: Vec<AtomicUsize>,
+    tenants: u32,
+    /// Max queue slots one tenant may hold per shard.
+    quota: usize,
+    slack: f64,
+}
+
+impl Admission {
+    /// Validate `cfg` against the pool shape and build the runtime
+    /// state.  `batch_cost` must be empty or one entry per replica.
+    pub fn new(cfg: &AdmissionCfg, replicas: usize, queue_cap: usize) -> Result<Self> {
+        ensure!(cfg.tenants >= 1, "admission needs at least one tenant bucket");
+        ensure!(
+            cfg.slack.is_finite() && cfg.slack > 0.0,
+            "admission slack must be finite and positive, got {}",
+            cfg.slack
+        );
+        ensure!(
+            cfg.batch_cost.is_empty() || cfg.batch_cost.len() == replicas,
+            "admission batch_cost has {} entries for {} replicas (want 0 or {})",
+            cfg.batch_cost.len(),
+            replicas,
+            replicas
+        );
+        let cost_bits = (0..replicas)
+            .map(|r| {
+                let s = cfg.batch_cost.get(r).map_or(0.0, |d| d.as_secs_f64());
+                AtomicU64::new(s.to_bits())
+            })
+            .collect();
+        let tenants = cfg.tenants;
+        let quota = if tenants <= 1 {
+            usize::MAX // single tenant: the queue cap is the only bound
+        } else {
+            (queue_cap.div_ceil(tenants as usize)).max(1)
+        };
+        let held = (0..replicas * tenants as usize).map(|_| AtomicUsize::new(0)).collect();
+        Ok(Admission { cost_bits, held, tenants, quota, slack: cfg.slack })
+    }
+
+    /// Current batch-cost estimate for replica `r`, seconds.
+    pub fn batch_cost_s(&self, r: usize) -> f64 {
+        f64::from_bits(self.cost_bits[r].load(Ordering::Relaxed))
+    }
+
+    /// Fold one observed batch wall time into replica `r`'s estimate
+    /// (EWMA; a zero/unseeded estimate adopts the first observation).
+    pub fn observe_batch_cost(&self, r: usize, dt_s: f64) {
+        if !dt_s.is_finite() || dt_s <= 0.0 {
+            return;
+        }
+        let cell = &self.cost_bits[r];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let old = f64::from_bits(cur);
+            let new = if old <= 0.0 {
+                dt_s
+            } else {
+                (1.0 - COST_EWMA_ALPHA) * old + COST_EWMA_ALPHA * dt_s
+            };
+            match cell.compare_exchange_weak(
+                cur,
+                new.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Projected queue delay for a request landing on `shard` at queue
+    /// depth `depth`: full batches ahead of it, plus the batch it
+    /// joins, each at the shard's estimated cost, times the safety
+    /// slack (DESIGN.md §12).
+    pub fn projected_delay(&self, shard: usize, depth: usize, max_batch: usize) -> Duration {
+        let batches = (depth / max_batch.max(1)) as f64 + 1.0;
+        let s = batches * self.batch_cost_s(shard) * self.slack;
+        if s.is_finite() && s >= 0.0 {
+            Duration::try_from_secs_f64(s).unwrap_or(Duration::MAX)
+        } else {
+            Duration::MAX
+        }
+    }
+
+    /// Charge one queue slot of `shard` to `tenant`.  Fails with the
+    /// observed `(held, quota)` when the tenant is at its per-shard
+    /// quota.
+    pub fn try_charge(&self, shard: usize, tenant: u32) -> std::result::Result<(), (usize, usize)> {
+        if self.quota == usize::MAX {
+            return Ok(());
+        }
+        let cell = &self.held[self.slot(shard, tenant)];
+        let quota = self.quota;
+        cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |h| {
+            if h < quota {
+                Some(h + 1)
+            } else {
+                None
+            }
+        })
+        .map(|_| ())
+        .map_err(|h| (h, quota))
+    }
+
+    /// Release the slot charged by [`try_charge`]; `shard ==
+    /// Item::TENANT_UNCHARGED` (or a single-tenant pool) is a no-op.
+    ///
+    /// [`try_charge`]: Admission::try_charge
+    pub fn release(&self, shard: u32, tenant: u32) {
+        if self.quota == usize::MAX || shard == u32::MAX {
+            return;
+        }
+        let cell = &self.held[self.slot(shard as usize, tenant)];
+        let _ = cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |h| h.checked_sub(1));
+    }
+
+    /// Per-shard per-tenant quota (diagnostics; `usize::MAX` when fair
+    /// queuing is off).
+    pub fn quota(&self) -> usize {
+        self.quota
+    }
+
+    fn slot(&self, shard: usize, tenant: u32) -> usize {
+        shard * self.tenants as usize + (tenant % self.tenants) as usize
+    }
+}
+
+/// PI controller configuration for closed-loop escalation-margin
+/// tuning (`PoolConfig::escalation`, DESIGN.md §12).  Requires a
+/// controller-tunable router (`escalate:auto`).
+#[derive(Clone, Debug)]
+pub struct EscalationController {
+    /// Target escalation rate: fraction of first-run decisions that
+    /// escalate, in (0, 1).
+    pub budget: f64,
+    /// Proportional gain, margin units per unit rate error.
+    pub kp: f64,
+    /// Integral gain, margin units per unit rate error per second.
+    pub ki: f64,
+    /// Controller period — also the width of the sliding metrics
+    /// window the rate is measured over.
+    pub interval: Duration,
+    /// Clamp on the tuned margin, `(min, max)`.  Must be finite: an
+    /// infinite bound would let the integrator push the margin to a
+    /// value `Escalate` can never act on (every margin compares below
+    /// `inf`), so `validate()` rejects it.
+    pub bounds: (f32, f32),
+    /// Minimum first-run decisions in a window before updating — the
+    /// rate estimate over fewer samples is mostly noise.
+    pub min_samples: u64,
+}
+
+impl EscalationController {
+    /// Default gains for a given budget: fast enough to converge
+    /// within a ~1 s bench window, damped enough not to oscillate
+    /// around the margin distribution's steep quantiles.
+    pub fn with_budget(budget: f64) -> Self {
+        EscalationController {
+            budget,
+            kp: 0.4,
+            ki: 4.0,
+            interval: Duration::from_millis(5),
+            bounds: (0.0, 4.0),
+            min_samples: 8,
+        }
+    }
+
+    /// Reject configurations the loop cannot safely run with.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.budget.is_finite() && self.budget > 0.0 && self.budget < 1.0,
+            "escalation budget must be in (0, 1), got {}",
+            self.budget
+        );
+        ensure!(
+            self.kp.is_finite() && self.kp >= 0.0 && self.ki.is_finite() && self.ki >= 0.0,
+            "controller gains must be finite and >= 0, got kp={} ki={}",
+            self.kp,
+            self.ki
+        );
+        ensure!(self.kp > 0.0 || self.ki > 0.0, "controller needs a non-zero gain");
+        let (lo, hi) = self.bounds;
+        ensure!(
+            lo.is_finite() && hi.is_finite(),
+            "margin bounds must be finite (an inf margin can never trigger an escalation), \
+             got ({lo}, {hi})"
+        );
+        ensure!(
+            lo >= 0.0 && lo < hi,
+            "margin bounds must satisfy 0 <= min < max, got ({lo}, {hi})"
+        );
+        ensure!(
+            self.interval > Duration::ZERO && self.interval <= Duration::from_secs(1),
+            "controller interval must be in (0, 1s], got {:?}",
+            self.interval
+        );
+        ensure!(self.min_samples >= 1, "controller needs min_samples >= 1");
+        Ok(())
+    }
+}
+
+/// Background PI loop: every `interval`, measure the escalation rate
+/// from the `Metrics` counter deltas and nudge the shared margin knob
+/// toward the budget.  Runs until `stop` is set (the server joins it
+/// at shutdown).
+pub(crate) fn run_margin_controller(
+    ctl: EscalationController,
+    knob: Arc<MarginKnob>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut last_esc = metrics.escalations.load(Ordering::Relaxed);
+    let mut last_first = metrics.first_runs.load(Ordering::Relaxed);
+    let mut window_s = 0.0f64;
+    let mut prev_err = 0.0f64;
+    let dt = ctl.interval.as_secs_f64();
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(ctl.interval);
+        let esc = metrics.escalations.load(Ordering::Relaxed);
+        let first = metrics.first_runs.load(Ordering::Relaxed);
+        window_s += dt;
+        // the window stays open (and keeps accumulating dt) until it
+        // holds enough first-run decisions for a meaningful rate
+        if first.saturating_sub(last_first) < ctl.min_samples {
+            continue;
+        }
+        let rate = esc.saturating_sub(last_esc) as f64 / first.saturating_sub(last_first) as f64;
+        (last_esc, last_first) = (esc, first);
+        // err > 0: escalating below budget — raise the margin so more
+        // replies qualify; err < 0: over budget — tighten it
+        let err = ctl.budget - rate;
+        let m = knob.get() as f64 + ctl.kp * (err - prev_err) + ctl.ki * err * window_s;
+        prev_err = err;
+        window_s = 0.0;
+        knob.set(m.clamp(ctl.bounds.0 as f64, ctl.bounds.1 as f64) as f32);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adm(tenants: u32, cap: usize) -> Admission {
+        let cfg = AdmissionCfg { tenants, ..AdmissionCfg::default() };
+        Admission::new(&cfg, 4, cap).unwrap()
+    }
+
+    #[test]
+    fn projection_counts_batches_ahead_times_cost() {
+        let cfg = AdmissionCfg {
+            batch_cost: vec![Duration::from_millis(10); 2],
+            ..AdmissionCfg::default()
+        };
+        let a = Admission::new(&cfg, 2, 64).unwrap();
+        // empty queue: just the batch this request joins
+        assert_eq!(a.projected_delay(0, 0, 8), Duration::from_millis(10));
+        // 17 queued at max_batch 8 → 2 full batches ahead + own = 3
+        assert_eq!(a.projected_delay(0, 17, 8), Duration::from_millis(30));
+        // unseeded estimate would project 0 — admits optimistically
+        let b = adm(1, 64);
+        assert_eq!(b.projected_delay(0, 100, 8), Duration::ZERO);
+    }
+
+    #[test]
+    fn slack_scales_the_projection() {
+        let cfg = AdmissionCfg {
+            batch_cost: vec![Duration::from_millis(10)],
+            slack: 2.0,
+            ..AdmissionCfg::default()
+        };
+        let a = Admission::new(&cfg, 1, 64).unwrap();
+        assert_eq!(a.projected_delay(0, 0, 8), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn ewma_adopts_then_blends_observations() {
+        let a = adm(1, 64);
+        assert_eq!(a.batch_cost_s(0), 0.0);
+        a.observe_batch_cost(0, 0.010); // unseeded: adopt
+        assert!((a.batch_cost_s(0) - 0.010).abs() < 1e-12);
+        a.observe_batch_cost(0, 0.020); // blend: 0.8·10ms + 0.2·20ms
+        assert!((a.batch_cost_s(0) - 0.012).abs() < 1e-12);
+        a.observe_batch_cost(0, f64::NAN); // garbage ignored
+        a.observe_batch_cost(0, -1.0);
+        assert!((a.batch_cost_s(0) - 0.012).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tenant_quota_charges_and_releases_per_shard() {
+        // cap 8 over 2 tenants → quota 4 per shard
+        let a = adm(2, 8);
+        assert_eq!(a.quota(), 4);
+        for _ in 0..4 {
+            a.try_charge(0, 7).unwrap(); // tenant 7 → bucket 1
+        }
+        assert_eq!(a.try_charge(0, 7), Err((4, 4)));
+        // other bucket and other shards are unaffected
+        a.try_charge(0, 2).unwrap();
+        a.try_charge(1, 7).unwrap();
+        // release frees exactly one slot
+        a.release(0, 7);
+        a.try_charge(0, 7).unwrap();
+        assert_eq!(a.try_charge(0, 7), Err((4, 4)));
+        // sentinel / over-release are no-ops
+        a.release(u32::MAX, 7);
+        for _ in 0..20 {
+            a.release(1, 2); // never charged: saturates at zero
+        }
+        a.try_charge(1, 2).unwrap();
+    }
+
+    #[test]
+    fn single_tenant_pool_never_throttles() {
+        let a = adm(1, 2);
+        for _ in 0..100 {
+            a.try_charge(0, 0).unwrap();
+        }
+    }
+
+    #[test]
+    fn admission_cfg_validation_is_descriptive() {
+        let bad = AdmissionCfg { tenants: 0, ..AdmissionCfg::default() };
+        let e = Admission::new(&bad, 2, 8).unwrap_err().to_string();
+        assert!(e.contains("tenant"), "got: {e}");
+
+        let bad = AdmissionCfg { slack: f64::INFINITY, ..AdmissionCfg::default() };
+        let e = Admission::new(&bad, 2, 8).unwrap_err().to_string();
+        assert!(e.contains("slack"), "got: {e}");
+
+        let bad = AdmissionCfg {
+            batch_cost: vec![Duration::from_millis(1); 3],
+            ..AdmissionCfg::default()
+        };
+        let e = Admission::new(&bad, 2, 8).unwrap_err().to_string();
+        assert!(e.contains("batch_cost") && e.contains("2 replicas"), "got: {e}");
+    }
+
+    #[test]
+    fn controller_validation_rejects_inf_bounds_and_bad_budgets() {
+        assert!(EscalationController::with_budget(0.25).validate().is_ok());
+
+        // the satellite: a margin of inf smuggled in via controller
+        // bounds must be rejected with a descriptive error
+        let mut c = EscalationController::with_budget(0.25);
+        c.bounds = (0.0, f32::INFINITY);
+        let e = c.validate().unwrap_err().to_string();
+        assert!(e.contains("finite"), "got: {e}");
+
+        let mut c = EscalationController::with_budget(0.25);
+        c.bounds = (2.0, 1.0);
+        let e = c.validate().unwrap_err().to_string();
+        assert!(e.contains("min < max"), "got: {e}");
+
+        for bad in [0.0, 1.0, -0.5, f64::NAN] {
+            let e = EscalationController::with_budget(bad).validate().unwrap_err().to_string();
+            assert!(e.contains("budget"), "budget {bad}: {e}");
+        }
+
+        let mut c = EscalationController::with_budget(0.25);
+        c.ki = f64::NAN;
+        assert!(c.validate().unwrap_err().to_string().contains("gain"));
+
+        let mut c = EscalationController::with_budget(0.25);
+        c.interval = Duration::ZERO;
+        assert!(c.validate().unwrap_err().to_string().contains("interval"));
+    }
+
+    #[test]
+    fn reject_displays_are_descriptive() {
+        let s = Reject::QueueFull { shard: 3, depth: 8, cap: 8 }.to_string();
+        assert!(s.contains("queue full") && s.contains("shard 3"), "got: {s}");
+        let s = Reject::DeadlineInfeasible {
+            projected: Duration::from_millis(80),
+            deadline: Duration::from_millis(20),
+        }
+        .to_string();
+        assert!(s.contains("infeasible") && s.contains("80.000ms"), "got: {s}");
+        let s = Reject::TenantThrottled { tenant: 9, shard: 1, held: 4, quota: 4 }.to_string();
+        assert!(s.contains("tenant 9") && s.contains("4/4"), "got: {s}");
+        let s = Reject::InvalidPayload { got: 3, want: 128 }.to_string();
+        assert!(s.contains("3 elements") && s.contains("128"), "got: {s}");
+    }
+}

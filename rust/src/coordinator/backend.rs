@@ -177,6 +177,34 @@ impl SimBackendCfg {
             fail_on: None,
         }
     }
+
+    /// Projected wall cost of one batch at precision `p`: the §3
+    /// cycle-accurate simulator's latency for this layer stack at
+    /// `(p.wbits, p.abits)`, scaled by `time_scale` — the same per-batch
+    /// cycle estimate the §7 cost table is built from, here feeding the
+    /// §12 admission layer's queue-delay projection.  Runs only the
+    /// simulator (no scorer weights), so probing a pool mix is cheap.
+    pub fn projected_batch_cost(&self, p: ReplicaPrecision) -> Result<Duration> {
+        let pw = Prec::from_bits(p.wbits)
+            .ok_or_else(|| anyhow!("batch cost: wbits must be 2/4/8, got {}", p.wbits))?;
+        let pa = Prec::from_bits(p.abits)
+            .ok_or_else(|| anyhow!("batch cost: abits must be 2/4/8, got {}", p.abits))?;
+        ensure!(!self.layers.is_empty(), "batch cost: empty layer stack");
+        ensure!(
+            self.time_scale.is_finite() && self.time_scale >= 0.0,
+            "batch cost: time_scale must be finite and >= 0"
+        );
+        let mut sim = Simulator::new(HwConfig::zcu102(), self.layers.clone(), self.batch.max(1));
+        let assign = vec![(pw, pa); sim.layers.len()];
+        Ok(Duration::from_secs_f64(sim.run(&assign).latency_s * self.time_scale))
+    }
+
+    /// Per-replica batch-cost projections for a pool mix — the seed for
+    /// `AdmissionCfg::batch_cost` (replica `i` at `mix[i]`'s precision,
+    /// matching [`SimBackend::mixed_factory`]'s assignment).
+    pub fn projected_batch_costs(&self, mix: &[ReplicaPrecision]) -> Result<Vec<Duration>> {
+        mix.iter().map(|&p| self.projected_batch_cost(p)).collect()
+    }
 }
 
 /// Deterministic simulator-costed backend (DESIGN.md §9): latency from
@@ -389,6 +417,25 @@ mod tests {
         let mut rng = Rng::new(3);
         let x = Tensor::new(vec![4, 64], rng.normal_vec(4 * 64)).unwrap();
         assert_eq!(r0.forward(x.clone()).unwrap(), r2.forward(x).unwrap());
+    }
+
+    #[test]
+    fn projected_batch_cost_matches_the_backend_and_orders_tiers() {
+        let mut cfg = SimBackendCfg::tiny(1);
+        cfg.time_scale = 1.5;
+        // the projection is exactly what a built backend would cost…
+        let built = SimBackend::new(cfg.clone()).unwrap().batch_cost();
+        let projected = cfg
+            .projected_batch_cost(ReplicaPrecision::new(cfg.wbits, cfg.abits))
+            .unwrap();
+        assert_eq!(projected, built);
+        // …and a mix projects per replica, faster tiers costing less
+        let mix = vec![ReplicaPrecision::uniform(4), ReplicaPrecision::uniform(8)];
+        let costs = cfg.projected_batch_costs(&mix).unwrap();
+        assert_eq!(costs.len(), 2);
+        assert!(costs[0] < costs[1], "{costs:?}");
+        // bad bits are a descriptive Err, mirroring SimBackend::new
+        assert!(cfg.projected_batch_cost(ReplicaPrecision::uniform(3)).is_err());
     }
 
     #[test]

@@ -95,12 +95,38 @@ pub struct Item<T, R> {
     /// Set by `pop_batch` when the item was taken from a sibling's
     /// tail — feeds the per-replica `stolen` counter.
     pub stolen: bool,
+    /// Absolute SLA deadline stamped by admission
+    /// (`Server::submit_with`, DESIGN.md §12).  An item that expires
+    /// while queued is answered `Err` at assembly time and counted in
+    /// `deadline_drops` — never executed.  `None` = no SLA.
+    pub deadline: Option<Instant>,
+    /// Tenant id for fair-queue accounting (DESIGN.md §12); `0` is the
+    /// default tenant.
+    pub tenant: u32,
+    /// Shard whose per-tenant occupancy slot this item holds
+    /// ([`Item::TENANT_UNCHARGED`] = none).  Charged by admission at
+    /// submit, released by the worker the moment the item leaves the
+    /// queue; the sentinel keeps escalation re-pushes from releasing
+    /// twice.
+    pub tenant_shard: u32,
 }
 
 impl<T, R> Item<T, R> {
-    /// An untagged item (stealable by anyone, first run).
+    /// `tenant_shard` sentinel: this item holds no occupancy slot.
+    pub const TENANT_UNCHARGED: u32 = u32::MAX;
+
+    /// An untagged item (stealable by anyone, first run, no SLA, the
+    /// default tenant, no occupancy charge).
     pub fn new(req: Request<T, R>) -> Self {
-        Item { req, min_bits: 0, escalated: false, stolen: false }
+        Item {
+            req,
+            min_bits: 0,
+            escalated: false,
+            stolen: false,
+            deadline: None,
+            tenant: 0,
+            tenant_shard: Self::TENANT_UNCHARGED,
+        }
     }
 }
 
@@ -110,6 +136,25 @@ pub enum Assembled<T, R> {
     Batch(Vec<Item<T, R>>),
     /// Intake closed and fully drained — worker should exit.
     Closed,
+}
+
+/// Why [`IntakeQueue::try_push`] refused an item — the item always
+/// comes back so the caller can answer its reply channel (the
+/// no-dead-`Receiver` contract, DESIGN.md §12).
+pub enum PushRefused<T, R> {
+    /// The shard is at capacity; a blocking `push` would have waited.
+    Full(Item<T, R>),
+    /// The intake is closed.
+    Closed(Item<T, R>),
+}
+
+impl<T, R> PushRefused<T, R> {
+    /// Recover the refused item regardless of reason.
+    pub fn into_item(self) -> Item<T, R> {
+        match self {
+            PushRefused::Full(it) | PushRefused::Closed(it) => it,
+        }
+    }
 }
 
 /// The intake contract shared by [`ShardedIntake`] and the pre-§11
@@ -126,12 +171,22 @@ pub trait IntakeQueue<T, R>: Send + Sync {
     fn push(&self, shard: usize, item: Item<T, R>)
             -> std::result::Result<(), Item<T, R>>;
 
+    /// Non-blocking push: refuse with [`PushRefused::Full`] when the
+    /// shard is at capacity instead of waiting — the admission layer's
+    /// reject-don't-block primitive (DESIGN.md §12).
+    fn try_push(&self, shard: usize, item: Item<T, R>)
+                -> std::result::Result<(), PushRefused<T, R>>;
+
     /// Stop accepting pushes; replicas drain what is queued and then
     /// see [`Assembled::Closed`].
     fn close(&self);
 
     /// Items currently queued across all shards (diagnostics).
     fn len(&self) -> usize;
+
+    /// Current depth of one shard — admission's live load signal for
+    /// the queue-delay projection (DESIGN.md §12).
+    fn shard_len(&self, shard: usize) -> usize;
 
     fn is_empty(&self) -> bool {
         self.len() == 0
@@ -287,6 +342,32 @@ impl<T, R> ShardedIntake<T, R> {
         Ok(())
     }
 
+    /// Non-blocking push (DESIGN.md §12): same commit path as [`push`]
+    /// (board update + epoch bump inside the critical section, one
+    /// bell rung after), but a full shard refuses immediately instead
+    /// of waiting on `not_full`.
+    ///
+    /// [`push`]: ShardedIntake::push
+    pub fn try_push(&self, shard: usize, item: Item<T, R>)
+                    -> std::result::Result<(), PushRefused<T, R>> {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        let slot = &self.shards[shard];
+        let mut g = lock(&slot.state);
+        if g.closed {
+            return Err(PushRefused::Closed(item));
+        }
+        if g.q.len() >= self.cap {
+            return Err(PushRefused::Full(item));
+        }
+        let bits = item.min_bits;
+        g.q.push_back(item);
+        self.board_update(shard, &g.q);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        drop(g);
+        self.ring_one_bell(shard, bits);
+        Ok(())
+    }
+
     /// Stop accepting pushes; replicas drain what is queued and then see
     /// [`Assembled::Closed`].
     pub fn close(&self) {
@@ -314,6 +395,12 @@ impl<T, R> ShardedIntake<T, R> {
     /// read instead of n queue locks).
     pub fn len(&self) -> usize {
         lock(&self.board).heap.total() as usize
+    }
+
+    /// One shard's depth off the load board (one lock, no queue walk).
+    pub fn shard_len(&self, shard: usize) -> usize {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        lock(&self.board).heap.key(shard) as usize
     }
 
     pub fn is_empty(&self) -> bool {
@@ -578,12 +665,21 @@ impl<T: Send, R: Send> IntakeQueue<T, R> for ShardedIntake<T, R> {
         ShardedIntake::push(self, shard, item)
     }
 
+    fn try_push(&self, shard: usize, item: Item<T, R>)
+                -> std::result::Result<(), PushRefused<T, R>> {
+        ShardedIntake::try_push(self, shard, item)
+    }
+
     fn close(&self) {
         ShardedIntake::close(self)
     }
 
     fn len(&self) -> usize {
         ShardedIntake::len(self)
+    }
+
+    fn shard_len(&self, shard: usize) -> usize {
+        ShardedIntake::shard_len(self, shard)
     }
 
     fn pop_batch(&self, shard: usize, policy: Policy) -> Assembled<T, R> {
@@ -652,6 +748,25 @@ impl<T, R> CoarseIntake<T, R> {
         }
     }
 
+    /// Non-blocking push: same single-lock body as [`push`], refusing
+    /// a full shard instead of waiting.
+    ///
+    /// [`push`]: CoarseIntake::push
+    pub fn try_push(&self, shard: usize, item: Item<T, R>)
+                    -> std::result::Result<(), PushRefused<T, R>> {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        let mut g = lock(&self.state);
+        if g.closed {
+            return Err(PushRefused::Closed(item));
+        }
+        if g.queues[shard].len() >= self.cap {
+            return Err(PushRefused::Full(item));
+        }
+        g.queues[shard].push_back(item);
+        self.cv.notify_all();
+        Ok(())
+    }
+
     pub fn close(&self) {
         lock(&self.state).closed = true;
         self.cv.notify_all();
@@ -659,6 +774,12 @@ impl<T, R> CoarseIntake<T, R> {
 
     pub fn len(&self) -> usize {
         lock(&self.state).queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// One shard's depth.
+    pub fn shard_len(&self, shard: usize) -> usize {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        lock(&self.state).queues[shard].len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -747,12 +868,21 @@ impl<T: Send, R: Send> IntakeQueue<T, R> for CoarseIntake<T, R> {
         CoarseIntake::push(self, shard, item)
     }
 
+    fn try_push(&self, shard: usize, item: Item<T, R>)
+                -> std::result::Result<(), PushRefused<T, R>> {
+        CoarseIntake::try_push(self, shard, item)
+    }
+
     fn close(&self) {
         CoarseIntake::close(self)
     }
 
     fn len(&self) -> usize {
         CoarseIntake::len(self)
+    }
+
+    fn shard_len(&self, shard: usize) -> usize {
+        CoarseIntake::shard_len(self, shard)
     }
 
     fn pop_batch(&self, shard: usize, policy: Policy) -> Assembled<T, R> {
@@ -999,6 +1129,58 @@ mod tests {
                         _ => panic!("expected batch"),
                     }
                     assert!(pusher.join().unwrap(), "blocked pusher must complete");
+                }
+
+                #[test]
+                fn try_push_refuses_full_and_closed_with_the_item_back() {
+                    let q = single(2);
+                    assert!(q.try_push(0, item(0)).is_ok());
+                    assert!(q.try_push(0, item(1)).is_ok());
+                    // full: refused without blocking, item recoverable
+                    match q.try_push(0, item(2)) {
+                        Err(PushRefused::Full(it)) => assert_eq!(it.req.payload, 2),
+                        _ => panic!("expected Full refusal"),
+                    }
+                    assert_eq!(q.shard_len(0), 2);
+                    q.close();
+                    match q.try_push(0, item(3)) {
+                        Err(PushRefused::Closed(it)) => assert_eq!(it.req.payload, 3),
+                        _ => panic!("expected Closed refusal"),
+                    }
+                    // the accepted items still drain
+                    let policy = Policy { max_batch: 4, max_wait: Duration::from_millis(1) };
+                    match q.pop_batch(0, policy) {
+                        Assembled::Batch(b) => assert_eq!(payloads(&b), vec![0, 1]),
+                        _ => panic!("expected drain batch"),
+                    }
+                }
+
+                #[test]
+                fn try_push_wakes_a_parked_popper_like_push() {
+                    let q = Arc::new(single(4));
+                    let q2 = Arc::clone(&q);
+                    let popper = thread::spawn(move || {
+                        match q2.pop_batch(0, Policy { max_batch: 1, max_wait: Duration::ZERO }) {
+                            Assembled::Batch(b) => b[0].req.payload,
+                            _ => panic!("expected batch"),
+                        }
+                    });
+                    thread::sleep(Duration::from_millis(20)); // let it park
+                    q.try_push(0, item(5)).ok().unwrap();
+                    assert_eq!(popper.join().unwrap(), 5);
+                }
+
+                #[test]
+                fn shard_len_tracks_per_shard_depth() {
+                    let q = $I::new(64, vec![8, 8], true);
+                    q.push(0, item(1)).ok().unwrap();
+                    q.push(0, item(2)).ok().unwrap();
+                    q.push(1, item(3)).ok().unwrap();
+                    assert_eq!(q.shard_len(0), 2);
+                    assert_eq!(q.shard_len(1), 1);
+                    let policy = Policy { max_batch: 1, max_wait: Duration::from_millis(1) };
+                    assert!(matches!(q.pop_batch(0, policy), Assembled::Batch(_)));
+                    assert_eq!(q.shard_len(0), 1);
                 }
 
                 #[test]

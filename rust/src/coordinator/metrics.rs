@@ -4,11 +4,13 @@
 //! counters of the heterogeneous pool (DESIGN.md §10).
 //!
 //! Accounting invariant (asserted by the coordinator e2e tests): every
-//! request the server accepted ends in exactly one of three buckets —
+//! request the server accepted ends in exactly one of four buckets —
 //! `requests` (answered from a successful batch), `failed_requests`
 //! (slot in a batch whose execution failed; the client got an `Err`
-//! reply), or `rejected` (invalid payload answered `Err` before
-//! execution) — so `requests + failed_requests + rejected` equals the
+//! reply), `rejected` (invalid payload or admission refusal, answered
+//! `Err`/typed `Reject` before execution), or `deadline_drops` (SLA
+//! expired in the queue; `Err` reply at assembly, DESIGN.md §12) — so
+//! `requests + failed_requests + rejected + deadline_drops` equals the
 //! number of submitted requests once the queue drains.  An escalated
 //! request (DESIGN.md §10) executes twice but is *answered* once: its
 //! first run counts in the fast replica's `batches` only (never
@@ -37,6 +39,9 @@ pub struct ReplicaCounters {
     /// Escalation re-runs this replica *initiated* (low-margin replies
     /// it handed to the accurate tier instead of answering).
     pub escalations: AtomicU64,
+    /// Requests this replica dropped at assembly because their SLA
+    /// deadline expired in the queue (DESIGN.md §12).
+    pub deadline_drops: AtomicU64,
 }
 
 /// Shared, thread-safe metrics sink for the coordinator.
@@ -58,6 +63,14 @@ pub struct Metrics {
     /// Counted when the hand-off lands in the target queue, so this is
     /// exactly the number of second executions the pool performed.
     pub escalations: AtomicU64,
+    /// Requests whose SLA deadline expired while queued: answered `Err`
+    /// at assembly, never executed (DESIGN.md §12).
+    pub deadline_drops: AtomicU64,
+    /// First-run decisions: requests that reached a verdict on their
+    /// first execution (answered or escalated) in a successful batch.
+    /// `escalations / first_runs` over a window is the escalation rate
+    /// the §12 PI controller steers.
+    pub first_runs: AtomicU64,
     /// Gauge: requests accepted into the intake queue and not yet
     /// pulled into a batch by a replica.  Maintained by
     /// `queue_push`/`queue_pop`; returns to 0 once the pool drains.
@@ -82,6 +95,7 @@ pub struct ReplicaSnapshot {
     pub routed: u64,
     pub stolen: u64,
     pub escalations: u64,
+    pub deadline_drops: u64,
 }
 
 /// Immutable snapshot for reporting.
@@ -94,6 +108,8 @@ pub struct Snapshot {
     pub failed_requests: u64,
     pub rejected: u64,
     pub escalations: u64,
+    pub deadline_drops: u64,
+    pub first_runs: u64,
     pub queue_depth: u64,
     pub per_replica: Vec<ReplicaSnapshot>,
     pub mean_batch: f64,
@@ -114,8 +130,9 @@ impl Snapshot {
             let p = precisions.get(i).copied().unwrap_or_default();
             out.push_str(&format!(
                 "  replica {i} ({p}): {} routed, {} batches, {} requests, \
-                 {} stolen, {} escalated-away, {} errors\n",
-                r.routed, r.batches, r.requests, r.stolen, r.escalations, r.errors
+                 {} stolen, {} escalated-away, {} deadline-dropped, {} errors\n",
+                r.routed, r.batches, r.requests, r.stolen, r.escalations,
+                r.deadline_drops, r.errors
             ));
         }
         out
@@ -133,6 +150,8 @@ impl Metrics {
             failed_requests: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             escalations: AtomicU64::new(0),
+            deadline_drops: AtomicU64::new(0),
+            first_runs: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             per_replica: (0..replicas.max(1)).map(|_| ReplicaCounters::default()).collect(),
             latencies_s: Mutex::new(Vec::new()),
@@ -205,9 +224,26 @@ impl Metrics {
         lock(&self.latencies_s).push(latency_s);
     }
 
-    /// A request answered `Err` before execution (invalid payload).
+    /// A request answered `Err` before execution (invalid payload) or
+    /// refused by admission with a typed `Reject` (DESIGN.md §12).
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `replica` dropped `n` queue-expired requests at assembly (each
+    /// got an `Err` reply; none executed).
+    pub fn record_deadline_drops(&self, replica: usize, n: usize) {
+        self.deadline_drops.fetch_add(n as u64, Ordering::Relaxed);
+        if let Some(r) = self.per_replica.get(replica) {
+            r.deadline_drops.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// `n` requests reached their first-run verdict (answered or
+    /// escalated) in a successful batch — the denominator of the §12
+    /// controller's escalation rate.
+    pub fn record_first_decisions(&self, n: usize) {
+        self.first_runs.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     /// One request accepted into the intake queue.
@@ -250,6 +286,8 @@ impl Metrics {
             failed_requests: self.failed_requests.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             escalations: self.escalations.load(Ordering::Relaxed),
+            deadline_drops: self.deadline_drops.load(Ordering::Relaxed),
+            first_runs: self.first_runs.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             per_replica: self
                 .per_replica
@@ -261,6 +299,7 @@ impl Metrics {
                     routed: r.routed.load(Ordering::Relaxed),
                     stolen: r.stolen.load(Ordering::Relaxed),
                     escalations: r.escalations.load(Ordering::Relaxed),
+                    deadline_drops: r.deadline_drops.load(Ordering::Relaxed),
                 })
                 .collect(),
             mean_batch: if sizes.is_empty() {
@@ -409,6 +448,30 @@ mod tests {
         m.record_stolen(9, 1);
         m.record_escalated(9, 1);
         assert_eq!(m.snapshot(1.0).escalations, 1);
+    }
+
+    #[test]
+    fn deadline_drops_and_first_runs_count() {
+        let m = Metrics::new(2);
+        // 4-request batch: 1 answered, 3 escalated — 4 first decisions
+        m.record_batch_answered(0, 4, 1, 0.010, 0);
+        m.record_escalated(0, 3);
+        m.record_first_decisions(4);
+        // of the 3 re-runs, 2 answer and 1 expires in the queue
+        m.record_batch_answered(1, 2, 2, 0.020, 0);
+        m.record_deadline_drops(1, 1);
+        let s = m.snapshot(1.0);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.deadline_drops, 1);
+        assert_eq!(s.first_runs, 4);
+        assert_eq!(s.per_replica[1].deadline_drops, 1);
+        assert_eq!(s.per_replica[0].deadline_drops, 0);
+        // the §12 invariant over this little history: 4 submitted =
+        // 3 answered + 0 failed + 0 rejected + 1 deadline-dropped
+        assert_eq!(s.requests + s.failed_requests + s.rejected + s.deadline_drops, 4);
+        // phantom replica ids stay safe
+        m.record_deadline_drops(9, 2);
+        assert_eq!(m.snapshot(1.0).deadline_drops, 3);
     }
 
     #[test]

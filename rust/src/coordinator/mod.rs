@@ -14,7 +14,11 @@
 //! Replicas may differ in precision ([`ReplicaPrecision`]): a pool of
 //! fast DyBit-4 replicas plus one 8-bit accurate replica recovers the
 //! paper's Fig. 6 accuracy/latency trade-off at *serving* time
-//! (DESIGN.md §10).  Module map:
+//! (DESIGN.md §10).  Under overload, [`Server::submit_with`] refuses
+//! work with typed [`Reject`]s instead of blocking — SLA-projected
+//! admission, per-tenant fair queuing, and a PI controller that tunes
+//! the escalation margin onto a rate budget (DESIGN.md §12).  Module
+//! map:
 //!
 //! | module | role | DESIGN.md |
 //! |---|---|---|
@@ -23,6 +27,7 @@
 //! | [`backend`] | pluggable execution (`PjrtBackend`, `SimBackend`) | §9 |
 //! | [`server`] | pool lifecycle, readiness, escalation plumbing | §9–§10 |
 //! | [`metrics`] | counters, gauges, latency percentiles | §9–§10 |
+//! | [`admission`] | SLA admission, tenant fair queuing, PI margin tuning | §12 |
 //!
 //! A minimal artifact-free pool (doc-tested; see [`Server::start_pool`]
 //! for the heterogeneous version):
@@ -41,15 +46,20 @@
 //! assert_eq!(snap.queue_depth, 0);
 //! ```
 
+pub mod admission;
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
+pub use admission::{Admission, AdmissionCfg, EscalationController, Reject, SubmitOpts};
 pub use backend::{BackendFactory, InferenceBackend, PjrtBackend, SimBackend, SimBackendCfg};
-pub use batcher::{Assembled, CoarseIntake, IntakeQueue, Item, Policy, Request, ShardedIntake};
+pub use batcher::{Assembled, CoarseIntake, IntakeQueue, Item, Policy, PushRefused, Request,
+                  ShardedIntake};
 pub use metrics::{Metrics, ReplicaSnapshot, Snapshot};
 pub use router::{parse_precision_mix, resolve_precision_mix, router_from_spec, AccuracyFloor,
-                 Escalate, Fastest, ReplicaPrecision, Router, DEFAULT_ESCALATE_MARGIN};
-pub use server::{load_test, PoolConfig, Server, ServerConfig};
+                 Escalate, Fastest, MarginKnob, ReplicaPrecision, Router,
+                 DEFAULT_ESCALATE_MARGIN};
+pub use server::{load_test, load_test_opts, LoadOpts, LoadReport, PoolConfig, Server,
+                 ServerConfig};

@@ -31,6 +31,7 @@
 //! clock or queue races, so a seeded workload reproduces its per-replica
 //! assignment counts exactly (`rust/tests/coordinator_routing.rs`).
 
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, ensure, Result};
@@ -40,6 +41,30 @@ use crate::util::lock;
 /// Default [`Escalate`] margin threshold: logits gaps under this re-run
 /// on the accurate replica.
 pub const DEFAULT_ESCALATE_MARGIN: f32 = 0.1;
+
+/// Shared escalation-margin knob: an `f32` in atomic bits, so the §12
+/// PI controller (`coordinator::admission`) can retune a live
+/// [`Escalate`] router without a lock on the routing hot path.
+pub struct MarginKnob(AtomicU32);
+
+impl MarginKnob {
+    pub fn new(margin: f32) -> Self {
+        MarginKnob(AtomicU32::new(margin.to_bits()))
+    }
+
+    pub fn get(&self) -> f32 {
+        f32::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Store a new margin; non-finite or negative values are ignored
+    /// (the escalation predicate `margin < knob` must stay meaningful —
+    /// everything compares below `inf`, nothing below `NaN`).
+    pub fn set(&self, margin: f32) {
+        if margin.is_finite() && margin >= 0.0 {
+            self.0.store(margin.to_bits(), Ordering::Relaxed);
+        }
+    }
+}
 
 /// One replica's serving precision: the (weights, activations) bitwidths
 /// its backend quantizes to.  Routing metadata — the backend factory is
@@ -153,6 +178,14 @@ pub trait Router: Send + Sync {
     /// re-runs always reply.
     fn escalate(&self, _served: usize, _margin: f32,
                 _precisions: &[ReplicaPrecision]) -> Option<usize> {
+        None
+    }
+
+    /// The live margin knob of a controller-tunable policy
+    /// (`escalate:auto`, DESIGN.md §12); `None` for fixed policies —
+    /// `PoolConfig::escalation` requires `Some` so a controller can
+    /// never silently tune a router that ignores it.
+    fn margin_knob(&self) -> Option<Arc<MarginKnob>> {
         None
     }
 }
@@ -285,14 +318,44 @@ impl Router for AccuracyFloor {
 /// answers instead.  NaN margins (NaN logits) never escalate — the
 /// backends are deterministic, so a re-run cannot help.
 pub struct Escalate {
-    pub margin: f32,
+    /// Threshold behind a shared knob so the §12 controller can retune
+    /// it live; fixed-margin instances simply never share it.
+    margin: Arc<MarginKnob>,
+    /// Built via [`Escalate::auto_tuned`]: expose the knob through
+    /// [`Router::margin_knob`] for a `PoolConfig::escalation`
+    /// controller.
+    auto: bool,
     wrr: Wrr,
     name: String,
 }
 
 impl Escalate {
+    /// Fixed-margin escalation (the pre-§12 behavior).
     pub fn new(margin: f32) -> Self {
-        Escalate { margin, wrr: Wrr::new(), name: format!("escalate:{margin}") }
+        Escalate {
+            margin: Arc::new(MarginKnob::new(margin)),
+            auto: false,
+            wrr: Wrr::new(),
+            name: format!("escalate:{margin}"),
+        }
+    }
+
+    /// Controller-tunable escalation (`escalate:auto`): starts at
+    /// [`DEFAULT_ESCALATE_MARGIN`] and exposes its knob so a
+    /// `PoolConfig::escalation` PI controller can steer it
+    /// (DESIGN.md §12).
+    pub fn auto_tuned() -> Self {
+        Escalate {
+            margin: Arc::new(MarginKnob::new(DEFAULT_ESCALATE_MARGIN)),
+            auto: true,
+            wrr: Wrr::new(),
+            name: "escalate:auto".to_string(),
+        }
+    }
+
+    /// The current margin threshold.
+    pub fn margin(&self) -> f32 {
+        self.margin.get()
     }
 }
 
@@ -325,8 +388,16 @@ impl Router for Escalate {
             return None; // already served at the accurate tier
         }
         // NaN < margin is false, so NaN margins fall through to None
-        if margin < self.margin {
+        if margin < self.margin.get() {
             Some(target)
+        } else {
+            None
+        }
+    }
+
+    fn margin_knob(&self) -> Option<Arc<MarginKnob>> {
+        if self.auto {
+            Some(Arc::clone(&self.margin))
         } else {
             None
         }
@@ -334,8 +405,9 @@ impl Router for Escalate {
 }
 
 /// Parse a `--router` CLI value: `fastest`, `floor:<bits>` (alias
-/// `accuracy-floor:<bits>`), or `escalate[:<margin>]` (default margin
-/// [`DEFAULT_ESCALATE_MARGIN`]).
+/// `accuracy-floor:<bits>`), `escalate[:<margin>]` (default margin
+/// [`DEFAULT_ESCALATE_MARGIN`]), or `escalate:auto` (controller-tuned
+/// margin for a `PoolConfig::escalation` PI loop, DESIGN.md §12).
 pub fn router_from_spec(spec: &str) -> Result<Arc<dyn Router>> {
     let (head, arg) = match spec.split_once(':') {
         Some((h, a)) => (h, Some(a)),
@@ -355,6 +427,9 @@ pub fn router_from_spec(spec: &str) -> Result<Arc<dyn Router>> {
             Ok(Arc::new(AccuracyFloor::new(bits)))
         }
         "escalate" => {
+            if arg == Some("auto") {
+                return Ok(Arc::new(Escalate::auto_tuned()));
+            }
             let margin: f32 = match arg {
                 Some(a) => a.parse().map_err(|_| anyhow!("bad margin in '{spec}'"))?,
                 None => DEFAULT_ESCALATE_MARGIN,
@@ -362,7 +437,9 @@ pub fn router_from_spec(spec: &str) -> Result<Arc<dyn Router>> {
             ensure!(margin.is_finite() && margin >= 0.0, "margin must be finite and >= 0");
             Ok(Arc::new(Escalate::new(margin)))
         }
-        other => Err(anyhow!("unknown router '{other}' (fastest|floor:<bits>|escalate[:m])")),
+        other => Err(anyhow!(
+            "unknown router '{other}' (fastest|floor:<bits>|escalate[:m]|escalate:auto)"
+        )),
     }
 }
 
@@ -497,6 +574,7 @@ mod tests {
         assert_eq!(router_from_spec("accuracy-floor:4").unwrap().min_bits(), 4);
         assert_eq!(router_from_spec("escalate").unwrap().name(), "escalate:0.1");
         assert_eq!(router_from_spec("escalate:0.25").unwrap().name(), "escalate:0.25");
+        assert_eq!(router_from_spec("escalate:auto").unwrap().name(), "escalate:auto");
         assert!(router_from_spec("bogus").is_err());
         assert!(router_from_spec("floor").is_err());
         assert!(router_from_spec("escalate:nope").is_err());
@@ -555,6 +633,32 @@ mod tests {
         // extra argument where none is allowed
         let e = router_from_spec("fastest:1").unwrap_err().to_string();
         assert!(e.contains("no argument"), "{e}");
+    }
+
+    #[test]
+    fn auto_escalate_exposes_a_live_knob_fixed_does_not() {
+        // only the auto-tuned router hands its margin to a controller
+        assert!(router_from_spec("escalate:auto").unwrap().margin_knob().is_some());
+        assert!(router_from_spec("escalate:0.25").unwrap().margin_knob().is_none());
+        assert!(router_from_spec("escalate").unwrap().margin_knob().is_none());
+        assert!(router_from_spec("fastest").unwrap().margin_knob().is_none());
+
+        // the knob retunes a live escalation decision
+        let r = Escalate::auto_tuned();
+        let knob = r.margin_knob().unwrap();
+        assert_eq!(r.margin(), DEFAULT_ESCALATE_MARGIN);
+        let p = mix(&[(4, 4), (8, 8)]);
+        assert_eq!(r.escalate(0, 0.3, &p), None);
+        knob.set(0.5);
+        assert_eq!(r.escalate(0, 0.3, &p), Some(1));
+        knob.set(0.0);
+        assert_eq!(r.escalate(0, 0.3, &p), None);
+        // garbage stores are ignored, not adopted
+        knob.set(0.25);
+        knob.set(f32::INFINITY);
+        knob.set(f32::NAN);
+        knob.set(-1.0);
+        assert_eq!(knob.get(), 0.25);
     }
 
     #[test]

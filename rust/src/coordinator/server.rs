@@ -16,6 +16,17 @@
 //! [`Server::start_pool`] instead of vanishing into a dead thread, and
 //! [`Server::shutdown`] returns any worker error after the drain.
 //!
+//! Overload safety lives in [`Server::submit_with`] (DESIGN.md §12): a
+//! request may carry an SLA deadline and a tenant id, and the
+//! [`super::admission`] layer rejects it with a typed [`Reject`] —
+//! instead of blocking — when the routed queue is full, the projected
+//! queue delay already exceeds the deadline, or the tenant is over its
+//! fair share of the shard.  Admitted requests that still expire in
+//! the queue are dropped at assembly with an `Err` reply, so every
+//! submission resolves exactly once:
+//! `requests + failed_requests + rejected + deadline_drops ==
+//! submitted`.
+//!
 //! ```
 //! use dybit::coordinator::{Escalate, PoolConfig, ReplicaPrecision, Server,
 //!                          SimBackend, SimBackendCfg};
@@ -38,11 +49,14 @@
 //! let class = server.infer(vec![0.25; 64]).unwrap();
 //! assert!(class < 10);
 //! let snap = server.shutdown().unwrap();
-//! assert_eq!(snap.requests + snap.failed_requests + snap.rejected, 1);
+//! assert_eq!(
+//!     snap.requests + snap.failed_requests + snap.rejected + snap.deadline_drops,
+//!     1,
+//! );
 //! ```
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -55,8 +69,10 @@ use crate::runtime::Manifest;
 use crate::tensor::Tensor;
 use crate::util::threadpool::payload_msg;
 
+use super::admission::{run_margin_controller, Admission, AdmissionCfg, EscalationController,
+                       Reject, SubmitOpts};
 use super::backend::{BackendFactory, InferenceBackend, PjrtBackend};
-use super::batcher::{Assembled, Item, Policy, Request, ShardedIntake};
+use super::batcher::{Assembled, Item, Policy, PushRefused, Request, ShardedIntake};
 use super::metrics::{Metrics, Snapshot};
 use super::router::{Fastest, ReplicaPrecision, Router};
 
@@ -99,6 +115,16 @@ pub struct PoolConfig {
     /// Disable only to *measure* routing skew; a production pool wants
     /// this on.
     pub work_stealing: bool,
+    /// SLA-aware admission for [`Server::submit_with`] (DESIGN.md §12):
+    /// batch-cost seed, tenant fair-queuing buckets, projection slack.
+    /// The default admits everything a plain `submit` would.
+    pub admission: AdmissionCfg,
+    /// Closed-loop escalation-margin tuning: when set, a background PI
+    /// controller steers the pool's escalation rate onto the budget.
+    /// Requires a controller-tunable router (`Escalate::auto_tuned()` /
+    /// `escalate:auto`) — `start_pool` rejects the combination
+    /// otherwise.
+    pub escalation: Option<EscalationController>,
 }
 
 impl Default for PoolConfig {
@@ -110,6 +136,8 @@ impl Default for PoolConfig {
             precisions: Vec::new(),
             router: Arc::new(Fastest::new()),
             work_stealing: true,
+            admission: AdmissionCfg::default(),
+            escalation: None,
         }
     }
 }
@@ -123,6 +151,8 @@ impl std::fmt::Debug for PoolConfig {
             .field("precisions", &self.precisions)
             .field("router", &self.router.name())
             .field("work_stealing", &self.work_stealing)
+            .field("admission", &self.admission)
+            .field("escalation", &self.escalation)
             .finish()
     }
 }
@@ -140,6 +170,7 @@ struct WorkerCtx {
     metrics: Arc<Metrics>,
     router: Arc<dyn Router>,
     precisions: Arc<Vec<ReplicaPrecision>>,
+    admission: Arc<Admission>,
 }
 
 /// Running server handle.
@@ -149,6 +180,7 @@ pub struct Server {
     pub metrics: Arc<Metrics>,
     router: Arc<dyn Router>,
     precisions: Arc<Vec<ReplicaPrecision>>,
+    admission: Arc<Admission>,
     /// Highest precision floor in the pool; steal tags are clamped to it
     /// (a tag above every replica's floor would make items unstealable
     /// by replicas *equal* to the one allowed to serve them).
@@ -156,6 +188,13 @@ pub struct Server {
     started: Instant,
     img_elems: usize,
     batch: usize,
+    /// The assembly size the delay projection divides queue depth by:
+    /// the batching policy clamped to the smallest backend batch dim.
+    assembly_batch: usize,
+    queue_cap: usize,
+    /// Background PI margin tuner ([`PoolConfig::escalation`]).
+    tuner: Option<JoinHandle<()>>,
+    tuner_stop: Arc<AtomicBool>,
 }
 
 impl Server {
@@ -219,6 +258,19 @@ impl Server {
         for p in &precisions {
             ensure!(p.wbits >= 1 && p.abits >= 1, "replica precision bits must be >= 1");
         }
+        // admission + controller configs are validated before any worker
+        // spawns, like every other config error path
+        let admission =
+            Arc::new(Admission::new(&pool.admission, pool.replicas, pool.queue_cap)?);
+        if let Some(ctl) = &pool.escalation {
+            ctl.validate()?;
+            ensure!(
+                pool.router.margin_knob().is_some(),
+                "escalation budget needs a controller-tunable router \
+                 (escalate:auto), got router '{}'",
+                pool.router.name()
+            );
+        }
         let metrics = Arc::new(Metrics::new(pool.replicas));
         let floors: Vec<u32> = precisions.iter().map(|p| p.floor_bits()).collect();
         let queues = Arc::new(Intake::new(pool.queue_cap, floors, pool.work_stealing));
@@ -234,6 +286,7 @@ impl Server {
                 metrics: Arc::clone(&metrics),
                 router: Arc::clone(&pool.router),
                 precisions: Arc::clone(&precisions),
+                admission: Arc::clone(&admission),
             };
             let factory = Arc::clone(&factory);
             let ready = ready_tx.clone();
@@ -280,16 +333,34 @@ impl Server {
         }
 
         let max_floor = precisions.iter().map(|p| p.floor_bits()).max().unwrap_or(8);
+        // the tuner starts only after every replica is ready, so its
+        // first windows measure real traffic, not startup silence
+        let tuner_stop = Arc::new(AtomicBool::new(false));
+        let tuner = pool.escalation.as_ref().map(|ctl| {
+            let ctl = ctl.clone();
+            let knob = pool
+                .router
+                .margin_knob()
+                .expect("checked before spawning workers");
+            let metrics = Arc::clone(&metrics);
+            let stop = Arc::clone(&tuner_stop);
+            std::thread::spawn(move || run_margin_controller(ctl, knob, metrics, stop))
+        });
         Ok(Server {
             queues,
             workers,
             metrics,
             router: pool.router,
             precisions,
+            admission,
             max_floor,
             started: Instant::now(),
             img_elems: img_elems.unwrap(),
             batch,
+            assembly_batch: policy.max_batch.clamp(1, batch),
+            queue_cap: pool.queue_cap,
+            tuner,
+            tuner_stop,
         })
     }
 
@@ -348,6 +419,79 @@ impl Server {
         }
     }
 
+    /// SLA-aware admission-controlled submit (DESIGN.md §12).  Routes
+    /// like [`Server::submit`], then *refuses* instead of blocking:
+    ///
+    /// * [`Reject::DeadlineInfeasible`] when the projected queue delay
+    ///   of the routed shard (depth off the load board × the replica's
+    ///   estimated per-batch cost) already exceeds `opts.deadline`;
+    /// * [`Reject::TenantThrottled`] when `opts.tenant` holds its fair
+    ///   share of the shard's queue slots;
+    /// * [`Reject::QueueFull`] when the shard is at capacity.
+    ///
+    /// Deadline-infeasible, tenant-throttled, and queue-full refusals
+    /// count in `rejected`; an admitted request whose deadline expires
+    /// while queued is answered `Err` at assembly and counted in
+    /// `deadline_drops` — so every submission lands in exactly one of
+    /// the four accounting buckets.  [`Reject::InvalidPayload`] and
+    /// [`Reject::Closed`] mirror `submit`'s pre-admission errors and
+    /// touch no counter.
+    pub fn submit_with(&self, image: Vec<f32>, opts: SubmitOpts)
+                       -> std::result::Result<std::sync::mpsc::Receiver<Reply>, Reject> {
+        if image.len() != self.img_elems {
+            return Err(Reject::InvalidPayload { got: image.len(), want: self.img_elems });
+        }
+        let shard = self.router.route(&self.precisions) % self.precisions.len();
+        let depth = self.queues.shard_len(shard);
+        if let Some(d) = opts.deadline {
+            let projected = self.admission.projected_delay(shard, depth, self.assembly_batch);
+            if projected > d {
+                self.metrics.record_rejected();
+                return Err(Reject::DeadlineInfeasible { projected, deadline: d });
+            }
+        }
+        if let Err((held, quota)) = self.admission.try_charge(shard, opts.tenant) {
+            self.metrics.record_rejected();
+            return Err(Reject::TenantThrottled { tenant: opts.tenant, shard, held, quota });
+        }
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let mut item = Item::new(Request {
+            payload: image,
+            enqueued: Instant::now(),
+            respond: rtx,
+        });
+        item.min_bits = self.router.min_bits().min(self.max_floor);
+        // absolute deadline; a deadline too far out to represent is no
+        // deadline at all
+        item.deadline = opts.deadline.and_then(|d| Instant::now().checked_add(d));
+        item.tenant = opts.tenant;
+        item.tenant_shard = shard as u32;
+        // gauge up BEFORE push, same as submit_unchecked
+        self.metrics.queue_push();
+        match self.queues.try_push(shard, item) {
+            Ok(()) => {
+                self.metrics.record_routed(shard);
+                Ok(rrx)
+            }
+            Err(refused) => {
+                self.metrics.queue_pop(1);
+                self.admission.release(shard as u32, opts.tenant);
+                match refused {
+                    PushRefused::Full(_) => {
+                        self.metrics.record_rejected();
+                        Err(Reject::QueueFull { shard, depth, cap: self.queue_cap })
+                    }
+                    PushRefused::Closed(_) => Err(Reject::Closed),
+                }
+            }
+        }
+    }
+
+    /// Runtime admission state (batch-cost estimates, tenant quotas).
+    pub fn admission(&self) -> &Admission {
+        &self.admission
+    }
+
     /// Smallest static batch dim across replicas.
     pub fn max_batch(&self) -> usize {
         self.batch
@@ -372,6 +516,10 @@ impl Server {
     /// the pre-§9 server silently discarded.
     pub fn shutdown(mut self) -> Result<Snapshot> {
         self.queues.close();
+        self.tuner_stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.tuner.take() {
+            let _ = t.join();
+        }
         let mut errs: Vec<String> = Vec::new();
         for (id, w) in self.workers.drain(..).enumerate() {
             match w.join() {
@@ -398,6 +546,10 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.queues.close();
+        self.tuner_stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.tuner.take() {
+            let _ = t.join();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -471,8 +623,15 @@ fn replica_main(id: usize, ctx: WorkerCtx, policy: Policy, factory: &BackendFact
     loop {
         match ctx.queues.pop_batch(id, policy) {
             Assembled::Closed => return Ok(()),
-            Assembled::Batch(items) => {
+            Assembled::Batch(mut items) => {
                 ctx.metrics.queue_pop(items.len());
+                // the tenant quota bounds *queue* occupancy: release the
+                // slot the instant the item leaves the queue, and blank
+                // the tag so an escalation re-push can't release twice
+                for it in items.iter_mut() {
+                    ctx.admission.release(it.tenant_shard, it.tenant);
+                    it.tenant_shard = Item::<Payload, Reply>::TENANT_UNCHARGED;
+                }
                 let stolen = items.iter().filter(|i| i.stolen).count();
                 if stolen > 0 {
                     ctx.metrics.record_stolen(id, stolen);
@@ -494,6 +653,23 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
                     items: Vec<Item<Payload, Reply>>, ctx: &WorkerCtx) {
     let batch = backend.batch().max(1);
     let img_elems = backend.img_elems();
+    // an item whose SLA deadline expired while queued is dropped with
+    // an `Err` reply — executing it would spend a batch slot on an
+    // answer the client has already abandoned (DESIGN.md §12)
+    let now = Instant::now();
+    let (items, expired): (Vec<_>, Vec<_>) = items
+        .into_iter()
+        .partition(|it| !it.deadline.map_or(false, |d| now >= d));
+    if !expired.is_empty() {
+        let n = expired.len();
+        for it in expired {
+            let _ = it.req.respond.send(Err(format!(
+                "deadline exceeded before execution ({:.1}ms in queue)",
+                it.req.enqueued.elapsed().as_secs_f64() * 1e3
+            )));
+        }
+        ctx.metrics.record_deadline_drops(id, n);
+    }
     // an item whose payload length is wrong gets an Err reply; it is
     // never zero-padded and answered with a fabricated class (submit
     // validates, but `Request` is public and the batcher is reusable)
@@ -538,8 +714,15 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
                 Ok(logits)
             });
         let dt = t0.elapsed().as_secs_f64();
+        // first-run decisions in this chunk: the denominator of the
+        // escalation rate the §12 PI controller steers
+        let firsts = chunk.iter().filter(|it| !it.escalated).count();
         match out {
             Ok(logits) => {
+                ctx.admission.observe_batch_cost(id, dt);
+                if firsts > 0 {
+                    ctx.metrics.record_first_decisions(firsts);
+                }
                 let preds = logits.argmax_margin_rows();
                 let mut answered = 0usize;
                 let mut escalated = 0usize;
@@ -655,6 +838,32 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("queue"), "{e}");
+        // §12 satellites: bad admission / controller configs fail the
+        // start the same way, before any worker spawns
+        let pool = PoolConfig {
+            admission: AdmissionCfg { slack: -1.0, ..AdmissionCfg::default() },
+            ..PoolConfig::default()
+        };
+        let e = Server::start_pool(pool, factory()).unwrap_err().to_string();
+        assert!(e.contains("slack"), "{e}");
+        // an escalation budget without a tunable router is a config
+        // error, not a silently dead controller
+        let pool = PoolConfig {
+            escalation: Some(EscalationController::with_budget(0.25)),
+            ..PoolConfig::default()
+        };
+        let e = Server::start_pool(pool, factory()).unwrap_err().to_string();
+        assert!(e.contains("escalate:auto"), "{e}");
+        // inf margin bounds are rejected by the controller validation
+        let mut ctl = EscalationController::with_budget(0.25);
+        ctl.bounds = (0.0, f32::INFINITY);
+        let pool = PoolConfig {
+            router: Arc::new(super::super::Escalate::auto_tuned()),
+            escalation: Some(ctl),
+            ..PoolConfig::default()
+        };
+        let e = Server::start_pool(pool, factory()).unwrap_err().to_string();
+        assert!(e.contains("finite"), "{e}");
     }
 }
 
@@ -677,4 +886,62 @@ pub fn load_test(server: &Server, clients: usize, per_client: usize,
         }
     });
     Ok(())
+}
+
+/// Options for [`load_test_opts`]: the admission-controlled load
+/// generator's SLA and tenant spread.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadOpts {
+    /// Per-request deadline passed through to [`Server::submit_with`].
+    pub deadline: Option<Duration>,
+    /// Tenant ids are spread over `max(tenants, 1)` buckets by client
+    /// index.
+    pub tenants: u32,
+}
+
+/// What [`load_test_opts`] observed at the submit boundary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadReport {
+    /// Requests admitted (each then waited for its reply).
+    pub accepted: usize,
+    /// Requests refused by admission with a typed [`Reject`].
+    pub rejected: usize,
+}
+
+/// Closed-loop load generator over [`Server::submit_with`]: like
+/// [`load_test`], but every request carries `opts` and admission
+/// refusals are counted instead of blocking.
+pub fn load_test_opts(server: &Server, clients: usize, per_client: usize,
+                      img_elems: usize, opts: LoadOpts) -> Result<LoadReport> {
+    use std::sync::atomic::AtomicUsize;
+    let accepted = AtomicUsize::new(0);
+    let rejected = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let (accepted, rejected) = (&accepted, &rejected);
+            scope.spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(100 + c as u64);
+                let sopts = SubmitOpts {
+                    deadline: opts.deadline,
+                    tenant: c as u32 % opts.tenants.max(1),
+                };
+                for _ in 0..per_client {
+                    let img = rng.normal_vec(img_elems);
+                    match server.submit_with(img, sopts) {
+                        Ok(rx) => {
+                            accepted.fetch_add(1, Ordering::Relaxed);
+                            let _ = rx.recv_timeout(Duration::from_secs(120));
+                        }
+                        Err(_) => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    Ok(LoadReport {
+        accepted: accepted.load(Ordering::Relaxed),
+        rejected: rejected.load(Ordering::Relaxed),
+    })
 }

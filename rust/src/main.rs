@@ -10,8 +10,13 @@
 //!                           (--replicas N; --sim serves the artifact-free
 //!                           simulator backend; --precision-mix 4,4,4,8
 //!                           makes the pool heterogeneous and --router
-//!                           fastest|floor:<bits>|escalate[:margin] picks
-//!                           the scheduling policy, DESIGN.md §10)
+//!                           fastest|floor:<bits>|escalate[:margin|:auto]
+//!                           picks the scheduling policy, DESIGN.md §10;
+//!                           --deadline-ms D attaches a per-request SLA,
+//!                           --tenants T fair-queues the load across T
+//!                           tenant buckets, and --escalation-budget B
+//!                           PI-tunes the escalate:auto margin onto a
+//!                           target escalation rate, DESIGN.md §12)
 //!   report                  dump manifest summary
 //!
 //! Everything executes from compiled artifacts; run `make artifacts` once.
@@ -21,9 +26,9 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use dybit::coordinator::{
-    parse_precision_mix, resolve_precision_mix, router_from_spec, BackendFactory,
-    InferenceBackend, PjrtBackend, Policy, PoolConfig, ReplicaPrecision, Server, SimBackend,
-    SimBackendCfg, Snapshot,
+    parse_precision_mix, resolve_precision_mix, router_from_spec, AdmissionCfg,
+    BackendFactory, EscalationController, InferenceBackend, LoadOpts, PjrtBackend, Policy,
+    PoolConfig, ReplicaPrecision, Server, SimBackend, SimBackendCfg, Snapshot,
 };
 use dybit::formats::dybit as dybit_fmt;
 use dybit::formats::Format;
@@ -53,7 +58,8 @@ fn main() {
                  train/qat: --steps N --lr 0.05 --eval-batches 16\n\
                  serve: --clients 4 --requests 64 --max-wait-ms 5 --max-batch N \
                  --replicas 1 [--sim] [--precision-mix 4,4,4,8] \
-                 [--router fastest|floor:<bits>|escalate[:margin]] [--no-steal]"
+                 [--router fastest|floor:<bits>|escalate[:margin|:auto]] [--no-steal] \
+                 [--deadline-ms D] [--tenants T] [--escalation-budget B]"
             );
             std::process::exit(2);
         }
@@ -220,11 +226,12 @@ fn cmd_train(args: &Args, qat: bool) -> Result<()> {
 /// worked example shows this shape).
 fn print_serve_snapshot(snap: &Snapshot, precisions: &[ReplicaPrecision]) {
     println!(
-        "requests {}  batches {}  errors {}  rejected {}  escalations {}  \
-         mean batch {:.1}  p50 {:.1}ms  p95 {:.1}ms  {:.1} req/s  (queue depth {})",
-        snap.requests, snap.batches, snap.errors, snap.rejected, snap.escalations,
-        snap.mean_batch, snap.lat_p50_ms, snap.lat_p95_ms, snap.throughput_rps,
-        snap.queue_depth
+        "requests {}  batches {}  errors {}  rejected {}  deadline drops {}  \
+         escalations {}  mean batch {:.1}  p50 {:.1}ms  p95 {:.1}ms  {:.1} req/s  \
+         (queue depth {})",
+        snap.requests, snap.batches, snap.errors, snap.rejected, snap.deadline_drops,
+        snap.escalations, snap.mean_batch, snap.lat_p50_ms, snap.lat_p95_ms,
+        snap.throughput_rps, snap.queue_depth
     );
     print!("{}", snap.replica_report(precisions));
 }
@@ -242,7 +249,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let precisions =
         resolve_precision_mix(mix, wbits, abits, args.get_usize("replicas", 1));
     let replicas = precisions.len();
-    let router = router_from_spec(&args.get_or("router", "fastest"))?;
+    // --escalation-budget needs a tunable margin, so it flips the
+    // *default* router to escalate:auto; an explicit --router still
+    // wins (and start_pool rejects incompatible combinations)
+    let escalation = match args.get("escalation-budget") {
+        Some(s) => {
+            let budget: f64 =
+                s.parse().map_err(|_| anyhow!("--escalation-budget must be a number"))?;
+            Some(EscalationController::with_budget(budget))
+        }
+        None => None,
+    };
+    let default_router = if escalation.is_some() { "escalate:auto" } else { "fastest" };
+    let router = router_from_spec(&args.get_or("router", default_router))?;
+    let margin_knob = router.margin_knob();
+    let deadline = match args.get("deadline-ms") {
+        Some(s) => {
+            let ms: f64 = s.parse().map_err(|_| anyhow!("--deadline-ms must be a number"))?;
+            Some(std::time::Duration::from_secs_f64(ms.max(0.0) / 1e3))
+        }
+        None => None,
+    };
+    let tenants = args.get_usize("tenants", 1) as u32;
     let work_stealing = !args.has("no-steal");
     // default max-batch is "the backend's static batch dim": the pool
     // clamps per replica, so MAX means "fill whatever the model takes"
@@ -275,6 +303,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // mixed_factory with a uniform mix IS the homogeneous pool, so
         // one factory path serves both (and the per-replica printout +
         // steal floors always reflect the backend's real bits)
+        // seed the admission cost table from the cycle simulator so the
+        // very first SLA projection is already per-precision (§12); the
+        // EWMA refines it from observed batches either way
+        let admission = AdmissionCfg {
+            batch_cost: cfg.projected_batch_costs(&precisions)?,
+            tenants,
+            ..AdmissionCfg::default()
+        };
         let factory = SimBackend::mixed_factory(cfg, precisions.clone());
         Server::start_pool(
             PoolConfig {
@@ -284,6 +320,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 precisions,
                 router,
                 work_stealing,
+                admission,
+                escalation,
             },
             factory,
         )?
@@ -322,6 +360,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(Box::new(PjrtBackend::new(&m2, &name2, qcfg, pallas)?)
                 as Box<dyn InferenceBackend>)
         });
+        // no cycle simulator for compiled artifacts: leave the cost
+        // table empty and let the EWMA adopt the first observed batch
+        let admission = AdmissionCfg { tenants, ..AdmissionCfg::default() };
         Server::start_pool(
             PoolConfig {
                 policy,
@@ -330,6 +371,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 precisions,
                 router,
                 work_stealing,
+                admission,
+                escalation,
             },
             factory,
         )?
@@ -337,7 +380,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let img_elems = server.img_elems();
     let precisions = server.precisions().to_vec();
-    dybit::coordinator::load_test(&server, clients, requests, img_elems)?;
+    if deadline.is_some() || tenants > 1 {
+        let report = dybit::coordinator::load_test_opts(
+            &server,
+            clients,
+            requests,
+            img_elems,
+            LoadOpts { deadline, tenants },
+        )?;
+        println!(
+            "admission: {} accepted, {} rejected at submit{}",
+            report.accepted,
+            report.rejected,
+            deadline.map_or(String::new(), |d| format!(" ({:.1}ms SLA)",
+                                                       d.as_secs_f64() * 1e3))
+        );
+    } else {
+        dybit::coordinator::load_test(&server, clients, requests, img_elems)?;
+    }
+    if let Some(knob) = &margin_knob {
+        println!("tuned escalation margin: {:.4}", knob.get());
+    }
     let snap = server.shutdown()?;
     print_serve_snapshot(&snap, &precisions);
     Ok(())

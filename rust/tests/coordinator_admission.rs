@@ -1,0 +1,352 @@
+//! Integration tests for the §12 overload-safety layer: SLA-aware
+//! admission (`Server::submit_with`), per-tenant fair queuing, deadline
+//! drops at assembly, and the closed-loop escalation-margin tuner — all
+//! over the artifact-free [`SimBackend`].
+//!
+//! The extended accounting invariant under test: every submission ends
+//! in exactly one of `requests`, `failed_requests`, `rejected`
+//! (admission refusals + invalid payloads), or `deadline_drops`, and
+//! every admitted receiver resolves exactly once — including under
+//! forced overload and mid-drain shutdown.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dybit::coordinator::{
+    router_from_spec, AdmissionCfg, Escalate, EscalationController, Policy, PoolConfig, Reject,
+    ReplicaPrecision, Router, Server, SimBackend, SimBackendCfg, Snapshot, SubmitOpts,
+};
+use dybit::util::rng::Rng;
+
+fn assert_accounted(snap: &Snapshot, submitted: u64) {
+    assert_eq!(
+        snap.requests + snap.failed_requests + snap.rejected + snap.deadline_drops,
+        submitted,
+        "accounting invariant violated: {snap:?}"
+    );
+    assert_eq!(snap.queue_depth, 0, "queues must drain: {snap:?}");
+}
+
+/// `tiny` sim config rescaled so one batch takes ~`batch_s` wall
+/// seconds — slow enough that a submit burst outruns the pool.
+fn timed_cfg(seed: u64, batch_s: f64) -> SimBackendCfg {
+    let mut cfg = SimBackendCfg::tiny(seed);
+    let probe = SimBackend::new(cfg.clone()).expect("probe backend");
+    cfg.time_scale = batch_s / probe.sim_latency_s();
+    cfg
+}
+
+/// Tentpole (a): a full shard refuses with a typed `QueueFull` instead
+/// of blocking the submitter, and the refusals land in `rejected`.
+#[test]
+fn full_queue_rejects_typed_instead_of_blocking() {
+    let cfg = timed_cfg(1, 0.05);
+    let pool = PoolConfig {
+        policy: Policy { max_batch: cfg.batch, max_wait: Duration::from_micros(200) },
+        queue_cap: 2,
+        replicas: 1,
+        precisions: vec![ReplicaPrecision::uniform(8)],
+        ..PoolConfig::default()
+    };
+    let server = Server::start_pool(pool, SimBackend::factory(cfg.clone())).unwrap();
+    let mut rng = Rng::new(7);
+    let mut rxs = Vec::new();
+    let mut rejected = 0u64;
+    for _ in 0..64 {
+        match server.submit_with(rng.normal_vec(cfg.img_elems), SubmitOpts::default()) {
+            Ok(rx) => rxs.push(rx),
+            Err(Reject::QueueFull { cap, depth, .. }) => {
+                assert_eq!(cap, 2);
+                assert!(depth >= 2, "refused below capacity: depth {depth}");
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected reject: {e}"),
+        }
+    }
+    assert!(rejected > 0, "a 64-burst against a cap-2 queue on 50ms batches must overflow");
+    for rx in &rxs {
+        let class = rx.recv_timeout(Duration::from_secs(30)).expect("resolve");
+        assert!(class.expect("admitted requests succeed") < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.rejected, rejected, "every QueueFull counts in rejected");
+    assert_eq!(snap.deadline_drops, 0);
+    assert_accounted(&snap, 64);
+}
+
+/// Tentpole (a): a deadline the projected queue delay already exceeds
+/// is rejected at submit — typed, descriptive, and counted — while the
+/// same payload without an SLA is served normally.
+#[test]
+fn infeasible_deadlines_reject_at_submit() {
+    let cfg = SimBackendCfg::tiny(2);
+    let pool = PoolConfig {
+        queue_cap: 8,
+        replicas: 1,
+        // seed the cost estimate at one hour per batch: any ms-scale
+        // deadline is deterministically infeasible
+        admission: AdmissionCfg {
+            batch_cost: vec![Duration::from_secs(3600)],
+            ..AdmissionCfg::default()
+        },
+        ..PoolConfig::default()
+    };
+    let server = Server::start_pool(pool, SimBackend::factory(cfg.clone())).unwrap();
+    let img = vec![0.5f32; cfg.img_elems];
+    let e = server
+        .submit_with(img.clone(), SubmitOpts::with_deadline(Duration::from_millis(10)))
+        .unwrap_err();
+    match e {
+        Reject::DeadlineInfeasible { projected, deadline } => {
+            assert!(projected >= Duration::from_secs(3600), "projected {projected:?}");
+            assert_eq!(deadline, Duration::from_millis(10));
+        }
+        other => panic!("expected DeadlineInfeasible, got: {other}"),
+    }
+    assert!(e.to_string().contains("infeasible"), "{e}");
+    // the same request without an SLA is admitted and served
+    let rx = server.submit_with(img, SubmitOpts::default()).unwrap();
+    assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap() < 10);
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.rejected, 1);
+    assert_eq!(snap.requests, 1);
+    assert_accounted(&snap, 2);
+}
+
+/// Tentpole (a): an admitted request whose deadline expires while
+/// queued is dropped at assembly — `Err` reply mentioning the
+/// deadline, counted in `deadline_drops`, never executed as if live.
+#[test]
+fn expired_deadlines_drop_at_assembly_with_err() {
+    let cfg = timed_cfg(3, 0.03);
+    let pool = PoolConfig {
+        policy: Policy { max_batch: cfg.batch, max_wait: Duration::from_micros(200) },
+        queue_cap: 64,
+        replicas: 1,
+        precisions: vec![ReplicaPrecision::uniform(8)],
+        ..PoolConfig::default()
+    };
+    let server = Server::start_pool(pool, SimBackend::factory(cfg.clone())).unwrap();
+    // unseeded cost estimate: the projection is zero until the first
+    // batch completes (~30ms), so this instant burst is all admitted —
+    // the 5ms SLAs then expire in the queue behind the slow batches
+    let opts = SubmitOpts::with_deadline(Duration::from_millis(5));
+    let mut rng = Rng::new(9);
+    let rxs: Vec<_> = (0..12)
+        .map(|_| {
+            server
+                .submit_with(rng.normal_vec(cfg.img_elems), opts)
+                .expect("unseeded projection admits the burst")
+        })
+        .collect();
+    let mut served = 0u64;
+    let mut dropped = 0u64;
+    for rx in &rxs {
+        match rx.recv_timeout(Duration::from_secs(30)).expect("every receiver resolves") {
+            Ok(class) => {
+                assert!(class < 10);
+                served += 1;
+            }
+            Err(e) => {
+                assert!(e.contains("deadline"), "drop reply must say why: {e}");
+                dropped += 1;
+            }
+        }
+    }
+    let snap = server.shutdown().unwrap();
+    assert!(dropped >= 1, "batches behind a 30ms head start must expire their 5ms SLA");
+    assert_eq!(snap.deadline_drops, dropped);
+    assert_eq!(snap.requests, served);
+    assert_eq!(snap.rejected, 0);
+    assert_accounted(&snap, 12);
+}
+
+/// Tentpole (b): the starvation regression.  A 95%-skewed hot tenant
+/// is capped at its per-shard quota while the cold tenant's sparse
+/// submissions are all admitted — and every accepted receiver still
+/// resolves.
+#[test]
+fn hot_tenant_cannot_starve_the_cold_one() {
+    let cfg = timed_cfg(4, 0.05);
+    let pool = PoolConfig {
+        policy: Policy { max_batch: cfg.batch, max_wait: Duration::from_micros(200) },
+        queue_cap: 8,
+        replicas: 1,
+        precisions: vec![ReplicaPrecision::uniform(8)],
+        admission: AdmissionCfg { tenants: 2, ..AdmissionCfg::default() },
+        ..PoolConfig::default()
+    };
+    let server = Server::start_pool(pool, SimBackend::factory(cfg.clone())).unwrap();
+    assert_eq!(server.admission().quota(), 4, "cap 8 over 2 tenants");
+    let mut rng = Rng::new(11);
+    let mut rxs = Vec::new();
+    let mut cold_admitted = 0u64;
+    let mut hot_throttled = 0u64;
+    // 95% skew: tenant 0 sends 38 of 40 requests in one burst, the
+    // cold tenant 1 interleaves two
+    for i in 0..40u32 {
+        let tenant = u32::from(i % 20 == 19);
+        match server.submit_with(rng.normal_vec(cfg.img_elems),
+                                 SubmitOpts { deadline: None, tenant }) {
+            Ok(rx) => {
+                if tenant == 1 {
+                    cold_admitted += 1;
+                }
+                rxs.push(rx);
+            }
+            Err(Reject::TenantThrottled { tenant: t, held, quota, .. }) => {
+                assert_eq!(t, 0, "the cold tenant must never be throttled");
+                assert_eq!((held, quota), (4, 4));
+                hot_throttled += 1;
+            }
+            Err(e) => panic!("unexpected reject: {e}"),
+        }
+    }
+    // the hot tenant can only ever hold half the queue, so the cold
+    // tenant always finds its own slots free
+    assert_eq!(cold_admitted, 2, "both cold submissions must be admitted");
+    assert!(hot_throttled > 0, "a 38-burst against a quota of 4 must throttle");
+    for rx in &rxs {
+        rx.recv_timeout(Duration::from_secs(30)).expect("resolve").expect("class");
+    }
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.rejected, hot_throttled);
+    assert_accounted(&snap, 40);
+}
+
+/// Satellite 1: forced overload + shutdown mid-queue.  Every receiver
+/// `submit_with` handed out resolves exactly once — answered, dropped
+/// with an `Err`, or failed, never hung — even for items still queued
+/// when `shutdown` starts the drain.
+#[test]
+fn every_receiver_resolves_under_overload_and_shutdown() {
+    let mix = vec![ReplicaPrecision::uniform(4), ReplicaPrecision::uniform(8)];
+    let cfg = timed_cfg(5, 0.04);
+    let pool = PoolConfig {
+        policy: Policy { max_batch: cfg.batch, max_wait: Duration::from_micros(200) },
+        queue_cap: 32,
+        replicas: 2,
+        precisions: mix.clone(),
+        admission: AdmissionCfg { tenants: 3, ..AdmissionCfg::default() },
+        ..PoolConfig::default()
+    };
+    let server =
+        Server::start_pool(pool, SimBackend::mixed_factory(cfg.clone(), mix)).unwrap();
+    let mut rng = Rng::new(13);
+    let mut rxs = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..24u32 {
+        let opts = SubmitOpts { deadline: Some(Duration::from_millis(2)), tenant: i % 3 };
+        match server.submit_with(rng.normal_vec(cfg.img_elems), opts) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    // shut down while most of the burst is still queued: the drain must
+    // answer (or deadline-drop) every one of them, never forget one
+    let snap = server.shutdown().unwrap();
+    for rx in &rxs {
+        rx.recv_timeout(Duration::from_secs(5))
+            .expect("a submitted receiver must resolve even across shutdown");
+    }
+    assert_eq!(snap.rejected, rejected);
+    assert_accounted(&snap, 24);
+}
+
+/// Tentpole (c), wiring smoke: `escalate:auto` + an escalation budget
+/// run the background PI tuner; the tuned margin stays finite and
+/// inside the controller bounds, first-run decisions are counted, and
+/// the accounting stays exact.  (Convergence to the budget is gated in
+/// `benches/perf_route.rs`, where the load is long enough to measure.)
+#[test]
+fn margin_tuner_runs_and_stays_in_bounds() {
+    let cfg = SimBackendCfg::tiny(6);
+    let mix = vec![
+        ReplicaPrecision::uniform(4),
+        ReplicaPrecision::uniform(4),
+        ReplicaPrecision::uniform(8),
+    ];
+    let router = Arc::new(Escalate::auto_tuned());
+    let knob = router.margin_knob().expect("escalate:auto exposes its knob");
+    let mut ctl = EscalationController::with_budget(0.3);
+    ctl.interval = Duration::from_millis(2);
+    ctl.min_samples = 4;
+    let bounds = ctl.bounds;
+    let pool = PoolConfig {
+        queue_cap: 64,
+        replicas: 3,
+        precisions: mix.clone(),
+        router,
+        escalation: Some(ctl),
+        ..PoolConfig::default()
+    };
+    let server =
+        Server::start_pool(pool, SimBackend::mixed_factory(cfg.clone(), mix)).unwrap();
+    dybit::coordinator::load_test(&server, 4, 100, cfg.img_elems).unwrap();
+    // a few controller windows after the load, then a clean join
+    std::thread::sleep(Duration::from_millis(20));
+    let snap = server.shutdown().unwrap();
+    let m = knob.get();
+    assert!(
+        m.is_finite() && m >= bounds.0 && m <= bounds.1,
+        "tuned margin {m} escaped bounds {bounds:?}"
+    );
+    assert!(snap.first_runs > 0, "successful batches must count first-run decisions");
+    assert!(
+        snap.first_runs + snap.rejected + snap.deadline_drops + snap.failed_requests
+            >= snap.requests,
+        "first-run decisions cover every answered request: {snap:?}"
+    );
+    assert_accounted(&snap, 400);
+}
+
+/// Satellite 2: the `escalate:auto` spec wires end-to-end through
+/// `start_pool`, and an escalation budget without a tunable router —
+/// or with infinite margin bounds — fails the start descriptively.
+#[test]
+fn escalation_config_wiring_and_rejections() {
+    let cfg = SimBackendCfg::tiny(8);
+    let mix = vec![ReplicaPrecision::uniform(4), ReplicaPrecision::uniform(8)];
+    let router = router_from_spec("escalate:auto").unwrap();
+    assert!(router.margin_knob().is_some());
+    let pool = PoolConfig {
+        replicas: 2,
+        precisions: mix.clone(),
+        router,
+        escalation: Some(EscalationController::with_budget(0.2)),
+        ..PoolConfig::default()
+    };
+    let server =
+        Server::start_pool(pool, SimBackend::mixed_factory(cfg.clone(), mix.clone())).unwrap();
+    assert!(server.infer(vec![0.25; cfg.img_elems]).unwrap() < 10);
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, 1);
+
+    // budget over a fixed-margin router: refused at start
+    let pool = PoolConfig {
+        replicas: 2,
+        precisions: mix.clone(),
+        router: router_from_spec("escalate:0.1").unwrap(),
+        escalation: Some(EscalationController::with_budget(0.2)),
+        ..PoolConfig::default()
+    };
+    let e = Server::start_pool(pool, SimBackend::mixed_factory(cfg.clone(), mix.clone()))
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("escalate:auto"), "{e}");
+
+    // inf bounds smuggled past the spec parser: refused by validate()
+    let mut ctl = EscalationController::with_budget(0.2);
+    ctl.bounds = (0.0, f32::INFINITY);
+    let pool = PoolConfig {
+        replicas: 2,
+        precisions: mix.clone(),
+        router: router_from_spec("escalate:auto").unwrap(),
+        escalation: Some(ctl),
+        ..PoolConfig::default()
+    };
+    let e = Server::start_pool(pool, SimBackend::mixed_factory(cfg, mix))
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("finite"), "{e}");
+}

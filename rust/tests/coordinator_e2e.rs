@@ -5,7 +5,8 @@
 //!
 //! Accounting invariant under test: every submitted request ends in
 //! exactly one of `requests` (success), `failed_requests` (slot of a
-//! failed batch), or `rejected` (invalid payload), and every submit's
+//! failed batch), `rejected` (invalid payload or admission refusal),
+//! or `deadline_drops` (SLA expired in the queue), and every submit's
 //! receiver observes exactly one reply — no hung clients, ever.
 
 use std::sync::mpsc::Receiver;
@@ -41,7 +42,7 @@ fn must_reply(rx: &Receiver<Reply>) -> Reply {
 
 fn assert_accounted(snap: &Snapshot, submitted: u64) {
     assert_eq!(
-        snap.requests + snap.failed_requests + snap.rejected,
+        snap.requests + snap.failed_requests + snap.rejected + snap.deadline_drops,
         submitted,
         "accounting invariant violated: {snap:?}"
     );

@@ -5,8 +5,8 @@
 //!
 //! The §9 accounting invariant still holds with two-execution requests:
 //! an escalated request counts in `requests` only when its re-run
-//! replies, so `requests + failed_requests + rejected == submitted`
-//! stays exact (asserted in every test here).
+//! replies, so `requests + failed_requests + rejected + deadline_drops
+//! == submitted` stays exact (asserted in every test here).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -35,7 +35,7 @@ impl Router for Pin {
 
 fn assert_accounted(snap: &Snapshot, submitted: u64) {
     assert_eq!(
-        snap.requests + snap.failed_requests + snap.rejected,
+        snap.requests + snap.failed_requests + snap.rejected + snap.deadline_drops,
         submitted,
         "accounting invariant violated: {snap:?}"
     );

@@ -22,8 +22,16 @@
 //!    deadlocks nobody (a watchdog converts a hang into a failure) and
 //!    drains every accepted item before poppers see `Closed`.
 //! 5. **Accounting** — a live [`Metrics`] sink fed by the poppers ends
-//!    with `requests == consumed`, per-replica sums equal to the
-//!    globals, and a zero queue-depth gauge.
+//!    with `requests + escalations + deadline_drops == consumed`,
+//!    per-replica sums equal to the globals, and a zero queue-depth
+//!    gauge.
+//! 6. **Deadline-drop conservation** (§12, `overload` mode) — a seeded
+//!    subset of items is pushed with an already-expired deadline and a
+//!    seeded subset of pushes goes through the non-blocking `try_push`:
+//!    every expired item must be consumed exactly once *as a drop*
+//!    (never served), every live item served (never dropped), and every
+//!    `try_push` refusal counted in `rejected` — the four-bucket
+//!    accounting invariant under forced overload.
 //!
 //! The harness runs against BOTH implementations: the pre-§11
 //! [`CoarseIntake`] certifies the harness (if the reference fails, the
@@ -42,8 +50,8 @@ use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use dybit::coordinator::{Assembled, CoarseIntake, IntakeQueue, Item, Metrics, Policy, Request,
-                         ShardedIntake};
+use dybit::coordinator::{Assembled, CoarseIntake, IntakeQueue, Item, Metrics, Policy,
+                         PushRefused, Request, ShardedIntake};
 use dybit::util::rng::Rng;
 
 // ---------------------------------------------------------------------
@@ -73,6 +81,9 @@ struct Consumed {
     id: u64,
     stolen: bool,
     min_bits: u32,
+    /// The popper observed an expired deadline and dropped the item
+    /// instead of serving it (§12).
+    dropped: bool,
 }
 
 /// Deterministic per-item coin for the escalation decision (splitmix64
@@ -85,14 +96,27 @@ fn escalates(id: u64, seed: u64) -> bool {
     (x ^ x >> 31) % 10 == 0
 }
 
+/// Deterministic per-item coin for the overload mode's expired-deadline
+/// tag (differently salted than [`escalates`] so the two subsets are
+/// independent).
+fn expires(id: u64, seed: u64) -> bool {
+    let mut x = id ^ seed.wrapping_mul(0xD134_2543_DE82_EF95);
+    x = (x ^ x >> 30).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ x >> 27).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (x ^ x >> 31) % 5 == 0
+}
+
 // ---------------------------------------------------------------------
 // Post-hoc invariant checker (the oracle; certified below)
 // ---------------------------------------------------------------------
 
-/// Check conservation, owner FIFO, and the steal gate over a recorded
-/// trace.  `consumed_by[s]` is popper `s`'s consumption in order.
-fn check_invariants(floors: &[u32], pushed_ok: &[u64], consumed_by: &[Vec<Consumed>])
-                    -> Result<(), String> {
+/// Check conservation, owner FIFO, the steal gate, and deadline-drop
+/// conservation over a recorded trace.  `consumed_by[s]` is popper
+/// `s`'s consumption in order; `expired` is the set of ids pushed with
+/// an already-expired deadline — each must be consumed exactly once *as
+/// a drop*, and no live item may be dropped.
+fn check_invariants(floors: &[u32], pushed_ok: &[u64], consumed_by: &[Vec<Consumed>],
+                    expired: &HashSet<u64>) -> Result<(), String> {
     let pushed: HashSet<u64> = pushed_ok.iter().copied().collect();
     if pushed.len() != pushed_ok.len() {
         return Err("harness bug: duplicate pushed ids".into());
@@ -106,6 +130,18 @@ fn check_invariants(floors: &[u32], pushed_ok: &[u64], consumed_by: &[Vec<Consum
             }
             if !seen.insert(c.id) {
                 return Err(format!("id {:#x} consumed twice (second time by popper {s})", c.id));
+            }
+            if c.dropped && !expired.contains(&c.id) {
+                return Err(format!(
+                    "id {:#x} dropped without an expired deadline (popper {s})",
+                    c.id
+                ));
+            }
+            if !c.dropped && expired.contains(&c.id) {
+                return Err(format!(
+                    "id {:#x} served instead of dropped: its deadline expired before push",
+                    c.id
+                ));
             }
             if c.stolen && floors[s] < c.min_bits {
                 return Err(format!(
@@ -147,6 +183,11 @@ struct StressCfg {
     /// Close mid-flight with blocked pushers (tiny caps) instead of
     /// after the pushers finish.
     close_early: bool,
+    /// §12 overload mode: poppers simulate slow batches, a seeded ~25%
+    /// of pushes go through the non-blocking `try_push` (refusals
+    /// counted in `rejected`), and a seeded ~20% of items carry an
+    /// already-expired deadline the poppers must drop, never serve.
+    overload: bool,
 }
 
 /// Heterogeneous floors with at least one accurate (8-bit) tier, like
@@ -172,7 +213,7 @@ fn stress_once<I: IntakeQueue<u64, u64>>(q: &I, cfg: StressCfg) {
     let esc_seq = AtomicU64::new(0);
     let policy = Policy { max_batch: 4, max_wait: Duration::from_micros(200) };
 
-    let (pushed, consumed) = thread::scope(|scope| {
+    let (pushed, consumed, refused) = thread::scope(|scope| {
         // -- dedicated pushers: one per shard so owner FIFO is assertable
         let mut pushers = Vec::new();
         for s in 0..cfg.shards {
@@ -180,21 +221,46 @@ fn stress_once<I: IntakeQueue<u64, u64>>(q: &I, cfg: StressCfg) {
             pushers.push(scope.spawn(move || {
                 let mut rng = Rng::new(cfg.seed ^ (s as u64).wrapping_mul(0x9E37_79B9));
                 let mut ok = Vec::new();
+                let mut refused = 0u64;
                 for seq in 0..cfg.per_pusher {
                     // ~30% of items carry the shard's own floor as an
                     // accuracy tag (what the router would do), gating
                     // who may steal them
                     let bits = if rng.below(10) < 3 { floors[s] } else { 0 };
                     let id = pid(0, s, seq);
-                    match q.push(s, probe_item(id, bits, false)) {
-                        Ok(()) => {
-                            metrics.queue_push();
-                            ok.push(id);
+                    let mut it = probe_item(id, bits, false);
+                    // overload: a seeded subset arrives already expired
+                    // (push-time deadline ⇒ any later pop observes it
+                    // expired — deterministically droppable)
+                    if cfg.overload && expires(id, cfg.seed) {
+                        it.deadline = Some(Instant::now());
+                    }
+                    // overload: a seeded subset of pushes is admission-
+                    // style (non-blocking); a Full refusal is counted
+                    // like the server's Reject::QueueFull
+                    if cfg.overload && rng.below(4) == 0 {
+                        match q.try_push(s, it) {
+                            Ok(()) => {
+                                metrics.queue_push();
+                                ok.push(id);
+                            }
+                            Err(PushRefused::Full(_)) => {
+                                metrics.record_rejected();
+                                refused += 1;
+                            }
+                            Err(PushRefused::Closed(_)) => break,
                         }
-                        Err(_) => break, // closed under us (close_early)
+                    } else {
+                        match q.push(s, it) {
+                            Ok(()) => {
+                                metrics.queue_push();
+                                ok.push(id);
+                            }
+                            Err(_) => break, // closed under us (close_early)
+                        }
                     }
                 }
-                ok
+                (ok, refused)
             }));
         }
 
@@ -219,9 +285,24 @@ fn stress_once<I: IntakeQueue<u64, u64>>(q: &I, cfg: StressCfg) {
                         metrics.record_stolen(s, stolen_n);
                     }
                     let mut answered = 0;
+                    let mut dropped_n = 0;
                     for it in batch {
                         let id = it.req.payload;
-                        trace.push(Consumed { id, stolen: it.stolen, min_bits: it.min_bits });
+                        // §12: an expired deadline is observed at
+                        // assembly and the item is dropped, never
+                        // served or escalated
+                        let dropped = it.deadline.map_or(false, |d| Instant::now() >= d);
+                        trace.push(Consumed {
+                            id,
+                            stolen: it.stolen,
+                            min_bits: it.min_bits,
+                            dropped,
+                        });
+                        if dropped {
+                            metrics.record_deadline_drops(s, 1);
+                            dropped_n += 1;
+                            continue;
+                        }
                         // escalate strictly up (fast tier → accurate
                         // tier, never back), mirroring the server: an
                         // acyclic hand-off graph cannot deadlock on the
@@ -246,7 +327,15 @@ fn stress_once<I: IntakeQueue<u64, u64>>(q: &I, cfg: StressCfg) {
                             answered += 1;
                         }
                     }
-                    metrics.record_batch_answered(s, n, answered, 1e-4, 0);
+                    if n > dropped_n {
+                        metrics.record_batch_answered(s, n - dropped_n, answered, 1e-4, 0);
+                    }
+                    // overload mode: a slow simulated batch, so the
+                    // bounded queues stay full and try_push refusals
+                    // actually happen
+                    if cfg.overload {
+                        thread::sleep(Duration::from_micros(500));
+                    }
                 }
             }));
         }
@@ -256,8 +345,11 @@ fn stress_once<I: IntakeQueue<u64, u64>>(q: &I, cfg: StressCfg) {
             q.close();
         }
         let mut pushed: Vec<u64> = Vec::new();
+        let mut refused = 0u64;
         for h in pushers {
-            pushed.extend(h.join().expect("pusher panicked"));
+            let (ok, r) = h.join().expect("pusher panicked");
+            pushed.extend(ok);
+            refused += r;
         }
         if !cfg.close_early {
             q.close();
@@ -268,29 +360,65 @@ fn stress_once<I: IntakeQueue<u64, u64>>(q: &I, cfg: StressCfg) {
             pushed.extend(esc);
             consumed.push(trace);
         }
-        (pushed, consumed)
+        (pushed, consumed, refused)
     });
 
-    let label = format!("seed {} shards {} close_early {}", cfg.seed, cfg.shards, cfg.close_early);
-    if let Err(e) = check_invariants(&floors, &pushed, &consumed) {
+    let label = format!(
+        "seed {} shards {} close_early {} overload {}",
+        cfg.seed, cfg.shards, cfg.close_early, cfg.overload
+    );
+    // which accepted items must be dropped is a pure function of the
+    // id + seed (the pushers tag exactly these), so the oracle can
+    // recompute the expected set post-hoc
+    let expired: HashSet<u64> = match cfg.overload {
+        true => pushed
+            .iter()
+            .copied()
+            .filter(|&id| gen_of(id) == 0 && expires(id, cfg.seed))
+            .collect(),
+        false => HashSet::new(),
+    };
+    if let Err(e) = check_invariants(&floors, &pushed, &consumed, &expired) {
         panic!("[{label}] invariant violated: {e}");
     }
     assert_eq!(q.len(), 0, "[{label}] intake not drained");
     assert!(matches!(q.pop_batch(0, policy), Assembled::Closed));
 
-    // exact accounting over the live sink the poppers fed
+    // exact accounting over the live sink the poppers fed: the §12
+    // four-bucket split of every consumed item
     let total: u64 = consumed.iter().map(|t| t.len() as u64).sum();
     let snap = metrics.snapshot(1.0);
-    assert_eq!(snap.requests + snap.escalations, total, "[{label}] answered + escalated-away");
+    assert_eq!(
+        snap.requests + snap.escalations + snap.deadline_drops,
+        total,
+        "[{label}] answered + escalated-away + deadline-dropped"
+    );
+    assert_eq!(snap.rejected, refused, "[{label}] every try_push refusal counts as rejected");
     assert_eq!(snap.queue_depth, 0, "[{label}] queue gauge must return to zero");
     let per_req: u64 = snap.per_replica.iter().map(|r| r.requests).sum();
     let per_esc: u64 = snap.per_replica.iter().map(|r| r.escalations).sum();
     let per_stolen: u64 = snap.per_replica.iter().map(|r| r.stolen).sum();
+    let per_drop: u64 = snap.per_replica.iter().map(|r| r.deadline_drops).sum();
     assert_eq!(per_req, snap.requests, "[{label}] per-replica requests sum");
     assert_eq!(per_esc, snap.escalations, "[{label}] per-replica escalations sum");
+    assert_eq!(per_drop, snap.deadline_drops, "[{label}] per-replica deadline-drop sum");
     let stolen_total: u64 =
         consumed.iter().map(|t| t.iter().filter(|c| c.stolen).count() as u64).sum();
     assert_eq!(per_stolen, stolen_total, "[{label}] stolen counter");
+    if cfg.overload {
+        assert_eq!(
+            snap.deadline_drops,
+            expired.len() as u64,
+            "[{label}] every accepted expired item is dropped exactly once"
+        );
+        if !cfg.close_early {
+            // the scenario must actually exercise both §12 paths: a
+            // cap-2 queue against slow poppers has to refuse some
+            // try_pushes, and the ~20% expired coin has to land
+            assert!(!expired.is_empty(), "[{label}] no expired items were pushed");
+            assert!(refused > 0, "[{label}] overload never refused a try_push");
+        }
+    }
 }
 
 /// Run `f` under a watchdog: a hang (deadlock, lost wakeup) becomes a
@@ -335,7 +463,14 @@ fn sweep<I: IntakeQueue<u64, u64> + 'static>(
         for &shards in shard_counts {
             let per_pusher = (2000 / shards as u64).max(40);
             for close_early in [false, true] {
-                let cfg = StressCfg { shards, cap: 4, per_pusher, seed, close_early };
+                let cfg = StressCfg {
+                    shards,
+                    cap: 4,
+                    per_pusher,
+                    seed,
+                    close_early,
+                    overload: false,
+                };
                 let label = format!("{name} seed {seed} shards {shards} early {close_early}");
                 with_watchdog(&label, Duration::from_secs(60), move || {
                     let q = make(cfg.cap, floors(cfg.shards), true);
@@ -372,7 +507,14 @@ fn stress_coarse_intake_certifies_harness() {
 fn stress_shutdown_with_blocked_pushers() {
     for seed in seed_list(&[7, 8]) {
         for shards in [4usize, 8] {
-            let cfg = StressCfg { shards, cap: 1, per_pusher: 1 << 40, seed, close_early: true };
+            let cfg = StressCfg {
+                shards,
+                cap: 1,
+                per_pusher: 1 << 40,
+                seed,
+                close_early: true,
+                overload: false,
+            };
             with_watchdog(&format!("tiny-cap sharded seed {seed}"), Duration::from_secs(60),
                           move || {
                 let q = ShardedIntake::new(cfg.cap, floors(cfg.shards), true);
@@ -387,10 +529,41 @@ fn stress_shutdown_with_blocked_pushers() {
     }
 }
 
+/// §12 overload scenario: tiny caps, slow poppers, seeded `try_push`
+/// admission and seeded expired deadlines — the deadline-drop
+/// conservation oracle (invariant 6) plus the four-bucket accounting,
+/// on BOTH intakes.
+#[test]
+fn stress_overload_admission_drop_conservation() {
+    for seed in seed_list(&[21, 22]) {
+        for shards in [4usize, 8] {
+            let cfg = StressCfg {
+                shards,
+                cap: 2,
+                per_pusher: 200,
+                seed,
+                close_early: false,
+                overload: true,
+            };
+            with_watchdog(&format!("overload sharded seed {seed} shards {shards}"),
+                          Duration::from_secs(60), move || {
+                let q = ShardedIntake::new(cfg.cap, floors(cfg.shards), true);
+                stress_once(&q, cfg);
+            });
+            with_watchdog(&format!("overload coarse seed {seed} shards {shards}"),
+                          Duration::from_secs(60), move || {
+                let q = CoarseIntake::new(cfg.cap, floors(cfg.shards), true);
+                stress_once(&q, cfg);
+            });
+        }
+    }
+}
+
 /// The `ci.sh --stress` sweep: ≥8 seeds × {4, 16, 64} shards on the
 /// §11 intake (plus the coarse reference at the smaller counts — its
-/// single lock makes 64 coarse shards pointlessly slow).  A fast no-op
-/// unless `STRESS_FULL=1`, so tier-1 cost stays flat.
+/// single lock makes 64 coarse shards pointlessly slow), then the §12
+/// overload scenario over a wider seed set.  A fast no-op unless
+/// `STRESS_FULL=1`, so tier-1 cost stays flat.
 #[test]
 fn stress_full_sweep() {
     if std::env::var("STRESS_FULL").is_err() {
@@ -400,6 +573,23 @@ fn stress_full_sweep() {
     let seeds = seed_list(&[1, 2, 3, 4, 5, 6, 7, 8]);
     sweep("sharded-full", ShardedIntake::<u64, u64>::new, &seeds, &[4, 16, 64]);
     sweep("coarse-full", CoarseIntake::<u64, u64>::new, &seeds, &[4, 16]);
+    for &seed in &seeds {
+        for close_early in [false, true] {
+            let cfg = StressCfg {
+                shards: 8,
+                cap: 2,
+                per_pusher: 300,
+                seed: seed.wrapping_add(100),
+                close_early,
+                overload: true,
+            };
+            let label = format!("overload-full seed {} early {close_early}", cfg.seed);
+            with_watchdog(&label, Duration::from_secs(60), move || {
+                let q = ShardedIntake::new(cfg.cap, floors(cfg.shards), true);
+                stress_once(&q, cfg);
+            });
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -409,35 +599,36 @@ fn stress_full_sweep() {
 #[test]
 fn checker_detects_planted_violations() {
     let floors = vec![4, 8];
-    let c = |id, stolen, min_bits| Consumed { id, stolen, min_bits };
+    let c = |id, stolen, min_bits| Consumed { id, stolen, min_bits, dropped: false };
     let pushed = vec![pid(0, 0, 0), pid(0, 0, 1), pid(0, 1, 0)];
+    let live = HashSet::new(); // no expired items in the classic plants
 
     // clean trace passes
     let clean = vec![vec![c(pid(0, 0, 0), false, 0), c(pid(0, 0, 1), false, 0)],
                      vec![c(pid(0, 1, 0), false, 0)]];
-    check_invariants(&floors, &pushed, &clean).expect("clean trace must pass");
+    check_invariants(&floors, &pushed, &clean, &live).expect("clean trace must pass");
 
     // lost item
     let lost = vec![vec![c(pid(0, 0, 0), false, 0)], vec![c(pid(0, 1, 0), false, 0)]];
-    let e = check_invariants(&floors, &pushed, &lost).unwrap_err();
+    let e = check_invariants(&floors, &pushed, &lost, &live).unwrap_err();
     assert!(e.contains("lost"), "{e}");
 
     // duplicated item
     let dup = vec![vec![c(pid(0, 0, 0), false, 0), c(pid(0, 0, 1), false, 0)],
                    vec![c(pid(0, 1, 0), false, 0), c(pid(0, 0, 1), true, 0)]];
-    let e = check_invariants(&floors, &pushed, &dup).unwrap_err();
+    let e = check_invariants(&floors, &pushed, &dup, &live).unwrap_err();
     assert!(e.contains("twice"), "{e}");
 
     // phantom item (consumed, never pushed)
     let phantom = vec![clean[0].clone(),
                        vec![c(pid(0, 1, 0), false, 0), c(pid(0, 1, 7), false, 0)]];
-    let e = check_invariants(&floors, &pushed, &phantom).unwrap_err();
+    let e = check_invariants(&floors, &pushed, &phantom, &live).unwrap_err();
     assert!(e.contains("never pushed"), "{e}");
 
     // owner FIFO inversion (seq 1 before seq 0, both non-stolen, gen 0)
     let inverted = vec![vec![c(pid(0, 0, 1), false, 0), c(pid(0, 0, 0), false, 0)],
                         vec![c(pid(0, 1, 0), false, 0)]];
-    let e = check_invariants(&floors, &pushed, &inverted).unwrap_err();
+    let e = check_invariants(&floors, &pushed, &inverted, &live).unwrap_err();
     assert!(e.contains("FIFO"), "{e}");
 
     // …but the same order IS legal when the older item was stolen away
@@ -445,13 +636,34 @@ fn checker_detects_planted_violations() {
     // global, never per-owner, order)
     let stolen_ok = vec![vec![c(pid(0, 0, 1), false, 0)],
                          vec![c(pid(0, 1, 0), false, 0), c(pid(0, 0, 0), true, 0)]];
-    check_invariants(&floors, &pushed, &stolen_ok).expect("steal reorder is legal");
+    check_invariants(&floors, &pushed, &stolen_ok, &live).expect("steal reorder is legal");
 
     // steal-gate violation: popper 0 (floor 4) stole an 8-bit item
     let gated = vec![vec![c(pid(0, 0, 0), false, 0), c(pid(0, 1, 0), true, 8)],
                      vec![c(pid(0, 0, 1), true, 0)]];
-    let e = check_invariants(&floors, &pushed, &gated).unwrap_err();
+    let e = check_invariants(&floors, &pushed, &gated, &live).unwrap_err();
     assert!(e.contains("gate"), "{e}");
+
+    // ---- §12 deadline-drop conservation plants ----
+    let cd = |id| Consumed { id, stolen: false, min_bits: 0, dropped: true };
+    let expired: HashSet<u64> = [pid(0, 0, 1)].into_iter().collect();
+
+    // matching trace passes: the expired item dropped, the rest served
+    let good = vec![vec![c(pid(0, 0, 0), false, 0), cd(pid(0, 0, 1))],
+                    vec![c(pid(0, 1, 0), false, 0)]];
+    check_invariants(&floors, &pushed, &good, &expired).expect("matching drop trace passes");
+
+    // planted: the expired item was served as if live
+    let served = vec![vec![c(pid(0, 0, 0), false, 0), c(pid(0, 0, 1), false, 0)],
+                      vec![c(pid(0, 1, 0), false, 0)]];
+    let e = check_invariants(&floors, &pushed, &served, &expired).unwrap_err();
+    assert!(e.contains("served instead of dropped"), "{e}");
+
+    // planted: a live item was dropped with no expired deadline
+    let overdrop = vec![vec![c(pid(0, 0, 0), false, 0), cd(pid(0, 0, 1))],
+                        vec![cd(pid(0, 1, 0))]];
+    let e = check_invariants(&floors, &pushed, &overdrop, &expired).unwrap_err();
+    assert!(e.contains("without an expired deadline"), "{e}");
 }
 
 // ---------------------------------------------------------------------
@@ -474,7 +686,8 @@ fn metrics_accounting_fuzz() {
                     for _ in 0..400 {
                         let roll = rng.below(100);
                         if roll < 10 {
-                            // invalid payload: rejected before execution
+                            // invalid payload or admission refusal:
+                            // rejected before execution
                             m.record_rejected();
                             submitted.fetch_add(1, Ordering::Relaxed);
                             continue;
@@ -486,7 +699,13 @@ fn metrics_accounting_fuzz() {
                         }
                         m.queue_pop(size);
                         submitted.fetch_add(size as u64, Ordering::Relaxed);
-                        if roll < 25 {
+                        if roll < 18 {
+                            // admitted, but the SLA expired in the
+                            // queue: dropped at assembly (§12)
+                            m.record_deadline_drops(r, size);
+                            continue;
+                        }
+                        if roll < 33 {
                             // the whole batch failed: every slot is a
                             // failed request
                             m.record_error(r, size, 1e-3);
@@ -506,21 +725,23 @@ fn metrics_accounting_fuzz() {
         });
         let s = m.snapshot(1.0);
         assert_eq!(
-            s.requests + s.failed_requests + s.rejected,
+            s.requests + s.failed_requests + s.rejected + s.deadline_drops,
             submitted.load(Ordering::Relaxed),
-            "seed {seed}: §9 accounting invariant"
+            "seed {seed}: §12 four-bucket accounting invariant"
         );
         assert_eq!(s.queue_depth, 0, "seed {seed}: gauge must drain");
-        let (mut pb, mut pe, mut pr, mut pesc) = (0, 0, 0, 0);
+        let (mut pb, mut pe, mut pr, mut pesc, mut pdrop) = (0, 0, 0, 0, 0);
         for r in &s.per_replica {
             pb += r.batches;
             pe += r.errors;
             pr += r.requests;
             pesc += r.escalations;
+            pdrop += r.deadline_drops;
         }
         assert_eq!(pb, s.batches, "seed {seed}: per-replica batches sum");
         assert_eq!(pe, s.errors, "seed {seed}: per-replica errors sum");
         assert_eq!(pr, s.requests, "seed {seed}: per-replica requests sum");
         assert_eq!(pesc, s.escalations, "seed {seed}: per-replica escalations sum");
+        assert_eq!(pdrop, s.deadline_drops, "seed {seed}: per-replica deadline-drop sum");
     }
 }
