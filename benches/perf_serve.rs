@@ -19,13 +19,25 @@
 //! pools are exactly the regime where the pre-§11 `notify_all` intake
 //! drowned in wakeups — and per-item overhead must stay flat (within 2×
 //! of the 4-replica pool, full-size runs only).
+//!
+//! A third phase measures *recovery* (DESIGN.md §13): chaos kills 1 of
+//! 4 replicas mid-load (`die@N:r1`), the supervisor must detect and
+//! respawn it within the heartbeat + backoff budget, every receiver
+//! must resolve with the four-bucket accounting exact, and the healed
+//! pool's goodput must return to ≥ 90% of the pre-kill baseline
+//! (full-size runs only; the `recovery_pass` verdict is persisted and
+//! gated by `ci.sh --bench-smoke`).
 
 #[path = "common/mod.rs"]
 mod common;
 
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use dybit::coordinator::{load_test, Policy, PoolConfig, Server, SimBackend, SimBackendCfg};
+use dybit::coordinator::{load_test, BackendFactory, ChaosBackend, ChaosSpec,
+                         InferenceBackend, Policy, PoolConfig, Server, SimBackend,
+                         SimBackendCfg, SupervisionCfg};
 use dybit::models::synthetic_resnet;
 use dybit::util::argparse::Args;
 use dybit::util::json::Json;
@@ -225,6 +237,134 @@ fn main() {
             format!("{} ({speedup_at_4:.2}x)", if floor_ok { "PASS" } else { "FAIL" })
         }
     );
+    // ---- phase 3: kill-one-replica recovery (DESIGN.md §13)
+    // measure goodput on a healthy 4-replica pool, then run the same
+    // load while chaos kills replica 1 mid-flight: the supervisor must
+    // detect the death and respawn within the watchdog+backoff budget,
+    // every receiver must resolve with the four-bucket accounting
+    // exact, and the healed pool must recover to >= 90% of the pre-kill
+    // goodput (full-size runs only)
+    // the kill is a clean death (detected in one heartbeat tick, not by
+    // the watchdog), so the watchdog can sit far above any batch wall
+    // time — loaded CI boxes must not spuriously supersede a busy worker
+    let sup = SupervisionCfg {
+        heartbeat: Duration::from_millis(5),
+        watchdog: Duration::from_millis(500),
+        max_restarts: 3,
+        backoff: Duration::from_millis(10),
+        backoff_cap: Duration::from_millis(50),
+    };
+    let heal_budget =
+        sup.watchdog + sup.backoff_for(1) + sup.heartbeat * 2 + Duration::from_millis(500);
+    let die_at = if smoke { 1 } else { 5 };
+    let (h_clients, h_per_client) = if smoke { (4, 6) } else { (16, 60) };
+    let heal_pool = |chaos: bool| -> Server {
+        let inner = SimBackend::factory(cfg.clone());
+        let factory: BackendFactory = if chaos {
+            // only the FIRST incarnation of replica 1 carries the fault:
+            // the respawn is clean, so the pool heals instead of flapping
+            // its way to retirement
+            let spec = ChaosSpec::parse(&format!("die@{die_at}:r1")).expect("chaos spec");
+            let seen = Mutex::new(HashSet::new());
+            Arc::new(move |r| {
+                let first = seen.lock().expect("chaos gate").insert(r);
+                let backend = inner(r)?;
+                if first {
+                    Ok(Box::new(ChaosBackend::new(backend, &spec, r))
+                        as Box<dyn InferenceBackend>)
+                } else {
+                    Ok(backend)
+                }
+            })
+        } else {
+            inner
+        };
+        let pool = PoolConfig {
+            policy: Policy {
+                max_batch: cfg.batch,
+                max_wait: Duration::from_micros(300),
+            },
+            queue_cap: 1024,
+            replicas: 4,
+            supervision: Some(sup.clone()),
+            ..PoolConfig::default()
+        };
+        Server::start_pool(pool, factory).expect("pool start")
+    };
+
+    // pre-kill baseline
+    let server = heal_pool(false);
+    let t0 = Instant::now();
+    load_test(&server, h_clients, h_per_client, cfg.img_elems).expect("baseline load");
+    let rps_pre = (h_clients * h_per_client) as f64 / t0.elapsed().as_secs_f64();
+    let base_snap = server.shutdown().expect("baseline shutdown");
+    assert_eq!(base_snap.restarts, 0, "healthy baseline must not restart anything");
+
+    // kill run: replica 1 of 4 dies cleanly after its Nth forward call
+    // while the load is in flight
+    let server = heal_pool(true);
+    load_test(&server, h_clients, h_per_client, cfg.img_elems).expect("kill-phase load");
+    // respawn must land within the supervision budget once the replica
+    // is dead; the nudge load covers small smoke runs where the main
+    // load may finish before replica 1 has served its fatal call
+    let tb = Instant::now();
+    let deadline = if smoke { Duration::from_secs(10) } else { heal_budget };
+    let mut extra = 0u64;
+    loop {
+        let snap = server.snapshot();
+        if snap.restarts >= 1 {
+            break;
+        }
+        assert!(
+            tb.elapsed() < deadline,
+            "replica 1 was not respawned within the recovery budget {deadline:?}"
+        );
+        if snap.per_replica[1].batches < die_at as u64 {
+            load_test(&server, 1, 4, cfg.img_elems).expect("nudge load");
+            extra += 4;
+        } else {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    let respawn_ms = tb.elapsed().as_secs_f64() * 1e3;
+
+    // post-recovery goodput on the healed pool
+    let t0 = Instant::now();
+    load_test(&server, h_clients, h_per_client, cfg.img_elems).expect("post-recovery load");
+    let rps_post = (h_clients * h_per_client) as f64 / t0.elapsed().as_secs_f64();
+    let faults = server.fault_log();
+    let heal_snap = server.shutdown().expect("supervised shutdown");
+    let submitted = (2 * h_clients * h_per_client) as u64 + extra;
+    assert_eq!(
+        heal_snap.requests
+            + heal_snap.failed_requests
+            + heal_snap.rejected
+            + heal_snap.deadline_drops,
+        submitted,
+        "four-bucket accounting must stay exact through the kill"
+    );
+    assert_eq!(heal_snap.queue_depth, 0, "queue must drain after the kill run");
+    assert!(heal_snap.restarts >= 1, "the kill must show up as a restart");
+    assert_eq!(heal_snap.retired, 0, "one clean death must not exhaust the budget");
+    let recovery_ratio = rps_post / rps_pre;
+    let recovery_ok = smoke || recovery_ratio >= 0.9;
+    println!(
+        "\nrecovery: killed 1 of 4 replicas mid-load (die@{die_at}:r1), respawned \
+         in {respawn_ms:.0}ms ({} restart(s), {} fault-log line(s)); goodput \
+         {rps_pre:.0} -> {rps_post:.0} req/s; acceptance >= 90% of baseline: {}",
+        heal_snap.restarts,
+        faults.len(),
+        if smoke {
+            "n/a (smoke load)".to_string()
+        } else {
+            format!(
+                "{} ({:.0}%)",
+                if recovery_ok { "PASS" } else { "FAIL" },
+                recovery_ratio * 100.0
+            )
+        }
+    );
+
     common::save_results(
         "perf_serve",
         Json::obj(vec![
@@ -238,11 +378,23 @@ fn main() {
             // null on smoke runs, same contract as floor_pass
             ("sched_flat_pass", if smoke { Json::Null } else { Json::Bool(sched_ok) }),
             ("sched_rows", Json::Arr(sched_rows)),
+            // null on smoke runs, same contract as floor_pass
+            ("recovery_pass", if smoke { Json::Null } else { Json::Bool(recovery_ok) }),
+            (
+                "recovery",
+                Json::obj(vec![
+                    ("rps_pre", Json::num(rps_pre)),
+                    ("rps_post", Json::num(rps_post)),
+                    ("ratio", Json::num(recovery_ratio)),
+                    ("respawn_ms", Json::num(respawn_ms)),
+                    ("restarts", Json::num(heal_snap.restarts as f64)),
+                ]),
+            ),
         ]),
     )
     .expect("save perf results");
     println!("perf_serve done");
-    if !floor_ok || !sched_ok {
+    if !floor_ok || !sched_ok || !recovery_ok {
         // make the floors real gates: scripted full-size runs must fail
         std::process::exit(1);
     }

@@ -10,13 +10,17 @@
 #                         # (quick end-to-end bench smoke); fails if any
 #                         # bench result JSON is missing or empty, or if
 #                         # perf_route persisted a failed goodput/PI gate
+#                         # or perf_serve a failed scaling/recovery gate
 #                         # (full-size runs write goodput_pass /
-#                         # controller_pass; smoke writes null)
+#                         # controller_pass / recovery_pass; smoke
+#                         # writes null)
 #   ./ci.sh --stress      # additionally run the full coordinator_stress
 #                         # sweep (8 seeds x {4,16,64} shards + tiny-cap
 #                         # shutdown runs + seeded §12 overload scenarios
-#                         # with deadline-drop conservation) against both
-#                         # intake implementations (DESIGN.md §11–§12)
+#                         # with deadline-drop conservation + seeded §13
+#                         # chaos schedules — kill/flap/failover with
+#                         # restart conservation) against both intake
+#                         # implementations (DESIGN.md §11–§13)
 #
 # Note tier-1's `cargo test -q` already runs coordinator_stress with its
 # small default seed set, so the concurrency interleavings are exercised
@@ -91,6 +95,16 @@ if [[ $bench_smoke -eq 1 ]]; then
   for gate in goodput_pass controller_pass floor_pass; do
     if grep -q "\"${gate}\": false" artifacts/results/perf_route.json; then
       echo "ci.sh: perf_route persisted ${gate}=false (SLA/overload gate)" >&2
+      exit 1
+    fi
+  done
+
+  # perf_serve persists its own verdicts the same way, including the
+  # §13 kill-one-replica recovery gate (recovery_pass: bool on
+  # full-size runs, null on smoke)
+  for gate in floor_pass sched_flat_pass recovery_pass; do
+    if grep -q "\"${gate}\": false" artifacts/results/perf_serve.json; then
+      echo "ci.sh: perf_serve persisted ${gate}=false (serving perf/recovery gate)" >&2
       exit 1
     fi
   done

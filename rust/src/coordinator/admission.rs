@@ -161,12 +161,23 @@ const COST_EWMA_ALPHA: f64 = 0.2;
 pub struct Admission {
     /// Per-replica batch-cost estimate, f64 seconds in atomic bits.
     cost_bits: Vec<AtomicU64>,
+    /// The constructor's per-replica seeds (f64 bits), kept so a
+    /// respawned replica can be re-seeded instead of inheriting the
+    /// EWMA its dead incarnation left behind (DESIGN.md §13).
+    seed_bits: Vec<u64>,
     /// Occupancy table, `shard * tenants + (tenant % tenants)`.
     held: Vec<AtomicUsize>,
     tenants: u32,
     /// Max queue slots one tenant may hold per shard.
     quota: usize,
     slack: f64,
+    /// Pool size the projection was sized for.
+    replicas: usize,
+    /// Currently live replicas (supervisor-maintained, DESIGN.md §13):
+    /// the delay projection inflates by `replicas / healthy` so a
+    /// degraded pool rejects earlier instead of promising capacity the
+    /// dead replicas no longer provide.
+    healthy: AtomicUsize,
 }
 
 impl Admission {
@@ -186,12 +197,13 @@ impl Admission {
             replicas,
             replicas
         );
-        let cost_bits = (0..replicas)
+        let seed_bits: Vec<u64> = (0..replicas)
             .map(|r| {
                 let s = cfg.batch_cost.get(r).map_or(0.0, |d| d.as_secs_f64());
-                AtomicU64::new(s.to_bits())
+                s.to_bits()
             })
             .collect();
+        let cost_bits = seed_bits.iter().map(|&b| AtomicU64::new(b)).collect();
         let tenants = cfg.tenants;
         let quota = if tenants <= 1 {
             usize::MAX // single tenant: the queue cap is the only bound
@@ -199,7 +211,16 @@ impl Admission {
             (queue_cap.div_ceil(tenants as usize)).max(1)
         };
         let held = (0..replicas * tenants as usize).map(|_| AtomicUsize::new(0)).collect();
-        Ok(Admission { cost_bits, held, tenants, quota, slack: cfg.slack })
+        Ok(Admission {
+            cost_bits,
+            seed_bits,
+            held,
+            tenants,
+            quota,
+            slack: cfg.slack,
+            replicas,
+            healthy: AtomicUsize::new(replicas),
+        })
     }
 
     /// Current batch-cost estimate for replica `r`, seconds.
@@ -234,13 +255,41 @@ impl Admission {
         }
     }
 
+    /// Restore replica `r`'s batch-cost estimate to its constructor
+    /// seed.  Called when the supervisor respawns a replica
+    /// (DESIGN.md §13): the EWMA its dead incarnation accumulated —
+    /// possibly poisoned by chaos jitter or a hang — must not gate
+    /// admission against the fresh backend.
+    pub fn reseed_cost(&self, r: usize) {
+        if let (Some(cell), Some(&seed)) = (self.cost_bits.get(r), self.seed_bits.get(r)) {
+            cell.store(seed, Ordering::Relaxed);
+        }
+    }
+
+    /// Record how many replicas are currently live (clamped to the
+    /// pool size).  The supervisor calls this on every health tick
+    /// (DESIGN.md §13); the value scales [`projected_delay`] so a
+    /// degraded pool stops promising full-pool capacity.
+    ///
+    /// [`projected_delay`]: Admission::projected_delay
+    pub fn set_healthy_replicas(&self, n: usize) {
+        self.healthy.store(n.min(self.replicas), Ordering::Relaxed);
+    }
+
     /// Projected queue delay for a request landing on `shard` at queue
     /// depth `depth`: full batches ahead of it, plus the batch it
     /// joins, each at the shard's estimated cost, times the safety
-    /// slack (DESIGN.md §12).
+    /// slack (DESIGN.md §12), inflated by `replicas / healthy` when the
+    /// pool is degraded (§13) — with every replica down the projection
+    /// is `Duration::MAX`, so any deadline is infeasible.
     pub fn projected_delay(&self, shard: usize, depth: usize, max_batch: usize) -> Duration {
+        let healthy = self.healthy.load(Ordering::Relaxed);
+        if healthy == 0 {
+            return Duration::MAX;
+        }
+        let degraded = self.replicas as f64 / healthy as f64;
         let batches = (depth / max_batch.max(1)) as f64 + 1.0;
-        let s = batches * self.batch_cost_s(shard) * self.slack;
+        let s = batches * self.batch_cost_s(shard) * self.slack * degraded;
         if s.is_finite() && s >= 0.0 {
             Duration::try_from_secs_f64(s).unwrap_or(Duration::MAX)
         } else {
@@ -449,6 +498,50 @@ mod tests {
         a.observe_batch_cost(0, f64::NAN); // garbage ignored
         a.observe_batch_cost(0, -1.0);
         assert!((a.batch_cost_s(0) - 0.012).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reseed_restores_the_constructor_seed() {
+        let cfg = AdmissionCfg {
+            batch_cost: vec![Duration::from_millis(10); 2],
+            ..AdmissionCfg::default()
+        };
+        let a = Admission::new(&cfg, 2, 64).unwrap();
+        // a chaos-poisoned incarnation drags the EWMA way off
+        for _ in 0..50 {
+            a.observe_batch_cost(0, 5.0);
+        }
+        assert!(a.batch_cost_s(0) > 1.0);
+        a.reseed_cost(0);
+        assert!((a.batch_cost_s(0) - 0.010).abs() < 1e-12);
+        // the sibling replica's estimate is untouched
+        assert!((a.batch_cost_s(1) - 0.010).abs() < 1e-12);
+        // unseeded pools reseed back to zero (learn-from-scratch)
+        let b = adm(1, 64);
+        b.observe_batch_cost(0, 0.5);
+        b.reseed_cost(0);
+        assert_eq!(b.batch_cost_s(0), 0.0);
+        // out-of-range replica ids are a no-op, not a panic
+        a.reseed_cost(99);
+    }
+
+    #[test]
+    fn degraded_pool_inflates_the_projection() {
+        let cfg = AdmissionCfg {
+            batch_cost: vec![Duration::from_millis(10); 4],
+            ..AdmissionCfg::default()
+        };
+        let a = Admission::new(&cfg, 4, 64).unwrap();
+        assert_eq!(a.projected_delay(0, 0, 8), Duration::from_millis(10));
+        // 2 of 4 replicas down: the survivors carry twice the load
+        a.set_healthy_replicas(2);
+        assert_eq!(a.projected_delay(0, 0, 8), Duration::from_millis(20));
+        // nothing alive: every deadline is infeasible
+        a.set_healthy_replicas(0);
+        assert_eq!(a.projected_delay(0, 0, 8), Duration::MAX);
+        // recovery restores the full-pool projection (clamped to pool size)
+        a.set_healthy_replicas(100);
+        assert_eq!(a.projected_delay(0, 0, 8), Duration::from_millis(10));
     }
 
     #[test]

@@ -47,6 +47,13 @@ pub trait InferenceBackend {
     /// fails the whole batch (every request in it gets an error reply);
     /// it must not kill the replica.
     fn forward(&mut self, x: Tensor) -> Result<Tensor>;
+    /// `true` when the backend has failed permanently and the worker
+    /// should exit *between* batches (after the current batch's replies
+    /// are sent) so the supervisor can respawn it (DESIGN.md §13).  The
+    /// default — a healthy backend — never trips.
+    fn fatal(&self) -> bool {
+        false
+    }
 }
 
 /// Constructs one backend per replica, invoked with the replica id on

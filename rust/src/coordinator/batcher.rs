@@ -181,6 +181,26 @@ pub trait IntakeQueue<T, R>: Send + Sync {
     /// see [`Assembled::Closed`].
     fn close(&self);
 
+    /// Close a single shard (its owner died or was retired, DESIGN.md
+    /// §13): pushes routed at it refuse with the item back while the
+    /// rest of the intake keeps serving.  Items already queued stay
+    /// until stolen or drained — closing loses nothing.
+    fn close_shard(&self, shard: usize);
+
+    /// Remove and return everything queued on `shard` — the failover
+    /// drain primitive (DESIGN.md §13).  The caller owns re-homing or
+    /// answering every returned item (no-dead-`Receiver` contract).
+    fn drain_shard(&self, shard: usize) -> Vec<Item<T, R>>;
+
+    /// Bounded-wait push: like [`push`] but gives up with
+    /// [`PushRefused::Full`] after `timeout` instead of blocking
+    /// indefinitely — the escalation ladder's per-candidate attempt
+    /// (DESIGN.md §13).
+    ///
+    /// [`push`]: IntakeQueue::push
+    fn push_timeout(&self, shard: usize, item: Item<T, R>, timeout: Duration)
+                    -> std::result::Result<(), PushRefused<T, R>>;
+
     /// Items currently queued across all shards (diagnostics).
     fn len(&self) -> usize;
 
@@ -366,6 +386,73 @@ impl<T, R> ShardedIntake<T, R> {
         drop(g);
         self.ring_one_bell(shard, bits);
         Ok(())
+    }
+
+    /// Bounded-wait push onto `shard`: the same commit path as
+    /// [`push`], but a shard still full after `timeout` refuses with
+    /// [`PushRefused::Full`] instead of waiting forever (DESIGN.md
+    /// §13).  An unrepresentable deadline degrades to a plain blocking
+    /// push.
+    ///
+    /// [`push`]: ShardedIntake::push
+    pub fn push_timeout(&self, shard: usize, item: Item<T, R>, timeout: Duration)
+                        -> std::result::Result<(), PushRefused<T, R>> {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        let deadline = Instant::now().checked_add(timeout);
+        let slot = &self.shards[shard];
+        let mut g = lock(&slot.state);
+        loop {
+            if g.closed {
+                return Err(PushRefused::Closed(item));
+            }
+            if g.q.len() < self.cap {
+                break;
+            }
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(PushRefused::Full(item));
+                    }
+                    g = wait_timeout(&slot.not_full, g, d - now).0;
+                }
+                None => g = wait(&slot.not_full, g),
+            }
+        }
+        let bits = item.min_bits;
+        g.q.push_back(item);
+        self.board_update(shard, &g.q);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        drop(g);
+        self.ring_one_bell(shard, bits);
+        Ok(())
+    }
+
+    /// Close one shard only (DESIGN.md §13): its pushes start refusing
+    /// while the sibling shards — and steals *from* this shard's
+    /// remaining queue — keep working.  Blocked pushers wake, re-check,
+    /// and get their item back.
+    pub fn close_shard(&self, shard: usize) {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        let slot = &self.shards[shard];
+        let mut g = lock(&slot.state);
+        g.closed = true;
+        slot.not_full.notify_all();
+    }
+
+    /// Remove and return everything queued on `shard` (the §13
+    /// failover drain).  The board is zeroed under the shard lock so
+    /// thieves stop selecting the emptied victim immediately.
+    pub fn drain_shard(&self, shard: usize) -> Vec<Item<T, R>> {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        let slot = &self.shards[shard];
+        let mut g = lock(&slot.state);
+        let items: Vec<Item<T, R>> = g.q.drain(..).collect();
+        self.board_update(shard, &g.q);
+        drop(g);
+        // freed capacity: blocked pushers wake (and re-check `closed`)
+        slot.not_full.notify_all();
+        items
     }
 
     /// Stop accepting pushes; replicas drain what is queued and then see
@@ -674,6 +761,19 @@ impl<T: Send, R: Send> IntakeQueue<T, R> for ShardedIntake<T, R> {
         ShardedIntake::close(self)
     }
 
+    fn close_shard(&self, shard: usize) {
+        ShardedIntake::close_shard(self, shard)
+    }
+
+    fn drain_shard(&self, shard: usize) -> Vec<Item<T, R>> {
+        ShardedIntake::drain_shard(self, shard)
+    }
+
+    fn push_timeout(&self, shard: usize, item: Item<T, R>, timeout: Duration)
+                    -> std::result::Result<(), PushRefused<T, R>> {
+        ShardedIntake::push_timeout(self, shard, item, timeout)
+    }
+
     fn len(&self) -> usize {
         ShardedIntake::len(self)
     }
@@ -694,6 +794,9 @@ impl<T: Send, R: Send> IntakeQueue<T, R> for ShardedIntake<T, R> {
 struct Shards<T, R> {
     queues: Vec<VecDeque<Item<T, R>>>,
     closed: bool,
+    /// Per-shard closure (§13 `close_shard`): pushes at a closed shard
+    /// refuse while the rest keep serving.
+    closed_shards: Vec<bool>,
 }
 
 /// The §10 intake, verbatim: one mutex + one shared condvar over all
@@ -718,8 +821,9 @@ impl<T, R> CoarseIntake<T, R> {
         assert!(!floor_bits.is_empty(), "intake needs at least one shard");
         assert!(cap >= 1, "intake needs a non-zero capacity");
         let queues = floor_bits.iter().map(|_| VecDeque::new()).collect();
+        let closed_shards = vec![false; floor_bits.len()];
         CoarseIntake {
-            state: Mutex::new(Shards { queues, closed: false }),
+            state: Mutex::new(Shards { queues, closed: false, closed_shards }),
             cv: Condvar::new(),
             cap,
             floor_bits,
@@ -736,7 +840,7 @@ impl<T, R> CoarseIntake<T, R> {
         let shard = shard.min(self.floor_bits.len() - 1);
         let mut g = lock(&self.state);
         loop {
-            if g.closed {
+            if g.closed || g.closed_shards[shard] {
                 return Err(item);
             }
             if g.queues[shard].len() < self.cap {
@@ -756,7 +860,7 @@ impl<T, R> CoarseIntake<T, R> {
                     -> std::result::Result<(), PushRefused<T, R>> {
         let shard = shard.min(self.floor_bits.len() - 1);
         let mut g = lock(&self.state);
-        if g.closed {
+        if g.closed || g.closed_shards[shard] {
             return Err(PushRefused::Closed(item));
         }
         if g.queues[shard].len() >= self.cap {
@@ -767,9 +871,57 @@ impl<T, R> CoarseIntake<T, R> {
         Ok(())
     }
 
+    /// Bounded-wait push (§13): same single-lock body as [`push`],
+    /// giving up with [`PushRefused::Full`] after `timeout`.
+    ///
+    /// [`push`]: CoarseIntake::push
+    pub fn push_timeout(&self, shard: usize, item: Item<T, R>, timeout: Duration)
+                        -> std::result::Result<(), PushRefused<T, R>> {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        let deadline = Instant::now().checked_add(timeout);
+        let mut g = lock(&self.state);
+        loop {
+            if g.closed || g.closed_shards[shard] {
+                return Err(PushRefused::Closed(item));
+            }
+            if g.queues[shard].len() < self.cap {
+                g.queues[shard].push_back(item);
+                self.cv.notify_all();
+                return Ok(());
+            }
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(PushRefused::Full(item));
+                    }
+                    g = wait_timeout(&self.cv, g, d - now).0;
+                }
+                None => g = wait(&self.cv, g),
+            }
+        }
+    }
+
     pub fn close(&self) {
         lock(&self.state).closed = true;
         self.cv.notify_all();
+    }
+
+    /// Close one shard only (§13): its pushes refuse while siblings —
+    /// and steals from its remaining queue — keep working.
+    pub fn close_shard(&self, shard: usize) {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        lock(&self.state).closed_shards[shard] = true;
+        self.cv.notify_all();
+    }
+
+    /// Remove and return everything queued on `shard` (the §13
+    /// failover drain).
+    pub fn drain_shard(&self, shard: usize) -> Vec<Item<T, R>> {
+        let shard = shard.min(self.floor_bits.len() - 1);
+        let items: Vec<Item<T, R>> = lock(&self.state).queues[shard].drain(..).collect();
+        self.cv.notify_all();
+        items
     }
 
     pub fn len(&self) -> usize {
@@ -875,6 +1027,19 @@ impl<T: Send, R: Send> IntakeQueue<T, R> for CoarseIntake<T, R> {
 
     fn close(&self) {
         CoarseIntake::close(self)
+    }
+
+    fn close_shard(&self, shard: usize) {
+        CoarseIntake::close_shard(self, shard)
+    }
+
+    fn drain_shard(&self, shard: usize) -> Vec<Item<T, R>> {
+        CoarseIntake::drain_shard(self, shard)
+    }
+
+    fn push_timeout(&self, shard: usize, item: Item<T, R>, timeout: Duration)
+                    -> std::result::Result<(), PushRefused<T, R>> {
+        CoarseIntake::push_timeout(self, shard, item, timeout)
     }
 
     fn len(&self) -> usize {
@@ -1168,6 +1333,90 @@ mod tests {
                     thread::sleep(Duration::from_millis(20)); // let it park
                     q.try_push(0, item(5)).ok().unwrap();
                     assert_eq!(popper.join().unwrap(), 5);
+                }
+
+                #[test]
+                fn close_shard_refuses_locally_keeps_siblings_serving() {
+                    let q = $I::new(64, vec![8, 8], true);
+                    q.push(0, item(1)).ok().unwrap();
+                    q.close_shard(0);
+                    // the closed shard refuses both push flavors, item back
+                    assert!(q.push(0, item(2)).is_err());
+                    match q.try_push(0, item(3)) {
+                        Err(PushRefused::Closed(it)) => assert_eq!(it.req.payload, 3),
+                        _ => panic!("expected Closed refusal"),
+                    }
+                    match q.push_timeout(0, item(4), Duration::from_millis(5)) {
+                        Err(PushRefused::Closed(it)) => assert_eq!(it.req.payload, 4),
+                        _ => panic!("expected Closed refusal"),
+                    }
+                    // the closed shard's backlog is still stealable…
+                    let policy = Policy { max_batch: 1, max_wait: Duration::from_millis(1) };
+                    match q.pop_batch(1, policy) {
+                        Assembled::Batch(b) => {
+                            assert_eq!(b[0].req.payload, 1);
+                            assert!(b[0].stolen);
+                        }
+                        _ => panic!("expected stolen batch"),
+                    }
+                    // …and the sibling shard keeps accepting and serving
+                    q.push(1, item(5)).ok().unwrap();
+                    match q.pop_batch(1, policy) {
+                        Assembled::Batch(b) => assert_eq!(payloads(&b), vec![5]),
+                        _ => panic!("expected sibling batch"),
+                    }
+                }
+
+                #[test]
+                fn drain_shard_empties_exactly_one_shard() {
+                    let q = $I::new(64, vec![8, 8], true);
+                    for i in 0..3 {
+                        q.push(0, item(i)).ok().unwrap();
+                    }
+                    q.push(1, item(9)).ok().unwrap();
+                    let drained = q.drain_shard(0);
+                    assert_eq!(payloads(&drained), vec![0, 1, 2], "FIFO order preserved");
+                    assert_eq!(q.shard_len(0), 0);
+                    assert_eq!(q.shard_len(1), 1);
+                    assert_eq!(q.len(), 1);
+                    assert!(q.drain_shard(0).is_empty(), "second drain finds nothing");
+                    // a drained-but-open shard accepts again
+                    q.push(0, item(7)).ok().unwrap();
+                    assert_eq!(q.shard_len(0), 1);
+                }
+
+                #[test]
+                fn push_timeout_gives_up_on_a_full_shard_with_the_item_back() {
+                    let q = single(1);
+                    q.push(0, item(0)).ok().unwrap();
+                    let t0 = Instant::now();
+                    match q.push_timeout(0, item(1), Duration::from_millis(20)) {
+                        Err(PushRefused::Full(it)) => assert_eq!(it.req.payload, 1),
+                        _ => panic!("expected Full after the timeout"),
+                    }
+                    assert!(t0.elapsed() >= Duration::from_millis(20));
+                    // with capacity, it lands on the same commit path as push
+                    let policy = Policy { max_batch: 1, max_wait: Duration::from_millis(1) };
+                    assert!(matches!(q.pop_batch(0, policy), Assembled::Batch(_)));
+                    assert!(q.push_timeout(0, item(2), Duration::from_millis(20)).is_ok());
+                    assert_eq!(q.shard_len(0), 1);
+                }
+
+                #[test]
+                fn push_timeout_succeeds_when_a_pop_frees_space_in_time() {
+                    let q = Arc::new(single(1));
+                    q.push(0, item(0)).ok().unwrap();
+                    let q2 = Arc::clone(&q);
+                    let popper = thread::spawn(move || {
+                        thread::sleep(Duration::from_millis(10));
+                        let policy = Policy { max_batch: 1, max_wait: Duration::from_millis(1) };
+                        matches!(q2.pop_batch(0, policy), Assembled::Batch(_))
+                    });
+                    assert!(
+                        q.push_timeout(0, item(1), Duration::from_secs(5)).is_ok(),
+                        "freed capacity within the wait must admit the item"
+                    );
+                    assert!(popper.join().unwrap());
                 }
 
                 #[test]

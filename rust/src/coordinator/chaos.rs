@@ -1,0 +1,383 @@
+//! Seeded fault injection for the serving pool (DESIGN.md §13).
+//!
+//! A [`ChaosBackend`] decorates any [`InferenceBackend`] and injects
+//! the failure modes the supervision layer must survive — contained
+//! panics, permanent deaths, wedged forwards, transient error bursts,
+//! and slow-batch jitter — at *deterministic* points: every fault is
+//! keyed to a forward-call ordinal and every random choice comes from a
+//! seeded [`Rng`], so a failing test or bench run replays exactly.
+//!
+//! Fault grammar (comma-separated clauses, `ChaosSpec::parse`):
+//!
+//! | clause | effect on the wrapped backend |
+//! |---|---|
+//! | `panic@N` | forward call `N` panics (caught per-chunk → batch `Err`) |
+//! | `die@N` | serve call `N` normally, then report [`fatal`] — the worker exits *between* batches and the supervisor respawns it |
+//! | `hang@N=MS` | forward call `N` sleeps `MS` ms first (trips the watchdog) |
+//! | `err@N+K` | forward calls `N..N+K` return `Err` (transient burst) |
+//! | `jitter=MS` | every forward sleeps a seeded `0..MS` ms first |
+//! | `seed=S` | seed of the jitter stream (default 0) |
+//!
+//! Any clause may carry a `:rI` suffix to scope it to replica `I`
+//! (e.g. `die@3:r0,jitter=2`); unscoped clauses apply to every
+//! replica.  Call ordinals are 1-based and count *forward calls* (one
+//! per assembled chunk), the same unit the heartbeat epoch advances in.
+//!
+//! [`fatal`]: InferenceBackend::fatal
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::backend::{BackendFactory, InferenceBackend};
+
+/// One parsed fault clause.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Forward call `at` panics (contained by the worker's per-chunk
+    /// `catch_unwind`; the batch gets an `Err` reply).
+    Panic { at: u64 },
+    /// Call `at` executes normally, after which the backend reports
+    /// [`InferenceBackend::fatal`] — a clean death between batches.
+    Die { at: u64 },
+    /// Forward call `at` sleeps `for_ms` before executing.
+    Hang { at: u64, for_ms: u64 },
+    /// Forward calls `at..at+count` return `Err`.
+    Err { at: u64, count: u64 },
+    /// Every forward sleeps a seeded `0..max_ms` ms first.
+    Jitter { max_ms: u64 },
+}
+
+/// A fault scoped to one replica (`replica: None` = every replica).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScopedFault {
+    pub fault: Fault,
+    pub replica: Option<usize>,
+}
+
+/// A parsed chaos schedule: which faults fire where, plus the jitter
+/// seed.  Cheap to clone into factory closures.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosSpec {
+    pub faults: Vec<ScopedFault>,
+    pub seed: u64,
+}
+
+impl ChaosSpec {
+    /// Parse the `--chaos` grammar (module docs).  Empty spec = no
+    /// faults (the decorator becomes a pass-through with a counter).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut out = ChaosSpec::default();
+        for raw in spec.split(',') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            // split a trailing `:rI` replica scope off the clause
+            let (clause, replica) = match raw.rsplit_once(":r") {
+                Some((c, r)) => {
+                    let id = r
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("chaos: bad replica scope in '{raw}'"))?;
+                    (c, Some(id))
+                }
+                None => (raw, None),
+            };
+            if let Some(s) = clause.strip_prefix("seed=") {
+                ensure!(replica.is_none(), "chaos: seed cannot be replica-scoped");
+                out.seed = s.parse().map_err(|_| anyhow!("chaos: bad seed in '{raw}'"))?;
+                continue;
+            }
+            let fault = if let Some(s) = clause.strip_prefix("panic@") {
+                Fault::Panic { at: parse_at(s, raw)? }
+            } else if let Some(s) = clause.strip_prefix("die@") {
+                Fault::Die { at: parse_at(s, raw)? }
+            } else if let Some(s) = clause.strip_prefix("hang@") {
+                let (at, ms) = s
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("chaos: hang needs '@N=MS', got '{raw}'"))?;
+                Fault::Hang { at: parse_at(at, raw)?, for_ms: parse_ms(ms, raw)? }
+            } else if let Some(s) = clause.strip_prefix("err@") {
+                let (at, count) = match s.split_once('+') {
+                    Some((a, c)) => (
+                        parse_at(a, raw)?,
+                        c.parse::<u64>()
+                            .ok()
+                            .filter(|&c| c >= 1)
+                            .ok_or_else(|| anyhow!("chaos: bad burst count in '{raw}'"))?,
+                    ),
+                    None => (parse_at(s, raw)?, 1),
+                };
+                Fault::Err { at, count }
+            } else if let Some(s) = clause.strip_prefix("jitter=") {
+                Fault::Jitter { max_ms: parse_ms(s, raw)? }
+            } else {
+                bail!(
+                    "chaos: unknown clause '{raw}' (want panic@N | die@N | hang@N=MS | \
+                     err@N+K | jitter=MS | seed=S, each with optional ':rI' scope)"
+                );
+            };
+            out.faults.push(ScopedFault { fault, replica });
+        }
+        Ok(out)
+    }
+
+    /// Faults that apply to `replica`.
+    pub fn faults_for(&self, replica: usize) -> Vec<Fault> {
+        self.faults
+            .iter()
+            .filter(|f| f.replica.map_or(true, |r| r == replica))
+            .map(|f| f.fault)
+            .collect()
+    }
+
+    /// Decorate `inner` so every replica it builds is wrapped in a
+    /// [`ChaosBackend`] carrying this schedule.  A respawned replica
+    /// gets a *fresh* wrapper (call counter back to 1), so `die@N`
+    /// kills each incarnation at the same point — a flapping replica —
+    /// unless the schedule scopes it away.
+    pub fn wrap(self, inner: BackendFactory) -> BackendFactory {
+        Arc::new(move |replica| {
+            let backend = inner(replica)?;
+            Ok(Box::new(ChaosBackend::new(backend, &self, replica))
+                as Box<dyn InferenceBackend>)
+        })
+    }
+}
+
+fn parse_at(s: &str, raw: &str) -> Result<u64> {
+    s.parse::<u64>()
+        .ok()
+        .filter(|&n| n >= 1)
+        .ok_or_else(|| anyhow!("chaos: call ordinal must be >= 1 in '{raw}'"))
+}
+
+fn parse_ms(s: &str, raw: &str) -> Result<u64> {
+    s.parse::<u64>().map_err(|_| anyhow!("chaos: bad millisecond value in '{raw}'"))
+}
+
+/// The decorator: forwards to `inner`, injecting this replica's faults
+/// at their scheduled call ordinals.  The call counter advances on
+/// every `forward`, including ones that fault — ordinals are positions
+/// in the call stream, not in the success stream.
+pub struct ChaosBackend {
+    inner: Box<dyn InferenceBackend>,
+    faults: Vec<Fault>,
+    calls: u64,
+    rng: Rng,
+    dead: Arc<AtomicBool>,
+    name: String,
+}
+
+impl ChaosBackend {
+    pub fn new(inner: Box<dyn InferenceBackend>, spec: &ChaosSpec, replica: usize) -> Self {
+        let name = format!("chaos({})", inner.name());
+        ChaosBackend {
+            faults: spec.faults_for(replica),
+            calls: 0,
+            // decorrelate replicas' jitter streams without extra config
+            rng: Rng::new(spec.seed ^ (replica as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)),
+            dead: Arc::new(AtomicBool::new(false)),
+            inner,
+            name,
+        }
+    }
+
+    /// Shared handle to the fatal flag (tests flip it to force a death
+    /// at an exact moment instead of a call ordinal).
+    pub fn dead_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.dead)
+    }
+}
+
+impl InferenceBackend for ChaosBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn img_elems(&self) -> usize {
+        self.inner.img_elems()
+    }
+
+    fn forward(&mut self, x: Tensor) -> Result<Tensor> {
+        self.calls += 1;
+        let n = self.calls;
+        let mut jitter = 0u64;
+        for &f in &self.faults {
+            match f {
+                Fault::Panic { at } if at == n => {
+                    panic!("chaos: injected panic (call {n})");
+                }
+                Fault::Hang { at, for_ms } if at == n => {
+                    std::thread::sleep(Duration::from_millis(for_ms));
+                }
+                Fault::Err { at, count } if n >= at && n < at + count => {
+                    bail!("chaos: injected transient error (call {n})");
+                }
+                Fault::Jitter { max_ms } if max_ms > 0 => {
+                    jitter = jitter.max(self.rng.next_u64() % max_ms);
+                }
+                _ => {}
+            }
+        }
+        if jitter > 0 {
+            std::thread::sleep(Duration::from_millis(jitter));
+        }
+        let out = self.inner.forward(x);
+        // die *after* serving call `at`: the worker answers this batch,
+        // then sees fatal() and exits cleanly between batches
+        if self.faults.iter().any(|&f| matches!(f, Fault::Die { at } if at == n)) {
+            self.dead.store(true, Ordering::Release);
+        }
+        out
+    }
+
+    fn fatal(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::{SimBackend, SimBackendCfg};
+    use super::*;
+
+    fn wrapped(spec: &str, replica: usize) -> ChaosBackend {
+        let inner = Box::new(SimBackend::new(SimBackendCfg::tiny(1)).unwrap());
+        ChaosBackend::new(inner, &ChaosSpec::parse(spec).unwrap(), replica)
+    }
+
+    fn batch() -> Tensor {
+        Tensor::zeros(&[4, 64])
+    }
+
+    #[test]
+    fn parse_accepts_the_full_grammar() {
+        let s = ChaosSpec::parse("panic@3,die@5:r1, hang@2=40 ,err@4+3:r0,jitter=7,seed=99")
+            .unwrap();
+        assert_eq!(s.seed, 99);
+        assert_eq!(s.faults.len(), 5);
+        assert_eq!(
+            s.faults[0],
+            ScopedFault { fault: Fault::Panic { at: 3 }, replica: None }
+        );
+        assert_eq!(
+            s.faults[1],
+            ScopedFault { fault: Fault::Die { at: 5 }, replica: Some(1) }
+        );
+        assert_eq!(
+            s.faults[3],
+            ScopedFault { fault: Fault::Err { at: 4, count: 3 }, replica: Some(0) }
+        );
+        // scoping filters per replica; unscoped faults reach everyone
+        assert_eq!(s.faults_for(0).len(), 4);
+        assert_eq!(s.faults_for(1).len(), 4);
+        assert_eq!(s.faults_for(7).len(), 3);
+        // bare err@N is a burst of one; empty spec is no faults
+        assert_eq!(
+            ChaosSpec::parse("err@2").unwrap().faults[0].fault,
+            Fault::Err { at: 2, count: 1 }
+        );
+        assert!(ChaosSpec::parse("").unwrap().faults.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_garbage_descriptively() {
+        for (bad, needle) in [
+            ("explode@3", "unknown clause"),
+            ("panic@0", "ordinal"),
+            ("panic@x", "ordinal"),
+            ("hang@3", "hang needs"),
+            ("err@2+0", "burst count"),
+            ("die@2:rX", "replica scope"),
+            ("seed=1:r0", "replica-scoped"),
+            ("jitter=abc", "millisecond"),
+        ] {
+            let e = ChaosSpec::parse(bad).unwrap_err().to_string();
+            assert!(e.contains(needle), "'{bad}' → {e}");
+        }
+    }
+
+    #[test]
+    fn err_burst_is_transient_and_positional() {
+        let mut b = wrapped("err@2+2", 0);
+        assert!(b.forward(batch()).is_ok()); // call 1
+        assert!(b.forward(batch()).is_err()); // 2
+        assert!(b.forward(batch()).is_err()); // 3
+        assert!(b.forward(batch()).is_ok()); // 4: burst over
+        assert!(!b.fatal());
+    }
+
+    #[test]
+    fn die_serves_the_fatal_call_then_trips() {
+        let mut b = wrapped("die@2", 0);
+        assert!(b.forward(batch()).is_ok());
+        assert!(!b.fatal());
+        assert!(b.forward(batch()).is_ok(), "the dying call still answers");
+        assert!(b.fatal(), "…then the backend reports fatal");
+        // scoped to another replica: never trips here
+        let mut other = wrapped("die@1:r3", 0);
+        assert!(other.forward(batch()).is_ok());
+        assert!(!other.fatal());
+    }
+
+    #[test]
+    fn panic_fires_at_the_exact_ordinal() {
+        let mut b = wrapped("panic@2", 1);
+        assert!(b.forward(batch()).is_ok());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = b.forward(batch());
+        }));
+        assert!(r.is_err(), "call 2 must panic");
+    }
+
+    #[test]
+    fn hang_delays_the_scheduled_call() {
+        let mut b = wrapped("hang@1=30", 0);
+        let t0 = std::time::Instant::now();
+        assert!(b.forward(batch()).is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        let t1 = std::time::Instant::now();
+        assert!(b.forward(batch()).is_ok());
+        assert!(t1.elapsed() < Duration::from_millis(30), "only call 1 hangs");
+    }
+
+    #[test]
+    fn jitter_is_seeded_and_bounded() {
+        // same seed + replica ⇒ identical delay schedule (replayable)
+        let mk = || wrapped("jitter=5,seed=7", 2);
+        let (mut a, mut c) = (mk(), mk());
+        for _ in 0..4 {
+            let ta = std::time::Instant::now();
+            a.forward(batch()).unwrap();
+            let da = ta.elapsed();
+            let tc = std::time::Instant::now();
+            c.forward(batch()).unwrap();
+            let dc = tc.elapsed();
+            assert!(da < Duration::from_millis(50) && dc < Duration::from_millis(50));
+        }
+    }
+
+    #[test]
+    fn wrap_decorates_a_factory_per_replica() {
+        let spec = ChaosSpec::parse("die@1:r0").unwrap();
+        let f = spec.wrap(SimBackend::factory(SimBackendCfg::tiny(1)));
+        let mut r0 = f(0).unwrap();
+        let mut r1 = f(1).unwrap();
+        assert_eq!(r0.name(), "chaos(sim)");
+        assert_eq!(r0.batch(), 4);
+        r0.forward(batch()).unwrap();
+        r1.forward(batch()).unwrap();
+        assert!(r0.fatal());
+        assert!(!r1.fatal());
+    }
+}

@@ -1,0 +1,440 @@
+//! Replica health: heartbeats, liveness states, and the death-watch
+//! protocol between workers and the supervisor (DESIGN.md §13).
+//!
+//! Each replica slot carries four atomics:
+//!
+//! * a **progress epoch**, bumped by the worker once per executed chunk
+//!   ([`HealthBoard::beat`]) — the heartbeat;
+//! * a **state** (`Idle`/`Busy`/`Dead`/`Retired`);
+//! * a **busy-since** stamp (µs since board creation), refreshed by
+//!   every beat, so the watchdog only reads `Busy` slots whose stamp is
+//!   stale — a parked idle worker never trips it;
+//! * an **incarnation** counter: each respawn bumps it, and every
+//!   worker-side write is guarded by its own incarnation, so a
+//!   superseded zombie (a thread wedged inside `forward` that the
+//!   supervisor already replaced) can neither re-mark the slot nor pop
+//!   another batch once it wakes — it observes it is stale at the top
+//!   of its loop and exits.  This preserves the §11 one-popper-per-
+//!   shard contract across respawns.
+//!
+//! Worker exits are reported by a [`DeathWatch`] drop guard: armed on
+//! spawn, disarmed only on a clean shutdown-time exit, so panics and
+//! fatal-backend exits both land in `Dead` without any happy-path
+//! bookkeeping — and a stale incarnation's report is a no-op.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::util::lock;
+
+/// Liveness state of one replica slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Worker is between batches (parked or scanning) — healthy.
+    Idle,
+    /// Worker is executing a batch — healthy unless the busy stamp
+    /// goes stale past the watchdog deadline.
+    Busy,
+    /// Worker exited (panic / fatal backend) or was superseded after a
+    /// watchdog trip; awaiting respawn.
+    Dead,
+    /// Restart budget exhausted: permanently out of the pool, which
+    /// now runs degraded on the survivors.
+    Retired,
+}
+
+const S_IDLE: u8 = 0;
+const S_BUSY: u8 = 1;
+const S_DEAD: u8 = 2;
+const S_RETIRED: u8 = 3;
+
+struct Slot {
+    epoch: AtomicU64,
+    state: AtomicU8,
+    busy_since_us: AtomicU64,
+    incarnation: AtomicU64,
+}
+
+/// Shared health state for the pool: one [`Slot`] per replica plus a
+/// fault log.  All hot-path operations (`beat`, `set_busy`, `alive`)
+/// are a couple of relaxed atomics; nothing here is ever held across
+/// an intake lock, so the §11 `shard → board` order is untouched.
+pub struct HealthBoard {
+    slots: Vec<Slot>,
+    origin: Instant,
+    /// Human-readable fault history (deaths, trips, respawns,
+    /// retirements) — surfaced via `Server::fault_log` instead of
+    /// failing shutdown for faults the supervisor already handled.
+    faults: Mutex<Vec<String>>,
+}
+
+impl HealthBoard {
+    pub fn new(replicas: usize) -> Self {
+        HealthBoard {
+            slots: (0..replicas.max(1))
+                .map(|_| Slot {
+                    epoch: AtomicU64::new(0),
+                    state: AtomicU8::new(S_IDLE),
+                    busy_since_us: AtomicU64::new(0),
+                    incarnation: AtomicU64::new(0),
+                })
+                .collect(),
+            origin: Instant::now(),
+            faults: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    /// Heartbeat: `r` made progress (one chunk executed).  Refreshes
+    /// the busy stamp so a long multi-chunk batch never trips the
+    /// watchdog while it advances.
+    pub fn beat(&self, r: usize) {
+        if let Some(s) = self.slots.get(r) {
+            s.epoch.fetch_add(1, Ordering::Relaxed);
+            s.busy_since_us.store(self.now_us(), Ordering::Relaxed);
+        }
+    }
+
+    /// Progress epoch of `r` (diagnostics / tests).
+    pub fn epoch(&self, r: usize) -> u64 {
+        self.slots.get(r).map_or(0, |s| s.epoch.load(Ordering::Relaxed))
+    }
+
+    /// Worker-side state write, guarded by the writer's incarnation so
+    /// a superseded zombie cannot clobber its replacement's slot.
+    fn set_state_if_current(&self, r: usize, inc: u64, state: u8) {
+        if let Some(s) = self.slots.get(r) {
+            if s.incarnation.load(Ordering::Acquire) == inc {
+                s.state.store(state, Ordering::Release);
+            }
+        }
+    }
+
+    /// Worker `r`@`inc` starts executing a batch.
+    pub fn set_busy(&self, r: usize, inc: u64) {
+        if let Some(s) = self.slots.get(r) {
+            if s.incarnation.load(Ordering::Acquire) == inc {
+                s.busy_since_us.store(self.now_us(), Ordering::Relaxed);
+                s.state.store(S_BUSY, Ordering::Release);
+            }
+        }
+    }
+
+    /// Worker `r`@`inc` is back between batches.
+    pub fn set_idle(&self, r: usize, inc: u64) {
+        self.set_state_if_current(r, inc, S_IDLE);
+    }
+
+    /// Report worker `r`@`inc` dead (panic or fatal backend).  A stale
+    /// incarnation's report and a retired slot are both no-ops.
+    pub fn mark_dead(&self, r: usize, inc: u64) {
+        if let Some(s) = self.slots.get(r) {
+            if s.incarnation.load(Ordering::Acquire) == inc
+                && s.state.load(Ordering::Acquire) != S_RETIRED
+            {
+                s.state.store(S_DEAD, Ordering::Release);
+            }
+        }
+    }
+
+    /// Supervisor-side: invalidate the current worker of `r` (watchdog
+    /// trip or respawn) and return the next incarnation.  The old
+    /// thread sees itself stale at its next loop iteration and exits;
+    /// the replacement is spawned carrying the returned value.
+    pub fn supersede(&self, r: usize) -> u64 {
+        let s = &self.slots[r];
+        let inc = s.incarnation.fetch_add(1, Ordering::AcqRel) + 1;
+        s.state.store(S_DEAD, Ordering::Release);
+        inc
+    }
+
+    /// Is `inc` still the live incarnation of `r`?  Workers check this
+    /// at the top of their serve loop, *before* popping a batch.
+    pub fn is_current(&self, r: usize, inc: u64) -> bool {
+        self.slots
+            .get(r)
+            .map_or(false, |s| s.incarnation.load(Ordering::Acquire) == inc)
+    }
+
+    /// Current incarnation of `r`.
+    pub fn incarnation(&self, r: usize) -> u64 {
+        self.slots.get(r).map_or(0, |s| s.incarnation.load(Ordering::Acquire))
+    }
+
+    /// Permanently retire `r` (restart budget exhausted).
+    pub fn retire(&self, r: usize) {
+        if let Some(s) = self.slots.get(r) {
+            s.state.store(S_RETIRED, Ordering::Release);
+        }
+    }
+
+    pub fn state(&self, r: usize) -> ReplicaState {
+        match self.slots.get(r).map_or(S_RETIRED, |s| s.state.load(Ordering::Acquire)) {
+            S_IDLE => ReplicaState::Idle,
+            S_BUSY => ReplicaState::Busy,
+            S_DEAD => ReplicaState::Dead,
+            _ => ReplicaState::Retired,
+        }
+    }
+
+    /// Is `r` routable (idle or making progress)?
+    pub fn alive(&self, r: usize) -> bool {
+        matches!(self.state(r), ReplicaState::Idle | ReplicaState::Busy)
+    }
+
+    /// Number of routable replicas.
+    pub fn alive_count(&self) -> usize {
+        (0..self.slots.len()).filter(|&r| self.alive(r)).count()
+    }
+
+    /// Watchdog predicate: `r` claims `Busy` but its stamp has not
+    /// moved for longer than `watchdog` — wedged inside `forward`.
+    pub fn stale_busy(&self, r: usize, watchdog: Duration) -> bool {
+        let Some(s) = self.slots.get(r) else { return false };
+        if s.state.load(Ordering::Acquire) != S_BUSY {
+            return false;
+        }
+        let since = s.busy_since_us.load(Ordering::Relaxed);
+        self.now_us().saturating_sub(since) > watchdog.as_micros() as u64
+    }
+
+    /// Append one line to the fault history.
+    pub fn log_fault(&self, line: String) {
+        lock(&self.faults).push(line);
+    }
+
+    /// Snapshot of the fault history (deaths, trips, respawns,
+    /// retirements since startup).
+    pub fn fault_log(&self) -> Vec<String> {
+        lock(&self.faults).clone()
+    }
+}
+
+/// Drop guard a worker thread holds for its whole life: armed on
+/// spawn, disarmed only on the clean shutdown-time exit, so *any*
+/// other way out — panic anywhere in the serve loop, fatal backend —
+/// marks the slot `Dead` for the supervisor.  Incarnation-guarded like
+/// every worker-side write.
+pub struct DeathWatch {
+    board: Arc<HealthBoard>,
+    replica: usize,
+    incarnation: u64,
+    armed: bool,
+}
+
+impl DeathWatch {
+    pub fn new(board: Arc<HealthBoard>, replica: usize, incarnation: u64) -> Self {
+        DeathWatch { board, replica, incarnation, armed: true }
+    }
+
+    /// Clean exit (queue closed at shutdown): the slot stays in its
+    /// last healthy state instead of reading as a death.
+    pub fn disarm(&mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for DeathWatch {
+    fn drop(&mut self) {
+        if self.armed {
+            self.board.mark_dead(self.replica, self.incarnation);
+        }
+    }
+}
+
+/// Supervision policy (`PoolConfig::supervision`, DESIGN.md §13).
+#[derive(Clone, Debug)]
+pub struct SupervisionCfg {
+    /// Supervisor tick — how often heartbeats are inspected.  The
+    /// detection latency for a clean death is one tick.
+    pub heartbeat: Duration,
+    /// Watchdog deadline: a `Busy` replica whose progress stamp is
+    /// older than this is declared wedged and superseded.  Must
+    /// comfortably exceed the slowest expected batch (beats refresh
+    /// the stamp per chunk, so this bounds one *chunk*, not a batch).
+    pub watchdog: Duration,
+    /// Respawn attempts per replica before it is retired for good.
+    pub max_restarts: u32,
+    /// First respawn delay; doubles per consecutive attempt.
+    pub backoff: Duration,
+    /// Ceiling on the doubled backoff.
+    pub backoff_cap: Duration,
+}
+
+impl Default for SupervisionCfg {
+    fn default() -> Self {
+        SupervisionCfg {
+            heartbeat: Duration::from_millis(25),
+            watchdog: Duration::from_secs(2),
+            max_restarts: 3,
+            backoff: Duration::from_millis(25),
+            backoff_cap: Duration::from_secs(1),
+        }
+    }
+}
+
+impl SupervisionCfg {
+    /// Reject configurations the supervisor cannot safely run with.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.heartbeat > Duration::ZERO && self.heartbeat <= Duration::from_secs(10),
+            "supervision heartbeat must be in (0, 10s], got {:?}",
+            self.heartbeat
+        );
+        ensure!(
+            self.watchdog >= self.heartbeat,
+            "supervision watchdog {:?} must be >= the heartbeat tick {:?} \
+             (a sub-tick deadline can never be observed)",
+            self.watchdog,
+            self.heartbeat
+        );
+        ensure!(
+            self.backoff > Duration::ZERO && self.backoff_cap >= self.backoff,
+            "supervision backoff must be > 0 and <= its cap, got {:?} / {:?}",
+            self.backoff,
+            self.backoff_cap
+        );
+        Ok(())
+    }
+
+    /// Delay before respawn attempt `attempt` (1-based): exponential
+    /// from `backoff`, capped at `backoff_cap`.
+    pub fn backoff_for(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(20);
+        self.backoff
+            .saturating_mul(1u32 << shift)
+            .min(self.backoff_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beat_advances_epoch_and_refreshes_stamp() {
+        let b = HealthBoard::new(2);
+        assert_eq!(b.epoch(0), 0);
+        b.beat(0);
+        b.beat(0);
+        assert_eq!(b.epoch(0), 2);
+        assert_eq!(b.epoch(1), 0);
+        b.beat(9); // phantom replica: no-op, no panic
+    }
+
+    #[test]
+    fn state_machine_and_alive_counting() {
+        let b = HealthBoard::new(3);
+        assert_eq!(b.alive_count(), 3);
+        b.set_busy(1, 0);
+        assert_eq!(b.state(1), ReplicaState::Busy);
+        assert!(b.alive(1));
+        b.mark_dead(1, 0);
+        assert_eq!(b.state(1), ReplicaState::Dead);
+        assert_eq!(b.alive_count(), 2);
+        b.retire(1);
+        assert_eq!(b.state(1), ReplicaState::Retired);
+        // a retired slot cannot be resurrected by a late death report
+        b.mark_dead(1, 0);
+        assert_eq!(b.state(1), ReplicaState::Retired);
+    }
+
+    #[test]
+    fn supersede_invalidates_the_old_incarnation() {
+        let b = HealthBoard::new(1);
+        assert!(b.is_current(0, 0));
+        let inc = b.supersede(0);
+        assert_eq!(inc, 1);
+        assert!(!b.is_current(0, 0), "zombie must observe it is stale");
+        assert!(b.is_current(0, 1));
+        assert_eq!(b.state(0), ReplicaState::Dead);
+        // the zombie's late writes are all no-ops now
+        b.set_busy(0, 0);
+        b.set_idle(0, 0);
+        b.mark_dead(0, 0);
+        assert_eq!(b.state(0), ReplicaState::Dead);
+        // …while the replacement's writes land
+        b.set_idle(0, 1);
+        assert_eq!(b.state(0), ReplicaState::Idle);
+    }
+
+    #[test]
+    fn watchdog_only_trips_stale_busy_slots() {
+        let b = HealthBoard::new(2);
+        // idle slots never trip, however old
+        assert!(!b.stale_busy(0, Duration::ZERO));
+        b.set_busy(0, 0);
+        assert!(!b.stale_busy(0, Duration::from_secs(60)));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(b.stale_busy(0, Duration::from_millis(1)));
+        // a beat refreshes the stamp and clears the staleness
+        b.beat(0);
+        assert!(!b.stale_busy(0, Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn death_watch_reports_unless_disarmed_and_respects_incarnation() {
+        let b = Arc::new(HealthBoard::new(2));
+        // armed drop (panic path) marks dead
+        drop(DeathWatch::new(Arc::clone(&b), 0, 0));
+        assert_eq!(b.state(0), ReplicaState::Dead);
+        // disarmed drop (clean shutdown) does not
+        let mut w = DeathWatch::new(Arc::clone(&b), 1, 0);
+        w.disarm();
+        drop(w);
+        assert_eq!(b.state(1), ReplicaState::Idle);
+        // a superseded incarnation's drop is a no-op
+        let w = DeathWatch::new(Arc::clone(&b), 1, 0);
+        let inc = b.supersede(1);
+        b.set_idle(1, inc);
+        drop(w);
+        assert_eq!(b.state(1), ReplicaState::Idle);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let cfg = SupervisionCfg {
+            backoff: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(65),
+            ..SupervisionCfg::default()
+        };
+        assert_eq!(cfg.backoff_for(1), Duration::from_millis(10));
+        assert_eq!(cfg.backoff_for(2), Duration::from_millis(20));
+        assert_eq!(cfg.backoff_for(3), Duration::from_millis(40));
+        assert_eq!(cfg.backoff_for(4), Duration::from_millis(65));
+        assert_eq!(cfg.backoff_for(31), Duration::from_millis(65));
+    }
+
+    #[test]
+    fn supervision_cfg_validation_is_descriptive() {
+        assert!(SupervisionCfg::default().validate().is_ok());
+        let bad = SupervisionCfg { heartbeat: Duration::ZERO, ..SupervisionCfg::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("heartbeat"));
+        let bad = SupervisionCfg {
+            watchdog: Duration::from_millis(1),
+            ..SupervisionCfg::default()
+        };
+        assert!(bad.validate().unwrap_err().to_string().contains("watchdog"));
+        let bad = SupervisionCfg { backoff: Duration::ZERO, ..SupervisionCfg::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("backoff"));
+    }
+
+    #[test]
+    fn fault_log_accumulates() {
+        let b = HealthBoard::new(1);
+        assert!(b.fault_log().is_empty());
+        b.log_fault("replica 0 died".into());
+        b.log_fault("replica 0 respawned".into());
+        assert_eq!(b.fault_log().len(), 2);
+    }
+}

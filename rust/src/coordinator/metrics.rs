@@ -42,6 +42,9 @@ pub struct ReplicaCounters {
     /// Requests this replica dropped at assembly because their SLA
     /// deadline expired in the queue (DESIGN.md §12).
     pub deadline_drops: AtomicU64,
+    /// Times the supervisor respawned this replica's worker after a
+    /// death or watchdog trip (DESIGN.md §13).
+    pub restarts: AtomicU64,
 }
 
 /// Shared, thread-safe metrics sink for the coordinator.
@@ -71,6 +74,20 @@ pub struct Metrics {
     /// `escalations / first_runs` over a window is the escalation rate
     /// the §12 PI controller steers.
     pub first_runs: AtomicU64,
+    /// Worker respawns performed by the supervisor across the pool
+    /// (DESIGN.md §13).  A respawn is not a request-accounting event:
+    /// the four-bucket invariant holds through every restart.
+    pub restarts: AtomicU64,
+    /// Replicas permanently retired after exhausting their restart
+    /// budget; the pool keeps serving degraded on the survivors.
+    pub retired: AtomicU64,
+    /// Escalations whose preferred (most accurate live) target was
+    /// unavailable and that fell down the precision ladder or answered
+    /// with the fast result instead (DESIGN.md §13).
+    pub failovers: AtomicU64,
+    /// Queued items re-homed from a dead/retired replica's shard onto
+    /// a compatible live shard by the failover drain.
+    pub drained_requeues: AtomicU64,
     /// Gauge: requests accepted into the intake queue and not yet
     /// pulled into a batch by a replica.  Maintained by
     /// `queue_push`/`queue_pop`; returns to 0 once the pool drains.
@@ -96,6 +113,7 @@ pub struct ReplicaSnapshot {
     pub stolen: u64,
     pub escalations: u64,
     pub deadline_drops: u64,
+    pub restarts: u64,
 }
 
 /// Immutable snapshot for reporting.
@@ -110,6 +128,10 @@ pub struct Snapshot {
     pub escalations: u64,
     pub deadline_drops: u64,
     pub first_runs: u64,
+    pub restarts: u64,
+    pub retired: u64,
+    pub failovers: u64,
+    pub drained_requeues: u64,
     pub queue_depth: u64,
     pub per_replica: Vec<ReplicaSnapshot>,
     pub mean_batch: f64,
@@ -152,6 +174,10 @@ impl Metrics {
             escalations: AtomicU64::new(0),
             deadline_drops: AtomicU64::new(0),
             first_runs: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            retired: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            drained_requeues: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             per_replica: (0..replicas.max(1)).map(|_| ReplicaCounters::default()).collect(),
             latencies_s: Mutex::new(Vec::new()),
@@ -246,6 +272,42 @@ impl Metrics {
         self.first_runs.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    /// `n` requests answered `Err` outside batch execution — a failover
+    /// drain with no live compatible replica, or the shutdown sweep of
+    /// stranded items (DESIGN.md §13).  They land in `failed_requests`
+    /// so the §12 four-bucket invariant stays exact without fabricating
+    /// a batch error or a latency sample.
+    pub fn record_failed(&self, n: usize) {
+        self.failed_requests.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// The supervisor respawned `replica`'s worker (DESIGN.md §13).
+    pub fn record_restart(&self, replica: usize) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+        if let Some(r) = self.per_replica.get(replica) {
+            r.restarts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A replica exhausted its restart budget and was permanently
+    /// retired; the pool now runs degraded without it.
+    pub fn record_retired(&self) {
+        self.retired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` escalations could not reach their preferred accurate target
+    /// and fell down the precision ladder (or answered with the fast
+    /// result) instead.
+    pub fn record_failovers(&self, n: usize) {
+        self.failovers.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// `n` queued items were re-homed from a dead replica's shard onto
+    /// live shards by the failover drain.
+    pub fn record_drained_requeues(&self, n: usize) {
+        self.drained_requeues.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
     /// One request accepted into the intake queue.
     pub fn queue_push(&self) {
         self.queue_depth.fetch_add(1, Ordering::Relaxed);
@@ -288,6 +350,10 @@ impl Metrics {
             escalations: self.escalations.load(Ordering::Relaxed),
             deadline_drops: self.deadline_drops.load(Ordering::Relaxed),
             first_runs: self.first_runs.load(Ordering::Relaxed),
+            restarts: self.restarts.load(Ordering::Relaxed),
+            retired: self.retired.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            drained_requeues: self.drained_requeues.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             per_replica: self
                 .per_replica
@@ -300,6 +366,7 @@ impl Metrics {
                     stolen: r.stolen.load(Ordering::Relaxed),
                     escalations: r.escalations.load(Ordering::Relaxed),
                     deadline_drops: r.deadline_drops.load(Ordering::Relaxed),
+                    restarts: r.restarts.load(Ordering::Relaxed),
                 })
                 .collect(),
             mean_batch: if sizes.is_empty() {
@@ -472,6 +539,30 @@ mod tests {
         // phantom replica ids stay safe
         m.record_deadline_drops(9, 2);
         assert_eq!(m.snapshot(1.0).deadline_drops, 3);
+    }
+
+    #[test]
+    fn selfheal_counters_track_without_touching_buckets() {
+        // restarts/retired/failovers/drained_requeues are operational
+        // counters — they must never perturb the four-bucket accounting
+        let m = Metrics::new(2);
+        m.record_batch(0, 4, 0.010, 0);
+        m.record_restart(1);
+        m.record_restart(1);
+        m.record_retired();
+        m.record_failovers(3);
+        m.record_drained_requeues(5);
+        let s = m.snapshot(1.0);
+        assert_eq!(s.restarts, 2);
+        assert_eq!(s.per_replica[1].restarts, 2);
+        assert_eq!(s.per_replica[0].restarts, 0);
+        assert_eq!(s.retired, 1);
+        assert_eq!(s.failovers, 3);
+        assert_eq!(s.drained_requeues, 5);
+        assert_eq!(s.requests + s.failed_requests + s.rejected + s.deadline_drops, 4);
+        // phantom replica ids stay safe (same contract as record_batch)
+        m.record_restart(9);
+        assert_eq!(m.snapshot(1.0).restarts, 3);
     }
 
     #[test]

@@ -17,17 +17,23 @@
 //! (DESIGN.md §10).  Under overload, [`Server::submit_with`] refuses
 //! work with typed [`Reject`]s instead of blocking — SLA-projected
 //! admission, per-tenant fair queuing, and a PI controller that tunes
-//! the escalation margin onto a rate budget (DESIGN.md §12).  Module
-//! map:
+//! the escalation margin onto a rate budget (DESIGN.md §12).  The pool
+//! self-heals (DESIGN.md §13): replica heartbeats feed a supervisor
+//! that respawns dead or wedged workers with capped backoff, retires
+//! flappers, and fails traffic over to the live replicas — with
+//! [`chaos::ChaosBackend`] injecting seeded faults to prove it.
+//! Module map:
 //!
 //! | module | role | DESIGN.md |
 //! |---|---|---|
 //! | [`router`] | precision-aware queue selection + escalation policy | §10 |
 //! | [`batcher`] | per-replica queues, batching, tail stealing | §9–§11 |
 //! | [`backend`] | pluggable execution (`PjrtBackend`, `SimBackend`) | §9 |
-//! | [`server`] | pool lifecycle, readiness, escalation plumbing | §9–§10 |
+//! | [`server`] | pool lifecycle, readiness, escalation, supervision | §9–§10, §13 |
 //! | [`metrics`] | counters, gauges, latency percentiles | §9–§10 |
 //! | [`admission`] | SLA admission, tenant fair queuing, PI margin tuning | §12 |
+//! | [`health`] | heartbeats, death watch, watchdog, backoff policy | §13 |
+//! | [`chaos`] | seeded fault-injecting backend decorator | §13 |
 //!
 //! A minimal artifact-free pool (doc-tested; see [`Server::start_pool`]
 //! for the heterogeneous version):
@@ -49,6 +55,8 @@
 pub mod admission;
 pub mod backend;
 pub mod batcher;
+pub mod chaos;
+pub mod health;
 pub mod metrics;
 pub mod router;
 pub mod server;
@@ -57,9 +65,11 @@ pub use admission::{Admission, AdmissionCfg, EscalationController, Reject, Submi
 pub use backend::{BackendFactory, InferenceBackend, PjrtBackend, SimBackend, SimBackendCfg};
 pub use batcher::{Assembled, CoarseIntake, IntakeQueue, Item, Policy, PushRefused, Request,
                   ShardedIntake};
+pub use chaos::{ChaosBackend, ChaosSpec, Fault};
+pub use health::{DeathWatch, HealthBoard, ReplicaState, SupervisionCfg};
 pub use metrics::{Metrics, ReplicaSnapshot, Snapshot};
-pub use router::{parse_precision_mix, resolve_precision_mix, router_from_spec, AccuracyFloor,
-                 Escalate, Fastest, MarginKnob, ReplicaPrecision, Router,
-                 DEFAULT_ESCALATE_MARGIN};
+pub use router::{escalation_ladder, parse_precision_mix, resolve_precision_mix,
+                 router_from_spec, AccuracyFloor, Escalate, Fastest, MarginKnob,
+                 ReplicaPrecision, Router, DEFAULT_ESCALATE_MARGIN};
 pub use server::{load_test, load_test_opts, LoadOpts, LoadReport, PoolConfig, Server,
                  ServerConfig};

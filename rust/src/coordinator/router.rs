@@ -171,6 +171,21 @@ pub trait Router: Send + Sync {
         0
     }
 
+    /// Health-aware routing (DESIGN.md §13): like [`route`], but
+    /// `alive(i)` says whether replica `i` is currently routable (not
+    /// dead or retired).  The default ignores health — external policy
+    /// implementations keep compiling and behave as before; the
+    /// built-ins override to skip unhealthy replicas and fall back to
+    /// *any* live one when the policy's preferred set is all down.
+    /// With nothing alive this degrades to [`route`]'s pick (the
+    /// server answers the closed-queue error path either way).
+    ///
+    /// [`route`]: Router::route
+    fn route_healthy(&self, precisions: &[ReplicaPrecision],
+                     _alive: &dyn Fn(usize) -> bool) -> usize {
+        self.route(precisions)
+    }
+
     /// Post-inference escalation decision: given the replica that served
     /// the request and the argmax margin of its reply, return the
     /// replica to re-run on (strictly higher floor than `served`), or
@@ -218,6 +233,17 @@ impl Wrr {
 
     fn pick(&self, precisions: &[ReplicaPrecision],
             eligible: impl Fn(usize) -> bool) -> usize {
+        self.try_pick(precisions, eligible).unwrap_or(0)
+    }
+
+    /// Like [`pick`], but reports an empty eligible set as `None`
+    /// instead of defaulting to replica 0, so health-aware callers can
+    /// widen the set and retry (DESIGN.md §13).  Credit is only charged
+    /// on a successful pick.
+    ///
+    /// [`pick`]: Wrr::pick
+    fn try_pick(&self, precisions: &[ReplicaPrecision],
+                eligible: impl Fn(usize) -> bool) -> Option<usize> {
         let mut c = lock(&self.credits);
         if c.len() != precisions.len() {
             // lazily (re)sized: routers are built before the pool, so the
@@ -237,10 +263,35 @@ impl Wrr {
                 best = Some(i);
             }
         }
-        let Some(i) = best else { return 0 };
+        let i = best?;
         c[i] = c[i].saturating_add(precisions[i].stride().max(1));
-        i
+        Some(i)
     }
+}
+
+/// Escalation fallback ladder (DESIGN.md §13): every *live* replica
+/// whose precision floor is strictly above `served`'s, ordered
+/// most-accurate first (floor descending, then faster stride, then
+/// lower index).  The server tries each rung with a bounded-wait push
+/// and answers with the fast result when the ladder is exhausted —
+/// a single dead accurate replica must never blackhole an escalation.
+pub fn escalation_ladder(served: usize, precisions: &[ReplicaPrecision],
+                         alive: &dyn Fn(usize) -> bool) -> Vec<usize> {
+    let Some(base) = precisions.get(served) else { return Vec::new() };
+    let base_floor = base.floor_bits();
+    let mut ladder: Vec<usize> = (0..precisions.len())
+        .filter(|&i| {
+            i != served && alive(i) && precisions[i].floor_bits() > base_floor
+        })
+        .collect();
+    ladder.sort_by(|&a, &b| {
+        precisions[b]
+            .floor_bits()
+            .cmp(&precisions[a].floor_bits())
+            .then(precisions[a].stride().cmp(&precisions[b].stride()))
+            .then(a.cmp(&b))
+    });
+    ladder
 }
 
 /// Weighted round-robin by replica speed: share ∝ 1/(wbits·abits).  On a
@@ -271,6 +322,16 @@ impl Router for Fastest {
             return 0;
         }
         self.wrr.pick(precisions, |_| true)
+    }
+
+    fn route_healthy(&self, precisions: &[ReplicaPrecision],
+                     alive: &dyn Fn(usize) -> bool) -> usize {
+        if precisions.is_empty() {
+            return 0;
+        }
+        self.wrr
+            .try_pick(precisions, alive)
+            .unwrap_or_else(|| self.route(precisions))
     }
 }
 
@@ -309,6 +370,36 @@ impl Router for AccuracyFloor {
 
     fn min_bits(&self) -> u32 {
         self.min_bits
+    }
+
+    fn route_healthy(&self, precisions: &[ReplicaPrecision],
+                     alive: &dyn Fn(usize) -> bool) -> usize {
+        if precisions.is_empty() {
+            return 0;
+        }
+        // prefer floor-satisfying live replicas; with the whole floor
+        // tier down, the most accurate *live* replica takes the traffic
+        // (a clamped floor beats a dead pool, same as `route`); with
+        // nothing alive at all, fall back to the health-blind pick.
+        self.wrr
+            .try_pick(precisions, |i| {
+                alive(i) && precisions[i].floor_bits() >= self.min_bits
+            })
+            .or_else(|| {
+                let mut best: Option<usize> = None;
+                for (i, p) in precisions.iter().enumerate() {
+                    if !alive(i) {
+                        continue;
+                    }
+                    let better = best
+                        .map_or(true, |b| p.floor_bits() > precisions[b].floor_bits());
+                    if better {
+                        best = Some(i);
+                    }
+                }
+                best
+            })
+            .unwrap_or_else(|| self.route(precisions))
     }
 }
 
@@ -376,6 +467,25 @@ impl Router for Escalate {
             // homogeneous pool: no accurate tier to hold back
             self.wrr.pick(precisions, |_| true)
         }
+    }
+
+    fn route_healthy(&self, precisions: &[ReplicaPrecision],
+                     alive: &dyn Fn(usize) -> bool) -> usize {
+        if precisions.is_empty() {
+            return 0;
+        }
+        let max = most_accurate(precisions);
+        let max_floor = precisions[max].floor_bits();
+        // live fast tier first; with every fast replica down, the live
+        // accurate tier absorbs primary traffic (degraded but correct —
+        // escalation then becomes a no-op); with nothing alive, fall
+        // back to the health-blind pick.
+        self.wrr
+            .try_pick(precisions, |i| {
+                alive(i) && precisions[i].floor_bits() < max_floor
+            })
+            .or_else(|| self.wrr.try_pick(precisions, alive))
+            .unwrap_or_else(|| self.route(precisions))
     }
 
     fn escalate(&self, served: usize, margin: f32,
@@ -667,5 +777,92 @@ mod tests {
         assert_eq!(most_accurate(&p), 1);
         let p = mix(&[(8, 8)]);
         assert_eq!(most_accurate(&p), 0);
+    }
+
+    /// Route `n` requests through the health-aware path.
+    fn healthy_counts(r: &dyn Router, p: &[ReplicaPrecision],
+                      alive: &dyn Fn(usize) -> bool, n: usize) -> Vec<usize> {
+        let mut c = vec![0usize; p.len()];
+        for _ in 0..n {
+            c[r.route_healthy(p, alive).min(p.len() - 1)] += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn route_healthy_skips_dead_replicas() {
+        let p = mix(&[(8, 8), (8, 8), (8, 8)]);
+        let r = Fastest::new();
+        let c = healthy_counts(&r, &p, &|i| i != 1, 9);
+        assert_eq!(c[1], 0, "dead replica drew traffic: {c:?}");
+        assert_eq!(c[0] + c[2], 9);
+        // everything dead degrades to the health-blind pick, never panics
+        let c = healthy_counts(&r, &p, &|_| false, 3);
+        assert_eq!(c.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn route_healthy_floor_falls_to_live_most_accurate() {
+        let p = mix(&[(2, 2), (4, 4), (8, 8)]);
+        let r = AccuracyFloor::new(8);
+        // floor tier alive: it takes everything
+        let c = healthy_counts(&r, &p, &|_| true, 6);
+        assert_eq!(c, vec![0, 0, 6]);
+        // floor tier dead: the most accurate *live* replica clamps
+        let c = healthy_counts(&r, &p, &|i| i != 2, 6);
+        assert_eq!(c, vec![0, 6, 0]);
+    }
+
+    #[test]
+    fn route_healthy_escalate_degrades_to_accurate_tier() {
+        let p = mix(&[(4, 4), (4, 4), (8, 8)]);
+        let r = Escalate::new(0.1);
+        // fast tier alive: accurate replica takes no primary traffic
+        let c = healthy_counts(&r, &p, &|i| i != 1, 8);
+        assert_eq!(c, vec![8, 0, 0]);
+        // whole fast tier dead: the accurate tier absorbs the load
+        let c = healthy_counts(&r, &p, &|i| i == 2, 5);
+        assert_eq!(c, vec![0, 0, 5]);
+    }
+
+    #[test]
+    fn external_router_impls_get_a_working_default_route_healthy() {
+        // a minimal impl (only name + route, like the routing tests'
+        // Pin router) must keep compiling and behave like `route`
+        struct Two;
+        impl Router for Two {
+            fn name(&self) -> &str { "two" }
+            fn route(&self, _p: &[ReplicaPrecision]) -> usize { 2 }
+        }
+        let p = mix(&[(4, 4), (8, 8), (8, 8)]);
+        assert_eq!(Two.route_healthy(&p, &|_| false), 2);
+    }
+
+    #[test]
+    fn escalation_ladder_orders_live_higher_floors_accurate_first() {
+        // served = replica 0 (2W2A); floors above 2: 4, 8, 8, 4:8->4
+        let p = mix(&[(2, 2), (4, 4), (8, 8), (8, 8), (4, 8)]);
+        let all = |_: usize| true;
+        // floor desc (8,8 first), then stride asc, then index asc;
+        // (4,8) floors at 4 and strides 32 > (4,4)'s 16
+        assert_eq!(escalation_ladder(0, &p, &all), vec![2, 3, 1, 4]);
+        // dead rungs drop out
+        assert_eq!(escalation_ladder(0, &p, &|i| i != 2 && i != 1), vec![3, 4]);
+        // served at the top floor: no ladder
+        assert!(escalation_ladder(2, &p, &all).is_empty());
+        // nothing alive: no ladder (caller answers with the fast result)
+        assert!(escalation_ladder(0, &p, &|_| false).is_empty());
+        // out-of-range served: empty, not a panic
+        assert!(escalation_ladder(9, &p, &all).is_empty());
+    }
+
+    #[test]
+    fn try_pick_charges_credit_only_on_success() {
+        let p = mix(&[(8, 8), (8, 8)]);
+        let w = Wrr::new();
+        assert_eq!(w.try_pick(&p, |_| false), None);
+        // failed picks left the credits untouched: round-robin starts at 0
+        assert_eq!(w.try_pick(&p, |_| true), Some(0));
+        assert_eq!(w.try_pick(&p, |_| true), Some(1));
     }
 }

@@ -27,6 +27,17 @@
 //! `requests + failed_requests + rejected + deadline_drops ==
 //! submitted`.
 //!
+//! Self-healing lives in the supervisor (DESIGN.md §13, on by default
+//! via [`PoolConfig::supervision`]): workers heartbeat a health board
+//! per executed chunk, a supervisor thread detects dead workers (drop-
+//! guard death reports) and wedged ones (a watchdog on the busy
+//! stamp), respawns them through the same [`BackendFactory`] with
+//! capped exponential backoff, and retires a replica whose restart
+//! budget is spent — closing and draining its queue onto live floor-
+//! compatible shards.  Routing (`route_healthy`) and escalation (the
+//! §13 fallback ladder) skip dead replicas, and the accounting
+//! invariant above stays exact through every kill and respawn.
+//!
 //! ```
 //! use dybit::coordinator::{Escalate, PoolConfig, ReplicaPrecision, Server,
 //!                          SimBackend, SimBackendCfg};
@@ -73,13 +84,20 @@ use super::admission::{run_margin_controller, Admission, AdmissionCfg, Escalatio
                        Reject, SubmitOpts};
 use super::backend::{BackendFactory, InferenceBackend, PjrtBackend};
 use super::batcher::{Assembled, Item, Policy, PushRefused, Request, ShardedIntake};
+use super::health::{DeathWatch, HealthBoard, ReplicaState, SupervisionCfg};
 use super::metrics::{Metrics, Snapshot};
-use super::router::{Fastest, ReplicaPrecision, Router};
+use super::router::{escalation_ladder, Fastest, ReplicaPrecision, Router};
 
 /// One image in, one class index out.
 type Payload = Vec<f32>;
 type Reply = std::result::Result<usize, String>;
 type Intake = ShardedIntake<Payload, Reply>;
+
+/// Bounded wait for failover pushes (escalation rungs, drain
+/// re-homing): long enough to ride out a brief full queue, short
+/// enough that a dead rung costs milliseconds, not a wedged worker
+/// (DESIGN.md §13).
+const FAILOVER_PUSH_WAIT: Duration = Duration::from_millis(25);
 
 /// PJRT server configuration ([`Server::start`]).
 #[derive(Clone)]
@@ -125,6 +143,13 @@ pub struct PoolConfig {
     /// `escalate:auto`) — `start_pool` rejects the combination
     /// otherwise.
     pub escalation: Option<EscalationController>,
+    /// Self-healing supervision (DESIGN.md §13): heartbeat inspection,
+    /// watchdog supersede of wedged replicas, respawn with capped
+    /// exponential backoff, retirement + failover drain once the
+    /// restart budget is spent.  `None` disables the supervisor thread
+    /// entirely — worker deaths then surface as `shutdown` errors, the
+    /// pre-§13 behavior.
+    pub supervision: Option<SupervisionCfg>,
 }
 
 impl Default for PoolConfig {
@@ -138,6 +163,7 @@ impl Default for PoolConfig {
             work_stealing: true,
             admission: AdmissionCfg::default(),
             escalation: None,
+            supervision: Some(SupervisionCfg::default()),
         }
     }
 }
@@ -153,6 +179,7 @@ impl std::fmt::Debug for PoolConfig {
             .field("work_stealing", &self.work_stealing)
             .field("admission", &self.admission)
             .field("escalation", &self.escalation)
+            .field("supervision", &self.supervision)
             .finish()
     }
 }
@@ -171,16 +198,38 @@ struct WorkerCtx {
     router: Arc<dyn Router>,
     precisions: Arc<Vec<ReplicaPrecision>>,
     admission: Arc<Admission>,
+    health: Arc<HealthBoard>,
+}
+
+impl WorkerCtx {
+    fn clone_refs(&self) -> WorkerCtx {
+        WorkerCtx {
+            queues: Arc::clone(&self.queues),
+            metrics: Arc::clone(&self.metrics),
+            router: Arc::clone(&self.router),
+            precisions: Arc::clone(&self.precisions),
+            admission: Arc::clone(&self.admission),
+            health: Arc::clone(&self.health),
+        }
+    }
 }
 
 /// Running server handle.
 pub struct Server {
     queues: Arc<Intake>,
+    /// Worker handles when supervision is off; with a supervisor, the
+    /// handles live on the supervisor thread (it reaps and respawns
+    /// them) and this stays empty.
     workers: Vec<JoinHandle<Result<()>>>,
     pub metrics: Arc<Metrics>,
     router: Arc<dyn Router>,
     precisions: Arc<Vec<ReplicaPrecision>>,
     admission: Arc<Admission>,
+    health: Arc<HealthBoard>,
+    /// Supervisor thread (DESIGN.md §13); `None` when supervision is
+    /// disabled.
+    supervisor: Option<JoinHandle<()>>,
+    supervisor_stop: Arc<AtomicBool>,
     /// Highest precision floor in the pool; steal tags are clamped to it
     /// (a tag above every replica's floor would make items unstealable
     /// by replicas *equal* to the one allowed to serve them).
@@ -271,10 +320,14 @@ impl Server {
                 pool.router.name()
             );
         }
+        if let Some(sup) = &pool.supervision {
+            sup.validate()?;
+        }
         let metrics = Arc::new(Metrics::new(pool.replicas));
         let floors: Vec<u32> = precisions.iter().map(|p| p.floor_bits()).collect();
         let queues = Arc::new(Intake::new(pool.queue_cap, floors, pool.work_stealing));
         let precisions = Arc::new(precisions);
+        let health = Arc::new(HealthBoard::new(pool.replicas));
         let (ready_tx, ready_rx) =
             std::sync::mpsc::channel::<(usize, std::result::Result<Ready, String>)>();
 
@@ -287,11 +340,12 @@ impl Server {
                 router: Arc::clone(&pool.router),
                 precisions: Arc::clone(&precisions),
                 admission: Arc::clone(&admission),
+                health: Arc::clone(&health),
             };
             let factory = Arc::clone(&factory);
             let ready = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
-                replica_main(id, ctx, policy, &factory, ready)
+                replica_main(id, 0, ctx, policy, &factory, Some(ready))
             }));
         }
         drop(ready_tx);
@@ -346,6 +400,29 @@ impl Server {
             let stop = Arc::clone(&tuner_stop);
             std::thread::spawn(move || run_margin_controller(ctl, knob, metrics, stop))
         });
+        // with supervision on, the supervisor thread takes ownership of
+        // the worker handles: it reaps deaths, respawns with backoff,
+        // and joins the survivors at shutdown (DESIGN.md §13)
+        let supervisor_stop = Arc::new(AtomicBool::new(false));
+        let supervisor = pool.supervision.as_ref().map(|sup| {
+            let sctx = SupervisorCtx {
+                cfg: sup.clone(),
+                ctx: WorkerCtx {
+                    queues: Arc::clone(&queues),
+                    metrics: Arc::clone(&metrics),
+                    router: Arc::clone(&pool.router),
+                    precisions: Arc::clone(&precisions),
+                    admission: Arc::clone(&admission),
+                    health: Arc::clone(&health),
+                },
+                policy,
+                factory: Arc::clone(&factory),
+                stop: Arc::clone(&supervisor_stop),
+            };
+            let handles: Vec<Option<JoinHandle<Result<()>>>> =
+                workers.drain(..).map(Some).collect();
+            std::thread::spawn(move || supervisor_main(sctx, handles))
+        });
         Ok(Server {
             queues,
             workers,
@@ -353,6 +430,9 @@ impl Server {
             router: pool.router,
             precisions,
             admission,
+            health,
+            supervisor,
+            supervisor_stop,
             max_floor,
             started: Instant::now(),
             img_elems: img_elems.unwrap(),
@@ -389,9 +469,13 @@ impl Server {
     pub fn submit_unchecked(&self, image: Vec<f32>)
                             -> Result<std::sync::mpsc::Receiver<Reply>> {
         let (rtx, rrx) = std::sync::mpsc::channel();
-        // deterministic queue pick; clamp defensively against custom
-        // routers returning out-of-range shards
-        let shard = self.router.route(&self.precisions) % self.precisions.len();
+        // deterministic queue pick, skipping dead/retired replicas
+        // (§13; with every replica healthy this is exactly `route`);
+        // clamp defensively against custom routers returning
+        // out-of-range shards
+        let alive = |r: usize| self.health.alive(r);
+        let shard =
+            self.router.route_healthy(&self.precisions, &alive) % self.precisions.len();
         let mut item = Item::new(Request {
             payload: image,
             enqueued: Instant::now(),
@@ -441,7 +525,9 @@ impl Server {
         if image.len() != self.img_elems {
             return Err(Reject::InvalidPayload { got: image.len(), want: self.img_elems });
         }
-        let shard = self.router.route(&self.precisions) % self.precisions.len();
+        let alive = |r: usize| self.health.alive(r);
+        let shard =
+            self.router.route_healthy(&self.precisions, &alive) % self.precisions.len();
         let depth = self.queues.shard_len(shard);
         if let Some(d) = opts.deadline {
             let projected = self.admission.projected_delay(shard, depth, self.assembly_batch);
@@ -492,6 +578,20 @@ impl Server {
         &self.admission
     }
 
+    /// Replica health board (liveness states, heartbeat epochs,
+    /// incarnations; DESIGN.md §13).
+    pub fn health(&self) -> &HealthBoard {
+        &self.health
+    }
+
+    /// Fault history the supervisor already handled — deaths, watchdog
+    /// trips, respawns, retirements.  These are operational events, not
+    /// request failures, so they never fail [`Server::shutdown`];
+    /// inspect this log to see how the pool self-healed.
+    pub fn fault_log(&self) -> Vec<String> {
+        self.health.fault_log()
+    }
+
     /// Smallest static batch dim across replicas.
     pub fn max_batch(&self) -> usize {
         self.batch
@@ -520,6 +620,14 @@ impl Server {
         if let Some(t) = self.tuner.take() {
             let _ = t.join();
         }
+        // stop the supervisor *after* the close: it joins the current
+        // workers (they exit once their queues drain) and routes their
+        // outcomes to the fault log — deaths it already handled must
+        // not fail a clean shutdown (DESIGN.md §13)
+        self.supervisor_stop.store(true, Ordering::Relaxed);
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
+        }
         let mut errs: Vec<String> = Vec::new();
         for (id, w) in self.workers.drain(..).enumerate() {
             match w.join() {
@@ -527,6 +635,22 @@ impl Server {
                 Ok(Err(e)) => errs.push(format!("replica {id}: {e:#}")),
                 Err(p) => errs.push(format!("replica {id} panicked: {}", payload_msg(&*p))),
             }
+        }
+        // final failover sweep: a pool that retired replicas mid-run
+        // can strand items on closed shards (or lose its last popper
+        // entirely) — every receiver must still resolve, so stranded
+        // items get an `Err` reply and land in `failed_requests`
+        let mut stranded = 0usize;
+        for r in 0..self.precisions.len() {
+            for it in self.queues.drain_shard(r) {
+                self.admission.release(it.tenant_shard, it.tenant);
+                let _ = it.req.respond.send(Err("server stopped before execution".into()));
+                stranded += 1;
+            }
+        }
+        if stranded > 0 {
+            self.metrics.record_failed(stranded);
+            self.metrics.queue_pop(stranded);
         }
         let elapsed = self.started.elapsed().as_secs_f64();
         let snap = self.metrics.snapshot(elapsed);
@@ -549,6 +673,10 @@ impl Drop for Server {
         self.tuner_stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.tuner.take() {
             let _ = t.join();
+        }
+        self.supervisor_stop.store(true, Ordering::Relaxed);
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -580,12 +708,19 @@ fn qcfg_precision(qcfg: &QuantConfig) -> ReplicaPrecision {
 }
 
 /// One replica thread: construct the backend (reporting the outcome
-/// through the readiness handshake), then assemble/execute from its own
-/// queue — stealing from sibling tails when idle — until the intake
-/// closes and drains.
-fn replica_main(id: usize, ctx: WorkerCtx, policy: Policy, factory: &BackendFactory,
-                ready: Sender<(usize, std::result::Result<Ready, String>)>)
+/// through the readiness handshake on first spawn — respawns skip it),
+/// then assemble/execute from its own queue — stealing from sibling
+/// tails when idle — until the intake closes and drains, the backend
+/// fails permanently, or the watchdog supersedes this incarnation
+/// (DESIGN.md §13).
+fn replica_main(id: usize, incarnation: u64, ctx: WorkerCtx, policy: Policy,
+                factory: &BackendFactory,
+                ready: Option<Sender<(usize, std::result::Result<Ready, String>)>>)
                 -> Result<()> {
+    // armed for the whole thread life: every exit that is not the
+    // clean queue-closed path — panic, fatal backend, startup failure
+    // on respawn — reads as a death on the health board (§13)
+    let mut watch = DeathWatch::new(Arc::clone(&ctx.health), id, incarnation);
     // the whole pre-report prelude (factory AND the geometry calls on
     // the fresh trait object) is guarded: a panic anywhere before the
     // handshake message would otherwise leave start_pool blocked on a
@@ -602,12 +737,16 @@ fn replica_main(id: usize, ctx: WorkerCtx, policy: Policy, factory: &BackendFact
         Ok(Ok(t)) => t,
         Ok(Err(e)) => {
             let msg = format!("{e:#}");
-            let _ = ready.send((id, Err(msg.clone())));
+            if let Some(ready) = &ready {
+                let _ = ready.send((id, Err(msg.clone())));
+            }
             return Err(anyhow!("backend startup failed: {msg}"));
         }
         Err(p) => {
             let msg = format!("backend startup panicked: {}", payload_msg(&*p));
-            let _ = ready.send((id, Err(msg.clone())));
+            if let Some(ready) = &ready {
+                let _ = ready.send((id, Err(msg.clone())));
+            }
             return Err(anyhow!(msg));
         }
     };
@@ -615,15 +754,30 @@ fn replica_main(id: usize, ctx: WorkerCtx, policy: Policy, factory: &BackendFact
     // batch dim (`Server::start` clamps from the manifest too; custom
     // factories get the same guarantee here)
     let policy = Policy { max_batch: policy.max_batch.clamp(1, batch), ..policy };
-    let _ = ready.send((id, Ok(Ready { batch, img_elems })));
-    // release the handshake channel NOW: holding it for the serving
-    // lifetime would keep start_pool's recv() from ever seeing closure
-    // if a sibling replica died without reporting
-    drop(ready);
+    if let Some(ready) = ready {
+        let _ = ready.send((id, Ok(Ready { batch, img_elems })));
+        // release the handshake channel NOW (the `ready` binding is
+        // consumed here): holding it for the serving lifetime would
+        // keep start_pool's recv() from ever seeing closure if a
+        // sibling replica died without reporting
+    }
     loop {
+        // a superseded incarnation must not pop again: the watchdog
+        // already handed this replica id to a replacement, and two
+        // poppers on one shard would break the §11 contract.  The slot
+        // belongs to the replacement now, so the death watch is moot.
+        if !ctx.health.is_current(id, incarnation) {
+            watch.disarm();
+            return Err(anyhow!("replica {id} superseded by the watchdog"));
+        }
+        ctx.health.set_idle(id, incarnation);
         match ctx.queues.pop_batch(id, policy) {
-            Assembled::Closed => return Ok(()),
+            Assembled::Closed => {
+                watch.disarm();
+                return Ok(());
+            }
             Assembled::Batch(mut items) => {
+                ctx.health.set_busy(id, incarnation);
                 ctx.metrics.queue_pop(items.len());
                 // the tenant quota bounds *queue* occupancy: release the
                 // slot the instant the item leaves the queue, and blank
@@ -637,6 +791,13 @@ fn replica_main(id: usize, ctx: WorkerCtx, policy: Policy, factory: &BackendFact
                     ctx.metrics.record_stolen(id, stolen);
                 }
                 execute_assembly(backend.as_mut(), id, items, &ctx);
+                // a permanently failed backend exits *between* batches:
+                // every item popped above already got its reply, so the
+                // §12 buckets stay exact through the death, and the
+                // armed watch marks the slot dead for the supervisor
+                if backend.fatal() {
+                    return Err(anyhow!("replica {id}: backend failed permanently"));
+                }
             }
         }
     }
@@ -726,41 +887,77 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
                 let preds = logits.argmax_margin_rows();
                 let mut answered = 0usize;
                 let mut escalated = 0usize;
+                let mut failovers = 0usize;
                 for (i, it) in chunk.into_iter().enumerate() {
                     let (pred, margin) = preds[i];
                     // escalate at most once per request, and only ever
-                    // strictly *up* in precision — the top tier never
-                    // blocks pushing, so the hand-off chain is acyclic
-                    // and always drains (DESIGN.md §10)
-                    let target = match it.escalated {
+                    // strictly *up* in precision — escalated items never
+                    // re-escalate, so the hand-off chain is acyclic and
+                    // always drains (DESIGN.md §10)
+                    let want = match it.escalated {
                         true => None,
                         false => ctx.router.escalate(id, margin, &ctx.precisions),
-                    };
-                    match target {
-                        Some(t)
-                            if t != id
-                                && t < ctx.precisions.len()
-                                && ctx.precisions[t].floor_bits()
-                                    > ctx.precisions[id].floor_bits() =>
-                        {
+                    }
+                    .filter(|&t| {
+                        t != id
+                            && t < ctx.precisions.len()
+                            && ctx.precisions[t].floor_bits()
+                                > ctx.precisions[id].floor_bits()
+                    });
+                    match want {
+                        Some(want) => {
                             let mut it = it;
                             it.escalated = true;
-                            it.min_bits = ctx.precisions[t].floor_bits();
                             it.stolen = false;
-                            ctx.metrics.queue_push();
-                            match ctx.queues.push(t, it) {
-                                Ok(()) => escalated += 1,
-                                Err(it) => {
-                                    // intake closed mid-drain: a
-                                    // low-confidence fast answer beats a
-                                    // dropped request
-                                    ctx.metrics.queue_pop(1);
+                            // fall down the ladder of *live* higher-
+                            // precision replicas, most accurate first,
+                            // with a bounded wait per rung: a dead or
+                            // saturated accurate replica must not
+                            // blackhole the request (DESIGN.md §13).
+                            // When the ladder is exhausted the low-
+                            // confidence fast answer stands — it beats
+                            // a dropped request.
+                            let alive = |t: usize| ctx.health.alive(t);
+                            let ladder =
+                                escalation_ladder(id, &ctx.precisions, &alive);
+                            let mut holding = Some(it);
+                            let mut landed: Option<usize> = None;
+                            for t in ladder {
+                                let mut item = holding.take().expect("held item");
+                                item.min_bits = ctx.precisions[t].floor_bits();
+                                ctx.metrics.queue_push();
+                                match ctx.queues.push_timeout(
+                                    t,
+                                    item,
+                                    FAILOVER_PUSH_WAIT,
+                                ) {
+                                    Ok(()) => {
+                                        landed = Some(t);
+                                        break;
+                                    }
+                                    Err(PushRefused::Full(b))
+                                    | Err(PushRefused::Closed(b)) => {
+                                        ctx.metrics.queue_pop(1);
+                                        holding = Some(b);
+                                    }
+                                }
+                            }
+                            match landed {
+                                Some(t) => {
+                                    escalated += 1;
+                                    if t != want {
+                                        failovers += 1;
+                                    }
+                                }
+                                None => {
+                                    let it = holding.expect("held item");
                                     let _ = it.req.respond.send(Ok(pred));
                                     answered += 1;
+                                    failovers += 1;
                                 }
                             }
                         }
-                        _ => {
+                        None => {
                             let _ = it.req.respond.send(Ok(pred));
                             answered += 1;
                         }
@@ -768,6 +965,9 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
                 }
                 if escalated > 0 {
                     ctx.metrics.record_escalated(id, escalated);
+                }
+                if failovers > 0 {
+                    ctx.metrics.record_failovers(failovers);
                 }
                 ctx.metrics.record_batch_answered(id, n, answered, dt, batch - n);
             }
@@ -782,7 +982,227 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
                 ctx.metrics.record_error(id, n, dt);
             }
         }
+        // heartbeat: one chunk of progress (even a failed one — the
+        // replica is alive, its backend merely errored).  Refreshes the
+        // busy stamp so the watchdog deadline bounds one *chunk*, not a
+        // whole multi-chunk assembly (DESIGN.md §13).
+        ctx.health.beat(id);
     }
+}
+
+/// Everything the supervisor thread needs (DESIGN.md §13).
+struct SupervisorCtx {
+    cfg: SupervisionCfg,
+    ctx: WorkerCtx,
+    policy: Policy,
+    factory: BackendFactory,
+    stop: Arc<AtomicBool>,
+}
+
+/// Supervisor loop (DESIGN.md §13): every `heartbeat` tick, inspect the
+/// health board.
+///
+/// * A **dead** replica (death-watch report: panic, fatal backend,
+///   failed respawn) is reaped — its handle joined, the outcome logged
+///   to the fault history — and a respawn is scheduled after a capped
+///   exponential backoff.  The restart budget is a per-replica
+///   *lifetime* budget: a flapping backend burns through it and is
+///   retired rather than respawned forever.
+/// * A **busy** replica whose progress stamp went stale past the
+///   watchdog deadline is wedged inside `forward`: its incarnation is
+///   superseded (the zombie observes this at its next loop-top and
+///   exits; its handle is abandoned, never joined — joining a wedged
+///   thread would wedge the supervisor too) and it takes the dead path
+///   on the next tick.
+/// * A replica over its restart budget is **retired**: its shard is
+///   closed and drained, and the drained items are re-homed onto live
+///   floor-compatible shards ([`rehome_items`]).  The pool runs
+///   degraded on the survivors.
+///
+/// Each tick also refreshes the admission layer's healthy-replica
+/// count so the §12 delay projection stops promising dead capacity.
+/// On `stop`, the remaining handles are joined and their outcomes go
+/// to the fault log — supervised deaths never fail `shutdown`.
+fn supervisor_main(sup: SupervisorCtx, mut handles: Vec<Option<JoinHandle<Result<()>>>>) {
+    let n = sup.ctx.precisions.len();
+    let mut attempts = vec![0u32; n];
+    let mut respawn_at: Vec<Option<Instant>> = vec![None; n];
+    while !sup.stop.load(Ordering::Relaxed) {
+        std::thread::sleep(sup.cfg.heartbeat);
+        for r in 0..n {
+            match sup.ctx.health.state(r) {
+                ReplicaState::Retired => continue,
+                ReplicaState::Dead if respawn_at[r].is_none() => {
+                    // reap the exited worker (death-watch reports fire
+                    // as the thread unwinds, so this join is prompt);
+                    // a watchdog-superseded zombie left no handle
+                    if let Some(h) = handles[r].take() {
+                        let outcome = match h.join() {
+                            Ok(Ok(())) => format!("replica {r}: worker exited"),
+                            Ok(Err(e)) => format!("replica {r}: worker died: {e:#}"),
+                            Err(p) => format!(
+                                "replica {r}: worker panicked: {}",
+                                payload_msg(&*p)
+                            ),
+                        };
+                        sup.ctx.health.log_fault(outcome);
+                    }
+                    attempts[r] += 1;
+                    if attempts[r] > sup.cfg.max_restarts {
+                        retire_replica(r, &sup);
+                    } else {
+                        let delay = sup.cfg.backoff_for(attempts[r]);
+                        sup.ctx.health.log_fault(format!(
+                            "replica {r}: respawn attempt {}/{} in {delay:?}",
+                            attempts[r], sup.cfg.max_restarts
+                        ));
+                        respawn_at[r] = Instant::now().checked_add(delay);
+                    }
+                }
+                ReplicaState::Busy if sup.ctx.health.stale_busy(r, sup.cfg.watchdog) => {
+                    // wedged inside forward: invalidate the incarnation
+                    // (the zombie exits at its next loop-top, §11
+                    // one-popper contract intact) and abandon its
+                    // handle.  The dead arm schedules the respawn on
+                    // the next tick.
+                    sup.ctx.health.supersede(r);
+                    drop(handles[r].take());
+                    sup.ctx.health.log_fault(format!(
+                        "replica {r}: watchdog tripped (no progress in {:?}), superseded",
+                        sup.cfg.watchdog
+                    ));
+                }
+                _ => {}
+            }
+            if let Some(at) = respawn_at[r] {
+                if Instant::now() >= at && !sup.stop.load(Ordering::Relaxed) {
+                    respawn_at[r] = None;
+                    // fresh incarnation: any still-unwinding remnant of
+                    // the old worker is fenced off the health board and
+                    // the shard.  The EWMA its dead incarnation left —
+                    // possibly poisoned by jitter or a hang — is reset
+                    // to the constructor seed.
+                    let inc = sup.ctx.health.supersede(r);
+                    sup.ctx.admission.reseed_cost(r);
+                    let wctx = sup.ctx.clone_refs();
+                    let factory = Arc::clone(&sup.factory);
+                    let policy = sup.policy;
+                    handles[r] = Some(std::thread::spawn(move || {
+                        replica_main(r, inc, wctx, policy, &factory, None)
+                    }));
+                    sup.ctx.metrics.record_restart(r);
+                    sup.ctx.health.log_fault(format!(
+                        "replica {r}: respawned (incarnation {inc})"
+                    ));
+                }
+            }
+        }
+        sup.ctx
+            .admission
+            .set_healthy_replicas(sup.ctx.health.alive_count());
+    }
+    // shutdown: the intake is already closed; join the survivors and
+    // route their outcomes to the fault log (worker errors the
+    // supervisor owns must not fail a clean shutdown)
+    for (r, h) in handles.into_iter().enumerate() {
+        let Some(h) = h else { continue };
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => sup.ctx.health.log_fault(format!("replica {r}: {e:#}")),
+            Err(p) => sup
+                .ctx
+                .health
+                .log_fault(format!("replica {r} panicked: {}", payload_msg(&*p))),
+        }
+    }
+}
+
+/// Retire `r` permanently (restart budget exhausted): mark it on the
+/// health board, close its shard so routing/steal traffic stops, and
+/// re-home the backlog onto live shards (DESIGN.md §13).
+fn retire_replica(r: usize, sup: &SupervisorCtx) {
+    sup.ctx.health.retire(r);
+    sup.ctx.metrics.record_retired();
+    sup.ctx.health.log_fault(format!(
+        "replica {r}: restart budget ({}) exhausted, retired; pool degraded to {} replicas",
+        sup.cfg.max_restarts,
+        sup.ctx.health.alive_count()
+    ));
+    sup.ctx.queues.close_shard(r);
+    let items = sup.ctx.queues.drain_shard(r);
+    if !items.is_empty() {
+        rehome_items(r, items, &sup.ctx);
+    }
+}
+
+/// Failover drain: push each item stranded on dead shard `from` onto a
+/// live shard whose precision floor honors the item's `min_bits` tag,
+/// least-loaded first.  An unsatisfiable tag is clamped to the best
+/// live floor (a degraded answer beats none — same clamp `route`
+/// applies); with nothing alive at all the item is answered `Err` and
+/// counted in `failed_requests`, so every receiver still resolves.
+fn rehome_items(from: usize, items: Vec<Item<Payload, Reply>>, ctx: &WorkerCtx) {
+    let mut requeued = 0usize;
+    let mut failed = 0usize;
+    for mut it in items {
+        // the queue-slot charge does not follow the item to its new
+        // shard: release it here and blank the tag, exactly like a pop
+        ctx.admission.release(it.tenant_shard, it.tenant);
+        it.tenant_shard = Item::<Payload, Reply>::TENANT_UNCHARGED;
+        it.stolen = false;
+        let mut targets: Vec<usize> = (0..ctx.precisions.len())
+            .filter(|&t| {
+                t != from
+                    && ctx.health.alive(t)
+                    && ctx.precisions[t].floor_bits() >= it.min_bits
+            })
+            .collect();
+        if targets.is_empty() {
+            if let Some(best) = (0..ctx.precisions.len())
+                .filter(|&t| t != from && ctx.health.alive(t))
+                .map(|t| ctx.precisions[t].floor_bits())
+                .max()
+            {
+                it.min_bits = it.min_bits.min(best);
+                targets = (0..ctx.precisions.len())
+                    .filter(|&t| {
+                        t != from
+                            && ctx.health.alive(t)
+                            && ctx.precisions[t].floor_bits() >= it.min_bits
+                    })
+                    .collect();
+            }
+        }
+        targets.sort_by_key(|&t| ctx.queues.shard_len(t));
+        let mut holding = Some(it);
+        for t in targets {
+            let item = holding.take().expect("held item");
+            match ctx.queues.push_timeout(t, item, FAILOVER_PUSH_WAIT) {
+                Ok(()) => {
+                    requeued += 1;
+                    break;
+                }
+                Err(PushRefused::Full(b)) | Err(PushRefused::Closed(b)) => holding = Some(b),
+            }
+        }
+        if let Some(it) = holding {
+            let _ = it.req.respond.send(Err(format!(
+                "replica {from} retired and no live replica can serve this request"
+            )));
+            failed += 1;
+        }
+    }
+    if requeued > 0 {
+        ctx.metrics.record_drained_requeues(requeued);
+    }
+    if failed > 0 {
+        // these items left the queue for good: failed bucket + gauge
+        ctx.metrics.record_failed(failed);
+        ctx.metrics.queue_pop(failed);
+    }
+    ctx.health.log_fault(format!(
+        "replica {from}: drained shard re-homed {requeued} items, failed {failed}"
+    ));
 }
 
 #[cfg(test)]
@@ -864,6 +1284,17 @@ mod tests {
         };
         let e = Server::start_pool(pool, factory()).unwrap_err().to_string();
         assert!(e.contains("finite"), "{e}");
+        // §13 satellite: a bad supervision config fails the start
+        // before any worker spawns, like every other config error
+        let pool = PoolConfig {
+            supervision: Some(SupervisionCfg {
+                watchdog: Duration::from_millis(1),
+                ..SupervisionCfg::default()
+            }),
+            ..PoolConfig::default()
+        };
+        let e = Server::start_pool(pool, factory()).unwrap_err().to_string();
+        assert!(e.contains("watchdog"), "{e}");
     }
 }
 

@@ -16,7 +16,11 @@
 //!                           --tenants T fair-queues the load across T
 //!                           tenant buckets, and --escalation-budget B
 //!                           PI-tunes the escalate:auto margin onto a
-//!                           target escalation rate, DESIGN.md §12)
+//!                           target escalation rate, DESIGN.md §12;
+//!                           --chaos "die@3:r0,jitter=2" injects seeded
+//!                           faults, --heartbeat-ms / --max-restarts
+//!                           tune the self-healing supervisor and
+//!                           --no-supervise disables it, DESIGN.md §13)
 //!   report                  dump manifest summary
 //!
 //! Everything executes from compiled artifacts; run `make artifacts` once.
@@ -27,8 +31,9 @@ use anyhow::{anyhow, Result};
 
 use dybit::coordinator::{
     parse_precision_mix, resolve_precision_mix, router_from_spec, AdmissionCfg,
-    BackendFactory, EscalationController, InferenceBackend, LoadOpts, PjrtBackend, Policy,
-    PoolConfig, ReplicaPrecision, Server, SimBackend, SimBackendCfg, Snapshot,
+    BackendFactory, ChaosSpec, EscalationController, InferenceBackend, LoadOpts,
+    PjrtBackend, Policy, PoolConfig, ReplicaPrecision, Server, SimBackend, SimBackendCfg,
+    Snapshot, SupervisionCfg,
 };
 use dybit::formats::dybit as dybit_fmt;
 use dybit::formats::Format;
@@ -59,7 +64,8 @@ fn main() {
                  serve: --clients 4 --requests 64 --max-wait-ms 5 --max-batch N \
                  --replicas 1 [--sim] [--precision-mix 4,4,4,8] \
                  [--router fastest|floor:<bits>|escalate[:margin|:auto]] [--no-steal] \
-                 [--deadline-ms D] [--tenants T] [--escalation-budget B]"
+                 [--deadline-ms D] [--tenants T] [--escalation-budget B] \
+                 [--chaos SPEC] [--heartbeat-ms MS] [--max-restarts N] [--no-supervise]"
             );
             std::process::exit(2);
         }
@@ -272,6 +278,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let tenants = args.get_usize("tenants", 1) as u32;
     let work_stealing = !args.has("no-steal");
+    // --chaos injects seeded faults through a backend decorator; the
+    // supervisor (on by default, DESIGN.md §13) detects and heals them.
+    // --heartbeat-ms / --max-restarts tune it; --no-supervise restores
+    // the pre-§13 die-loudly behavior.
+    let chaos = match args.get("chaos") {
+        Some(s) => Some(ChaosSpec::parse(s)?),
+        None => None,
+    };
+    let supervision = if args.has("no-supervise") {
+        None
+    } else {
+        let mut sup = SupervisionCfg::default();
+        if let Some(s) = args.get("heartbeat-ms") {
+            let ms: u64 = s.parse().map_err(|_| anyhow!("--heartbeat-ms must be an integer"))?;
+            sup.heartbeat = std::time::Duration::from_millis(ms);
+        }
+        if let Some(s) = args.get("max-restarts") {
+            sup.max_restarts =
+                s.parse().map_err(|_| anyhow!("--max-restarts must be an integer"))?;
+        }
+        Some(sup)
+    };
     // default max-batch is "the backend's static batch dim": the pool
     // clamps per replica, so MAX means "fill whatever the model takes"
     let policy = Policy {
@@ -312,6 +340,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ..AdmissionCfg::default()
         };
         let factory = SimBackend::mixed_factory(cfg, precisions.clone());
+        let factory = match chaos.clone() {
+            Some(spec) => spec.wrap(factory),
+            None => factory,
+        };
         Server::start_pool(
             PoolConfig {
                 policy,
@@ -322,6 +354,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 work_stealing,
                 admission,
                 escalation,
+                supervision: supervision.clone(),
             },
             factory,
         )?
@@ -360,6 +393,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(Box::new(PjrtBackend::new(&m2, &name2, qcfg, pallas)?)
                 as Box<dyn InferenceBackend>)
         });
+        let factory = match chaos.clone() {
+            Some(spec) => spec.wrap(factory),
+            None => factory,
+        };
         // no cycle simulator for compiled artifacts: leave the cost
         // table empty and let the EWMA adopt the first observed batch
         let admission = AdmissionCfg { tenants, ..AdmissionCfg::default() };
@@ -373,6 +410,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 work_stealing,
                 admission,
                 escalation,
+                supervision: supervision.clone(),
             },
             factory,
         )?
@@ -401,8 +439,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(knob) = &margin_knob {
         println!("tuned escalation margin: {:.4}", knob.get());
     }
+    // surface what the supervisor saw (deaths, respawns, retirements,
+    // §13) — silence here means the pool ran clean end to end
+    let faults = server.fault_log();
     let snap = server.shutdown()?;
     print_serve_snapshot(&snap, &precisions);
+    for line in &faults {
+        println!("fault: {line}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,316 @@
+//! Self-healing pool tests (DESIGN.md §13) over seeded chaos injection:
+//! death → respawn, watchdog supersession of a wedged replica, flapping
+//! → retirement with degraded service, escalation failover down the
+//! precision ladder when the accurate tier dies, and the EWMA reseed on
+//! respawn.  All artifact-free over [`SimBackend`], all deterministic
+//! fault points via [`ChaosSpec`].
+//!
+//! The §12 four-bucket invariant is asserted through every kill:
+//! `requests + failed_requests + rejected + deadline_drops ==
+//! submitted`, and every submit's receiver resolves — a supervisor that
+//! loses requests while healing is worse than no supervisor.
+
+use std::collections::HashSet;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dybit::coordinator::{
+    AdmissionCfg, BackendFactory, ChaosBackend, ChaosSpec, Escalate, InferenceBackend,
+    Policy, PoolConfig, ReplicaPrecision, ReplicaState, Server, SimBackend, SimBackendCfg,
+    Snapshot, SupervisionCfg,
+};
+use dybit::util::rng::Rng;
+
+type Reply = std::result::Result<usize, String>;
+
+const IMG: usize = 64;
+
+/// Tight supervision so tests heal in milliseconds, not the production
+/// defaults' seconds.
+fn fast_supervision(max_restarts: u32) -> SupervisionCfg {
+    SupervisionCfg {
+        heartbeat: Duration::from_millis(5),
+        watchdog: Duration::from_millis(100),
+        max_restarts,
+        backoff: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(40),
+    }
+}
+
+fn pool(replicas: usize, sup: SupervisionCfg) -> PoolConfig {
+    PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 64,
+        replicas,
+        supervision: Some(sup),
+        ..PoolConfig::default()
+    }
+}
+
+/// Chaos only on each replica's *first* incarnation: respawns get the
+/// bare backend, so a die/hang schedule produces one fault and then a
+/// healthy pool (the unscoped wrapper would re-fault every incarnation
+/// and flap — that mode gets its own test below).
+fn first_spawn_chaos(spec: &str, inner: BackendFactory) -> BackendFactory {
+    let spec = ChaosSpec::parse(spec).unwrap();
+    let seen: Arc<Mutex<HashSet<usize>>> = Arc::new(Mutex::new(HashSet::new()));
+    Arc::new(move |replica| {
+        let backend = inner(replica)?;
+        if seen.lock().unwrap().insert(replica) {
+            Ok(Box::new(ChaosBackend::new(backend, &spec, replica))
+                as Box<dyn InferenceBackend>)
+        } else {
+            Ok(backend)
+        }
+    })
+}
+
+fn must_reply(rx: &Receiver<Reply>) -> Reply {
+    rx.recv_timeout(Duration::from_secs(10))
+        .expect("client must receive a reply (lost during a kill/respawn?)")
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "timed out waiting for {what}"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn assert_accounted(snap: &Snapshot, submitted: u64) {
+    assert_eq!(
+        snap.requests + snap.failed_requests + snap.rejected + snap.deadline_drops,
+        submitted,
+        "accounting invariant violated: {snap:?}"
+    );
+    assert_eq!(snap.queue_depth, 0, "queue must drain: {snap:?}");
+}
+
+#[test]
+fn dead_replica_respawns_and_the_pool_keeps_serving() {
+    let factory =
+        first_spawn_chaos("die@1:r0", SimBackend::factory(SimBackendCfg::tiny(7)));
+    let server = Server::start_pool(pool(2, fast_supervision(3)), factory).unwrap();
+    let mut rng = Rng::new(1);
+    let rxs: Vec<_> = (0..24)
+        .map(|_| server.submit(rng.normal_vec(IMG)).unwrap())
+        .collect();
+    for rx in &rxs {
+        assert!(must_reply(rx).expect("healed pool answers") < 10);
+    }
+    wait_until("the supervisor to respawn replica 0", || {
+        server.snapshot().restarts >= 1
+    });
+    let faults = server.fault_log();
+    assert!(
+        faults.iter().any(|l| l.contains("respawned")),
+        "fault log must record the respawn: {faults:?}"
+    );
+    // the healed replica serves: its slot is live again, not retired
+    assert_eq!(server.health().alive_count(), 2);
+    assert!(server.infer(rng.normal_vec(IMG)).unwrap() < 10);
+    let snap = server.shutdown().expect("supervised deaths must not fail shutdown");
+    assert_accounted(&snap, 25);
+    assert!(snap.restarts >= 1, "{snap:?}");
+    assert_eq!(snap.retired, 0, "{snap:?}");
+    assert_eq!(snap.per_replica[0].restarts, snap.restarts, "{snap:?}");
+}
+
+#[test]
+fn watchdog_supersedes_a_wedged_replica() {
+    // one replica, first forward wedges for far longer than the 100ms
+    // watchdog: the supervisor must supersede it and respawn — the
+    // replacement (not the zombie) drains the rest of the queue
+    let factory =
+        first_spawn_chaos("hang@1=700", SimBackend::factory(SimBackendCfg::tiny(3)));
+    let server = Server::start_pool(pool(1, fast_supervision(3)), factory).unwrap();
+    let mut rng = Rng::new(2);
+    let rxs: Vec<_> = (0..12)
+        .map(|_| server.submit(rng.normal_vec(IMG)).unwrap())
+        .collect();
+    wait_until("the watchdog to trip", || {
+        server.fault_log().iter().any(|l| l.contains("watchdog tripped"))
+    });
+    wait_until("the replacement to spawn", || server.snapshot().restarts >= 1);
+    // every receiver resolves: the zombie still answers the chunk it
+    // was wedged on (its reply channels are alive), the replacement
+    // answers everything behind it
+    for rx in &rxs {
+        assert!(must_reply(rx).expect("no request may be lost to the zombie") < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, 12);
+    assert!(snap.restarts >= 1, "{snap:?}");
+}
+
+#[test]
+fn flapping_replica_is_retired_and_the_pool_degrades() {
+    // unscoped wrapper: EVERY incarnation of replica 0 dies on its
+    // first forward, so the restart budget burns down and the slot is
+    // retired for good — the pool must keep serving on replica 1
+    let spec = ChaosSpec::parse("die@1:r0").unwrap();
+    let factory = spec.wrap(SimBackend::factory(SimBackendCfg::tiny(11)));
+    let max_restarts = 2;
+    let server =
+        Server::start_pool(pool(2, fast_supervision(max_restarts)), factory).unwrap();
+    let mut rng = Rng::new(4);
+    let mut rxs = Vec::new();
+    // keep traffic flowing so each fresh incarnation of replica 0
+    // receives the batch that kills it
+    let t0 = Instant::now();
+    while server.snapshot().retired == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "replica 0 never retired");
+        for _ in 0..4 {
+            rxs.push(server.submit(rng.normal_vec(IMG)).unwrap());
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let submitted = rxs.len() as u64 + 1;
+    // degraded, not down: the survivor still answers
+    assert_eq!(server.health().state(0), ReplicaState::Retired);
+    assert_eq!(server.health().alive_count(), 1);
+    assert!(server.infer(rng.normal_vec(IMG)).unwrap() < 10);
+    for rx in &rxs {
+        let _ = must_reply(rx); // resolved — rehomed Oks and drained Errs both count
+    }
+    let faults = server.fault_log();
+    assert!(
+        faults.iter().any(|l| l.contains("retired")),
+        "fault log must record the retirement: {faults:?}"
+    );
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, submitted);
+    assert_eq!(snap.retired, 1, "{snap:?}");
+    assert_eq!(snap.restarts, max_restarts as u64, "{snap:?}");
+}
+
+#[test]
+fn escalations_fail_over_down_the_ladder_when_the_accurate_tier_dies() {
+    // regression (coordinator/server.rs pre-§13): escalation pushed to
+    // a fixed most-accurate index with an unbounded blocking push — an
+    // 8-bit replica dying under a 100%-escalation workload blackholed
+    // every low-margin request.  Now the push walks the ladder of
+    // *live* higher-precision replicas with a bounded wait per rung,
+    // and an exhausted ladder answers with the fast prediction.
+    let mix = vec![
+        ReplicaPrecision::uniform(4),
+        ReplicaPrecision::uniform(4),
+        ReplicaPrecision::uniform(8),
+    ];
+    // die@1 scoped to the accurate replica + a zero restart budget:
+    // the first escalated batch it serves kills it permanently
+    let spec = ChaosSpec::parse("die@1:r2").unwrap();
+    let factory = spec.wrap(SimBackend::mixed_factory(SimBackendCfg::tiny(21), mix.clone()));
+    let cfg = PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 64,
+        replicas: 3,
+        precisions: mix,
+        router: Arc::new(Escalate::new(0.05)),
+        work_stealing: false, // the accurate tier must not pre-steal
+        supervision: Some(fast_supervision(0)),
+        ..PoolConfig::default()
+    };
+    let server = Server::start_pool(cfg, factory).unwrap();
+    // zero payloads ⇒ all-zero logits ⇒ margin 0 < 0.05: every request
+    // wants escalation (the workload from coordinator_routing.rs)
+    let wave1: Vec<_> = (0..16)
+        .map(|_| server.submit(vec![0.0; IMG]).unwrap())
+        .collect();
+    for rx in &wave1 {
+        assert!(must_reply(rx).expect("escalated or failed-over, never lost") < 10);
+    }
+    wait_until("the accurate replica to be retired", || {
+        server.snapshot().retired >= 1
+    });
+    // with the whole upper ladder dead, escalations must resolve as
+    // failovers (the fast answer stands) — not hang, not drop
+    let wave2: Vec<_> = (0..16)
+        .map(|_| server.submit(vec![0.0; IMG]).unwrap())
+        .collect();
+    for rx in &wave2 {
+        assert!(must_reply(rx).expect("ladder-exhausted requests still answer") < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, 32);
+    assert!(snap.failovers >= 1, "{snap:?}");
+    assert_eq!(snap.retired, 1, "{snap:?}");
+}
+
+#[test]
+fn respawn_reseeds_the_admission_cost_estimate() {
+    // regression (coordinator/admission.rs pre-§13): a respawned
+    // replica inherited the EWMA its dead incarnation left behind —
+    // a death mid-jitter-storm poisoned the §12 delay projection until
+    // enough clean batches washed it out.  The supervisor now restores
+    // the constructor seed on respawn.
+    let seed = Duration::from_millis(50);
+    // max_batch 1 makes chunk boundaries deterministic: 4 submits are
+    // exactly forward calls 1..4, so die@4 answers everything first and
+    // the respawned incarnation never observes a batch — whatever the
+    // estimate reads after the respawn is exactly what reseeding left
+    let factory =
+        first_spawn_chaos("die@4", SimBackend::factory(SimBackendCfg::tiny(5)));
+    let cfg = PoolConfig {
+        policy: Policy { max_batch: 1, max_wait: Duration::from_millis(1) },
+        queue_cap: 64,
+        replicas: 1,
+        admission: AdmissionCfg { batch_cost: vec![seed], ..AdmissionCfg::default() },
+        supervision: Some(fast_supervision(3)),
+        ..PoolConfig::default()
+    };
+    let server = Server::start_pool(cfg, factory).unwrap();
+    assert!((server.admission().batch_cost_s(0) - 0.05).abs() < 1e-12);
+    // four ~µs observations drag the EWMA well off the 50ms seed —
+    // then the backend dies
+    let rxs: Vec<_> = (0..4).map(|_| server.submit(vec![0.5; IMG]).unwrap()).collect();
+    for rx in &rxs {
+        assert!(must_reply(rx).unwrap() < 10);
+    }
+    wait_until("the respawn to reseed the estimate", || {
+        server.snapshot().restarts >= 1
+            && (server.admission().batch_cost_s(0) - 0.05).abs() < 1e-12
+    });
+    // no traffic after the respawn: the estimate must sit exactly on
+    // the constructor seed, not on the dead incarnation's EWMA
+    assert!((server.admission().batch_cost_s(0) - 0.05).abs() < 1e-12);
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, 4);
+}
+
+#[test]
+fn supervision_off_preserves_the_error_propagating_shutdown() {
+    // --no-supervise (supervision: None) keeps the pre-§13 contract:
+    // a permanently failed backend is a *loud* worker error surfaced
+    // by shutdown, and stranded items still resolve via the final
+    // failover sweep
+    let spec = ChaosSpec::parse("die@1").unwrap();
+    let factory = spec.wrap(SimBackend::factory(SimBackendCfg::tiny(9)));
+    let cfg = PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 64,
+        replicas: 1,
+        supervision: None,
+        ..PoolConfig::default()
+    };
+    let server = Server::start_pool(cfg, factory).unwrap();
+    let rxs: Vec<_> = (0..8).map(|_| server.submit(vec![0.5; IMG]).unwrap()).collect();
+    // the first submit is in the first popped chunk, which the dying
+    // call still answers — blocking on it proves the worker got that
+    // far before shutdown joins it
+    assert!(must_reply(&rxs[0]).expect("the dying call still answers") < 10);
+    let err = server.shutdown().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("failed permanently"), "{msg}");
+    // every receiver resolved: answered by the worker or Err-swept
+    for rx in &rxs[1..] {
+        let _ = rx
+            .recv_timeout(Duration::from_secs(1))
+            .expect("sweep must resolve stranded receivers");
+    }
+}

@@ -32,6 +32,14 @@
 //!    (never served), every live item served (never dropped), and every
 //!    `try_push` refusal counted in `rejected` — the four-bucket
 //!    accounting invariant under forced overload.
+//! 7. **Restart/failover conservation** (§13, chaos mode) — a seeded
+//!    kill schedule flaps one popper (dies mid-run, a replacement
+//!    resumes its shard) and retires another for good (shard closed,
+//!    backlog drained and re-homed through bounded `push_timeout`s):
+//!    every re-homed item is consumed exactly once, never by the
+//!    retired shard, and only by a shard whose floor honors its
+//!    (clamped) `min_bits` tag — while the flapped shard's owner FIFO
+//!    holds *across* the incarnation change.
 //!
 //! The harness runs against BOTH implementations: the pre-§11
 //! [`CoarseIntake`] certifies the harness (if the reference fails, the
@@ -44,7 +52,7 @@
 //! ≥8-seed × {4, 16, 64}-shard sweep.  `STRESS_SEEDS=a,b,c` overrides
 //! the seed list.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::thread;
@@ -166,6 +174,47 @@ fn check_invariants(floors: &[u32], pushed_ok: &[u64], consumed_by: &[Vec<Consum
     }
     if seen.len() != pushed.len() {
         return Err(format!("{} item(s) lost (pushed Ok, never consumed)", pushed.len() - seen.len()));
+    }
+    Ok(())
+}
+
+/// §13 oracle extension: restart/failover conservation over a recorded
+/// trace.  `rehomed` maps each drained-and-re-pushed id to its
+/// (post-clamp) `min_bits`; `retired` names the shards whose backlog
+/// was failed over.  Each re-homed item must be consumed exactly once,
+/// never by a retired shard, and only by a shard whose floor covers the
+/// tag — the same gate [`rehome_items`] enforces in the server.
+fn check_selfheal_invariants(floors: &[u32], consumed_by: &[Vec<Consumed>],
+                             rehomed: &HashMap<u64, u32>, retired: &HashSet<usize>)
+                             -> Result<(), String> {
+    let mut seen: HashSet<u64> = HashSet::with_capacity(rehomed.len());
+    for (s, trace) in consumed_by.iter().enumerate() {
+        for c in trace {
+            let Some(&bits) = rehomed.get(&c.id) else { continue };
+            if retired.contains(&s) {
+                return Err(format!(
+                    "failover conservation violated: retired shard {s} consumed \
+                     re-homed id {:#x}",
+                    c.id
+                ));
+            }
+            if floors[s] < bits {
+                return Err(format!(
+                    "failover gate violated: shard {s} (floor {}) consumed re-homed \
+                     id {:#x} tagged min_bits {bits}",
+                    floors[s], c.id
+                ));
+            }
+            if !seen.insert(c.id) {
+                return Err(format!("re-homed id {:#x} consumed twice", c.id));
+            }
+        }
+    }
+    if seen.len() != rehomed.len() {
+        return Err(format!(
+            "{} re-homed item(s) lost after the failover drain",
+            rehomed.len() - seen.len()
+        ));
     }
     Ok(())
 }
@@ -559,6 +608,239 @@ fn stress_overload_admission_drop_conservation() {
     }
 }
 
+// ---------------------------------------------------------------------
+// §13 chaos mode: seeded kill / flap / retire over the intake, with the
+// restart/failover conservation oracle
+// ---------------------------------------------------------------------
+
+/// One chaos run (invariant 7).  A seeded kill plan takes two shards:
+///
+/// * the **flap** shard's popper dies after a seeded number of
+///   consumptions and a replacement popper resumes the same shard
+///   (sequentially, so the §11 one-popper contract holds) — its owner
+///   FIFO must survive the incarnation change;
+/// * the **retire** shard's popper dies for good: the shard is closed,
+///   its backlog drained, and every drained item re-homed onto a live
+///   floor-compatible shard through bounded `push_timeout`s, clamping
+///   an unsatisfiable tag to the best live floor exactly like the
+///   server's `rehome_items`.
+///
+/// On odd seeds the retired shard is the accurate (8-bit) escalation
+/// target itself — escalation pushes then bounce off the closed shard
+/// and resolve as direct answers, and for 4-shard pools the drained
+/// 8-bit tags must clamp down to the fast tier (the ladder-exhausted
+/// failover path).
+fn stress_chaos_once<I: IntakeQueue<u64, u64>>(q: &I, cfg: StressCfg) {
+    let floors = floors(cfg.shards);
+    let esc_target = (0..cfg.shards).rev().find(|&s| floors[s] == 8).unwrap();
+    let retire = if cfg.seed % 2 == 1 { esc_target } else { 0 };
+    let flap = (0..cfg.shards)
+        .find(|&s| s != retire && s != esc_target)
+        .expect("chaos mode needs >= 3 shards");
+    let kill_after = 10 + (cfg.seed % 20) as usize;
+    let metrics = Metrics::new(cfg.shards);
+    let esc_seq = AtomicU64::new(0);
+    let policy = Policy { max_batch: 4, max_wait: Duration::from_micros(200) };
+
+    let (pushed, consumed, rehomed) = thread::scope(|scope| {
+        let mut pushers = Vec::new();
+        for s in 0..cfg.shards {
+            let (q, metrics, floors) = (&q, &metrics, &floors);
+            pushers.push(scope.spawn(move || {
+                let mut rng = Rng::new(cfg.seed ^ (s as u64).wrapping_mul(0x9E37_79B9));
+                let mut ok = Vec::new();
+                for seq in 0..cfg.per_pusher {
+                    let bits = if rng.below(10) < 3 { floors[s] } else { 0 };
+                    let it = probe_item(pid(0, s, seq), bits, false);
+                    match q.push(s, it) {
+                        Ok(()) => {
+                            metrics.queue_push();
+                            ok.push(pid(0, s, seq));
+                        }
+                        Err(_) => break, // shard closed by the retirement
+                    }
+                }
+                ok
+            }));
+        }
+
+        // poppers; `limit` = consumptions before this incarnation dies
+        let run_popper = &|s: usize, limit: usize| -> (Vec<Consumed>, Vec<u64>) {
+            let mut trace: Vec<Consumed> = Vec::new();
+            let mut esc_pushed: Vec<u64> = Vec::new();
+            while trace.len() < limit {
+                let batch = match q.pop_batch(s, policy) {
+                    Assembled::Batch(b) => b,
+                    Assembled::Closed => break,
+                };
+                metrics.queue_pop(batch.len());
+                let stolen_n = batch.iter().filter(|i| i.stolen).count();
+                if stolen_n > 0 {
+                    metrics.record_stolen(s, stolen_n);
+                }
+                let n = batch.len();
+                let mut answered = 0;
+                for it in batch {
+                    let id = it.req.payload;
+                    trace.push(Consumed {
+                        id,
+                        stolen: it.stolen,
+                        min_bits: it.min_bits,
+                        dropped: false,
+                    });
+                    let esc = !it.escalated
+                        && floors[s] < 8
+                        && it.min_bits == 0
+                        && escalates(id, cfg.seed);
+                    if esc {
+                        let nid = pid(1, s, esc_seq.fetch_add(1, Ordering::Relaxed));
+                        match q.push(esc_target, probe_item(nid, 8, true)) {
+                            Ok(()) => {
+                                metrics.queue_push();
+                                metrics.record_escalated(s, 1);
+                                esc_pushed.push(nid);
+                            }
+                            // the accurate shard is closed (retired):
+                            // answer directly, like the server's
+                            // exhausted-ladder failover
+                            Err(_) => answered += 1,
+                        }
+                    } else {
+                        answered += 1;
+                    }
+                }
+                metrics.record_batch_answered(s, n, answered, 1e-4, 0);
+            }
+            (trace, esc_pushed)
+        };
+        let mut handles: Vec<Option<thread::ScopedJoinHandle<'_, _>>> = (0..cfg.shards)
+            .map(|s| {
+                let limit =
+                    if s == retire || s == flap { kill_after } else { usize::MAX };
+                Some(scope.spawn(move || run_popper(s, limit)))
+            })
+            .collect();
+
+        // -- supervisor script, deterministic order.  Retire FIRST: if
+        //    the retired shard is the escalation target, live poppers
+        //    may be blocked pushing into it — close_shard is what wakes
+        //    and refuses them, so it must not wait behind the flap join.
+        let (retire_trace, retire_esc) =
+            handles[retire].take().unwrap().join().expect("retired popper panicked");
+        q.close_shard(retire);
+        let drained = q.drain_shard(retire);
+        let mut rehomed: HashMap<u64, u32> = HashMap::new();
+        for mut it in drained {
+            let mut targets: Vec<usize> = (0..cfg.shards)
+                .filter(|&t| t != retire && floors[t] >= it.min_bits)
+                .collect();
+            if targets.is_empty() {
+                let best =
+                    (0..cfg.shards).filter(|&t| t != retire).map(|t| floors[t]).max();
+                it.min_bits = it.min_bits.min(best.unwrap_or(0));
+                targets = (0..cfg.shards)
+                    .filter(|&t| t != retire && floors[t] >= it.min_bits)
+                    .collect();
+            }
+            targets.sort_by_key(|&t| q.shard_len(t));
+            let (id, bits) = (it.req.payload, it.min_bits);
+            // live poppers keep draining, so cycling the bounded pushes
+            // terminates; a true wedge is caught by the test watchdog
+            let mut holding = Some(it);
+            'land: loop {
+                for &t in &targets {
+                    let item = holding.take().expect("held item");
+                    match q.push_timeout(t, item, Duration::from_millis(25)) {
+                        Ok(()) => break 'land,
+                        Err(PushRefused::Full(b)) | Err(PushRefused::Closed(b)) => {
+                            holding = Some(b);
+                        }
+                    }
+                }
+            }
+            rehomed.insert(id, bits);
+        }
+
+        // -- flap: reap the dead incarnation, resume the shard
+        let (flap_trace1, flap_esc1) =
+            handles[flap].take().unwrap().join().expect("flapped popper panicked");
+        let respawn = scope.spawn(move || run_popper(flap, usize::MAX));
+
+        let mut pushed: Vec<u64> = Vec::new();
+        for h in pushers {
+            pushed.extend(h.join().expect("pusher panicked"));
+        }
+        q.close();
+        let (flap_trace2, flap_esc2) =
+            respawn.join().expect("respawned popper panicked");
+        let mut consumed: Vec<Vec<Consumed>> = Vec::new();
+        for (s, h) in handles.into_iter().enumerate() {
+            let (mut trace, esc) = match h {
+                Some(h) => h.join().expect("popper panicked"),
+                None if s == retire => (retire_trace.clone(), retire_esc.clone()),
+                None => (flap_trace1.clone(), flap_esc1.clone()),
+            };
+            if s == flap {
+                // both incarnations in order: owner FIFO must hold
+                // *across* the restart, so the merged trace feeds the
+                // same per-shard check as an unbroken popper's would
+                trace.extend(flap_trace2.iter().copied());
+                pushed.extend(flap_esc2.iter().copied());
+            }
+            pushed.extend(esc);
+            consumed.push(trace);
+        }
+        (pushed, consumed, rehomed)
+    });
+
+    let label = format!("chaos seed {} shards {} retire {retire} flap {flap}", cfg.seed,
+                        cfg.shards);
+    let retired: HashSet<usize> = [retire].into_iter().collect();
+    if let Err(e) = check_invariants(&floors, &pushed, &consumed, &HashSet::new()) {
+        panic!("[{label}] invariant violated: {e}");
+    }
+    if let Err(e) = check_selfheal_invariants(&floors, &consumed, &rehomed, &retired) {
+        panic!("[{label}] self-heal invariant violated: {e}");
+    }
+    assert_eq!(q.len(), 0, "[{label}] intake not drained");
+    let total: u64 = consumed.iter().map(|t| t.len() as u64).sum();
+    let snap = metrics.snapshot(1.0);
+    assert_eq!(
+        snap.requests + snap.escalations,
+        total,
+        "[{label}] answered + escalated-away must cover every consumption"
+    );
+    assert_eq!(snap.queue_depth, 0, "[{label}] queue gauge must return to zero");
+}
+
+/// Tier-1 chaos sweep on both intakes (the coarse run certifies the
+/// chaos harness like it certifies the base one).
+#[test]
+fn stress_chaos_kill_flap_and_failover() {
+    for seed in seed_list(&[31, 32]) {
+        for shards in [4usize, 8] {
+            let cfg = StressCfg {
+                shards,
+                cap: 4,
+                per_pusher: 300,
+                seed,
+                close_early: false,
+                overload: false,
+            };
+            with_watchdog(&format!("chaos sharded seed {seed} shards {shards}"),
+                          Duration::from_secs(60), move || {
+                let q = ShardedIntake::new(cfg.cap, floors(cfg.shards), true);
+                stress_chaos_once(&q, cfg);
+            });
+            with_watchdog(&format!("chaos coarse seed {seed} shards {shards}"),
+                          Duration::from_secs(60), move || {
+                let q = CoarseIntake::new(cfg.cap, floors(cfg.shards), true);
+                stress_chaos_once(&q, cfg);
+            });
+        }
+    }
+}
+
 /// The `ci.sh --stress` sweep: ≥8 seeds × {4, 16, 64} shards on the
 /// §11 intake (plus the coarse reference at the smaller counts — its
 /// single lock makes 64 coarse shards pointlessly slow), then the §12
@@ -573,6 +855,26 @@ fn stress_full_sweep() {
     let seeds = seed_list(&[1, 2, 3, 4, 5, 6, 7, 8]);
     sweep("sharded-full", ShardedIntake::<u64, u64>::new, &seeds, &[4, 16, 64]);
     sweep("coarse-full", CoarseIntake::<u64, u64>::new, &seeds, &[4, 16]);
+    // §13 chaos schedules over the full seed set: alternating seeds
+    // retire the accurate tier itself (clamped failover) vs a fast
+    // shard, at every pool size
+    for &seed in &seeds {
+        for shards in [4usize, 16, 64] {
+            let cfg = StressCfg {
+                shards,
+                cap: 4,
+                per_pusher: (2000 / shards as u64).max(60),
+                seed: seed.wrapping_add(200),
+                close_early: false,
+                overload: false,
+            };
+            let label = format!("chaos-full seed {} shards {shards}", cfg.seed);
+            with_watchdog(&label, Duration::from_secs(60), move || {
+                let q = ShardedIntake::new(cfg.cap, floors(cfg.shards), true);
+                stress_chaos_once(&q, cfg);
+            });
+        }
+    }
     for &seed in &seeds {
         for close_early in [false, true] {
             let cfg = StressCfg {
@@ -664,6 +966,51 @@ fn checker_detects_planted_violations() {
                         vec![cd(pid(0, 1, 0))]];
     let e = check_invariants(&floors, &pushed, &overdrop, &expired).unwrap_err();
     assert!(e.contains("without an expired deadline"), "{e}");
+}
+
+/// The §13 oracle must catch corrupted failover traces, the same way
+/// `checker_detects_planted_violations` certifies the base checker.
+#[test]
+fn checker_detects_planted_selfheal_violations() {
+    let floors = vec![4, 4, 8];
+    let retired: HashSet<usize> = [2].into_iter().collect();
+    let c = |id, stolen, min_bits| Consumed { id, stolen, min_bits, dropped: false };
+    // two items drained off retired shard 2: one tagged for the 8-bit
+    // tier then clamped to 4 (nothing accurate left alive), one untagged
+    let rehomed: HashMap<u64, u32> =
+        [(pid(1, 2, 0), 4), (pid(0, 2, 5), 0)].into_iter().collect();
+
+    // clean failover passes: both re-homed items consumed once, by live
+    // shards whose floors cover the clamped tags
+    let clean = vec![vec![c(pid(1, 2, 0), false, 4)], vec![c(pid(0, 2, 5), false, 0)],
+                     vec![]];
+    check_selfheal_invariants(&floors, &clean, &rehomed, &retired)
+        .expect("clean failover trace must pass");
+
+    // planted: the retired shard itself consumed a re-homed item (a
+    // zombie popper outliving its retirement)
+    let zombie = vec![vec![c(pid(1, 2, 0), false, 4)], vec![],
+                      vec![c(pid(0, 2, 5), false, 0)]];
+    let e = check_selfheal_invariants(&floors, &zombie, &rehomed, &retired).unwrap_err();
+    assert!(e.contains("retired shard"), "{e}");
+
+    // planted: a floor-4 shard consumed an item still tagged min_bits 8
+    // (the drain forgot to clamp, or re-homed past the gate)
+    let ungated: HashMap<u64, u32> = [(pid(1, 2, 0), 8)].into_iter().collect();
+    let low = vec![vec![c(pid(1, 2, 0), false, 8)], vec![], vec![]];
+    let e = check_selfheal_invariants(&floors, &low, &ungated, &retired).unwrap_err();
+    assert!(e.contains("failover gate"), "{e}");
+
+    // planted: a re-homed item consumed twice (drain + a stale steal)
+    let twice = vec![vec![c(pid(1, 2, 0), false, 4), c(pid(0, 2, 5), false, 0)],
+                     vec![c(pid(0, 2, 5), true, 0)], vec![]];
+    let e = check_selfheal_invariants(&floors, &twice, &rehomed, &retired).unwrap_err();
+    assert!(e.contains("twice"), "{e}");
+
+    // planted: a re-homed item vanished (drained, never consumed)
+    let lost = vec![vec![c(pid(1, 2, 0), false, 4)], vec![], vec![]];
+    let e = check_selfheal_invariants(&floors, &lost, &rehomed, &retired).unwrap_err();
+    assert!(e.contains("lost"), "{e}");
 }
 
 // ---------------------------------------------------------------------
