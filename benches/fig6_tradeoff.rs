@@ -52,7 +52,7 @@ fn main() {
                 )
             })
             .collect();
-        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
         let fp = points
             .iter()
             .find(|p| p.get("model").and_then(Json::as_str) == Some(model))

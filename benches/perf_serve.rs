@@ -267,7 +267,7 @@ fn main() {
             let spec = ChaosSpec::parse(&format!("die@{die_at}:r1")).expect("chaos spec");
             let seen = Mutex::new(HashSet::new());
             Arc::new(move |r| {
-                let first = seen.lock().expect("chaos gate").insert(r);
+                let first = dybit::util::lock(&seen).insert(r);
                 let backend = inner(r)?;
                 if first {
                     Ok(Box::new(ChaosBackend::new(backend, &spec, r))

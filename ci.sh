@@ -2,8 +2,11 @@
 # Local CI gate for the DyBit workspace (see README.md).
 #
 #   ./ci.sh               # fmt + clippy + tier-1 (build + bench build +
-#                         # tests + docs)
+#                         # tests + dybit-lint + docs)
 #   ./ci.sh --fast        # tier-1 only
+#   ./ci.sh --analyze     # run the in-tree static analyzer verbose
+#                         # (per-lint counts + the justified-suppression
+#                         # list) and exit; see DESIGN.md §14
 #   ./ci.sh --bench-smoke # additionally run the perf_search bench on tiny
 #                         # layer stacks, perf_calib on tiny tensors, and
 #                         # perf_serve/perf_route on tiny SimBackend pools
@@ -21,6 +24,11 @@
 #                         # chaos schedules — kill/flap/failover with
 #                         # restart conservation) against both intake
 #                         # implementations (DESIGN.md §11–§13)
+#   ./ci.sh --sanitize    # additionally run the stress suite under
+#                         # ThreadSanitizer (-Zsanitizer=thread) when a
+#                         # nightly toolchain is installed; skipped with
+#                         # a loud note otherwise (same gating style as
+#                         # the PJRT runtime tests)
 #
 # Note tier-1's `cargo test -q` already runs coordinator_stress with its
 # small default seed set, so the concurrency interleavings are exercised
@@ -35,14 +43,24 @@ cd "$(dirname "$0")"
 fast=0
 bench_smoke=0
 stress=0
+analyze=0
+sanitize=0
 for arg in "$@"; do
   case "$arg" in
     --fast) fast=1 ;;
     --bench-smoke) bench_smoke=1 ;;
     --stress) stress=1 ;;
+    --analyze) analyze=1 ;;
+    --sanitize) sanitize=1 ;;
     *) echo "ci.sh: unknown flag '$arg'" >&2; exit 2 ;;
   esac
 done
+
+if [[ $analyze -eq 1 ]]; then
+  echo "==> dybit-lint --verbose (static analysis, DESIGN.md §14)"
+  cargo run --release --bin dybit-lint -- --verbose rust/src
+  exit 0
+fi
 
 if [[ $fast -eq 0 ]]; then
   echo "==> cargo fmt --check"
@@ -57,12 +75,28 @@ cargo build --release
 cargo build --benches --release
 cargo test -q
 
+echo "==> tier-1: dybit-lint (zero unsuppressed findings, DESIGN.md §14)"
+cargo run --release --bin dybit-lint -- rust/src
+
 echo "==> tier-1: cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p dybit --quiet
 
 if [[ $stress -eq 1 ]]; then
   echo "==> stress: coordinator_stress full sweep (8 seeds x {4,16,64} shards)"
   STRESS_FULL=1 cargo test --release --test coordinator_stress -- --nocapture
+fi
+
+if [[ $sanitize -eq 1 ]]; then
+  if cargo +nightly --version >/dev/null 2>&1; then
+    host="$(rustc -vV | sed -n 's/^host: //p')"
+    echo "==> sanitize: coordinator_stress under ThreadSanitizer (nightly, ${host})"
+    RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+      cargo +nightly test -Zbuild-std --target "${host}" \
+      --test coordinator_stress -- --nocapture
+  else
+    echo "ci.sh: SKIPPING --sanitize tier: no nightly toolchain installed" >&2
+    echo "ci.sh: (install with 'rustup toolchain install nightly --component rust-src')" >&2
+  fi
 fi
 
 if [[ $bench_smoke -eq 1 ]]; then

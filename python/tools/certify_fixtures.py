@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Certify the Python lint mirror against the shared fixture oracle.
+
+`rust/tests/fixtures/lint/EXPECTED.json` lists, per fixture file, the
+exact (lint-id, line) pairs the analyzer must report (unsuppressed and
+suppressed separately).  `rust/tests/analysis_lint.rs` certifies the
+authoritative Rust analyzer against that same file; this script
+certifies the transliterated mirror (`lint_mirror.py`) — so a rule
+change that lands in only one implementation fails one of the two
+gates.
+
+Usage: python3 python/tools/certify_fixtures.py
+Exit 0 when every fixture matches, 1 with a diff otherwise.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import lint_mirror as lm  # noqa: E402
+
+FIXTURES = os.path.join("rust", "tests", "fixtures", "lint")
+
+
+def main():
+    with open(os.path.join(FIXTURES, "EXPECTED.json"), encoding="utf-8") as fh:
+        expected = json.load(fh)["files"]
+    failures = []
+    seen = set()
+    for f in lm.rust_files([FIXTURES]):
+        rel = os.path.relpath(f, FIXTURES).replace(os.sep, "/")
+        seen.add(rel)
+        if rel not in expected:
+            failures.append(f"{rel}: fixture has no EXPECTED.json entry")
+            continue
+        with open(f, encoding="utf-8") as fh:
+            src = fh.read()
+        quota = set()
+        lm.collect_annotations(f, lm.tokenize(src), quota)
+        unsup, sup = lm.lint_file(f, src, quota, None)
+        got = {
+            "unsuppressed": [[lid, line] for (_p, line, lid, _m) in sorted(unsup)],
+            "suppressed": [[lid, line] for (_p, line, lid, _m) in sorted(sup)],
+        }
+        for key in ("unsuppressed", "suppressed"):
+            if got[key] != expected[rel][key]:
+                failures.append(
+                    f"{rel}: {key} mismatch\n"
+                    f"  expected: {expected[rel][key]}\n"
+                    f"  got:      {got[key]}")
+    for rel in sorted(set(expected) - seen):
+        failures.append(f"{rel}: EXPECTED.json entry has no fixture file")
+    if failures:
+        print("fixture certification FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    n = sum(len(v["unsuppressed"]) + len(v["suppressed"]) for v in expected.values())
+    print(f"fixture certification OK: {len(expected)} fixtures, "
+          f"{n} expected findings all matched")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,902 @@
+#!/usr/bin/env python3
+"""Validation mirror of the in-tree static analyzer (`dybit-lint`).
+
+The AUTHORITATIVE implementation is `rust/src/analysis/` (+ the
+`dybit-lint` bin target); this file is a 1:1 transliteration kept so the
+lint gate can be exercised on boxes without a Rust toolchain (the repo's
+authoring containers have none — see CHANGES.md).  Rule changes must
+land in the Rust analyzer first and be mirrored here; the fixture suite
+under `rust/tests/fixtures/lint/` certifies both the same way.
+
+Usage:
+    python3 python/tools/lint_mirror.py [--verbose] [paths...]
+
+Default path: rust/src (relative to the repo root).  Exit code 1 if any
+unsuppressed finding is reported, 0 otherwise — the same contract
+`ci.sh` relies on for the Rust bin.
+
+Lint catalog (ids + the DESIGN.md invariant each guards): see
+DESIGN.md §14.  In short:
+
+  raw-lock          .lock()/.wait()/.wait_timeout() outside util::lock
+                    helpers (poison policy, DESIGN.md §9/§11)
+  lock-order        board-then-shard acquisition, park-not-alone, or a
+                    quota-table touch under an intake guard, from
+                    `// lock-order:` field annotations (§11/§12)
+  condvar-loop      a condvar wait outside a while/loop predicate
+                    re-check (spurious wakeups)
+  time-checked      bare +/- on Instant/Duration (PR 2's underflow
+                    panic class; use checked_*/saturating_*)
+  float-total-cmp   partial_cmp on floats in sorts/maxes (PR 4's NaN
+                    hang class; use total_cmp)
+  no-unwrap         unwrap()/expect() in non-test coordinator code
+  metrics-recorder  raw atomic ops on the four accounting buckets
+                    outside metrics.rs (§12 invariant)
+  spawn-guard       detached thread::spawn bodies with no catch_unwind/
+                    DeathWatch and no `// spawn-guard:` annotation
+  suppression       malformed lint:allow / spawn-guard annotations
+
+Suppression grammar: `// lint:allow(<id>): <justification >= 8 chars>`
+on the finding's line or the line above it.
+"""
+
+import os
+import re
+import sys
+
+# --------------------------------------------------------------------
+# Tokenizer
+# --------------------------------------------------------------------
+
+IDENT = "ident"
+LIFETIME = "lifetime"
+CHAR = "char"
+STR = "str"
+NUM = "num"
+COMMENT = "comment"
+PUNCT = "punct"
+
+MULTI_PUNCT = [
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=",
+    "&&", "||", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<",
+    ">>", "..",
+]
+
+
+class Token:
+    __slots__ = ("kind", "text", "line")
+
+    def __init__(self, kind, text, line):
+        self.kind = kind
+        self.text = text
+        self.line = line
+
+    def __repr__(self):
+        return f"{self.kind}({self.text!r}@{self.line})"
+
+
+def tokenize(src):
+    """Tokenize Rust source.  Mirrors analysis::lexer exactly:
+    raw/byte strings, char-vs-lifetime, nested block comments, numeric
+    literals with underscores/suffixes, multi-char operators."""
+    toks = []
+    i, n, line = 0, len(src), 1
+
+    def peek(k=0):
+        j = i + k
+        return src[j] if j < n else ""
+
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        # comments
+        if c == "/" and peek(1) == "/":
+            j = src.find("\n", i)
+            j = n if j < 0 else j
+            toks.append(Token(COMMENT, src[i:j], line))
+            i = j
+            continue
+        if c == "/" and peek(1) == "*":
+            start, startline, depth = i, line, 1
+            i += 2
+            while i < n and depth > 0:
+                if src[i] == "/" and peek(1) == "*":
+                    depth += 1
+                    i += 2
+                elif src[i] == "*" and peek(1) == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    if src[i] == "\n":
+                        line += 1
+                    i += 1
+            toks.append(Token(COMMENT, src[start:i], startline))
+            continue
+        # raw / byte strings: r"", r#""#, b"", br#""#
+        if c in "rb":
+            m = re.match(r'(?:r(#*)"|br(#*)"|b"|r"(?!#))', src[i:])
+            if (c == "r" and re.match(r'r#*"', src[i:])) or (
+                c == "b" and re.match(r'b?r?#*"', src[i:]) and re.match(r'(?:br#*"|b")', src[i:])
+            ):
+                m2 = re.match(r'(?:b?r(#*)")', src[i:])
+                if m2:  # raw (possibly byte) string
+                    hashes = m2.group(1)
+                    close = '"' + hashes
+                    j = src.find(close, i + len(m2.group(0)))
+                    j = n if j < 0 else j + len(close)
+                    text = src[i:j]
+                    toks.append(Token(STR, text, line))
+                    line += text.count("\n")
+                    i = j
+                    continue
+                if re.match(r'b"', src[i:]):  # byte string
+                    j = i + 2
+                    while j < n and src[j] != '"':
+                        j += 2 if src[j] == "\\" else 1
+                    j = min(j + 1, n)
+                    text = src[i:j]
+                    toks.append(Token(STR, text, line))
+                    line += text.count("\n")
+                    i = j
+                    continue
+        if c == '"':
+            j = i + 1
+            while j < n and src[j] != '"':
+                j += 2 if src[j] == "\\" else 1
+            j = min(j + 1, n)
+            text = src[i:j]
+            toks.append(Token(STR, text, line))
+            line += text.count("\n")
+            i = j
+            continue
+        # char literal vs lifetime
+        if c == "'":
+            if peek(1) == "\\":
+                j = i + 2
+                if peek(2) in "xuU":
+                    while j < n and src[j] != "'":
+                        j += 1
+                else:
+                    j += 1
+                j = min(j + 1, n)
+                toks.append(Token(CHAR, src[i:j], line))
+                i = j
+                continue
+            if (peek(1).isalpha() or peek(1) == "_") and peek(2) != "'":
+                j = i + 1
+                while j < n and (src[j].isalnum() or src[j] == "_"):
+                    j += 1
+                toks.append(Token(LIFETIME, src[i:j], line))
+                i = j
+                continue
+            # 'a' style (incl 'a' where a is any single char)
+            j = i + 2
+            if j < n and src[j] == "'":
+                j += 1
+            toks.append(Token(CHAR, src[i:j], line))
+            i = j
+            continue
+        if c.isdigit():
+            j = i + 1
+            while j < n and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            # float part: '.' only when followed by a digit (never eat ..)
+            if j < n and src[j] == "." and j + 1 < n and src[j + 1].isdigit():
+                j += 1
+                while j < n and (src[j].isalnum() or src[j] == "_"):
+                    j += 1
+                # exponent sign
+                if j < n and src[j - 1] in "eE" and src[j] in "+-":
+                    j += 1
+                    while j < n and (src[j].isalnum() or src[j] == "_"):
+                        j += 1
+            elif j < n and src[j - 1] in "eE" and src[j] in "+-" and "0x" not in src[i:j]:
+                j += 1
+                while j < n and (src[j].isalnum() or src[j] == "_"):
+                    j += 1
+            toks.append(Token(NUM, src[i:j], line))
+            i = j
+            continue
+        if c.isalpha() or c == "_":
+            j = i + 1
+            while j < n and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            toks.append(Token(IDENT, src[i:j], line))
+            i = j
+            continue
+        matched = False
+        for op in MULTI_PUNCT:
+            if src.startswith(op, i):
+                toks.append(Token(PUNCT, op, line))
+                i += len(op)
+                matched = True
+                break
+        if not matched:
+            toks.append(Token(PUNCT, c, line))
+            i += 1
+    return toks
+
+
+def code_tokens(toks):
+    """The comment-free view most lints run on."""
+    return [t for t in toks if t.kind != COMMENT]
+
+
+# --------------------------------------------------------------------
+# Test-region detection (lints skip #[cfg(test)] / #[test] items)
+# --------------------------------------------------------------------
+
+
+def test_lines(toks):
+    """Set of lines covered by items under #[cfg(test)]-ish or #[test]
+    attributes (the attribute line through the item body's close)."""
+    lines = set()
+    ct = code_tokens(toks)
+    i = 0
+    while i < len(ct):
+        if ct[i].text == "#" and i + 1 < len(ct) and ct[i + 1].text == "[":
+            # span the attribute
+            depth, j, has_test = 0, i + 1, False
+            while j < len(ct):
+                if ct[j].text == "[":
+                    depth += 1
+                elif ct[j].text == "]":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                elif ct[j].kind == IDENT and ct[j].text == "test":
+                    has_test = True
+                j += 1
+            attr_end = j
+            if has_test:
+                start_line = ct[i].line
+                # skip any further attributes to the item head
+                k = attr_end + 1
+                while k + 1 < len(ct) and ct[k].text == "#" and ct[k + 1].text == "[":
+                    d = 0
+                    while k < len(ct):
+                        if ct[k].text == "[":
+                            d += 1
+                        elif ct[k].text == "]":
+                            d -= 1
+                            if d == 0:
+                                break
+                        k += 1
+                    k += 1
+                # item body: first top-level '{' .. matching '}', or ';'
+                d = 0
+                end_line = start_line
+                while k < len(ct):
+                    t = ct[k]
+                    if t.text == ";" and d == 0:
+                        end_line = t.line
+                        break
+                    if t.text in "({[":
+                        d += 1
+                    elif t.text in ")}]":
+                        d -= 1
+                        if d == 0 and t.text == "}":
+                            end_line = t.line
+                            break
+                    k += 1
+                for ln in range(start_line, end_line + 1):
+                    lines.add(ln)
+                i = k + 1
+                continue
+            i = attr_end + 1
+            continue
+        i += 1
+    return lines
+
+
+# --------------------------------------------------------------------
+# Annotations + suppressions
+# --------------------------------------------------------------------
+
+ALLOW_RE = re.compile(r"^//\s*lint:allow\(([a-z-]+)\)(?::\s*(.*))?$")
+LOCK_ORDER_RE = re.compile(
+    r"^//\s*lock-order:\s*(?:([A-Za-z_][\w-]*)\s+level\s+(\d+)(\s+alone)?|quota-touch)\s*$"
+)
+SPAWN_GUARD_RE = re.compile(r"^//\s*spawn-guard:\s*(.*)$")
+
+LINT_IDS = {
+    "raw-lock", "lock-order", "condvar-loop", "time-checked",
+    "float-total-cmp", "no-unwrap", "metrics-recorder", "spawn-guard",
+    "suppression",
+}
+
+MIN_JUSTIFICATION = 8
+
+
+class FileAnnotations:
+    def __init__(self):
+        self.lock_fields = {}      # field name -> (group, level, alone)
+        self.spawn_guard_lines = set()
+        self.allow = {}            # line -> set(ids)
+        self.findings = []         # malformed-annotation findings
+
+
+def next_code_line_tokens(ct, after_line):
+    """Code tokens on the first line with code strictly after `after_line`."""
+    for idx, t in enumerate(ct):
+        if t.line > after_line:
+            ln = t.line
+            return [u for u in ct[idx:] if u.line == ln]
+    return []
+
+
+def collect_annotations(path, toks, quota_methods):
+    ann = FileAnnotations()
+    ct = code_tokens(toks)
+    for t in toks:
+        if t.kind != COMMENT or not t.text.startswith("//"):
+            continue
+        text = t.text.strip()
+        m = ALLOW_RE.match(text)
+        if m:
+            lint_id, just = m.group(1), (m.group(2) or "").strip()
+            if lint_id not in LINT_IDS:
+                ann.findings.append(
+                    (path, t.line, "suppression",
+                     f"lint:allow names unknown lint '{lint_id}'"))
+                continue
+            if len(just) < MIN_JUSTIFICATION:
+                ann.findings.append(
+                    (path, t.line, "suppression",
+                     f"lint:allow({lint_id}) needs a justification "
+                     f"(>= {MIN_JUSTIFICATION} chars after a colon)"))
+                continue
+            ann.allow.setdefault(t.line, set()).add(lint_id)
+            nxt = next_code_line_tokens(ct, t.line)
+            if nxt:
+                ann.allow.setdefault(nxt[0].line, set()).add(lint_id)
+            continue
+        m = LOCK_ORDER_RE.match(text)
+        if m:
+            nxt = next_code_line_tokens(ct, t.line)
+            if m.group(1) is None:  # quota-touch: attach to next fn name
+                name = None
+                for k, u in enumerate(nxt):
+                    if u.kind == IDENT and u.text == "fn" and k + 1 < len(nxt):
+                        name = nxt[k + 1].text
+                        break
+                if name is None:
+                    ann.findings.append(
+                        (path, t.line, "suppression",
+                         "lock-order: quota-touch must precede an fn"))
+                else:
+                    quota_methods.add(name)
+            else:
+                field = nxt[0].text if nxt and nxt[0].kind == IDENT else None
+                if field is None:
+                    ann.findings.append(
+                        (path, t.line, "suppression",
+                         "lock-order annotation must precede a field"))
+                else:
+                    spec = (m.group(1), int(m.group(2)), bool(m.group(3)))
+                    prev = ann.lock_fields.get(field)
+                    if prev is not None and prev != spec:
+                        ann.findings.append(
+                            (path, t.line, "suppression",
+                             f"conflicting lock-order annotations for "
+                             f"field '{field}'"))
+                    ann.lock_fields[field] = spec
+            continue
+        elif text.startswith("// lock-order:") or text.startswith("//lock-order:"):
+            ann.findings.append(
+                (path, t.line, "suppression",
+                 "malformed lock-order annotation (want '<group> level "
+                 "<n> [alone]' or 'quota-touch')"))
+            continue
+        m = SPAWN_GUARD_RE.match(text)
+        if m:
+            if len(m.group(1).strip()) < MIN_JUSTIFICATION:
+                ann.findings.append(
+                    (path, t.line, "suppression",
+                     f"spawn-guard needs a justification (>= "
+                     f"{MIN_JUSTIFICATION} chars)"))
+            else:
+                ann.spawn_guard_lines.add(t.line)
+    return ann
+
+
+# --------------------------------------------------------------------
+# Lint passes (per file, over code tokens, skipping test lines)
+# --------------------------------------------------------------------
+
+BUCKETS = {"requests", "failed_requests", "rejected", "deadline_drops"}
+ATOMIC_OPS = {
+    "fetch_add", "fetch_sub", "fetch_update", "store", "swap",
+    "compare_exchange", "compare_exchange_weak",
+}
+TIME_CALLEES = {
+    "elapsed", "duration_since", "saturating_duration_since",
+    "from_secs", "from_millis", "from_micros", "from_nanos",
+    "from_secs_f64", "from_secs_f32",
+}
+TIME_ESCAPES = {
+    "as_secs", "as_secs_f64", "as_secs_f32", "as_millis", "as_micros",
+    "as_nanos", "subsec_nanos", "subsec_millis", "subsec_micros",
+    # calls whose result leaves the time domain: a let binding through
+    # one of these does NOT produce a time-typed variable
+    "len", "is_empty", "count", "partition", "map_or", "position",
+}
+TIME_MARKERS = {"Instant", "Duration", "elapsed", "duration_since"}
+
+
+def match_forward(ct, i, opens="([{", closes=")]}"):
+    """Index of the token closing the bracket at ct[i]."""
+    depth = 0
+    while i < len(ct):
+        if ct[i].text in opens:
+            depth += 1
+        elif ct[i].text in closes:
+            depth -= 1
+            if depth == 0:
+                return i
+        i += 1
+    return len(ct) - 1
+
+
+def match_back(ct, i, opens="([{", closes=")]}"):
+    depth = 0
+    while i >= 0:
+        if ct[i].text in closes:
+            depth += 1
+        elif ct[i].text in opens:
+            depth -= 1
+            if depth == 0:
+                return i
+        i -= 1
+    return 0
+
+
+def is_coordinator(path):
+    return "coordinator" in path.replace("\\", "/").split("/")
+
+
+def is_util_helpers(path):
+    p = path.replace("\\", "/")
+    return p.endswith("util/mod.rs")
+
+
+def lint_file(path, src, quota_methods, lock_fields_by_file):
+    """Run every pass over one file; returns (findings, annotations)."""
+    toks = tokenize(src)
+    tlines = test_lines(toks)
+    ann = collect_annotations(path, toks, quota_methods)
+    ct = code_tokens(toks)
+    findings = list(ann.findings)
+
+    def emit(line, lint_id, msg):
+        if line not in tlines:
+            findings.append((path, line, lint_id, msg))
+
+    # ---- raw-lock + simple token scans -----------------------------
+    fname = os.path.basename(path)
+    for i, t in enumerate(ct):
+        if t.line in tlines:
+            continue
+        nxt = ct[i + 1] if i + 1 < len(ct) else None
+        prv = ct[i - 1] if i > 0 else None
+        # raw-lock: method-call forms of lock/wait/wait_timeout
+        if (t.kind == IDENT and t.text in ("lock", "wait", "wait_timeout")
+                and prv is not None and prv.text == "."
+                and nxt is not None and nxt.text == "("
+                and not is_util_helpers(path)):
+            emit(t.line, "raw-lock",
+                 f".{t.text}() bypasses the poison-recovering "
+                 f"util::{t.text} helper (DESIGN.md §9/§11)")
+        # float-total-cmp
+        if t.kind == IDENT and t.text == "partial_cmp":
+            emit(t.line, "float-total-cmp",
+                 "partial_cmp in a sort/max position hangs or panics on "
+                 "NaN — use total_cmp (DESIGN.md §14, PR 4 bug class)")
+        # no-unwrap (coordinator only)
+        if (is_coordinator(path) and t.kind == IDENT
+                and t.text in ("unwrap", "expect")
+                and prv is not None and prv.text == "."
+                and nxt is not None and nxt.text == "("):
+            emit(t.line, "no-unwrap",
+                 f".{t.text}() in non-test coordinator code can kill a "
+                 f"worker and strand its clients — return an Err")
+        # metrics-recorder
+        if (t.kind == IDENT and t.text in BUCKETS and fname != "metrics.rs"
+                and nxt is not None and nxt.text == "."
+                and i + 2 < len(ct) and ct[i + 2].text in ATOMIC_OPS
+                and i + 3 < len(ct) and ct[i + 3].text == "("):
+            emit(t.line, "metrics-recorder",
+                 f"raw {ct[i+2].text} on accounting bucket '{t.text}' — "
+                 f"the four-bucket invariant is maintained only by "
+                 f"Metrics recorder methods (DESIGN.md §12)")
+        # spawn-guard: thread::spawn( or Builder chain .spawn(
+        is_spawn = (t.text == "spawn" and nxt is not None and nxt.text == "("
+                    and prv is not None and prv.text == "::"
+                    and i >= 2 and ct[i - 2].text == "thread")
+        if is_spawn:
+            close = match_forward(ct, i + 1)
+            body = ct[i + 1:close + 1]
+            guarded = any(
+                u.kind == IDENT and u.text in ("catch_unwind", "DeathWatch")
+                for u in body)
+            if not guarded:
+                near = any(
+                    ln in ann.spawn_guard_lines
+                    for ln in range(t.line - 3, body[-1].line + 1))
+                if not near:
+                    emit(t.line, "spawn-guard",
+                         "detached thread body has no catch_unwind/"
+                         "DeathWatch guard and no `// spawn-guard:` "
+                         "justification (DESIGN.md §13)")
+
+    # ---- per-function passes ---------------------------------------
+    findings.extend(
+        function_passes(path, ct, tlines, ann, quota_methods))
+
+    # filter suppressed
+    unsuppressed, suppressed = [], []
+    for f in findings:
+        _, line, lint_id, _ = f
+        if lint_id in ann.allow.get(line, ()) and lint_id != "suppression":
+            suppressed.append(f)
+        else:
+            unsuppressed.append(f)
+    return unsuppressed, suppressed
+
+
+def function_passes(path, ct, tlines, ann, quota_methods):
+    """lock-order, condvar-loop, time-checked: need fn bodies + blocks."""
+    out = []
+
+    def emit(line, lint_id, msg):
+        if line not in tlines:
+            out.append((path, line, lint_id, msg))
+
+    i = 0
+    while i < len(ct):
+        if ct[i].kind == IDENT and ct[i].text == "fn" and i + 1 < len(ct):
+            # signature: up to the body '{' (or ';' for trait decls)
+            j = i + 1
+            sig = []
+            while j < len(ct) and ct[j].text not in ("{", ";"):
+                sig.append(ct[j])
+                j += 1
+            if j >= len(ct) or ct[j].text == ";":
+                i = j + 1
+                continue
+            body_open = j
+            body_close = match_forward(ct, body_open, opens="{", closes="}")
+            analyze_fn(path, ct, sig, body_open, body_close, ann,
+                       quota_methods, emit)
+            # NOTE: nested fns/closures are analyzed as part of the
+            # enclosing body (same held-guard scope rules)
+            i = body_close + 1
+        else:
+            i += 1
+    return out
+
+
+def stmt_time_tokens(ct, i):
+    """Tokens of the statement starting at ct[i] (through ';' at depth 0)."""
+    depth, j = 0, i
+    stmt = []
+    while j < len(ct):
+        t = ct[j]
+        if t.text in "([{":
+            depth += 1
+        elif t.text in ")]}":
+            if depth == 0:
+                break
+            depth -= 1
+        elif t.text == ";" and depth == 0:
+            break
+        stmt.append(t)
+        j += 1
+    return stmt, j
+
+
+def analyze_fn(path, ct, sig, body_open, body_close, ann, quota_methods,
+               emit):
+    lock_fields = ann.lock_fields
+    # --- time vars from the signature ---
+    time_vars = set()
+    k = 0
+    # params live between the first '(' and its match within sig
+    try:
+        p0 = next(ix for ix, t in enumerate(sig) if t.text == "(")
+    except StopIteration:
+        p0 = None
+    if p0 is not None:
+        depth = 0
+        px = p0
+        pend = None
+        while px < len(sig):
+            if sig[px].text == "(":
+                depth += 1
+            elif sig[px].text == ")":
+                depth -= 1
+                if depth == 0:
+                    pend = px
+                    break
+            px += 1
+        pend = pend if pend is not None else len(sig) - 1
+        params = sig[p0 + 1:pend]
+        # split on top-level commas; mark `name: ...Instant/Duration...`
+        groups, cur, d = [], [], 0
+        for t in params:
+            if t.text in "([{<":
+                d += 1
+            elif t.text in ")]}>":
+                d -= 1
+            if t.text == "," and d == 0:
+                groups.append(cur)
+                cur = []
+            else:
+                cur.append(t)
+        if cur:
+            groups.append(cur)
+        for g in groups:
+            if not g:
+                continue
+            names = [t.text for t in g]
+            if ("Instant" in names or "Duration" in names) and g[0].kind == IDENT:
+                time_vars.add(g[0].text)
+
+    # --- walk the body ---
+    held = []          # list of (name_or_None, group, level, alone, depth)
+    bind_depth = {}    # guard var -> depth
+    depth = 0
+    block_kinds = []   # kind per open block
+    pending_kind = None
+    match_time_depths = []  # depths of match-blocks over time scrutinees
+
+    i = body_open
+    while i <= body_close:
+        t = ct[i]
+        txt = t.text
+
+        if t.kind == IDENT and txt in ("loop", "while", "for", "if", "else",
+                                       "match", "unsafe", "move"):
+            if txt == "match":
+                # time scrutinee? tokens up to the match '{'
+                j, scrut = i + 1, []
+                d2 = 0
+                while j <= body_close:
+                    if ct[j].text in "([":
+                        d2 += 1
+                    elif ct[j].text in ")]":
+                        d2 -= 1
+                    elif ct[j].text == "{" and d2 == 0:
+                        break
+                    scrut.append(ct[j])
+                    j += 1
+                names = {u.text for u in scrut if u.kind == IDENT}
+                if names & (time_vars | {"Instant", "Duration"}):
+                    match_time_depths.append(depth + 1)
+            if txt != "move":
+                pending_kind = txt
+            i += 1
+            continue
+
+        if txt == "{":
+            depth += 1
+            block_kinds.append(pending_kind or "block")
+            pending_kind = None
+            i += 1
+            continue
+        if txt == "}":
+            held = [h for h in held if h[4] < depth]
+            bind_depth = {k2: v for k2, v in bind_depth.items() if v < depth}
+            if match_time_depths and match_time_depths[-1] == depth:
+                match_time_depths.pop()
+            if block_kinds:
+                block_kinds.pop()
+            depth -= 1
+            i += 1
+            continue
+        if txt == ";":
+            pending_kind = None
+            i += 1
+            continue
+
+        # Some(x)/Ok(x) arm bindings inside a time-typed match
+        if (t.kind == IDENT and txt in ("Some", "Ok")
+                and match_time_depths and depth >= match_time_depths[-1]
+                and i + 2 <= body_close and ct[i + 1].text == "("
+                and ct[i + 2].kind == IDENT):
+            # only when this is an arm pattern: ')' then '=>' follows
+            j = match_forward(ct, i + 1)
+            if j + 1 <= body_close and ct[j + 1].text == "=>":
+                time_vars.add(ct[i + 2].text)
+
+        # let statements: collect time vars
+        if t.kind == IDENT and txt == "let":
+            stmt, _ = stmt_time_tokens(ct, i)
+            names = [u.text for u in stmt if u.kind == IDENT]
+            if (set(names) & (TIME_MARKERS | time_vars)
+                    and not (set(names) & TIME_ESCAPES)):
+                # pattern idents: between let and '='
+                for u in stmt[1:]:
+                    if u.text == "=":
+                        break
+                    if u.kind == IDENT and u.text not in ("mut", "ref"):
+                        time_vars.add(u.text)
+                        break
+            # fall through: the lock()-acquisition scan below still
+            # sees this statement's tokens
+
+        # drop(guard) releases
+        if (t.kind == IDENT and txt == "drop" and i + 2 <= body_close
+                and ct[i + 1].text == "(" and ct[i + 2].kind == IDENT):
+            name = ct[i + 2].text
+            held = [h for h in held if h[0] != name]
+            bind_depth.pop(name, None)
+
+        # quota-touch call under an intake guard
+        if (t.kind == IDENT and txt in quota_methods
+                and i + 1 <= body_close and ct[i + 1].text == "("
+                and i > 0 and ct[i - 1].text in (".", "::") and held):
+            emit(t.line, "lock-order",
+                 f"tenant-occupancy touch '{txt}()' while holding an "
+                 f"intake guard — the quota table must never nest "
+                 f"inside intake locks (DESIGN.md §12)")
+
+        # lock acquisitions: free `lock(&...field)` or raw `.lock()`
+        acquired = None
+        if (t.kind == IDENT and txt == "lock" and i + 1 <= body_close
+                and ct[i + 1].text == "("
+                and (i == 0 or ct[i - 1].text != ".")):
+            close = match_forward(ct, i + 1)
+            inner = [u for u in ct[i + 2:close] if u.kind == IDENT]
+            if inner:
+                acquired = inner[-1].text
+        elif (t.kind == IDENT and txt == "lock" and i > 0
+              and ct[i - 1].text == "." and i + 1 <= body_close
+              and ct[i + 1].text == "("):
+            back = [u for u in ct[max(0, i - 8):i - 1] if u.kind == IDENT]
+            if back:
+                acquired = back[-1].text
+        if acquired is not None and acquired in lock_fields:
+            group, level, alone = lock_fields[acquired]
+            for (hname, hgroup, hlevel, halone, _hd) in held:
+                if alone or halone:
+                    emit(t.line, "lock-order",
+                         f"'{acquired}' and '{hname or hgroup}' held "
+                         f"together but one is annotated `alone` "
+                         f"(DESIGN.md §11: the park lock is only ever "
+                         f"held alone)")
+                    break
+                if hgroup == group and level <= hlevel:
+                    emit(t.line, "lock-order",
+                         f"acquiring '{acquired}' (level {level}) while "
+                         f"holding '{hname or hgroup}' (level {hlevel}) "
+                         f"violates the {group} lock order "
+                         f"(DESIGN.md §11: shard → board only)")
+                    break
+            # bound or transient?  A guard binding is `<ident> = lock(..);`
+            # — a method chain after the call (`lock(..).clone()`) means
+            # the guard is a temporary dropped at statement end.
+            name = None
+            if i >= 2 and ct[i - 1].text == "=" and ct[i - 2].kind == IDENT:
+                close = match_forward(ct, i + 1)
+                after = ct[close + 1] if close + 1 < len(ct) else None
+                if after is not None and after.text == ";":
+                    name = ct[i - 2].text
+            if name is not None:
+                held.append((name, group, level, alone, depth))
+                bind_depth[name] = depth
+
+        # condvar-loop: free wait()/wait_timeout() calls
+        if (t.kind == IDENT and txt in ("wait", "wait_timeout")
+                and i + 1 <= body_close and ct[i + 1].text == "("
+                and (i == 0 or ct[i - 1].text != ".")
+                and not is_util_helpers(path)):
+            if not any(k2 in ("loop", "while") for k2 in block_kinds):
+                emit(t.line, "condvar-loop",
+                     f"condvar {txt}() outside a while/loop predicate "
+                     f"re-check — spurious wakeups break an `if` guard "
+                     f"(DESIGN.md §14)")
+
+        # time-checked: binary +/- or +=/-= with a time-typed operand
+        if txt in ("+", "-", "+=", "-="):
+            prv = ct[i - 1] if i > 0 else None
+            binary = prv is not None and (
+                prv.kind in (IDENT, NUM, STR, CHAR) or prv.text in (")", "]"))
+            if binary:
+                left_time = operand_is_time(ct, i - 1, time_vars, back=True)
+                right_time = operand_is_time(ct, i + 1, time_vars, back=False)
+                if left_time or right_time:
+                    emit(t.line, "time-checked",
+                         f"bare `{txt}` on Instant/Duration can panic on "
+                         f"underflow/overflow — use checked_add/"
+                         f"checked_sub/saturating_duration_since "
+                         f"(DESIGN.md §9, PR 2 bug class)")
+        i += 1
+
+
+def operand_is_time(ct, i, time_vars, back):
+    if i < 0 or i >= len(ct):
+        return False
+    t = ct[i]
+    if back:
+        if t.kind == IDENT:
+            return t.text in time_vars
+        if t.text == ")":
+            op = match_back(ct, i)
+            callee = ct[op - 1] if op >= 1 else None
+            if callee is not None and callee.kind == IDENT:
+                if callee.text == "now" and op >= 3 and \
+                        ct[op - 2].text == "::" and ct[op - 3].text == "Instant":
+                    return True
+                return callee.text in TIME_CALLEES
+        return False
+    # forward: Instant::now(...), Duration::from_*(...), time var, or
+    # a unary-parenthesized time expr
+    if t.kind == IDENT:
+        if t.text in time_vars:
+            return True
+        if t.text in ("Instant", "Duration") and i + 2 < len(ct) and \
+                ct[i + 1].text == "::":
+            nxt = ct[i + 2]
+            return nxt.text == "now" or nxt.text in TIME_CALLEES
+    return False
+
+
+# --------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------
+
+
+def rust_files(paths):
+    files = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, _dirs, names in os.walk(p):
+            for nm in sorted(names):
+                if nm.endswith(".rs"):
+                    files.append(os.path.join(root, nm))
+    return sorted(files)
+
+
+def main(argv):
+    verbose = "--verbose" in argv
+    paths = [a for a in argv if not a.startswith("--")] or ["rust/src"]
+    quota_methods = set()
+    sources = {}
+    for f in rust_files(paths):
+        with open(f, encoding="utf-8") as fh:
+            sources[f] = fh.read()
+    # pass A: collect cross-file annotations (quota-touch methods)
+    for f, src in sources.items():
+        collect_annotations(f, tokenize(src), quota_methods)
+    # pass B: lint
+    all_unsup, all_sup = [], []
+    for f, src in sources.items():
+        unsup, sup = lint_file(f, src, quota_methods, None)
+        all_unsup.extend(unsup)
+        all_sup.extend(sup)
+    for (f, line, lint_id, msg) in sorted(all_unsup):
+        print(f"{f}:{line}: [{lint_id}] {msg}")
+    if verbose:
+        counts = {}
+        for (_f, _l, lid, _m) in all_unsup:
+            counts[lid] = counts.get(lid, 0) + 1
+        print(f"-- {len(all_unsup)} unsuppressed finding(s), "
+              f"{len(all_sup)} suppressed --")
+        for lid in sorted(LINT_IDS):
+            print(f"   {lid}: {counts.get(lid, 0)}")
+        for (f, line, lid, msg) in sorted(all_sup):
+            print(f"   suppressed {f}:{line}: [{lid}] {msg}")
+    return 1 if all_unsup else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,351 @@
+//! Annotation and suppression comments the analyzer understands.
+//!
+//! Three comment grammars (DESIGN.md §14):
+//!
+//! * `// lock-order: <group> level <n> [alone]` — on the line above a
+//!   mutex field declaration; feeds the `lock-order` lint (§11).
+//! * `// lock-order: quota-touch` — on the line above an `fn` whose
+//!   body touches the tenant-occupancy table; calling it while holding
+//!   any annotated guard is flagged (§12).
+//! * `// spawn-guard: <justification>` — within three lines above a
+//!   `thread::spawn` (or anywhere in its body) to vouch for a detached
+//!   thread that is neither `catch_unwind`-guarded nor
+//!   DeathWatch-registered.
+//! * `// lint:allow(<id>): <justification>` — suppresses one finding
+//!   of lint `<id>` on the same line or the next code line.
+//!
+//! Justifications are mandatory (≥ [`MIN_JUSTIFICATION`] chars) —
+//! a suppression without a *why* is itself a finding (`suppression`),
+//! which cannot be suppressed.
+
+use std::collections::{HashMap, HashSet};
+
+use super::lexer::{code_tokens, Token, TokenKind};
+use super::report::Finding;
+use super::LINT_IDS;
+
+/// Minimum justification length for `lint:allow` / `spawn-guard`.
+pub const MIN_JUSTIFICATION: usize = 8;
+
+/// A `// lock-order:` field annotation: acquisition group, level
+/// within the group (higher may be taken while holding lower), and
+/// whether the lock must only ever be held alone.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LockSpec {
+    /// Acquisition group name (`intake`, `metrics`, …).
+    pub group: String,
+    /// Level within the group; acquiring `level <= held level` flags.
+    pub level: u32,
+    /// `alone` locks may never be held together with any other
+    /// annotated lock (the §11 park-lock rule).
+    pub alone: bool,
+}
+
+/// Everything the annotation pass extracts from one file.
+#[derive(Debug, Default)]
+pub struct FileAnnotations {
+    /// Mutex field name → its lock-order spec.
+    pub lock_fields: HashMap<String, LockSpec>,
+    /// Lines carrying a well-formed `// spawn-guard:` justification.
+    pub spawn_guard_lines: HashSet<u32>,
+    /// Line → lint ids suppressed on that line.
+    pub allow: HashMap<u32, HashSet<&'static str>>,
+    /// Malformed-annotation findings (lint id `suppression`).
+    pub findings: Vec<Finding>,
+}
+
+fn is_group_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_' || c == '-'
+}
+
+/// `// lint:allow(<id>)[: justification]` — returns `(id, just)`;
+/// `None` when the comment is not an allow at all.
+fn parse_allow(text: &str) -> Option<(String, String)> {
+    let rest = text.strip_prefix("//")?.trim_start();
+    let rest = rest.strip_prefix("lint:allow(")?;
+    let close = rest.find(')')?;
+    let id = &rest[..close];
+    if id.is_empty() || !id.chars().all(|c| c.is_ascii_lowercase() || c == '-') {
+        return None;
+    }
+    let after = &rest[close + 1..];
+    if after.is_empty() {
+        return Some((id.to_string(), String::new()));
+    }
+    let just = after.strip_prefix(':')?;
+    Some((id.to_string(), just.trim().to_string()))
+}
+
+/// Parsed `// lock-order:` annotation payload.
+enum LockOrderAnn {
+    /// `quota-touch` — the following fn touches the occupancy table.
+    Quota,
+    /// `<group> level <n> [alone]` — the following field is a lock.
+    Field(LockSpec),
+}
+
+fn parse_lock_order(text: &str) -> Option<LockOrderAnn> {
+    let rest = text.strip_prefix("//")?.trim_start();
+    let rest = rest.strip_prefix("lock-order:")?.trim_start();
+    if let Some(after) = rest.strip_prefix("quota-touch") {
+        if after.trim().is_empty() {
+            return Some(LockOrderAnn::Quota);
+        }
+        // else: fall through — `quota-touch2 level 1` is a field group
+    }
+    // `<group> level <n> [alone]`: group is [A-Za-z_][A-Za-z0-9_-]*
+    let mut chars = rest.char_indices();
+    let (_, first) = chars.next()?;
+    if !(first.is_alphabetic() || first == '_') {
+        return None;
+    }
+    let gend = rest
+        .char_indices()
+        .find(|&(_, c)| !is_group_char(c))
+        .map(|(ix, _)| ix)
+        .unwrap_or(rest.len());
+    let group = &rest[..gend];
+    let after_group = &rest[gend..];
+    let trimmed = after_group.trim_start();
+    if trimmed.len() == after_group.len() {
+        return None; // need >= 1 whitespace before `level`
+    }
+    let after_level = trimmed.strip_prefix("level")?;
+    let digits_part = after_level.trim_start();
+    if digits_part.len() == after_level.len() {
+        return None; // need >= 1 whitespace before the number
+    }
+    let dend = digits_part
+        .char_indices()
+        .find(|&(_, c)| !c.is_ascii_digit())
+        .map(|(ix, _)| ix)
+        .unwrap_or(digits_part.len());
+    if dend == 0 {
+        return None;
+    }
+    let level: u32 = digits_part[..dend].parse().ok()?;
+    let tail = &digits_part[dend..];
+    let alone = if tail.trim().is_empty() {
+        false
+    } else {
+        let stripped = tail.trim_start();
+        if stripped.len() == tail.len() || stripped.trim_end() != "alone" {
+            return None;
+        }
+        true
+    };
+    Some(LockOrderAnn::Field(LockSpec { group: group.to_string(), level, alone }))
+}
+
+/// `// spawn-guard: <justification>` — returns the justification.
+fn parse_spawn_guard(text: &str) -> Option<String> {
+    let rest = text.strip_prefix("//")?.trim_start();
+    let rest = rest.strip_prefix("spawn-guard:")?;
+    Some(rest.trim().to_string())
+}
+
+/// Code tokens on the first line with code strictly after `after_line`.
+pub fn next_code_line_tokens<'a>(ct: &'a [Token], after_line: u32) -> Vec<&'a Token> {
+    for (idx, t) in ct.iter().enumerate() {
+        if t.line > after_line {
+            let ln = t.line;
+            return ct[idx..].iter().take_while(|u| u.line == ln).collect();
+        }
+    }
+    Vec::new()
+}
+
+fn known_lint_id(id: &str) -> Option<&'static str> {
+    LINT_IDS.iter().find(|&&k| k == id).copied()
+}
+
+/// Parse every annotation comment in `toks`.  Well-formed
+/// `quota-touch` fn names are added to the cross-file `quota_methods`
+/// set; malformed annotations become `suppression` findings.
+pub fn collect_annotations(
+    path: &str,
+    toks: &[Token],
+    quota_methods: &mut HashSet<String>,
+) -> FileAnnotations {
+    let mut ann = FileAnnotations::default();
+    let ct = code_tokens(toks);
+    for t in toks {
+        if t.kind != TokenKind::Comment || !t.text.starts_with("//") {
+            continue;
+        }
+        let text = t.text.trim();
+        if let Some((id, just)) = parse_allow(text) {
+            let Some(id) = known_lint_id(&id) else {
+                ann.findings.push(Finding::new(
+                    path,
+                    t.line,
+                    "suppression",
+                    format!("lint:allow names unknown lint '{id}'"),
+                ));
+                continue;
+            };
+            if just.chars().count() < MIN_JUSTIFICATION {
+                ann.findings.push(Finding::new(
+                    path,
+                    t.line,
+                    "suppression",
+                    format!(
+                        "lint:allow({id}) needs a justification \
+                         (>= {MIN_JUSTIFICATION} chars after a colon)"
+                    ),
+                ));
+                continue;
+            }
+            ann.allow.entry(t.line).or_default().insert(id);
+            let nxt = next_code_line_tokens(&ct, t.line);
+            if let Some(first) = nxt.first() {
+                ann.allow.entry(first.line).or_default().insert(id);
+            }
+            continue;
+        }
+        if let Some(parsed) = parse_lock_order(text) {
+            let nxt = next_code_line_tokens(&ct, t.line);
+            match parsed {
+                LockOrderAnn::Quota => {
+                    let mut name = None;
+                    for (k, u) in nxt.iter().enumerate() {
+                        if u.kind == TokenKind::Ident && u.text == "fn" && k + 1 < nxt.len() {
+                            name = Some(nxt[k + 1].text.clone());
+                            break;
+                        }
+                    }
+                    match name {
+                        Some(name) => {
+                            quota_methods.insert(name);
+                        }
+                        None => ann.findings.push(Finding::new(
+                            path,
+                            t.line,
+                            "suppression",
+                            "lock-order: quota-touch must precede an fn".to_string(),
+                        )),
+                    }
+                }
+                LockOrderAnn::Field(spec) => {
+                    let field = nxt
+                        .first()
+                        .filter(|u| u.kind == TokenKind::Ident)
+                        .map(|u| u.text.clone());
+                    match field {
+                        None => ann.findings.push(Finding::new(
+                            path,
+                            t.line,
+                            "suppression",
+                            "lock-order annotation must precede a field".to_string(),
+                        )),
+                        Some(field) => {
+                            if let Some(prev) = ann.lock_fields.get(&field) {
+                                if *prev != spec {
+                                    ann.findings.push(Finding::new(
+                                        path,
+                                        t.line,
+                                        "suppression",
+                                        format!(
+                                            "conflicting lock-order annotations \
+                                             for field '{field}'"
+                                        ),
+                                    ));
+                                }
+                            }
+                            ann.lock_fields.insert(field, spec);
+                        }
+                    }
+                }
+            }
+            continue;
+        } else if text.starts_with("// lock-order:") || text.starts_with("//lock-order:") {
+            ann.findings.push(Finding::new(
+                path,
+                t.line,
+                "suppression",
+                "malformed lock-order annotation (want '<group> level <n> \
+                 [alone]' or 'quota-touch')"
+                    .to_string(),
+            ));
+            continue;
+        }
+        if let Some(just) = parse_spawn_guard(text) {
+            if just.chars().count() < MIN_JUSTIFICATION {
+                ann.findings.push(Finding::new(
+                    path,
+                    t.line,
+                    "suppression",
+                    format!("spawn-guard needs a justification (>= {MIN_JUSTIFICATION} chars)"),
+                ));
+            } else {
+                ann.spawn_guard_lines.insert(t.line);
+            }
+        }
+    }
+    ann
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::tokenize;
+
+    fn collect(src: &str) -> (FileAnnotations, HashSet<String>) {
+        let mut quota = HashSet::new();
+        let ann = collect_annotations("t.rs", &tokenize(src), &mut quota);
+        (ann, quota)
+    }
+
+    #[test]
+    fn lock_order_field_annotation_parses() {
+        let (ann, _) = collect("struct S {\n// lock-order: intake level 2 alone\nboard: Mutex<u32>,\n}");
+        let spec = ann.lock_fields.get("board").expect("field recorded");
+        assert_eq!(spec.group, "intake");
+        assert_eq!(spec.level, 2);
+        assert!(spec.alone);
+        assert!(ann.findings.is_empty());
+    }
+
+    #[test]
+    fn quota_touch_collects_fn_name() {
+        let (ann, quota) = collect("// lock-order: quota-touch\npub fn try_charge(&self) {}\n");
+        assert!(quota.contains("try_charge"));
+        assert!(ann.findings.is_empty());
+    }
+
+    #[test]
+    fn malformed_lock_order_is_a_finding() {
+        let (ann, _) = collect("// lock-order: intake levle 1\nx: Mutex<u32>,\n");
+        assert_eq!(ann.findings.len(), 1);
+        assert_eq!(ann.findings[0].lint, "suppression");
+    }
+
+    #[test]
+    fn allow_requires_justification() {
+        let (ann, _) = collect("// lint:allow(no-unwrap)\nfoo();\n");
+        assert_eq!(ann.findings.len(), 1);
+        let (ann, _) = collect("// lint:allow(no-unwrap): short\nfoo();\n");
+        assert_eq!(ann.findings.len(), 1);
+        let (ann, _) = collect("// lint:allow(no-unwrap): a real justification\nfoo();\n");
+        assert!(ann.findings.is_empty());
+        // suppression applies to the comment line AND the next code line
+        assert!(ann.allow.get(&1).is_some_and(|s| s.contains("no-unwrap")));
+        assert!(ann.allow.get(&2).is_some_and(|s| s.contains("no-unwrap")));
+    }
+
+    #[test]
+    fn allow_unknown_lint_is_a_finding() {
+        let (ann, _) = collect("// lint:allow(made-up): some justification\nfoo();\n");
+        assert_eq!(ann.findings.len(), 1);
+        assert!(ann.findings[0].msg.contains("unknown lint"));
+    }
+
+    #[test]
+    fn spawn_guard_needs_a_why() {
+        let (ann, _) = collect("// spawn-guard: ok\nthread::spawn(|| {});\n");
+        assert_eq!(ann.findings.len(), 1);
+        let (ann, _) = collect("// spawn-guard: joined on shutdown\nthread::spawn(|| {});\n");
+        assert!(ann.findings.is_empty());
+        assert!(ann.spawn_guard_lines.contains(&1));
+    }
+}

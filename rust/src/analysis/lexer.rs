@@ -1,0 +1,398 @@
+//! Minimal Rust tokenizer for the in-tree static analyzer.
+//!
+//! The build environment is offline (no `syn`, no clippy internals —
+//! DESIGN.md §2), so `dybit-lint` carries its own lexer, the same way
+//! `util::proptest` carries its own shrinking harness.  It is a
+//! *token*-level view, not a parse tree: enough to distinguish
+//! identifiers, string/char literals (so `lock` inside a string never
+//! fires a lint), lifetimes vs. char literals, nested block comments,
+//! and multi-character operators — and deliberately nothing more.
+//! Comments are kept as tokens because the annotation layer
+//! ([`crate::analysis::annotations`]) reads `// lock-order:` /
+//! `// lint:allow(..)` / `// spawn-guard:` markers out of them.
+//!
+//! The Python validation mirror (`python/tools/lint_mirror.py`) must
+//! tokenize identically; the fixture suite under
+//! `rust/tests/fixtures/lint/` certifies both.
+
+/// Token classes produced by [`tokenize`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`fn`, `lock`, `while`, …).
+    Ident,
+    /// Lifetime (`'a`, `'static`) — distinguished from char literals.
+    Lifetime,
+    /// Char literal (`'x'`, `'\n'`, `'\x41'`).
+    Char,
+    /// String literal, including raw (`r#".."#`) and byte (`b".."`).
+    Str,
+    /// Numeric literal (underscores, suffixes, floats, exponents).
+    Num,
+    /// Line or block comment (block comments nest, as in Rust).
+    Comment,
+    /// Operator / punctuation, multi-character ops as one token.
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    /// Token class.
+    pub kind: TokenKind,
+    /// Exact source text of the token.
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+/// Multi-character operators, longest-match-first.
+const MULTI_PUNCT: &[&str] = &[
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=",
+    "&&", "||", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<",
+    ">>", "..",
+];
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Does `s[i..]` start with the literal `pat`?
+fn starts_with_at(s: &[char], i: usize, pat: &str) -> bool {
+    let p: Vec<char> = pat.chars().collect();
+    i + p.len() <= s.len() && s[i..i + p.len()].iter().copied().eq(p)
+}
+
+/// First index `>= from` where `pat` occurs in `s`, if any.
+fn find_from(s: &[char], from: usize, pat: &[char]) -> Option<usize> {
+    if pat.is_empty() || pat.len() > s.len() {
+        return None;
+    }
+    (from..=s.len() - pat.len()).find(|&j| s[j..j + pat.len()] == *pat)
+}
+
+fn collect_text(s: &[char], a: usize, b: usize) -> String {
+    s[a..b.min(s.len())].iter().collect()
+}
+
+/// Tokenize Rust source.  Unterminated literals/comments run to end of
+/// input rather than erroring — the analyzer lints real, compiling
+/// source, so graceful truncation is the right failure mode.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let peek = |j: usize| if j < n { s[j] } else { '\0' };
+
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && peek(i + 1) == '/' {
+            let j = find_from(&s, i, &['\n']).unwrap_or(n);
+            toks.push(Token { kind: TokenKind::Comment, text: collect_text(&s, i, j), line });
+            i = j;
+            continue;
+        }
+        // block comment (nesting)
+        if c == '/' && peek(i + 1) == '*' {
+            let (start, startline) = (i, line);
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if s[i] == '/' && peek(i + 1) == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if s[i] == '*' && peek(i + 1) == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if s[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            toks.push(Token {
+                kind: TokenKind::Comment,
+                text: collect_text(&s, start, i),
+                line: startline,
+            });
+            continue;
+        }
+        // raw / byte strings: r"", r#""#, b"", br#""#
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if s[j] == 'b' {
+                j += 1;
+            }
+            let mut raw_open = None;
+            if j < n && s[j] == 'r' {
+                let mut h = j + 1;
+                while h < n && s[h] == '#' {
+                    h += 1;
+                }
+                if h < n && s[h] == '"' {
+                    raw_open = Some((h, h - (j + 1))); // (quote index, #hashes)
+                }
+            }
+            if let Some((q, hashes)) = raw_open {
+                let close: Vec<char> =
+                    std::iter::once('"').chain(std::iter::repeat('#').take(hashes)).collect();
+                let end = match find_from(&s, q + 1, &close) {
+                    Some(k) => k + close.len(),
+                    None => n,
+                };
+                let text = collect_text(&s, i, end);
+                let newlines = text.matches('\n').count() as u32;
+                toks.push(Token { kind: TokenKind::Str, text, line });
+                line += newlines;
+                i = end;
+                continue;
+            }
+            if c == 'b' && peek(i + 1) == '"' {
+                let mut j2 = i + 2;
+                while j2 < n && s[j2] != '"' {
+                    j2 += if s[j2] == '\\' { 2 } else { 1 };
+                }
+                let end = (j2 + 1).min(n);
+                let text = collect_text(&s, i, end);
+                let newlines = text.matches('\n').count() as u32;
+                toks.push(Token { kind: TokenKind::Str, text, line });
+                line += newlines;
+                i = end;
+                continue;
+            }
+            // plain identifier starting with r/b — fall through below
+        }
+        if c == '"' {
+            let mut j = i + 1;
+            while j < n && s[j] != '"' {
+                j += if s[j] == '\\' { 2 } else { 1 };
+            }
+            let end = (j + 1).min(n);
+            let text = collect_text(&s, i, end);
+            let newlines = text.matches('\n').count() as u32;
+            toks.push(Token { kind: TokenKind::Str, text, line });
+            line += newlines;
+            i = end;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if peek(i + 1) == '\\' {
+                let mut j = i + 2;
+                if matches!(peek(i + 2), 'x' | 'u' | 'U') {
+                    while j < n && s[j] != '\'' {
+                        j += 1;
+                    }
+                } else {
+                    j += 1;
+                }
+                let end = (j + 1).min(n);
+                toks.push(Token { kind: TokenKind::Char, text: collect_text(&s, i, end), line });
+                i = end;
+                continue;
+            }
+            if (peek(i + 1).is_alphabetic() || peek(i + 1) == '_') && peek(i + 2) != '\'' {
+                let mut j = i + 1;
+                while j < n && is_ident_continue(s[j]) {
+                    j += 1;
+                }
+                toks.push(Token { kind: TokenKind::Lifetime, text: collect_text(&s, i, j), line });
+                i = j;
+                continue;
+            }
+            // 'a' style single-char literal
+            let mut j = i + 2;
+            if j < n && s[j] == '\'' {
+                j += 1;
+            }
+            toks.push(Token { kind: TokenKind::Char, text: collect_text(&s, i, j), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && is_ident_continue(s[j]) {
+                j += 1;
+            }
+            // float part: '.' only when followed by a digit (never eat ..)
+            if j < n && s[j] == '.' && j + 1 < n && s[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && is_ident_continue(s[j]) {
+                    j += 1;
+                }
+                if j < n && matches!(s[j - 1], 'e' | 'E') && matches!(s[j], '+' | '-') {
+                    j += 1;
+                    while j < n && is_ident_continue(s[j]) {
+                        j += 1;
+                    }
+                }
+            } else if j < n
+                && matches!(s[j - 1], 'e' | 'E')
+                && matches!(s[j], '+' | '-')
+                && !collect_text(&s, i, j).contains("0x")
+            {
+                j += 1;
+                while j < n && is_ident_continue(s[j]) {
+                    j += 1;
+                }
+            }
+            toks.push(Token { kind: TokenKind::Num, text: collect_text(&s, i, j), line });
+            i = j;
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i + 1;
+            while j < n && is_ident_continue(s[j]) {
+                j += 1;
+            }
+            toks.push(Token { kind: TokenKind::Ident, text: collect_text(&s, i, j), line });
+            i = j;
+            continue;
+        }
+        let mut matched = false;
+        for op in MULTI_PUNCT {
+            if starts_with_at(&s, i, op) {
+                toks.push(Token { kind: TokenKind::Punct, text: (*op).to_string(), line });
+                i += op.chars().count();
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            toks.push(Token { kind: TokenKind::Punct, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    toks
+}
+
+/// The comment-free view most lints run on.
+pub fn code_tokens(toks: &[Token]) -> Vec<Token> {
+    toks.iter().filter(|t| t.kind != TokenKind::Comment).cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds_texts(src: &str) -> Vec<(TokenKind, String)> {
+        tokenize(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn raw_strings_swallow_quotes_and_hashes() {
+        let toks = kinds_texts(r##"let s = r#"he said "lock()""#;"##);
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokenKind::Str && t.contains("lock()")));
+        // the `lock` inside the raw string must NOT surface as an ident
+        assert!(!toks.iter().any(|(k, t)| *k == TokenKind::Ident && t == "lock"));
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let toks = kinds_texts("let a = b\"abc\"; let b2 = br#\"x\"y\"#;");
+        let strs: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokenKind::Str).collect();
+        assert_eq!(strs.len(), 2);
+        assert_eq!(strs[0].1, "b\"abc\"");
+        assert_eq!(strs[1].1, "br#\"x\"y\"#");
+    }
+
+    #[test]
+    fn idents_starting_with_r_or_b_are_not_strings() {
+        let toks = kinds_texts("let rx = board; let b = r + 1;");
+        assert!(toks.iter().all(|(k, _)| *k != TokenKind::Str));
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokenKind::Ident && t == "rx"));
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokenKind::Ident && t == "board"));
+    }
+
+    #[test]
+    fn nested_block_comments_stay_one_token() {
+        let src = "a /* outer /* inner */ still comment */ b";
+        let toks = kinds_texts(src);
+        assert_eq!(toks.len(), 3);
+        assert_eq!(toks[0].1, "a");
+        assert_eq!(toks[1].0, TokenKind::Comment);
+        assert!(toks[1].1.contains("inner"));
+        assert_eq!(toks[2].1, "b");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds_texts("fn f<'a>(x: &'a str) { let c = 'a'; let nl = '\\n'; }");
+        let lifetimes: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokenKind::Lifetime).collect();
+        let chars: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokenKind::Char).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert!(lifetimes.iter().all(|(_, t)| t == "'a"));
+        assert_eq!(chars.len(), 2);
+        assert_eq!(chars[0].1, "'a'");
+        assert_eq!(chars[1].1, "'\\n'");
+    }
+
+    #[test]
+    fn numeric_literals_with_underscores_and_exponents() {
+        let toks = kinds_texts("1_000 0xFF_u32 1.5e-3 2e6 3..4");
+        let nums: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokenKind::Num)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(nums, ["1_000", "0xFF_u32", "1.5e-3", "2e6", "3", "4"]);
+        // the range operator must survive as one punct token
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokenKind::Punct && t == ".."));
+    }
+
+    #[test]
+    fn multi_char_operators_are_single_tokens() {
+        let toks = kinds_texts("a <<= b; c ..= d; e :: f -> g => h");
+        for op in ["<<=", "..=", "::", "->", "=>"] {
+            assert!(
+                toks.iter().any(|(k, t)| *k == TokenKind::Punct && t == op),
+                "missing operator token {op}"
+            );
+        }
+    }
+
+    #[test]
+    fn line_numbers_track_strings_and_comments() {
+        let src = "a\n\"two\nline\"\n/* c\nc */ b";
+        let toks = tokenize(src);
+        assert_eq!(toks[0].line, 1); // a
+        assert_eq!(toks[1].line, 2); // the string starts on line 2
+        assert_eq!(toks[2].line, 4); // the comment starts on line 4
+        assert_eq!(toks[3].line, 5); // b lands after the comment's newline
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let toks = kinds_texts(r#"let s = "a \" b"; done"#);
+        let strs: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokenKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert_eq!(strs[0].1, r#""a \" b""#);
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokenKind::Ident && t == "done"));
+    }
+}

@@ -1,0 +1,988 @@
+//! The lint passes: per-file token scans plus per-function
+//! scope-tracking passes.  Each lint guards a written DESIGN.md
+//! invariant or a bug class a past PR actually shipped; the catalog
+//! with rationale lives in DESIGN.md §14.
+//!
+//! Two layers:
+//!
+//! * **token scans** ([`lint_file`]) — `raw-lock`, `float-total-cmp`,
+//!   `no-unwrap`, `metrics-recorder`, `spawn-guard`: local patterns a
+//!   sliding window over the comment-free token stream can decide.
+//! * **function passes** (`lock-order`, `condvar-loop`,
+//!   `time-checked`) — walk each `fn` body tracking lexical block
+//!   depth, held lock guards, and time-typed variables.
+//!
+//! Known limitation (documented in DESIGN.md §14): lock-order
+//! tracking is *lexical and per-function* — a guard passed into a
+//! callee that then acquires a second lock is not seen.  The §11
+//! cross-function nesting (`board_update` under a shard guard) is
+//! covered by the stress suite and the `--sanitize` TSan tier, not by
+//! this lint.
+//!
+//! All lints skip `#[cfg(test)]` / `#[test]` item spans: tests may
+//! unwrap, sleep-subtract, and poke raw locks on purpose.
+
+use std::collections::HashSet;
+
+use super::annotations::{collect_annotations, FileAnnotations};
+use super::lexer::{code_tokens, tokenize, Token, TokenKind};
+use super::report::Finding;
+
+/// The four accounting buckets of the DESIGN.md §12 invariant
+/// (`requests + failed_requests + rejected + deadline_drops ==
+/// submitted`); raw atomic ops on idents with these names outside
+/// `metrics.rs` are flagged.
+const BUCKETS: &[&str] = &["requests", "failed_requests", "rejected", "deadline_drops"];
+
+/// Mutating atomic methods that count as "touching" a bucket.
+const ATOMIC_OPS: &[&str] = &[
+    "fetch_add",
+    "fetch_sub",
+    "fetch_update",
+    "store",
+    "swap",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+/// Callees whose result is time-typed (`Instant`/`Duration`).
+const TIME_CALLEES: &[&str] = &[
+    "elapsed",
+    "duration_since",
+    "saturating_duration_since",
+    "from_secs",
+    "from_millis",
+    "from_micros",
+    "from_nanos",
+    "from_secs_f64",
+    "from_secs_f32",
+];
+
+/// Callees whose result *leaves* the time domain: a `let` binding
+/// routed through one of these does not produce a time-typed var.
+const TIME_ESCAPES: &[&str] = &[
+    "as_secs",
+    "as_secs_f64",
+    "as_secs_f32",
+    "as_millis",
+    "as_micros",
+    "as_nanos",
+    "subsec_nanos",
+    "subsec_millis",
+    "subsec_micros",
+    "len",
+    "is_empty",
+    "count",
+    "partition",
+    "map_or",
+    "position",
+];
+
+/// Idents whose presence in a `let` statement marks the binding as
+/// time-typed (unless a [`TIME_ESCAPES`] call intervenes).
+const TIME_MARKERS: &[&str] = &["Instant", "Duration", "elapsed", "duration_since"];
+
+fn in_list(list: &[&str], s: &str) -> bool {
+    list.contains(&s)
+}
+
+fn is_open(t: &str) -> bool {
+    matches!(t, "(" | "[" | "{")
+}
+
+fn is_close(t: &str) -> bool {
+    matches!(t, ")" | "]" | "}")
+}
+
+/// Index of the token closing the bracket at `ct[i]` (any of
+/// `([{`/`)]}`); the last index when unmatched.
+fn match_forward(ct: &[Token], mut i: usize) -> usize {
+    let mut depth = 0i32;
+    while i < ct.len() {
+        if is_open(&ct[i].text) {
+            depth += 1;
+        } else if is_close(&ct[i].text) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    ct.len().saturating_sub(1)
+}
+
+/// Like [`match_forward`] but counting only `{`/`}` — used to span an
+/// `fn` body whose signature may contain unbalanced-looking tokens.
+fn match_brace_forward(ct: &[Token], mut i: usize) -> usize {
+    let mut depth = 0i32;
+    while i < ct.len() {
+        if ct[i].text == "{" {
+            depth += 1;
+        } else if ct[i].text == "}" {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    ct.len().saturating_sub(1)
+}
+
+/// Index of the token opening the bracket closed at `ct[i]`.
+fn match_back(ct: &[Token], i: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = i as isize;
+    while j >= 0 {
+        let t = &ct[j as usize].text;
+        if is_close(t) {
+            depth += 1;
+        } else if is_open(t) {
+            depth -= 1;
+            if depth == 0 {
+                return j as usize;
+            }
+        }
+        j -= 1;
+    }
+    0
+}
+
+/// Lines covered by items under `#[cfg(test)]`-ish or `#[test]`
+/// attributes (the attribute line through the item body's close).
+pub fn test_lines(toks: &[Token]) -> HashSet<u32> {
+    let mut lines = HashSet::new();
+    let ct = code_tokens(toks);
+    let mut i = 0usize;
+    while i < ct.len() {
+        if ct[i].text == "#" && i + 1 < ct.len() && ct[i + 1].text == "[" {
+            // span the attribute, noting any `test` ident inside it
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            let mut has_test = false;
+            while j < ct.len() {
+                if ct[j].text == "[" {
+                    depth += 1;
+                } else if ct[j].text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if ct[j].kind == TokenKind::Ident && ct[j].text == "test" {
+                    has_test = true;
+                }
+                j += 1;
+            }
+            let attr_end = j;
+            if has_test {
+                let start_line = ct[i].line;
+                // skip any further attributes to the item head
+                let mut k = attr_end + 1;
+                while k + 1 < ct.len() && ct[k].text == "#" && ct[k + 1].text == "[" {
+                    let mut d = 0i32;
+                    while k < ct.len() {
+                        if ct[k].text == "[" {
+                            d += 1;
+                        } else if ct[k].text == "]" {
+                            d -= 1;
+                            if d == 0 {
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    k += 1;
+                }
+                // item body: first top-level '{' .. matching '}', or ';'
+                let mut d = 0i32;
+                let mut end_line = start_line;
+                while k < ct.len() {
+                    let t = &ct[k];
+                    if t.text == ";" && d == 0 {
+                        end_line = t.line;
+                        break;
+                    }
+                    if is_open(&t.text) {
+                        d += 1;
+                    } else if is_close(&t.text) {
+                        d -= 1;
+                        if d == 0 && t.text == "}" {
+                            end_line = t.line;
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                for ln in start_line..=end_line {
+                    lines.insert(ln);
+                }
+                i = k + 1;
+                continue;
+            }
+            i = attr_end + 1;
+            continue;
+        }
+        i += 1;
+    }
+    lines
+}
+
+fn is_coordinator(path: &str) -> bool {
+    path.replace('\\', "/").split('/').any(|p| p == "coordinator")
+}
+
+fn is_util_helpers(path: &str) -> bool {
+    path.replace('\\', "/").ends_with("util/mod.rs")
+}
+
+fn basename(path: &str) -> &str {
+    path.rsplit(|c: char| c == '/' || c == '\\').next().unwrap_or(path)
+}
+
+fn emit(
+    out: &mut Vec<Finding>,
+    tlines: &HashSet<u32>,
+    path: &str,
+    line: u32,
+    lint: &'static str,
+    msg: String,
+) {
+    if !tlines.contains(&line) {
+        out.push(Finding::new(path, line, lint, msg));
+    }
+}
+
+/// Run every pass over one file.  Returns
+/// `(unsuppressed, suppressed)` findings; well-formed `quota-touch`
+/// annotations are accumulated into the cross-file `quota_methods`
+/// set (the driver pre-populates it in a first pass over all files).
+pub fn lint_file(
+    path: &str,
+    src: &str,
+    quota_methods: &mut HashSet<String>,
+) -> (Vec<Finding>, Vec<Finding>) {
+    let toks = tokenize(src);
+    let tlines = test_lines(&toks);
+    let ann = collect_annotations(path, &toks, quota_methods);
+    let ct = code_tokens(&toks);
+    let mut findings: Vec<Finding> = ann.findings.clone();
+
+    // ---- raw-lock + simple token scans -----------------------------
+    let fname = basename(path);
+    for i in 0..ct.len() {
+        let t = &ct[i];
+        if tlines.contains(&t.line) {
+            continue;
+        }
+        let nxt = ct.get(i + 1);
+        let prv = if i > 0 { ct.get(i - 1) } else { None };
+        let nxt_is = |s: &str| nxt.is_some_and(|u| u.text == s);
+        let prv_is = |s: &str| prv.is_some_and(|u| u.text == s);
+        // raw-lock: method-call forms of lock/wait/wait_timeout
+        if t.kind == TokenKind::Ident
+            && matches!(t.text.as_str(), "lock" | "wait" | "wait_timeout")
+            && prv_is(".")
+            && nxt_is("(")
+            && !is_util_helpers(path)
+        {
+            emit(
+                &mut findings,
+                &tlines,
+                path,
+                t.line,
+                "raw-lock",
+                format!(
+                    ".{0}() bypasses the poison-recovering util::{0} helper (DESIGN.md §9/§11)",
+                    t.text
+                ),
+            );
+        }
+        // float-total-cmp
+        if t.kind == TokenKind::Ident && t.text == "partial_cmp" {
+            emit(
+                &mut findings,
+                &tlines,
+                path,
+                t.line,
+                "float-total-cmp",
+                "partial_cmp in a sort/max position hangs or panics on NaN — use total_cmp \
+                 (DESIGN.md §14, PR 4 bug class)"
+                    .to_string(),
+            );
+        }
+        // no-unwrap (coordinator only)
+        if is_coordinator(path)
+            && t.kind == TokenKind::Ident
+            && matches!(t.text.as_str(), "unwrap" | "expect")
+            && prv_is(".")
+            && nxt_is("(")
+        {
+            emit(
+                &mut findings,
+                &tlines,
+                path,
+                t.line,
+                "no-unwrap",
+                format!(
+                    ".{}() in non-test coordinator code can kill a worker and strand its \
+                     clients — return an Err",
+                    t.text
+                ),
+            );
+        }
+        // metrics-recorder
+        if t.kind == TokenKind::Ident
+            && in_list(BUCKETS, &t.text)
+            && fname != "metrics.rs"
+            && nxt_is(".")
+            && i + 2 < ct.len()
+            && in_list(ATOMIC_OPS, &ct[i + 2].text)
+            && i + 3 < ct.len()
+            && ct[i + 3].text == "("
+        {
+            emit(
+                &mut findings,
+                &tlines,
+                path,
+                t.line,
+                "metrics-recorder",
+                format!(
+                    "raw {} on accounting bucket '{}' — the four-bucket invariant is \
+                     maintained only by Metrics recorder methods (DESIGN.md §12)",
+                    ct[i + 2].text,
+                    t.text
+                ),
+            );
+        }
+        // spawn-guard: detached thread::spawn bodies
+        let is_spawn = t.text == "spawn"
+            && nxt_is("(")
+            && prv_is("::")
+            && i >= 2
+            && ct[i - 2].text == "thread";
+        if is_spawn {
+            let close = match_forward(&ct, i + 1);
+            let body = &ct[i + 1..=close.min(ct.len() - 1)];
+            let guarded = body.iter().any(|u| {
+                u.kind == TokenKind::Ident
+                    && matches!(u.text.as_str(), "catch_unwind" | "DeathWatch")
+            });
+            if !guarded {
+                let last_line = body.last().map(|u| u.line).unwrap_or(t.line);
+                let near = (t.line.saturating_sub(3)..=last_line)
+                    .any(|ln| ann.spawn_guard_lines.contains(&ln));
+                if !near {
+                    emit(
+                        &mut findings,
+                        &tlines,
+                        path,
+                        t.line,
+                        "spawn-guard",
+                        "detached thread body has no catch_unwind/DeathWatch guard and no \
+                         `// spawn-guard:` justification (DESIGN.md §13)"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- per-function passes ---------------------------------------
+    function_passes(path, &ct, &tlines, &ann, quota_methods, &mut findings);
+
+    // ---- split suppressed / unsuppressed ---------------------------
+    let mut unsuppressed = Vec::new();
+    let mut suppressed = Vec::new();
+    for f in findings {
+        let allowed = f.lint != "suppression"
+            && ann.allow.get(&f.line).is_some_and(|ids| ids.contains(f.lint));
+        if allowed {
+            suppressed.push(f);
+        } else {
+            unsuppressed.push(f);
+        }
+    }
+    (unsuppressed, suppressed)
+}
+
+/// `lock-order`, `condvar-loop`, `time-checked`: walk each `fn` body.
+fn function_passes(
+    path: &str,
+    ct: &[Token],
+    tlines: &HashSet<u32>,
+    ann: &FileAnnotations,
+    quota_methods: &HashSet<String>,
+    out: &mut Vec<Finding>,
+) {
+    let mut i = 0usize;
+    while i < ct.len() {
+        if ct[i].kind == TokenKind::Ident && ct[i].text == "fn" && i + 1 < ct.len() {
+            // signature: up to the body '{' (or ';' for trait decls)
+            let mut j = i + 1;
+            while j < ct.len() && ct[j].text != "{" && ct[j].text != ";" {
+                j += 1;
+            }
+            if j >= ct.len() || ct[j].text == ";" {
+                i = j + 1;
+                continue;
+            }
+            let sig = &ct[i + 1..j];
+            let body_open = j;
+            let body_close = match_brace_forward(ct, body_open);
+            analyze_fn(path, ct, sig, body_open, body_close, ann, quota_methods, tlines, out);
+            // nested fns/closures are analyzed as part of the
+            // enclosing body (same held-guard scope rules)
+            i = body_close + 1;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Tokens of the statement starting at `ct[i]` (through `;` or a
+/// closing bracket at depth 0).
+fn stmt_tokens(ct: &[Token], i: usize) -> Vec<&Token> {
+    let mut depth = 0i32;
+    let mut j = i;
+    let mut stmt = Vec::new();
+    while j < ct.len() {
+        let t = &ct[j];
+        if is_open(&t.text) {
+            depth += 1;
+        } else if is_close(&t.text) {
+            if depth == 0 {
+                break;
+            }
+            depth -= 1;
+        } else if t.text == ";" && depth == 0 {
+            break;
+        }
+        stmt.push(t);
+        j += 1;
+    }
+    stmt
+}
+
+/// One held, *named* lock guard (transient guards — method chains on
+/// the lock call — never enter this list).
+struct Held {
+    name: String,
+    group: String,
+    level: u32,
+    alone: bool,
+    depth: i32,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn analyze_fn(
+    path: &str,
+    ct: &[Token],
+    sig: &[Token],
+    body_open: usize,
+    body_close: usize,
+    ann: &FileAnnotations,
+    quota_methods: &HashSet<String>,
+    tlines: &HashSet<u32>,
+    out: &mut Vec<Finding>,
+) {
+    let lock_fields = &ann.lock_fields;
+
+    // --- time-typed vars from the signature -------------------------
+    let mut time_vars: HashSet<String> = HashSet::new();
+    if let Some(p0) = sig.iter().position(|t| t.text == "(") {
+        let mut depth = 0i32;
+        let mut pend = sig.len().saturating_sub(1);
+        for (px, t) in sig.iter().enumerate().skip(p0) {
+            if t.text == "(" {
+                depth += 1;
+            } else if t.text == ")" {
+                depth -= 1;
+                if depth == 0 {
+                    pend = px;
+                    break;
+                }
+            }
+        }
+        let params = &sig[p0 + 1..pend.max(p0 + 1)];
+        // split on top-level commas; mark `name: ...Instant/Duration...`
+        let mut groups: Vec<Vec<&Token>> = Vec::new();
+        let mut cur: Vec<&Token> = Vec::new();
+        let mut d = 0i32;
+        for t in params {
+            if matches!(t.text.as_str(), "(" | "[" | "{" | "<") {
+                d += 1;
+            } else if matches!(t.text.as_str(), ")" | "]" | "}" | ">") {
+                d -= 1;
+            }
+            if t.text == "," && d == 0 {
+                groups.push(std::mem::take(&mut cur));
+            } else {
+                cur.push(t);
+            }
+        }
+        if !cur.is_empty() {
+            groups.push(cur);
+        }
+        for g in &groups {
+            let Some(first) = g.first() else { continue };
+            let has_time = g.iter().any(|t| t.text == "Instant" || t.text == "Duration");
+            if has_time && first.kind == TokenKind::Ident {
+                time_vars.insert(first.text.clone());
+            }
+        }
+    }
+
+    // --- walk the body ----------------------------------------------
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth = 0i32;
+    let mut block_kinds: Vec<&'static str> = Vec::new();
+    let mut pending_kind: Option<&'static str> = None;
+    let mut match_time_depths: Vec<i32> = Vec::new();
+
+    let mut i = body_open;
+    while i <= body_close {
+        let t = &ct[i];
+        let txt = t.text.as_str();
+
+        if t.kind == TokenKind::Ident
+            && matches!(txt, "loop" | "while" | "for" | "if" | "else" | "match" | "unsafe" | "move")
+        {
+            if txt == "match" {
+                // time-typed scrutinee? tokens up to the match '{'
+                let mut j = i + 1;
+                let mut d2 = 0i32;
+                let mut scrut_time = false;
+                while j <= body_close {
+                    let u = &ct[j];
+                    if matches!(u.text.as_str(), "(" | "[") {
+                        d2 += 1;
+                    } else if matches!(u.text.as_str(), ")" | "]") {
+                        d2 -= 1;
+                    } else if u.text == "{" && d2 == 0 {
+                        break;
+                    }
+                    if u.kind == TokenKind::Ident
+                        && (time_vars.contains(&u.text)
+                            || u.text == "Instant"
+                            || u.text == "Duration")
+                    {
+                        scrut_time = true;
+                    }
+                    j += 1;
+                }
+                if scrut_time {
+                    match_time_depths.push(depth + 1);
+                }
+            }
+            pending_kind = match txt {
+                "move" => pending_kind,
+                "loop" => Some("loop"),
+                "while" => Some("while"),
+                "for" => Some("for"),
+                "if" => Some("if"),
+                "else" => Some("else"),
+                "match" => Some("match"),
+                _ => Some("unsafe"),
+            };
+            i += 1;
+            continue;
+        }
+
+        if txt == "{" {
+            depth += 1;
+            block_kinds.push(pending_kind.unwrap_or("block"));
+            pending_kind = None;
+            i += 1;
+            continue;
+        }
+        if txt == "}" {
+            held.retain(|h| h.depth < depth);
+            if match_time_depths.last() == Some(&depth) {
+                match_time_depths.pop();
+            }
+            block_kinds.pop();
+            depth -= 1;
+            i += 1;
+            continue;
+        }
+        if txt == ";" {
+            pending_kind = None;
+            i += 1;
+            continue;
+        }
+
+        // Some(x)/Ok(x) arm bindings inside a time-typed match
+        if t.kind == TokenKind::Ident
+            && matches!(txt, "Some" | "Ok")
+            && match_time_depths.last().is_some_and(|&d| depth >= d)
+            && i + 2 <= body_close
+            && ct[i + 1].text == "("
+            && ct[i + 2].kind == TokenKind::Ident
+        {
+            // only when this is an arm pattern: ')' then '=>' follows
+            let j = match_forward(ct, i + 1);
+            if j + 1 <= body_close && ct[j + 1].text == "=>" {
+                time_vars.insert(ct[i + 2].text.clone());
+            }
+        }
+
+        // let statements: collect time-typed bindings
+        if t.kind == TokenKind::Ident && txt == "let" {
+            let stmt = stmt_tokens(ct, i);
+            let marker = stmt.iter().any(|u| {
+                u.kind == TokenKind::Ident
+                    && (in_list(TIME_MARKERS, &u.text) || time_vars.contains(&u.text))
+            });
+            let escape = stmt
+                .iter()
+                .any(|u| u.kind == TokenKind::Ident && in_list(TIME_ESCAPES, &u.text));
+            if marker && !escape {
+                // pattern ident: first ident between `let` and `=`
+                for u in stmt.iter().skip(1) {
+                    if u.text == "=" {
+                        break;
+                    }
+                    if u.kind == TokenKind::Ident && u.text != "mut" && u.text != "ref" {
+                        time_vars.insert(u.text.clone());
+                        break;
+                    }
+                }
+            }
+            // fall through: the lock()-acquisition scan below still
+            // sees this statement's tokens
+        }
+
+        // drop(guard) releases
+        if t.kind == TokenKind::Ident
+            && txt == "drop"
+            && i + 2 <= body_close
+            && ct[i + 1].text == "("
+            && ct[i + 2].kind == TokenKind::Ident
+        {
+            let name = &ct[i + 2].text;
+            held.retain(|h| &h.name != name);
+        }
+
+        // quota-touch call under any annotated guard
+        if t.kind == TokenKind::Ident
+            && quota_methods.contains(txt)
+            && i + 1 <= body_close
+            && ct[i + 1].text == "("
+            && i > 0
+            && matches!(ct[i - 1].text.as_str(), "." | "::")
+            && !held.is_empty()
+        {
+            emit(
+                out,
+                tlines,
+                path,
+                t.line,
+                "lock-order",
+                format!(
+                    "tenant-occupancy touch '{txt}()' while holding an intake guard — the \
+                     quota table must never nest inside intake locks (DESIGN.md §12)"
+                ),
+            );
+        }
+
+        // lock acquisitions: free `lock(&...field)` or raw `.lock()`
+        let mut acquired: Option<String> = None;
+        if t.kind == TokenKind::Ident
+            && txt == "lock"
+            && i + 1 <= body_close
+            && ct[i + 1].text == "("
+            && (i == 0 || ct[i - 1].text != ".")
+        {
+            let close = match_forward(ct, i + 1);
+            acquired = ct[i + 2..close.max(i + 2)]
+                .iter()
+                .filter(|u| u.kind == TokenKind::Ident)
+                .next_back()
+                .map(|u| u.text.clone());
+        } else if t.kind == TokenKind::Ident
+            && txt == "lock"
+            && i > 0
+            && ct[i - 1].text == "."
+            && i + 1 <= body_close
+            && ct[i + 1].text == "("
+        {
+            acquired = ct[i.saturating_sub(8)..i - 1]
+                .iter()
+                .filter(|u| u.kind == TokenKind::Ident)
+                .next_back()
+                .map(|u| u.text.clone());
+        }
+        if let Some(field) = acquired.as_ref() {
+            if let Some(spec) = lock_fields.get(field) {
+                for h in &held {
+                    if spec.alone || h.alone {
+                        emit(
+                            out,
+                            tlines,
+                            path,
+                            t.line,
+                            "lock-order",
+                            format!(
+                                "'{field}' and '{}' held together but one is annotated \
+                                 `alone` (DESIGN.md §11: the park lock is only ever held \
+                                 alone)",
+                                h.name
+                            ),
+                        );
+                        break;
+                    }
+                    if h.group == spec.group && spec.level <= h.level {
+                        emit(
+                            out,
+                            tlines,
+                            path,
+                            t.line,
+                            "lock-order",
+                            format!(
+                                "acquiring '{field}' (level {}) while holding '{}' (level \
+                                 {}) violates the {} lock order (DESIGN.md §11: shard → \
+                                 board only)",
+                                spec.level, h.name, h.level, spec.group
+                            ),
+                        );
+                        break;
+                    }
+                }
+                // bound or transient?  A guard binding is
+                // `<ident> = lock(..);` — a method chain after the call
+                // (`lock(..).clone()`) is a temporary dropped at
+                // statement end and never enters `held`.
+                if i >= 2 && ct[i - 1].text == "=" && ct[i - 2].kind == TokenKind::Ident {
+                    let close = match_forward(ct, i + 1);
+                    if ct.get(close + 1).is_some_and(|u| u.text == ";") {
+                        held.push(Held {
+                            name: ct[i - 2].text.clone(),
+                            group: spec.group.clone(),
+                            level: spec.level,
+                            alone: spec.alone,
+                            depth,
+                        });
+                    }
+                }
+            }
+        }
+
+        // condvar-loop: free wait()/wait_timeout() calls
+        if t.kind == TokenKind::Ident
+            && matches!(txt, "wait" | "wait_timeout")
+            && i + 1 <= body_close
+            && ct[i + 1].text == "("
+            && (i == 0 || ct[i - 1].text != ".")
+            && !is_util_helpers(path)
+            && !block_kinds.iter().any(|k| matches!(*k, "loop" | "while"))
+        {
+            emit(
+                out,
+                tlines,
+                path,
+                t.line,
+                "condvar-loop",
+                format!(
+                    "condvar {txt}() outside a while/loop predicate re-check — spurious \
+                     wakeups break an `if` guard (DESIGN.md §14)"
+                ),
+            );
+        }
+
+        // time-checked: binary +/- or +=/-= with a time-typed operand
+        if matches!(txt, "+" | "-" | "+=" | "-=") && i > 0 {
+            let prv = &ct[i - 1];
+            let binary = matches!(
+                prv.kind,
+                TokenKind::Ident | TokenKind::Num | TokenKind::Str | TokenKind::Char
+            ) || prv.text == ")"
+                || prv.text == "]";
+            if binary {
+                let left_time = operand_is_time_back(ct, i - 1, &time_vars);
+                let right_time = operand_is_time_fwd(ct, i + 1, &time_vars);
+                if left_time || right_time {
+                    emit(
+                        out,
+                        tlines,
+                        path,
+                        t.line,
+                        "time-checked",
+                        format!(
+                            "bare `{txt}` on Instant/Duration can panic on \
+                             underflow/overflow — use checked_add/checked_sub/\
+                             saturating_duration_since (DESIGN.md §9, PR 2 bug class)"
+                        ),
+                    );
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Is the operand *ending* at `ct[i]` time-typed?  An ident in the
+/// time-var set, a call of a [`TIME_CALLEES`] method, or
+/// `Instant::now(..)`.
+fn operand_is_time_back(ct: &[Token], i: usize, time_vars: &HashSet<String>) -> bool {
+    let Some(t) = ct.get(i) else { return false };
+    if t.kind == TokenKind::Ident {
+        return time_vars.contains(&t.text);
+    }
+    if t.text == ")" {
+        let op = match_back(ct, i);
+        if op >= 1 {
+            let callee = &ct[op - 1];
+            if callee.kind == TokenKind::Ident {
+                if callee.text == "now"
+                    && op >= 3
+                    && ct[op - 2].text == "::"
+                    && ct[op - 3].text == "Instant"
+                {
+                    return true;
+                }
+                return in_list(TIME_CALLEES, &callee.text);
+            }
+        }
+    }
+    false
+}
+
+/// Is the operand *starting* at `ct[i]` time-typed?  A time var, or a
+/// leading `Instant::now` / `Duration::from_*` path.
+fn operand_is_time_fwd(ct: &[Token], i: usize, time_vars: &HashSet<String>) -> bool {
+    let Some(t) = ct.get(i) else { return false };
+    if t.kind == TokenKind::Ident {
+        if time_vars.contains(&t.text) {
+            return true;
+        }
+        if (t.text == "Instant" || t.text == "Duration")
+            && i + 2 < ct.len()
+            && ct[i + 1].text == "::"
+        {
+            let nxt = &ct[i + 2];
+            return nxt.text == "now" || in_list(TIME_CALLEES, &nxt.text);
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> (Vec<Finding>, Vec<Finding>) {
+        let mut quota = HashSet::new();
+        lint_file(path, src, &mut quota)
+    }
+
+    fn lints(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.lint).collect()
+    }
+
+    #[test]
+    fn raw_lock_flags_method_call_form() {
+        let (unsup, _) = run("x/a.rs", "fn f(m: &Mutex<u32>) { let g = m.lock().unwrap(); }");
+        assert!(lints(&unsup).contains(&"raw-lock"));
+    }
+
+    #[test]
+    fn free_lock_helper_is_clean() {
+        let (unsup, _) = run("x/a.rs", "fn f(m: &Mutex<u32>) { let g = lock(m); }");
+        assert!(unsup.is_empty(), "{unsup:?}");
+    }
+
+    #[test]
+    fn test_items_are_skipped() {
+        let src = "#[test]\nfn t() { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        let (unsup, _) = run("x/a.rs", src);
+        assert!(unsup.is_empty(), "{unsup:?}");
+    }
+
+    #[test]
+    fn strings_never_fire_lints() {
+        let src = "fn f() { let s = \"call .lock() and partial_cmp here\"; }";
+        let (unsup, _) = run("x/a.rs", src);
+        assert!(unsup.is_empty(), "{unsup:?}");
+    }
+
+    #[test]
+    fn lock_order_violation_and_release() {
+        let src = "struct S {\n\
+                   // lock-order: intake level 1\n\
+                   state: Mutex<u32>,\n\
+                   // lock-order: intake level 2\n\
+                   board: Mutex<u32>,\n\
+                   }\n\
+                   fn bad(s: &S) {\n\
+                   let b = lock(&s.board);\n\
+                   let g = lock(&s.state);\n\
+                   }\n\
+                   fn good(s: &S) {\n\
+                   let g = lock(&s.state);\n\
+                   let b = lock(&s.board);\n\
+                   }\n\
+                   fn dropped(s: &S) {\n\
+                   let b = lock(&s.board);\n\
+                   drop(b);\n\
+                   let g = lock(&s.state);\n\
+                   }\n";
+        let (unsup, _) = run("x/a.rs", src);
+        assert_eq!(lints(&unsup), ["lock-order"]);
+        assert_eq!(unsup[0].line, 9);
+    }
+
+    #[test]
+    fn transient_chain_does_not_hold() {
+        let src = "struct S {\n\
+                   // lock-order: m level 1\n\
+                   a: Mutex<u32>,\n\
+                   // lock-order: m level 2\n\
+                   b: Mutex<u32>,\n\
+                   }\n\
+                   fn f(s: &S) {\n\
+                   let snap = lock(&s.b).clone();\n\
+                   let g = lock(&s.a);\n\
+                   }\n";
+        let (unsup, _) = run("x/a.rs", src);
+        assert!(unsup.is_empty(), "{unsup:?}");
+    }
+
+    #[test]
+    fn condvar_wait_needs_a_loop() {
+        let bad = "fn f() { if ready { g = wait(&cv, g); } }";
+        let good = "fn f() { while !ready { g = wait(&cv, g); } }";
+        assert_eq!(lints(&run("x/a.rs", bad).0), ["condvar-loop"]);
+        assert!(run("x/a.rs", good).0.is_empty());
+    }
+
+    #[test]
+    fn time_sub_flagged_saturating_clean() {
+        let bad = "fn f(deadline: Instant, now: Instant) { let left = deadline - now; }";
+        let good = "fn f(deadline: Instant, now: Instant) { \
+                    let left = deadline.saturating_duration_since(now); }";
+        assert_eq!(lints(&run("x/a.rs", bad).0), ["time-checked"]);
+        assert!(run("x/a.rs", good).0.is_empty());
+    }
+
+    #[test]
+    fn no_unwrap_only_in_coordinator() {
+        let src = "fn f(x: Option<u32>) { let v = x.unwrap(); }";
+        assert_eq!(lints(&run("rust/src/coordinator/a.rs", src).0), ["no-unwrap"]);
+        assert!(run("rust/src/formats/a.rs", src).0.is_empty());
+    }
+
+    #[test]
+    fn suppression_silences_exactly_one_site() {
+        let src = "fn f(x: Option<u32>) {\n\
+                   // lint:allow(no-unwrap): checked Some two lines up\n\
+                   let v = x.unwrap();\n\
+                   let w = x.unwrap();\n\
+                   }";
+        let (unsup, sup) = run("rust/src/coordinator/a.rs", src);
+        assert_eq!(lints(&unsup), ["no-unwrap"]);
+        assert_eq!(unsup[0].line, 4);
+        assert_eq!(lints(&sup), ["no-unwrap"]);
+        assert_eq!(sup[0].line, 3);
+    }
+}

@@ -1,0 +1,112 @@
+//! In-tree static analyzer (`dybit-lint`) for the repo's concurrency
+//! and accounting invariants.
+//!
+//! The coordinator carries hand-proved protocols — the §11 shard→board
+//! lock order, the §12 quota-table-never-under-intake-lock rule, the
+//! four-bucket request accounting — and history shows those invariants
+//! are exactly where real bugs landed (the PR 2 `Instant` underflow,
+//! the PR 4 NaN `partial_cmp` worker kills, the PR 6 park-after-close
+//! deadlock).  The stress suite catches interleavings at runtime;
+//! this module stops the bug *classes* from re-entering statically.
+//!
+//! The build environment is offline, so the analyzer is dependency
+//! free: a small Rust [`lexer`], an [`annotations`] layer for the
+//! `// lock-order:` / `// spawn-guard:` / `// lint:allow(..)` comment
+//! grammars, the [`lints`] passes, and a [`report`] type the
+//! `dybit-lint` bin prints.  The lint catalog — ids, the invariant
+//! each guards, grammar, and known limitations — is DESIGN.md §14.
+//!
+//! A 1:1 Python transliteration lives at
+//! `python/tools/lint_mirror.py` so the gate can run on boxes without
+//! a Rust toolchain; rule changes land here first and are mirrored
+//! there, and the fixture suite under `rust/tests/fixtures/lint/`
+//! certifies both (see EXPERIMENTS.md).
+
+pub mod annotations;
+pub mod lexer;
+pub mod lints;
+pub mod report;
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use report::{Finding, Report};
+
+/// Every lint id the analyzer can emit.  `suppression` is the
+/// meta-lint for malformed or unjustified annotations and cannot
+/// itself be suppressed.
+pub const LINT_IDS: &[&str] = &[
+    "raw-lock",
+    "lock-order",
+    "condvar-loop",
+    "time-checked",
+    "float-total-cmp",
+    "no-unwrap",
+    "metrics-recorder",
+    "spawn-guard",
+    "suppression",
+];
+
+/// All `.rs` files under the given paths (files are taken as-is,
+/// directories walked recursively), sorted for deterministic output.
+pub fn rust_files(paths: &[&str]) -> Result<Vec<PathBuf>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        let path = Path::new(p);
+        if path.is_file() {
+            files.push(path.to_path_buf());
+            continue;
+        }
+        walk(path, &mut files)
+            .with_context(|| format!("walking {p}"))?;
+    }
+    files.sort();
+    Ok(files)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("read_dir {}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run the full analyzer over the given paths.
+///
+/// Two passes, because `// lock-order: quota-touch` annotations are
+/// cross-file (the annotated fn lives in `admission.rs`, the callers
+/// it flags in `batcher.rs`/`server.rs`): pass A collects annotations
+/// from every file, pass B lints each file against the complete set.
+pub fn analyze_paths(paths: &[&str]) -> Result<Report> {
+    let files = rust_files(paths)?;
+    let mut sources: Vec<(String, String)> = Vec::with_capacity(files.len());
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .with_context(|| format!("reading {}", f.display()))?;
+        sources.push((f.display().to_string(), src));
+    }
+    let mut quota_methods: HashSet<String> = HashSet::new();
+    for (path, src) in &sources {
+        annotations::collect_annotations(path, &lexer::tokenize(src), &mut quota_methods);
+    }
+    let mut report = Report::default();
+    for (path, src) in &sources {
+        let (unsup, sup) = lints::lint_file(path, src, &mut quota_methods);
+        report.unsuppressed.extend(unsup);
+        report.suppressed.extend(sup);
+    }
+    report.unsuppressed.sort_by_key(|f| f.sort_key());
+    report.suppressed.sort_by_key(|f| f.sort_key());
+    Ok(report)
+}

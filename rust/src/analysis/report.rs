@@ -1,0 +1,82 @@
+//! Finding representation and report formatting for `dybit-lint`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::LINT_IDS;
+
+/// One analyzer finding: a file:line span, a machine-readable lint id,
+/// and a human-facing message naming the invariant violated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path of the offending file, as given to the analyzer.
+    pub path: String,
+    /// 1-based line of the offending token.
+    pub line: u32,
+    /// Machine-readable lint id (one of [`LINT_IDS`]).
+    pub lint: &'static str,
+    /// Human-facing explanation.
+    pub msg: String,
+}
+
+impl Finding {
+    /// Construct a finding.
+    pub fn new(path: &str, line: u32, lint: &'static str, msg: String) -> Self {
+        Finding { path: path.to_string(), line, lint, msg }
+    }
+
+    /// Sort key matching the CLI's output order.
+    pub fn sort_key(&self) -> (String, u32, &'static str, String) {
+        (self.path.clone(), self.line, self.lint, self.msg.clone())
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.lint, self.msg)
+    }
+}
+
+/// Result of an analyzer run over a file set.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Findings that gate CI (sorted by path, line, lint, message).
+    pub unsuppressed: Vec<Finding>,
+    /// Findings silenced by a justified `// lint:allow(..)` (sorted).
+    pub suppressed: Vec<Finding>,
+}
+
+impl Report {
+    /// Per-lint unsuppressed counts, every lint id present (0 when
+    /// clean) — the `--analyze`/`--verbose` summary table.
+    pub fn counts(&self) -> BTreeMap<&'static str, usize> {
+        let mut counts: BTreeMap<&'static str, usize> =
+            LINT_IDS.iter().map(|&id| (id, 0)).collect();
+        for f in &self.unsuppressed {
+            *counts.entry(f.lint).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// True when the tree gates clean (no unsuppressed findings).
+    pub fn is_clean(&self) -> bool {
+        self.unsuppressed.is_empty()
+    }
+
+    /// The verbose trailer: totals, per-lint counts, suppressed list.
+    pub fn verbose_summary(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "-- {} unsuppressed finding(s), {} suppressed --\n",
+            self.unsuppressed.len(),
+            self.suppressed.len()
+        ));
+        for (id, n) in self.counts() {
+            out.push_str(&format!("   {id}: {n}\n"));
+        }
+        for f in &self.suppressed {
+            out.push_str(&format!("   suppressed {f}\n"));
+        }
+        out
+    }
+}

@@ -1,0 +1,34 @@
+//! `dybit-lint` — the in-tree static analyzer CLI.
+//!
+//! ```text
+//! dybit-lint [--verbose] [paths...]
+//! ```
+//!
+//! Default path: `rust/src` (relative to the repo root / cwd).  Exits
+//! 1 if any unsuppressed finding is reported, 0 otherwise — the
+//! contract `ci.sh` relies on.  `--verbose` (what `ci.sh --analyze`
+//! passes) appends per-lint counts and the justified-suppression
+//! list.  See DESIGN.md §14 for the lint catalog.
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let verbose = args.iter().any(|a| a == "--verbose");
+    let mut paths: Vec<&str> = args
+        .iter()
+        .filter(|a| !a.starts_with("--"))
+        .map(|a| a.as_str())
+        .collect();
+    if paths.is_empty() {
+        paths.push("rust/src");
+    }
+    let report = dybit::analysis::analyze_paths(&paths)?;
+    for f in &report.unsuppressed {
+        println!("{f}");
+    }
+    if verbose {
+        print!("{}", report.verbose_summary());
+    }
+    std::process::exit(if report.is_clean() { 0 } else { 1 });
+}

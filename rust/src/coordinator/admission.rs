@@ -300,6 +300,7 @@ impl Admission {
     /// Charge one queue slot of `shard` to `tenant`.  Fails with the
     /// observed `(held, quota)` when the tenant is at its per-shard
     /// quota.
+    // lock-order: quota-touch
     pub fn try_charge(&self, shard: usize, tenant: u32) -> std::result::Result<(), (usize, usize)> {
         if self.quota == usize::MAX {
             return Ok(());
@@ -321,6 +322,7 @@ impl Admission {
     /// Item::TENANT_UNCHARGED` (or a single-tenant pool) is a no-op.
     ///
     /// [`try_charge`]: Admission::try_charge
+    // lock-order: quota-touch
     pub fn release(&self, shard: u32, tenant: u32) {
         if self.quota == usize::MAX || shard == u32::MAX {
             return;

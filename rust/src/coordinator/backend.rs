@@ -228,6 +228,8 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
+    /// Build a simulator backend from `cfg` (validates shapes and
+    /// pre-computes the per-batch cost model).
     pub fn new(cfg: SimBackendCfg) -> Result<Self> {
         ensure!(cfg.batch >= 1, "sim backend: batch must be >= 1");
         ensure!(cfg.img_elems >= 1, "sim backend: img_elems must be >= 1");

@@ -63,7 +63,9 @@ use crate::util::{lock, wait, wait_timeout};
 
 /// One enqueued inference request.
 pub struct Request<T, R> {
+    /// The request body handed to the backend.
     pub payload: T,
+    /// Arrival timestamp (deadline and latency accounting).
     pub enqueued: Instant,
     /// Per-request response channel (std mpsc as a oneshot).
     pub respond: std::sync::mpsc::Sender<R>,
@@ -72,7 +74,9 @@ pub struct Request<T, R> {
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct Policy {
+    /// Upper bound on requests assembled into one batch.
     pub max_batch: usize,
+    /// How long the assembler waits for stragglers past the first item.
     pub max_wait: std::time::Duration,
 }
 
@@ -84,6 +88,7 @@ impl Default for Policy {
 
 /// A [`Request`] plus its routing tags (DESIGN.md §10).
 pub struct Item<T, R> {
+    /// The wrapped request.
     pub req: Request<T, R>,
     /// Accuracy floor: replicas with a lower precision floor may not
     /// steal this item ([`super::Router::min_bits`], escalation
@@ -248,6 +253,7 @@ struct ShardQ<T, R> {
 }
 
 struct Shard<T, R> {
+    // lock-order: intake level 1
     state: Mutex<ShardQ<T, R>>,
     /// Pushers blocked on THIS shard's capacity; each pop from the
     /// shard `notify_one`s it — one free slot, one woken pusher.
@@ -282,7 +288,9 @@ struct ParkState {
 /// and `rust/tests/coordinator_stress.rs` for the seeded certification.
 pub struct ShardedIntake<T, R> {
     shards: Vec<Shard<T, R>>,
+    // lock-order: intake level 2
     board: Mutex<Board>,
+    // lock-order: intake level 3 alone
     park: Mutex<ParkState>,
     /// One bell per replica, all paired with `park` — a push rings
     /// exactly one.
@@ -329,6 +337,7 @@ impl<T, R> ShardedIntake<T, R> {
         }
     }
 
+    /// Number of per-replica shards this intake was built with.
     pub fn shards(&self) -> usize {
         self.floor_bits.len()
     }
@@ -414,7 +423,7 @@ impl<T, R> ShardedIntake<T, R> {
                     if now >= d {
                         return Err(PushRefused::Full(item));
                     }
-                    g = wait_timeout(&slot.not_full, g, d - now).0;
+                    g = wait_timeout(&slot.not_full, g, d.saturating_duration_since(now)).0;
                 }
                 None => g = wait(&slot.not_full, g),
             }
@@ -490,6 +499,7 @@ impl<T, R> ShardedIntake<T, R> {
         lock(&self.board).heap.key(shard) as usize
     }
 
+    /// Whether every shard queue is empty right now (racy, advisory).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -547,7 +557,7 @@ impl<T, R> ShardedIntake<T, R> {
                     if now >= d {
                         break;
                     }
-                    Some(d - now)
+                    Some(d.saturating_duration_since(now))
                 }
                 // no finite deadline: wait until the batch fills or the
                 // intake closes
@@ -624,6 +634,8 @@ impl<T, R> ShardedIntake<T, R> {
             if !steal_ok {
                 continue;
             }
+            // lint:allow(no-unwrap): the steal gate just observed a Some
+            // tail under this same shard lock — pop_back cannot be None
             let mut it = g.q.pop_back().expect("non-empty: tail just checked");
             self.board_update(v, &g.q);
             drop(g);
@@ -705,9 +717,15 @@ impl<T: Send, R: Send> ShardedIntake<T, R> {
     pub fn poison_locks_for_test(&self, shard: usize) {
         std::thread::scope(|scope| {
             let h = scope.spawn(move || {
-                let _s = self.shards[shard].state.lock().unwrap();
-                let _b = self.board.lock().unwrap();
-                let _p = self.park.lock().unwrap();
+                // util::lock on not-yet-poisoned mutexes; the panic
+                // below is what poisons them.  shard → board respects
+                // the §11 order; park is deliberately NOT taken alone
+                // here because this drill must poison all three in one
+                // panic — hence the justified suppression.
+                let _s = lock(&self.shards[shard].state);
+                let _b = lock(&self.board);
+                // lint:allow(lock-order): poison drill holds park with shard+board on purpose — one panic must poison all three locks
+                let _p = lock(&self.park);
                 panic!("poisoning intake locks on purpose (test)");
             });
             assert!(h.join().is_err(), "poisoner must panic");
@@ -807,6 +825,7 @@ struct Shards<T, R> {
 /// `search::reference` and `calibrate_scale_projected` anchor the §7/§8
 /// rewrites (DESIGN.md §11).
 pub struct CoarseIntake<T, R> {
+    // lock-order: intake level 1
     state: Mutex<Shards<T, R>>,
     cv: Condvar,
     cap: usize,
@@ -831,10 +850,12 @@ impl<T, R> CoarseIntake<T, R> {
         }
     }
 
+    /// Number of per-replica shards this intake was built with.
     pub fn shards(&self) -> usize {
         self.floor_bits.len()
     }
 
+    /// Blocking bounded push; returns the item back if closed.
     pub fn push(&self, shard: usize, item: Item<T, R>)
                 -> std::result::Result<(), Item<T, R>> {
         let shard = shard.min(self.floor_bits.len() - 1);
@@ -895,13 +916,14 @@ impl<T, R> CoarseIntake<T, R> {
                     if now >= d {
                         return Err(PushRefused::Full(item));
                     }
-                    g = wait_timeout(&self.cv, g, d - now).0;
+                    g = wait_timeout(&self.cv, g, d.saturating_duration_since(now)).0;
                 }
                 None => g = wait(&self.cv, g),
             }
         }
     }
 
+    /// Close every shard: pushes refuse, waiters wake.
     pub fn close(&self) {
         lock(&self.state).closed = true;
         self.cv.notify_all();
@@ -924,6 +946,7 @@ impl<T, R> CoarseIntake<T, R> {
         items
     }
 
+    /// Total queued items across all shards (racy, advisory).
     pub fn len(&self) -> usize {
         lock(&self.state).queues.iter().map(|q| q.len()).sum()
     }
@@ -934,10 +957,13 @@ impl<T, R> CoarseIntake<T, R> {
         lock(&self.state).queues[shard].len()
     }
 
+    /// Whether every shard queue is empty right now (racy, advisory).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Assemble one batch for `shard` under the single global lock
+    /// (the baseline [`IntakeQueue::pop_batch`] is measured against).
     pub fn pop_batch(&self, shard: usize, policy: Policy) -> Assembled<T, R> {
         let shard = shard.min(self.floor_bits.len() - 1);
         let max_batch = policy.max_batch.max(1);
@@ -967,7 +993,7 @@ impl<T, R> CoarseIntake<T, R> {
                     if now >= d {
                         break;
                     }
-                    g = wait_timeout(&self.cv, g, d - now).0;
+                    g = wait_timeout(&self.cv, g, d.saturating_duration_since(now)).0;
                 }
                 None => g = wait(&self.cv, g),
             }

@@ -56,7 +56,9 @@ pub enum Fault {
 /// A fault scoped to one replica (`replica: None` = every replica).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ScopedFault {
+    /// What goes wrong.
     pub fault: Fault,
+    /// Which replica it targets (`None` = all).
     pub replica: Option<usize>,
 }
 
@@ -64,7 +66,9 @@ pub struct ScopedFault {
 /// seed.  Cheap to clone into factory closures.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ChaosSpec {
+    /// The scheduled faults, in spec order.
     pub faults: Vec<ScopedFault>,
+    /// Seed for the jitter RNG (deterministic chaos runs).
     pub seed: u64,
 }
 
@@ -175,6 +179,7 @@ pub struct ChaosBackend {
 }
 
 impl ChaosBackend {
+    /// Wrap `inner` with the faults `spec` schedules for `replica`.
     pub fn new(inner: Box<dyn InferenceBackend>, spec: &ChaosSpec, replica: usize) -> Self {
         let name = format!("chaos({})", inner.name());
         ChaosBackend {

@@ -68,10 +68,12 @@ pub struct HealthBoard {
     /// Human-readable fault history (deaths, trips, respawns,
     /// retirements) — surfaced via `Server::fault_log` instead of
     /// failing shutdown for faults the supervisor already handled.
+    // lock-order: health level 1
     faults: Mutex<Vec<String>>,
 }
 
 impl HealthBoard {
+    /// A board with one slot per replica (minimum one).
     pub fn new(replicas: usize) -> Self {
         HealthBoard {
             slots: (0..replicas.max(1))
@@ -87,6 +89,7 @@ impl HealthBoard {
         }
     }
 
+    /// Number of replica slots.
     pub fn replicas(&self) -> usize {
         self.slots.len()
     }
@@ -178,6 +181,8 @@ impl HealthBoard {
         }
     }
 
+    /// Current lifecycle state of replica `r` (out of range reads as
+    /// retired).
     pub fn state(&self, r: usize) -> ReplicaState {
         match self.slots.get(r).map_or(S_RETIRED, |s| s.state.load(Ordering::Acquire)) {
             S_IDLE => ReplicaState::Idle,
@@ -233,6 +238,8 @@ pub struct DeathWatch {
 }
 
 impl DeathWatch {
+    /// Arm a watch: unless [`disarm`](DeathWatch::disarm)ed, dropping
+    /// it marks `replica`'s `incarnation` dead on `board`.
     pub fn new(board: Arc<HealthBoard>, replica: usize, incarnation: u64) -> Self {
         DeathWatch { board, replica, incarnation, armed: true }
     }

@@ -27,8 +27,11 @@ use crate::util::stats::{percentile, summarize};
 /// Per-replica counters (one slot per pool worker).
 #[derive(Default)]
 pub struct ReplicaCounters {
+    /// Successful batches this replica executed.
     pub batches: AtomicU64,
+    /// Failed batches (every request in them got an error reply).
     pub errors: AtomicU64,
+    /// Requests answered from this replica's successful batches.
     pub requests: AtomicU64,
     /// Requests the router assigned to this replica's queue at submit
     /// time (DESIGN.md §10).  Deterministic for the built-in routers:
@@ -51,7 +54,10 @@ pub struct ReplicaCounters {
 pub struct Metrics {
     /// Requests answered from successful batches.
     pub requests: AtomicU64,
+    /// Successful batches across the pool.
     pub batches: AtomicU64,
+    /// Empty slots submitted alongside real requests when a batch was
+    /// padded up to the backend's fixed shape.
     pub padded_slots: AtomicU64,
     /// Batches whose execution failed end-to-end (every request in them
     /// received an error reply).  Success counters above are untouched
@@ -93,7 +99,9 @@ pub struct Metrics {
     /// `queue_push`/`queue_pop`; returns to 0 once the pool drains.
     pub queue_depth: AtomicU64,
     per_replica: Vec<ReplicaCounters>,
+    // lock-order: metrics level 1
     latencies_s: Mutex<Vec<f64>>,
+    // lock-order: metrics level 2
     batch_sizes: Mutex<Vec<usize>>,
 }
 
@@ -106,38 +114,66 @@ impl Default for Metrics {
 /// Per-replica slice of a [`Snapshot`].
 #[derive(Clone, Debug)]
 pub struct ReplicaSnapshot {
+    /// Successful batches this replica executed.
     pub batches: u64,
+    /// Failed batches on this replica.
     pub errors: u64,
+    /// Requests answered by this replica.
     pub requests: u64,
+    /// Requests the router assigned to this replica at submit time.
     pub routed: u64,
+    /// Requests pulled from sibling queue tails.
     pub stolen: u64,
+    /// Escalation re-runs this replica initiated.
     pub escalations: u64,
+    /// Requests dropped at assembly with an expired SLA deadline.
     pub deadline_drops: u64,
+    /// Supervisor respawns of this replica's worker.
     pub restarts: u64,
 }
 
 /// Immutable snapshot for reporting.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
+    /// Requests answered from successful batches.
     pub requests: u64,
+    /// Successful batches across the pool.
     pub batches: u64,
+    /// Empty padding slots submitted with fixed-shape batches.
     pub padded_slots: u64,
+    /// Failed batches (pool-wide).
     pub errors: u64,
+    /// Requests that sat in failed batches (each got an `Err` reply).
     pub failed_requests: u64,
+    /// Requests refused at admission (DESIGN.md §12).
     pub rejected: u64,
+    /// Low-margin replies re-run on the accurate tier.
     pub escalations: u64,
+    /// Requests dropped in-queue past their SLA deadline.
     pub deadline_drops: u64,
+    /// Fast-tier first passes that preceded an escalation.
     pub first_runs: u64,
+    /// Worker respawns across the pool (DESIGN.md §13).
     pub restarts: u64,
+    /// Replicas permanently retired after exhausting restart budget.
     pub retired: u64,
+    /// Shard failovers: a retired replica's queue handed to siblings.
     pub failovers: u64,
+    /// Items re-queued onto siblings by failover drains.
     pub drained_requeues: u64,
+    /// Items still queued at snapshot time.
     pub queue_depth: u64,
+    /// Per-replica slices, indexed by replica id.
     pub per_replica: Vec<ReplicaSnapshot>,
+    /// Mean successful batch size.
     pub mean_batch: f64,
+    /// Median batch latency, milliseconds.
     pub lat_p50_ms: f64,
+    /// 95th-percentile batch latency, milliseconds.
     pub lat_p95_ms: f64,
+    /// Mean batch latency, milliseconds.
     pub lat_mean_ms: f64,
+    /// Answered requests per second of wall-clock `elapsed_s`.
     pub throughput_rps: f64,
 }
 
@@ -185,6 +221,7 @@ impl Metrics {
         }
     }
 
+    /// Number of replica slots this sink was built with.
     pub fn replicas(&self) -> usize {
         self.per_replica.len()
     }
@@ -326,6 +363,8 @@ impl Metrics {
             });
     }
 
+    /// Freeze every counter plus derived latency/throughput stats
+    /// (`elapsed_s` = wall-clock seconds the counters cover).
     pub fn snapshot(&self, elapsed_s: f64) -> Snapshot {
         // one clone per series; the latency clone is sorted in place and
         // serves both the percentiles and the (order-insensitive) mean

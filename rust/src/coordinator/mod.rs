@@ -52,6 +52,11 @@
 //! assert_eq!(snap.queue_depth, 0);
 //! ```
 
+// The coordinator is the crate's public serving API surface: every
+// exported item must say what it is (enforced; the rest of the crate
+// is covered by the rustdoc link check in ci.sh).
+#![deny(missing_docs)]
+
 pub mod admission;
 pub mod backend;
 pub mod batcher;

@@ -48,10 +48,12 @@ pub const DEFAULT_ESCALATE_MARGIN: f32 = 0.1;
 pub struct MarginKnob(AtomicU32);
 
 impl MarginKnob {
+    /// A knob initialised to `margin`.
     pub fn new(margin: f32) -> Self {
         MarginKnob(AtomicU32::new(margin.to_bits()))
     }
 
+    /// The current margin (lock-free read).
     pub fn get(&self) -> f32 {
         f32::from_bits(self.0.load(Ordering::Relaxed))
     }
@@ -72,11 +74,14 @@ impl MarginKnob {
 /// per-replica `QuantConfig` for PJRT pools).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ReplicaPrecision {
+    /// Weight bitwidth.
     pub wbits: u32,
+    /// Activation bitwidth.
     pub abits: u32,
 }
 
 impl ReplicaPrecision {
+    /// Explicit (weights, activations) bitwidths.
     pub fn new(wbits: u32, abits: u32) -> Self {
         ReplicaPrecision { wbits, abits }
     }
@@ -223,6 +228,7 @@ fn most_accurate(precisions: &[ReplicaPrecision]) -> usize {
 /// sequence is a pure function of the pick count, so concurrent
 /// submitters change interleaving but never the counts after N picks.
 struct Wrr {
+    // lock-order: router level 1
     credits: Mutex<Vec<u64>>,
 }
 
@@ -301,6 +307,7 @@ pub struct Fastest {
 }
 
 impl Fastest {
+    /// A fresh weighted-round-robin cursor.
     pub fn new() -> Self {
         Fastest { wrr: Wrr::new() }
     }
@@ -341,12 +348,14 @@ impl Router for Fastest {
 /// most accurate replica takes everything (a clamped floor beats a dead
 /// pool).
 pub struct AccuracyFloor {
+    /// The accuracy floor: minimum acceptable min(wbits, abits).
     pub min_bits: u32,
     wrr: Wrr,
     name: String,
 }
 
 impl AccuracyFloor {
+    /// A floor router requiring `min(wbits, abits) >= min_bits`.
     pub fn new(min_bits: u32) -> Self {
         AccuracyFloor { min_bits, wrr: Wrr::new(), name: format!("floor:{min_bits}") }
     }

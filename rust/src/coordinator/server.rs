@@ -102,9 +102,13 @@ const FAILOVER_PUSH_WAIT: Duration = Duration::from_millis(25);
 /// PJRT server configuration ([`Server::start`]).
 #[derive(Clone)]
 pub struct ServerConfig {
+    /// Model name (selects the AOT artifact set).
     pub model: String,
+    /// Quantization config baked into the artifact lookup.
     pub qcfg: QuantConfig,
+    /// Dynamic-batching policy for every replica.
     pub policy: Policy,
+    /// Per-replica intake queue capacity (submit blocks when full).
     pub queue_cap: usize,
     /// Use the Pallas-kernel fwd artifact if available.
     pub pallas: bool,
@@ -115,6 +119,7 @@ pub struct ServerConfig {
 /// Backend-agnostic pool configuration ([`Server::start_pool`]).
 #[derive(Clone)]
 pub struct PoolConfig {
+    /// Dynamic-batching policy for every replica.
     pub policy: Policy,
     /// Per-replica intake queue capacity (submit blocks when the routed
     /// queue is full — the same backpressure the shared intake gave).
@@ -221,6 +226,7 @@ pub struct Server {
     /// handles live on the supervisor thread (it reaps and respawns
     /// them) and this stays empty.
     workers: Vec<JoinHandle<Result<()>>>,
+    /// Shared metrics sink (read it live or via [`Server::snapshot`]).
     pub metrics: Arc<Metrics>,
     router: Arc<dyn Router>,
     precisions: Arc<Vec<ReplicaPrecision>>,
@@ -344,6 +350,7 @@ impl Server {
             };
             let factory = Arc::clone(&factory);
             let ready = ready_tx.clone();
+            // spawn-guard: replica_main registers a DeathWatch and wraps the factory + every forward in catch_unwind
             workers.push(std::thread::spawn(move || {
                 replica_main(id, 0, ctx, policy, &factory, Some(ready))
             }));
@@ -395,9 +402,11 @@ impl Server {
             let knob = pool
                 .router
                 .margin_knob()
+                // lint:allow(no-unwrap): start_pool returned Err above if the router has no knob; this re-read cannot fail
                 .expect("checked before spawning workers");
             let metrics = Arc::clone(&metrics);
             let stop = Arc::clone(&tuner_stop);
+            // spawn-guard: pure atomics loop, no client state; joined via tuner_stop on shutdown — a panic only stops margin tuning
             std::thread::spawn(move || run_margin_controller(ctl, knob, metrics, stop))
         });
         // with supervision on, the supervisor thread takes ownership of
@@ -421,6 +430,7 @@ impl Server {
             };
             let handles: Vec<Option<JoinHandle<Result<()>>>> =
                 workers.drain(..).map(Some).collect();
+            // spawn-guard: supervisor owns no client state; joined via supervisor_stop on shutdown, a panic degrades to the §9 no-supervision contract
             std::thread::spawn(move || supervisor_main(sctx, handles))
         });
         Ok(Server {
@@ -435,6 +445,7 @@ impl Server {
             supervisor_stop,
             max_floor,
             started: Instant::now(),
+            // lint:allow(no-unwrap): the failures/is_none early-return above guarantees Some here
             img_elems: img_elems.unwrap(),
             batch,
             assembly_batch: policy.max_batch.clamp(1, batch),
@@ -602,6 +613,7 @@ impl Server {
         self.img_elems
     }
 
+    /// Number of pool replicas.
     pub fn replicas(&self) -> usize {
         self.precisions.len()
     }
@@ -661,6 +673,7 @@ impl Server {
         }
     }
 
+    /// Metrics snapshot over the server's lifetime so far.
     pub fn snapshot(&self) -> Snapshot {
         self.metrics
             .snapshot(self.started.elapsed().as_secs_f64())
@@ -923,7 +936,11 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
                             let mut holding = Some(it);
                             let mut landed: Option<usize> = None;
                             for t in ladder {
-                                let mut item = holding.take().expect("held item");
+                                // the ladder loop owns the item between
+                                // attempts: refused pushes hand it back,
+                                // a landed push breaks — so the slot is
+                                // always occupied at loop top
+                                let Some(mut item) = holding.take() else { break };
                                 item.min_bits = ctx.precisions[t].floor_bits();
                                 ctx.metrics.queue_push();
                                 match ctx.queues.push_timeout(
@@ -950,6 +967,7 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
                                     }
                                 }
                                 None => {
+                                    // lint:allow(no-unwrap): landed == None means no rung accepted the item, so every attempt handed it back
                                     let it = holding.expect("held item");
                                     let _ = it.req.respond.send(Ok(pred));
                                     answered += 1;
@@ -1087,6 +1105,7 @@ fn supervisor_main(sup: SupervisorCtx, mut handles: Vec<Option<JoinHandle<Result
                     let wctx = sup.ctx.clone_refs();
                     let factory = Arc::clone(&sup.factory);
                     let policy = sup.policy;
+                    // spawn-guard: replica_main registers a DeathWatch and wraps the factory + every forward in catch_unwind
                     handles[r] = Some(std::thread::spawn(move || {
                         replica_main(r, inc, wctx, policy, &factory, None)
                     }));
@@ -1176,7 +1195,9 @@ fn rehome_items(from: usize, items: Vec<Item<Payload, Reply>>, ctx: &WorkerCtx) 
         targets.sort_by_key(|&t| ctx.queues.shard_len(t));
         let mut holding = Some(it);
         for t in targets {
-            let item = holding.take().expect("held item");
+            // same slot discipline as the escalation ladder: refused
+            // pushes hand the item back, a landed push breaks
+            let Some(item) = holding.take() else { break };
             match ctx.queues.push_timeout(t, item, FAILOVER_PUSH_WAIT) {
                 Ok(()) => {
                     requeued += 1;
@@ -1346,10 +1367,12 @@ pub fn load_test_opts(server: &Server, clients: usize, per_client: usize,
                       img_elems: usize, opts: LoadOpts) -> Result<LoadReport> {
     use std::sync::atomic::AtomicUsize;
     let accepted = AtomicUsize::new(0);
-    let rejected = AtomicUsize::new(0);
+    // named `refused`, not `rejected`: the four-bucket accounting name
+    // is reserved for Metrics recorder methods (DESIGN.md §12/§14)
+    let refused = AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for c in 0..clients {
-            let (accepted, rejected) = (&accepted, &rejected);
+            let (accepted, refused) = (&accepted, &refused);
             scope.spawn(move || {
                 let mut rng = crate::util::rng::Rng::new(100 + c as u64);
                 let sopts = SubmitOpts {
@@ -1364,7 +1387,7 @@ pub fn load_test_opts(server: &Server, clients: usize, per_client: usize,
                             let _ = rx.recv_timeout(Duration::from_secs(120));
                         }
                         Err(_) => {
-                            rejected.fetch_add(1, Ordering::Relaxed);
+                            refused.fetch_add(1, Ordering::Relaxed);
                         }
                     }
                 }
@@ -1373,6 +1396,6 @@ pub fn load_test_opts(server: &Server, clients: usize, per_client: usize,
     });
     Ok(LoadReport {
         accepted: accepted.load(Ordering::Relaxed),
-        rejected: rejected.load(Ordering::Relaxed),
+        rejected: refused.load(Ordering::Relaxed),
     })
 }

@@ -28,7 +28,7 @@ pub fn grid(n: u32, e: Option<u32>) -> Vec<f64> {
             pos.push(2f64.powi(exp as i32) * (1.0 + f as f64 / (1u64 << mb) as f64));
         }
     }
-    pos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pos.sort_by(|a, b| a.total_cmp(b));
     pos.dedup();
     let mut g: Vec<f64> = pos.iter().rev().map(|v| -v).collect();
     g.push(0.0);

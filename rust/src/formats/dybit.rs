@@ -85,7 +85,7 @@ pub fn grid(n: u32) -> Vec<f64> {
     let mut pos: Vec<f64> = (1..(1u32 << m))
         .map(|c| magnitude(c as u8, m))
         .collect();
-    pos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pos.sort_by(|a, b| a.total_cmp(b));
     pos.dedup();
     let mut g: Vec<f64> = pos.iter().rev().map(|v| -v).collect();
     g.push(0.0);
@@ -96,7 +96,7 @@ pub fn grid(n: u32) -> Vec<f64> {
 /// Unsigned m-bit grid (the paper's Table I uses m = 4).
 pub fn grid_unsigned(m: u32) -> Vec<f64> {
     let mut g: Vec<f64> = (0..(1u32 << m)).map(|c| magnitude(c as u8, m)).collect();
-    g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    g.sort_by(|a, b| a.total_cmp(b));
     g
 }
 

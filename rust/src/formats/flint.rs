@@ -29,7 +29,7 @@ fn magnitudes(n: u32) -> Vec<f64> {
 /// Sorted signed grid at scale 1.0.
 pub fn grid(n: u32) -> Vec<f64> {
     let mut pos = magnitudes(n);
-    pos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pos.sort_by(|a, b| a.total_cmp(b));
     pos.dedup();
     let mut g: Vec<f64> = pos.iter().rev().map(|v| -v).collect();
     g.push(0.0);

@@ -47,7 +47,7 @@ pub fn grid(n: u32, es: u32) -> Vec<f64> {
     let mut vals: Vec<f64> = (0..(1u32 << n))
         .filter_map(|c| value(c, n, es))
         .collect();
-    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.sort_by(|a, b| a.total_cmp(b));
     vals.dedup();
     vals
 }

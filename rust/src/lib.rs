@@ -20,6 +20,9 @@
 //!   DESIGN.md §9–§10).
 //! * [`models`] — per-model layer descriptors for the simulator.
 //! * [`tensor`], [`util`] — substrates (tensors, IO, JSON, RNG, stats…).
+//! * [`analysis`] — the in-tree `dybit-lint` static analyzer that
+//!   mechanically enforces the DESIGN.md §11–§13 concurrency
+//!   invariants and past-PR bug classes (lint catalog: DESIGN.md §14).
 //!
 //! The quantization hot path shared by [`formats`], [`qat`] and [`search`]
 //! is the batched, cached [`formats::GridLut`] for projection and the
@@ -30,8 +33,10 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for measured
 //! reproductions of every table/figure in the paper.
 
+#![forbid(unsafe_code)]
 #![deny(rustdoc::broken_intra_doc_links)]
 
+pub mod analysis;
 pub mod coordinator;
 pub mod formats;
 pub mod models;

@@ -146,7 +146,7 @@ pub fn search_table(t: &CostTable, strategy: Strategy, top_k: usize) -> SearchRe
                 ranked.sort_by(|&a, &b| {
                     let la = t.lat(a, assign[a].0, assign[a].1);
                     let lb = t.lat(b, assign[b].0, assign[b].1);
-                    lb.partial_cmp(&la).unwrap()
+                    lb.total_cmp(&la)
                 });
                 ranked.truncate(top_k);
                 // RMSE_RERANK: ascending RMSE at the *next* level so the
@@ -154,7 +154,7 @@ pub fn search_table(t: &CostTable, strategy: Strategy, top_k: usize) -> SearchRe
                 ranked.sort_by(|&a, &b| {
                     let ra = next_level_rmse(t, &assign, a);
                     let rb = next_level_rmse(t, &assign, b);
-                    ra.partial_cmp(&rb).unwrap()
+                    ra.total_cmp(&rb)
                 });
             }
             Strategy::RmseConstrained { .. } => {
@@ -162,14 +162,14 @@ pub fn search_table(t: &CostTable, strategy: Strategy, top_k: usize) -> SearchRe
                 ranked.sort_by(|&a, &b| {
                     let ra = next_level_rmse(t, &assign, a);
                     let rb = next_level_rmse(t, &assign, b);
-                    ra.partial_cmp(&rb).unwrap()
+                    ra.total_cmp(&rb)
                 });
                 ranked.truncate(top_k);
                 // Lat_rerank: descending latency — degrade slowest first
                 ranked.sort_by(|&a, &b| {
                     let la = t.lat(a, assign[a].0, assign[a].1);
                     let lb = t.lat(b, assign[b].0, assign[b].1);
-                    lb.partial_cmp(&la).unwrap()
+                    lb.total_cmp(&la)
                 });
             }
         }
@@ -306,26 +306,26 @@ pub mod reference {
                     ranked.sort_by(|&a, &b| {
                         let la = metrics.latency(a, assign[a].0, assign[a].1);
                         let lb = metrics.latency(b, assign[b].0, assign[b].1);
-                        lb.partial_cmp(&la).unwrap()
+                        lb.total_cmp(&la)
                     });
                     ranked.truncate(top_k);
                     ranked.sort_by(|&a, &b| {
                         let ra = next_level_rmse(metrics, &assign, a);
                         let rb = next_level_rmse(metrics, &assign, b);
-                        ra.partial_cmp(&rb).unwrap()
+                        ra.total_cmp(&rb)
                     });
                 }
                 Strategy::RmseConstrained { .. } => {
                     ranked.sort_by(|&a, &b| {
                         let ra = next_level_rmse(metrics, &assign, a);
                         let rb = next_level_rmse(metrics, &assign, b);
-                        ra.partial_cmp(&rb).unwrap()
+                        ra.total_cmp(&rb)
                     });
                     ranked.truncate(top_k);
                     ranked.sort_by(|&a, &b| {
                         let la = metrics.latency(a, assign[a].0, assign[a].1);
                         let lb = metrics.latency(b, assign[b].0, assign[b].1);
-                        lb.partial_cmp(&la).unwrap()
+                        lb.total_cmp(&la)
                     });
                 }
             }

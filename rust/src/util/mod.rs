@@ -15,6 +15,7 @@ pub mod threadpool;
 /// half-recorded update behind, which every consumer here (metrics
 /// sinks, LUT caches, intake queues, router credits) prefers over
 /// poisoning all later calls.
+#[allow(clippy::disallowed_methods)] // the one sanctioned raw-lock site
 pub fn lock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
@@ -23,6 +24,7 @@ pub fn lock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
 /// that blocks on a [`std::sync::Condvar`] (the intake queues,
 /// DESIGN.md §11).  Pre-§11 this `unwrap_or_else(PoisonError::
 /// into_inner)` dance was copy-pasted at every wait site in the batcher.
+#[allow(clippy::disallowed_methods)] // the one sanctioned raw-wait site
 pub fn wait<'a, T>(cv: &std::sync::Condvar, g: std::sync::MutexGuard<'a, T>)
                    -> std::sync::MutexGuard<'a, T> {
     cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
@@ -30,6 +32,7 @@ pub fn wait<'a, T>(cv: &std::sync::Condvar, g: std::sync::MutexGuard<'a, T>)
 
 /// Poison-recovering bounded condvar wait; returns the guard and
 /// whether the wait timed out (see [`wait`]).
+#[allow(clippy::disallowed_methods)] // the one sanctioned raw-wait site
 pub fn wait_timeout<'a, T>(cv: &std::sync::Condvar, g: std::sync::MutexGuard<'a, T>,
                            dur: std::time::Duration)
                            -> (std::sync::MutexGuard<'a, T>, bool) {
@@ -49,6 +52,7 @@ mod tests {
     /// on the poisoned primitives instead of propagating the poison to
     /// every later caller (the serving pool keeps serving).
     #[test]
+    #[allow(clippy::disallowed_methods)] // raw lock() IS the poison drill
     fn lock_and_waits_recover_from_poison() {
         let m = Arc::new(Mutex::new(7u32));
         let cv = Arc::new(Condvar::new());

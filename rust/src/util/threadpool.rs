@@ -36,6 +36,7 @@ impl ThreadPool {
         let workers = (0..n)
             .map(|_| {
                 let rx = Arc::clone(&rx);
+                // spawn-guard: every job is catch_unwind-wrapped at the submission boundary (parallel_map_on), so the worker body cannot unwind
                 thread::spawn(move || loop {
                     let job = { crate::util::lock(&rx).recv() };
                     match job {

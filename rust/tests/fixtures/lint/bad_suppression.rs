@@ -1,0 +1,21 @@
+//! Planted: malformed annotations are themselves findings, and an
+//! invalid suppression does not silence the underlying lint.
+fn no_why(xs: &mut [f64]) {
+    // lint:allow(float-total-cmp)
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+fn unknown_lint(xs: &mut [f64]) {
+    // lint:allow(made-up-lint): this lint id does not exist
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+struct S {
+    // lock-order: intake levle 1
+    state: u32,
+}
+
+fn short_guard() {
+    // spawn-guard: nope
+    std::thread::spawn(run_once);
+}

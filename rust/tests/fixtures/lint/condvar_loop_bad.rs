@@ -1,0 +1,10 @@
+//! Planted: a condvar wait guarded by `if` misses spurious wakeups.
+use std::sync::{Condvar, Mutex};
+
+fn bad(cv: &Condvar, m: &Mutex<bool>) {
+    let mut g = lock(m);
+    if !*g {
+        g = wait(cv, g);
+    }
+    let _ = g;
+}

@@ -1,0 +1,21 @@
+//! Clean: the wait sits in a while-predicate re-check.
+use std::sync::{Condvar, Mutex};
+
+fn good(cv: &Condvar, m: &Mutex<bool>) {
+    let mut g = lock(m);
+    while !*g {
+        g = wait(cv, g);
+    }
+    let _ = g;
+}
+
+fn good_loop(cv: &Condvar, m: &Mutex<bool>) {
+    let mut g = lock(m);
+    loop {
+        if *g {
+            break;
+        }
+        g = wait(cv, g);
+    }
+    let _ = g;
+}

@@ -1,0 +1,13 @@
+//! The recorder itself may touch the buckets: metrics.rs is the one
+//! file allowed to mutate them (it maintains the invariant).
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Metrics {
+    rejected: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,11 @@
+//! Planted: a raw atomic op on an accounting bucket outside
+//! metrics.rs breaks the four-bucket invariant silently.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct Counters {
+    rejected: AtomicU64,
+}
+
+fn bump(c: &Counters) {
+    c.rejected.fetch_add(1, Ordering::Relaxed);
+}

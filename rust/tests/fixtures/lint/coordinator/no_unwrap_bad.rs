@@ -1,0 +1,8 @@
+//! Planted: unwrap/expect in coordinator code kills a worker.
+fn take(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+fn must(x: Option<u32>) -> u32 {
+    x.expect("present")
+}

@@ -1,0 +1,9 @@
+//! Clean: let-else and ? keep coordinator code panic-free.
+fn take(x: Option<u32>) -> Option<u32> {
+    let Some(v) = x else { return None };
+    Some(v)
+}
+
+fn must(x: Option<u32>) -> Result<u32, String> {
+    x.ok_or_else(|| String::from("missing"))
+}

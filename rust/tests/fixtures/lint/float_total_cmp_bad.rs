@@ -1,0 +1,4 @@
+//! Planted: NaN-unsafe float comparator (the PR 4 worker-kill class).
+fn sort_latencies(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,4 @@
+//! Clean: total_cmp gives a total order (NaN sorts deterministically).
+fn sort_latencies(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}

@@ -1,0 +1,39 @@
+//! Planted: every shape of DESIGN.md §11/§12 lock-order violation.
+use std::sync::Mutex;
+
+struct Shard {
+    // lock-order: intake level 1
+    state: Mutex<u32>,
+    // lock-order: intake level 2
+    board: Mutex<u32>,
+    // lock-order: intake level 3 alone
+    park: Mutex<u32>,
+}
+
+struct Quota;
+
+impl Quota {
+    // lock-order: quota-touch
+    fn try_charge_fixture(&self) -> bool {
+        true
+    }
+}
+
+fn board_then_shard(s: &Shard) {
+    let b = lock(&s.board);
+    let g = lock(&s.state);
+    let _ = (b, g);
+}
+
+fn park_not_alone(s: &Shard) {
+    let g = lock(&s.state);
+    let p = lock(&s.park);
+    let _ = (g, p);
+}
+
+fn quota_under_guard(s: &Shard, q: &Quota) {
+    let g = lock(&s.state);
+    if q.try_charge_fixture() {
+        drop(g);
+    }
+}

@@ -1,0 +1,41 @@
+//! Clean: shard -> board is the blessed order; drop() releases; a
+//! transient snapshot never holds.
+use std::sync::Mutex;
+
+struct Shard {
+    // lock-order: intake level 1
+    state: Mutex<u32>,
+    // lock-order: intake level 2
+    board: Mutex<Vec<u32>>,
+    // lock-order: intake level 3 alone
+    park: Mutex<u32>,
+}
+
+fn shard_then_board(s: &Shard) {
+    let g = lock(&s.state);
+    let b = lock(&s.board);
+    let _ = (g, b);
+}
+
+fn drop_then_park(s: &Shard) {
+    let g = lock(&s.state);
+    drop(g);
+    let p = lock(&s.park);
+    let _ = p;
+}
+
+fn transient_snapshot(s: &Shard) -> Vec<u32> {
+    let snap = lock(&s.board).clone();
+    let g = lock(&s.state);
+    let _ = g;
+    snap
+}
+
+fn scoped_release(s: &Shard) {
+    {
+        let b = lock(&s.board);
+        let _ = b;
+    }
+    let g = lock(&s.state);
+    let _ = g;
+}

@@ -1,0 +1,5 @@
+//! unwrap() is allowed outside coordinator paths (sim/qat/search own
+//! their panics; only serving workers strand clients).
+fn take(x: Option<u32>) -> u32 {
+    x.unwrap()
+}

@@ -1,0 +1,20 @@
+//! Planted: raw lock/wait calls bypass the poison-recovering helpers.
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+fn bad_lock(m: &Mutex<u32>) -> u32 {
+    let g = m.lock().unwrap();
+    *g
+}
+
+fn bad_wait(cv: &Condvar, m: &Mutex<bool>) {
+    let mut g = m.lock().unwrap();
+    while !*g {
+        g = cv.wait(g).unwrap();
+    }
+}
+
+fn bad_wait_timeout(cv: &Condvar, m: &Mutex<bool>) {
+    let g = m.lock().unwrap();
+    let _ = cv.wait_timeout(g, Duration::from_millis(5)).unwrap();
+}

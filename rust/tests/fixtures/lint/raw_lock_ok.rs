@@ -1,0 +1,14 @@
+//! Clean: the util::lock / util::wait free-function helpers.
+use std::sync::{Condvar, Mutex};
+
+fn good_lock(m: &Mutex<u32>) -> u32 {
+    let g = lock(m);
+    *g
+}
+
+fn good_wait(cv: &Condvar, m: &Mutex<bool>) {
+    let mut g = lock(m);
+    while !*g {
+        g = wait(cv, g);
+    }
+}

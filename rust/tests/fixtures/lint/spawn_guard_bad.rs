@@ -1,0 +1,9 @@
+//! Planted: a detached thread with no panic containment and no
+//! justification.
+use std::thread;
+
+fn detach() {
+    thread::spawn(|| {
+        run_forever();
+    });
+}

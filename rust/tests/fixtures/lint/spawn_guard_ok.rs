@@ -1,0 +1,28 @@
+//! Clean: contained, registered, justified, or scoped spawns.
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::thread;
+
+fn contained() {
+    thread::spawn(|| {
+        let _ = catch_unwind(AssertUnwindSafe(run_once));
+    });
+}
+
+fn registered(watch: &DeathWatch) {
+    let w = watch.clone();
+    thread::spawn(move || {
+        let _guard = DeathWatch::register(w);
+        run_once();
+    });
+}
+
+fn justified() {
+    // spawn-guard: owns no client state; joined on shutdown by the caller
+    thread::spawn(run_once);
+}
+
+fn scoped() {
+    std::thread::scope(|scope| {
+        scope.spawn(run_once);
+    });
+}

@@ -1,0 +1,5 @@
+//! A justified lint:allow silences exactly one finding.
+fn sort_scores(xs: &mut [f64]) {
+    // lint:allow(float-total-cmp): fixture demonstrating a justified suppression
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,19 @@
+//! Violations under #[cfg(test)] / #[test] items are out of scope:
+//! tests may unwrap, subtract Instants, and poke raw locks on purpose.
+pub fn production() -> u32 {
+    1
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_do_anything() {
+        let deadline = std::time::Instant::now();
+        let now = std::time::Instant::now();
+        let _ = deadline - now;
+        let mut xs = vec![1.0f64, 0.5];
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = std::sync::Mutex::new(0u32);
+        let _g = m.lock().unwrap();
+    }
+}

@@ -1,0 +1,17 @@
+//! Planted: bare Instant/Duration arithmetic (the PR 2 underflow
+//! panic class).
+use std::time::{Duration, Instant};
+
+fn remaining(deadline: Instant, now: Instant) -> Duration {
+    deadline - now
+}
+
+fn padded(timeout: Duration) -> Duration {
+    timeout + Duration::from_millis(5)
+}
+
+fn drift(acc: Duration, step: Duration) -> Duration {
+    let mut total = acc;
+    total += step;
+    total
+}

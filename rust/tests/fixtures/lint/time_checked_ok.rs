@@ -1,0 +1,16 @@
+//! Clean: checked/saturating time arithmetic, and escapes out of the
+//! time domain.
+use std::time::{Duration, Instant};
+
+fn remaining(deadline: Instant, now: Instant) -> Duration {
+    deadline.saturating_duration_since(now)
+}
+
+fn padded(timeout: Duration) -> Option<Duration> {
+    timeout.checked_add(Duration::from_millis(5))
+}
+
+fn elapsed_ms(start: Instant) -> u128 {
+    let spent = start.elapsed().as_millis();
+    spent + 5
+}
