@@ -23,10 +23,20 @@
 //! `Escalate::auto_tuned()` under a margin-uniform workload and asserts
 //! the PI-tuned escalation rate settles within ±20% of its budget.
 //!
+//! A §15 *refinement* phase drives the same escalate-everything
+//! workload through a [`BitplaneBackend`] pool twice — refinement on
+//! (escalations add only the residual planes to cached partial sums)
+//! vs `refine: false` (the pre-§15 full re-run) — and gates the
+//! simulated cycle cost: the refinement run must be ≥1.3× cheaper
+//! (ideal (4+8)/(4+4) = 1.5× on the 3×4b+1×8b mix), with identical
+//! answers.
+//!
 //! Run: cargo bench --bench perf_route [-- --smoke]
 //! `--smoke` shrinks the model/load for CI smoke runs
 //! (`ci.sh --bench-smoke`); the 1.8× routing floor, the 1.3× goodput
 //! floor, and the ±20% controller band only gate the full-size run.
+//! The §15 refinement gate reads the deterministic [`SimCostMeter`],
+//! not wall time, so it gates smoke runs too.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -35,9 +45,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dybit::coordinator::{
-    load_test, AdmissionCfg, Escalate, EscalationController, Fastest, InferenceBackend,
-    Policy, PoolConfig, Reject, ReplicaPrecision, Router, Server, SimBackend, SimBackendCfg,
-    SubmitOpts,
+    load_test, AdmissionCfg, BitplaneBackend, Escalate, EscalationController, Fastest,
+    InferenceBackend, Policy, PoolConfig, Reject, ReplicaPrecision, Router, Server,
+    SimBackend, SimBackendCfg, SimCostMeter, SubmitOpts,
 };
 use dybit::models::synthetic_resnet;
 use dybit::tensor::Tensor;
@@ -50,6 +60,11 @@ const FLOOR: f64 = 1.8;
 /// Goodput-under-SLA floor: admission-on must beat admission-off by
 /// this factor in the overload phase (full-size runs only).
 const GOODPUT_FLOOR: f64 = 1.3;
+/// §15 refinement floor: on the escalate-everything workload the
+/// refinement pool's *simulated* cycle cost must beat the full-re-run
+/// pool by this factor (gates smoke runs too — the meter is
+/// deterministic).
+const REFINE_FLOOR: f64 = 1.3;
 
 struct Run {
     wall_s: f64,
@@ -369,6 +384,67 @@ fn controller_trial(cfg: &SimBackendCfg, mix: &[ReplicaPrecision], budget: f64,
     (rate, margin)
 }
 
+/// §15 refinement phase: one escalation-heavy run over a
+/// [`BitplaneBackend`] pool.  Near-zero payloads give near-zero argmax
+/// margins, so every request escalates off the fast tier; with `refine`
+/// on the accurate tier completes the cached partial sums (residual
+/// planes only), with it off it re-runs from scratch.  Every replica
+/// shares one [`SimCostMeter`], so the returned cost is the §3 cycle
+/// model's — deterministic, immune to CI scheduler noise.
+fn refinement_trial(cfg: &SimBackendCfg, mix: &[ReplicaPrecision], n: usize,
+                    refine: bool) -> (f64, Vec<usize>) {
+    let meter = Arc::new(SimCostMeter::new());
+    let pool = PoolConfig {
+        policy: Policy {
+            max_batch: cfg.batch,
+            max_wait: Duration::from_micros(300),
+        },
+        queue_cap: 1024,
+        replicas: mix.len(),
+        precisions: mix.to_vec(),
+        router: Arc::new(Escalate::new(0.05)),
+        work_stealing: false, // the accurate tier must not pre-steal the probe
+        refine,
+        ..PoolConfig::default()
+    };
+    let server = Server::start_pool(
+        pool,
+        BitplaneBackend::metered_mixed_factory(cfg.clone(), mix.to_vec(),
+                                               Some(Arc::clone(&meter))),
+    )
+    .expect("pool start");
+    let mut rng = Rng::new(777);
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let img: Vec<f32> =
+                rng.normal_vec(cfg.img_elems).iter().map(|v| v * 1e-6).collect();
+            server.submit(img).expect("submit")
+        })
+        .collect();
+    let answers: Vec<usize> = rxs
+        .iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(60)).expect("reply").expect("class"))
+        .collect();
+    let snap = server.shutdown().expect("clean shutdown");
+    assert_eq!(
+        snap.requests + snap.failed_requests + snap.rejected + snap.deadline_drops,
+        n as u64,
+        "refinement phase accounting"
+    );
+    assert_eq!(snap.escalations, n as u64, "every near-zero-margin request must escalate");
+    match refine {
+        true => assert_eq!(
+            snap.refinements, n as u64,
+            "refine:on must serve every escalation from cached planes"
+        ),
+        false => assert_eq!(
+            snap.refinements, 0,
+            "refine:off must never touch the plane cache"
+        ),
+    }
+    (meter.total_s(), answers)
+}
+
 fn main() {
     let args = Args::from_env();
     let smoke = args.has("smoke");
@@ -579,6 +655,28 @@ fn main() {
         }
     );
 
+    // ---- §15 refinement vs full re-run, gated on the deterministic
+    // simulated cycle cost (so it gates smoke runs too): the fast pass
+    // spends wbits/8 of the full batch cost and a refinement only the
+    // residual planes, so escalate-everything should cost ~(4+4)/(4+8)
+    // of the re-run pool — ideal 1.5×, floor 1.3×
+    let mut refine_cfg = cfg.clone();
+    refine_cfg.time_scale = 0.0002 / probe8.sim_latency_s();
+    let refine_n = if smoke { 48 } else { 240 };
+    let (cost_on, ans_on) = refinement_trial(&refine_cfg, &mixed, refine_n, true);
+    let (cost_off, ans_off) = refinement_trial(&refine_cfg, &mixed, refine_n, false);
+    assert_eq!(ans_on, ans_off, "refinement changed a deterministic answer");
+    let refine_ratio = cost_off / cost_on.max(1e-12);
+    let refine_ok = refine_ratio >= REFINE_FLOOR;
+    println!(
+        "refinement vs full re-run ({refine_n} escalations): simulated cost \
+         {:.4}s refined vs {:.4}s re-run -> {refine_ratio:.2}x \
+         (floor {REFINE_FLOOR:.2}x): {}",
+        cost_on,
+        cost_off,
+        if refine_ok { "PASS" } else { "FAIL" }
+    );
+
     let floor_ok = smoke || speedup >= FLOOR;
     println!(
         "\nheterogeneous routing over SimBackend (8-bit batch cost {:.1}ms, \
@@ -605,6 +703,10 @@ fn main() {
                 "controller_pass",
                 if smoke { Json::Null } else { Json::Bool(controller_ok) },
             ),
+            ("refine_floor", Json::num(REFINE_FLOOR)),
+            // a real boolean even on smoke: the refinement gate reads
+            // the deterministic SimCostMeter, never wall time
+            ("refine_pass", Json::Bool(refine_ok)),
             ("target_batch8_s", Json::num(target_batch8_s)),
             ("tier_ratio", Json::num(tier_ratio)),
             ("rows", Json::Arr(rows)),
@@ -642,12 +744,22 @@ fn main() {
                     ("tuned_margin", Json::num(pi_margin)),
                 ]),
             ),
+            (
+                "refinement",
+                Json::obj(vec![
+                    ("submitted", Json::num(refine_n as f64)),
+                    ("sim_cost_refine_s", Json::num(cost_on)),
+                    ("sim_cost_rerun_s", Json::num(cost_off)),
+                    ("ratio", Json::num(refine_ratio)),
+                ]),
+            ),
         ]),
     )
     .expect("save perf results");
     println!("perf_route done");
-    if !(floor_ok && goodput_ok && controller_ok) {
+    if !(floor_ok && goodput_ok && controller_ok && refine_ok) {
         // make the floors real gates: scripted full-size runs must fail
+        // (and the deterministic refinement gate fails smoke runs too)
         std::process::exit(1);
     }
 }

@@ -12,11 +12,13 @@
 #                         # perf_serve/perf_route on tiny SimBackend pools
 #                         # (quick end-to-end bench smoke); fails if any
 #                         # bench result JSON is missing or empty, or if
-#                         # perf_route persisted a failed goodput/PI gate
-#                         # or perf_serve a failed scaling/recovery gate
-#                         # (full-size runs write goodput_pass /
-#                         # controller_pass / recovery_pass; smoke
-#                         # writes null)
+#                         # perf_route persisted a failed goodput/PI/
+#                         # refinement gate or perf_serve a failed
+#                         # scaling/recovery gate (full-size runs write
+#                         # goodput_pass / controller_pass /
+#                         # recovery_pass; smoke writes null — except
+#                         # refine_pass, which is real on smoke too,
+#                         # DESIGN.md §15)
 #   ./ci.sh --stress      # additionally run the full coordinator_stress
 #                         # sweep (8 seeds x {4,16,64} shards + tiny-cap
 #                         # shutdown runs + seeded §12 overload scenarios
@@ -124,9 +126,11 @@ if [[ $bench_smoke -eq 1 ]]; then
 
   # perf_route persists its gate verdicts (goodput_pass /
   # controller_pass / floor_pass: bool on full-size runs, null on
-  # smoke).  Gate on the JSON, not just the exit code, so a run that
+  # smoke; refine_pass is a real bool even on smoke because the §15
+  # refinement gate reads the deterministic SimCostMeter, not wall
+  # time).  Gate on the JSON, not just the exit code, so a run that
   # records a failed verdict can never slip through as green
-  for gate in goodput_pass controller_pass floor_pass; do
+  for gate in goodput_pass controller_pass floor_pass refine_pass; do
     if grep -q "\"${gate}\": false" artifacts/results/perf_route.json; then
       echo "ci.sh: perf_route persisted ${gate}=false (SLA/overload gate)" >&2
       exit 1

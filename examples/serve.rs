@@ -15,14 +15,18 @@
 //! `--precision-mix 4,4,4,8 --router escalate` makes it a heterogeneous
 //! pool: three DyBit-4 replicas plus an 8-bit accurate replica with
 //! low-margin replies escalated to the accurate tier (DESIGN.md §10).
+//! Add `--bitplane` to serve the nested-precision backend, where those
+//! escalations refine cached partial sums instead of re-running
+//! (DESIGN.md §15; `--router escalate+refine:off` restores the re-run).
 
 use std::time::Duration;
 
 use anyhow::Result;
 
 use dybit::coordinator::{
-    load_test, parse_precision_mix, resolve_precision_mix, router_from_spec, Policy,
-    PoolConfig, ReplicaPrecision, Server, ServerConfig, SimBackend, SimBackendCfg,
+    load_test, parse_precision_mix, resolve_precision_mix, router_and_refine_from_spec,
+    BitplaneBackend, Policy, PoolConfig, ReplicaPrecision, Server, ServerConfig,
+    SimBackend, SimBackendCfg,
 };
 use dybit::formats::Format;
 use dybit::qat::QuantConfig;
@@ -44,7 +48,9 @@ fn main() -> Result<()> {
     let had_mix = !mix.is_empty();
     let precisions = resolve_precision_mix(mix, wbits, abits, args.get_usize("replicas", 1));
     let replicas = precisions.len();
-    let router = router_from_spec(&args.get_or("router", "fastest"))?;
+    // `+refine:off` on the router spec preserves the pre-§15 full
+    // re-run escalation path (only meaningful with --bitplane)
+    let (router, refine) = router_and_refine_from_spec(&args.get_or("router", "fastest"))?;
 
     let server = if args.has("sim") {
         let cfg = SimBackendCfg {
@@ -64,8 +70,14 @@ fn main() -> Result<()> {
             router.name()
         );
         // mixed_factory with a uniform mix IS the homogeneous pool, and
-        // the results table always labels replicas with their real bits
-        let factory = SimBackend::mixed_factory(cfg.clone(), precisions.clone());
+        // the results table always labels replicas with their real bits;
+        // --bitplane swaps in the §15 nested-precision backend so
+        // escalations refine cached partial sums instead of re-running
+        let factory = if args.has("bitplane") {
+            BitplaneBackend::mixed_factory(cfg.clone(), precisions.clone())
+        } else {
+            SimBackend::mixed_factory(cfg.clone(), precisions.clone())
+        };
         Server::start_pool(
             PoolConfig {
                 policy: Policy {
@@ -77,6 +89,8 @@ fn main() -> Result<()> {
                 precisions,
                 router,
                 work_stealing: !args.has("no-steal"),
+                refine,
+                ..PoolConfig::default()
             },
             factory,
         )?
@@ -126,9 +140,9 @@ fn main() -> Result<()> {
     println!("requests          {}", snap.requests);
     println!(
         "batches           {} (mean size {:.1}, padded slots {}, errors {}, \
-         rejected {}, escalations {})",
+         rejected {}, escalations {}, refined {})",
         snap.batches, snap.mean_batch, snap.padded_slots, snap.errors, snap.rejected,
-        snap.escalations
+        snap.escalations, snap.refinements
     );
     print!("{}", snap.replica_report(&precisions));
     println!("batch latency     p50 {:.1}ms  p95 {:.1}ms  mean {:.1}ms",

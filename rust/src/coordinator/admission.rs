@@ -255,6 +255,20 @@ impl Admission {
         }
     }
 
+    /// Fold a *partial-plane* batch observation into replica `r`'s
+    /// estimate (DESIGN.md §15).  A refinement batch only executes
+    /// `plane_frac` of a full batch's planes (residual / total bits),
+    /// so its wall time is scaled up to the full-batch equivalent
+    /// before entering the EWMA — otherwise a refinement-heavy window
+    /// would teach admission that batches are cheap and over-admit the
+    /// moment traffic shifts back to first runs.
+    pub fn observe_partial_batch_cost(&self, r: usize, dt_s: f64, plane_frac: f64) {
+        if !plane_frac.is_finite() || plane_frac <= 0.0 || plane_frac > 1.0 {
+            return;
+        }
+        self.observe_batch_cost(r, dt_s / plane_frac);
+    }
+
     /// Restore replica `r`'s batch-cost estimate to its constructor
     /// seed.  Called when the supervisor respawns a replica
     /// (DESIGN.md §13): the EWMA its dead incarnation accumulated —
@@ -500,6 +514,24 @@ mod tests {
         a.observe_batch_cost(0, f64::NAN); // garbage ignored
         a.observe_batch_cost(0, -1.0);
         assert!((a.batch_cost_s(0) - 0.012).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_batch_cost_scales_to_full_batch_equivalent() {
+        let a = adm(1, 64);
+        // a refinement batch that ran half the planes in 5ms teaches
+        // the estimator that a full batch costs 10ms
+        a.observe_partial_batch_cost(0, 0.005, 0.5);
+        assert!((a.batch_cost_s(0) - 0.010).abs() < 1e-12);
+        // frac 1.0 degenerates to the plain observation
+        a.observe_partial_batch_cost(0, 0.010, 1.0);
+        assert!((a.batch_cost_s(0) - 0.010).abs() < 1e-12);
+        // garbage fractions are ignored, never divide-by-zero
+        a.observe_partial_batch_cost(0, 0.005, 0.0);
+        a.observe_partial_batch_cost(0, 0.005, -0.5);
+        a.observe_partial_batch_cost(0, 0.005, 1.5);
+        a.observe_partial_batch_cost(0, 0.005, f64::NAN);
+        assert!((a.batch_cost_s(0) - 0.010).abs() < 1e-12);
     }
 
     #[test]

@@ -11,21 +11,31 @@
 //!   the cycle-accurate [`crate::sim::Simulator`] (scaled into wall time)
 //!   and scores it with a seeded linear projection, so the whole serving
 //!   stack is buildable, testable, and benchable with **no artifacts**.
+//! * [`BitplaneBackend`] — the §15 nested-precision variant of the
+//!   simulator backend: the same seeded scorer, stored as MSB-first
+//!   bitplane contributions, answering at precision `p` by accumulating
+//!   the top `p` planes at `p/8` of the full-precision cycle cost — and
+//!   completing a sibling's cached partial sums
+//!   ([`InferenceBackend::refine`]) for the cost of the residual planes
+//!   only.
 //!
 //! Backends are constructed *on the replica's own worker thread* through
 //! a factory closure ([`BackendFactory`]): PJRT handles must not cross
 //! threads, and the factory pattern preserves that invariant for every
 //! backend while letting [`super::Server`] own N independent replicas.
 
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::qat::{QuantConfig, Session};
 use crate::runtime::{Executor, Manifest};
-use crate::sim::{HwConfig, LayerShape, Prec, Simulator};
+use crate::sim::{cell_cycles, HwConfig, LayerShape, Prec, Simulator};
 use crate::tensor::Tensor;
+use crate::util::lock;
 use crate::util::rng::Rng;
 
 use super::router::ReplicaPrecision;
@@ -53,6 +63,32 @@ pub trait InferenceBackend {
     /// default — a healthy backend — never trips.
     fn fatal(&self) -> bool {
         false
+    }
+    /// Number of weight bitplanes this backend's scorer decomposes into,
+    /// `0` (the default) for backends that cannot refine.  The pool only
+    /// attempts §15 partial-sum refinement on backends reporting a
+    /// non-zero depth; everything else keeps the §10 full re-run on
+    /// escalation.
+    fn planes(&self) -> u32 {
+        0
+    }
+    /// Per-row partial sums of the most recent successful
+    /// [`InferenceBackend::forward`], for caching low-margin replies
+    /// (DESIGN.md §15).  Taking them transfers ownership — a second call
+    /// before the next forward returns `None`, as does any backend that
+    /// does not decompose into planes (the default).
+    fn take_partials(&mut self) -> Option<Vec<PlanePartial>> {
+        None
+    }
+    /// Complete each cached partial to this backend's full plane depth
+    /// and return `[partials.len(), classes]` logits, bit-identical to a
+    /// full-precision forward of the same rows, for the cost of the
+    /// residual planes only (DESIGN.md §15).  `None` (the default) means
+    /// the backend cannot refine and the caller must fall back to a full
+    /// re-run.
+    fn refine(&mut self, partials: &[PlanePartial]) -> Option<Result<Tensor>> {
+        let _ = partials;
+        None
     }
 }
 
@@ -214,13 +250,108 @@ impl SimBackendCfg {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Nested integer scorer (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+/// Bitplane depth of the nested scorer: an 8-bit sign-magnitude weight
+/// grid whose top-`p` planes are exactly a native `p`-bit quantization
+/// (DQT-style nesting), so partial accumulations are reusable across
+/// precisions.
+pub const SCORER_PLANES: u32 = 8;
+
+/// The shared seeded scorer behind [`SimBackend`] and
+/// [`BitplaneBackend`]: the §9 random linear projection, quantized once
+/// to 8-bit integers.  Every dot product is exact integer arithmetic in
+/// `i64` (the only rounding is one deterministic `i64 → f32` cast at
+/// dequantization), so plane-accumulated, refined, and direct answers
+/// are bit-identical — the property the §15 tests certify.
+struct NestedScorer {
+    classes: usize,
+    img_elems: usize,
+    /// `classes × img_elems` signed 8-bit weights, row-major.
+    w_int: Vec<i8>,
+    /// Dequantization scale: `w ≈ w_int · w_scale`.
+    w_scale: f32,
+}
+
+impl NestedScorer {
+    /// Quantize the same seeded stream the pre-§15 float scorer drew,
+    /// so replica answers stay a pure function of `(seed, payload)`.
+    fn new(classes: usize, img_elems: usize, seed: u64) -> Self {
+        // ~unit-variance logits regardless of img_elems
+        let mut rng = Rng::new(seed);
+        let norm = 1.0 / (img_elems as f32).sqrt();
+        let w: Vec<f32> =
+            (0..classes * img_elems).map(|_| rng.normal() as f32 * norm).collect();
+        let w_max = w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let w_scale = if w_max > 0.0 { w_max / 127.0 } else { 0.0 };
+        let w_int = w.iter().map(|&v| quant_i8(v, w_scale)).collect();
+        NestedScorer { classes, img_elems, w_int, w_scale }
+    }
+
+    /// Symmetric per-row activation quantization (`|a_int| ≤ 127`).
+    fn quantize_row(&self, row: &[f32]) -> (Vec<i8>, f32) {
+        let a_max = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let a_scale = if a_max > 0.0 && a_max.is_finite() { a_max / 127.0 } else { 0.0 };
+        (row.iter().map(|&v| quant_i8(v, a_scale)).collect(), a_scale)
+    }
+
+    /// Integer dot of a quantized row against class `k`'s weights
+    /// truncated to their top `bits` planes (`SCORER_PLANES` = the full
+    /// grid).
+    fn dot_truncated(&self, a: &[i8], k: usize, bits: u32) -> i64 {
+        let w = &self.w_int[k * self.img_elems..(k + 1) * self.img_elems];
+        a.iter()
+            .zip(w)
+            .map(|(&a, &w)| a as i64 * truncate_msb(w, bits) as i64)
+            .sum()
+    }
+
+    /// Dequantize an integer dot into a logit.  Forward, plane
+    /// accumulation, and refinement all funnel through this one
+    /// expression, so equal dots give bit-equal logits everywhere.
+    fn logit(&self, dot: i64, a_scale: f32) -> f32 {
+        (self.w_scale * a_scale) * dot as f32
+    }
+}
+
+/// Round-to-nearest symmetric quantization to `[-127, 127]`.  NaN maps
+/// to 0 (the saturating cast), keeping malformed payloads deterministic.
+fn quant_i8(v: f32, scale: f32) -> i8 {
+    if scale <= 0.0 || !scale.is_finite() {
+        return 0;
+    }
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Keep the top `bits` magnitude planes of an 8-bit sign-magnitude
+/// value: `q_p(n) = sign(n)·((|n| >> (8−p)) << (8−p))`, `q_0 = 0`.
+/// Nesting is exact — `q_p` is a bit-prefix of `q_{p+1}`, so the plane
+/// contributions `q_p − q_{p−1}` telescope back to the full value.
+fn truncate_msb(n: i8, bits: u32) -> i32 {
+    if bits == 0 {
+        return 0;
+    }
+    let shift = SCORER_PLANES.saturating_sub(bits.min(SCORER_PLANES));
+    let mag = ((n as i32).abs() >> shift) << shift;
+    if n < 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
 /// Deterministic simulator-costed backend (DESIGN.md §9): latency from
 /// the cycle-accurate ZCU102 model at the configured uniform precision,
-/// logits from a seeded random linear projection of the input.
+/// logits from a seeded (integer-quantized, §15) random linear
+/// projection of the input.
 pub struct SimBackend {
     cfg: SimBackendCfg,
-    /// `classes × img_elems` scorer weights, row-major.
-    weights: Vec<f32>,
+    /// Seeded integer scorer, always evaluated at full depth — the
+    /// configured precision affects the cycle cost only, so every tier
+    /// of a shared-seed pool answers identically (DESIGN.md §10).
+    scorer: NestedScorer,
     /// Wall-clock cost per batch (already `time_scale`-d).
     cost: Duration,
     /// Unscaled simulated latency of one batch, for reporting.
@@ -247,13 +378,8 @@ impl SimBackend {
         let assign = vec![(pw, pa); sim.layers.len()];
         let sim_latency_s = sim.run(&assign).latency_s;
         let cost = Duration::from_secs_f64(sim_latency_s * cfg.time_scale);
-        // ~unit-variance logits regardless of img_elems
-        let mut rng = Rng::new(cfg.seed);
-        let norm = 1.0 / (cfg.img_elems as f32).sqrt();
-        let weights = (0..cfg.classes * cfg.img_elems)
-            .map(|_| rng.normal() as f32 * norm)
-            .collect();
-        Ok(SimBackend { cfg, weights, cost, sim_latency_s })
+        let scorer = NestedScorer::new(cfg.classes, cfg.img_elems, cfg.seed);
+        Ok(SimBackend { cfg, scorer, cost, sim_latency_s })
     }
 
     /// A [`BackendFactory`] whose replicas share one config (and thus
@@ -327,13 +453,428 @@ impl InferenceBackend for SimBackend {
         let (b, d, c) = (self.cfg.batch, self.cfg.img_elems, self.cfg.classes);
         let mut logits = vec![0.0f32; b * c];
         for r in 0..b {
-            let row = &x.data[r * d..(r + 1) * d];
+            let (a_int, a_scale) = self.scorer.quantize_row(&x.data[r * d..(r + 1) * d]);
             for k in 0..c {
-                let w = &self.weights[k * d..(k + 1) * d];
-                logits[r * c + k] = row.iter().zip(w).map(|(a, b)| a * b).sum();
+                let dot = self.scorer.dot_truncated(&a_int, k, SCORER_PLANES);
+                logits[r * c + k] = self.scorer.logit(dot, a_scale);
             }
         }
         Tensor::new(vec![b, c], logits)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bitplane-decomposed backend (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+/// One row's cached partial accumulation (DESIGN.md §15): everything a
+/// *different* replica needs to complete the answer by adding the
+/// residual planes.  All-integer state — the quantized activations and
+/// the exact `i64` dots — so the hand-off loses nothing to float
+/// rounding.
+#[derive(Clone, Debug)]
+pub struct PlanePartial {
+    /// Planes already accumulated into `dots` (MSB-first, `1..=8`).
+    pub bits: u32,
+    /// Per-class integer dot products of `a_int` against the top-`bits`
+    /// truncated weights.
+    pub dots: Vec<i64>,
+    /// The row's quantized activations — what "send the residual
+    /// planes" ships instead of the full `f32` payload (4× smaller).
+    pub a_int: Vec<i8>,
+    /// The row's activation dequantization scale.
+    pub a_scale: f32,
+}
+
+/// Lock-free accumulator of simulated (unscaled) seconds across a
+/// pool's backends: the §3 cost model's answer to "how much compute did
+/// this serving strategy spend", independent of the wall-clock
+/// `time_scale`.  The `perf_route` refinement gate compares two pools'
+/// meters instead of racing sleeps.
+#[derive(Debug, Default)]
+pub struct SimCostMeter {
+    /// `f64` bit pattern, CAS-updated.
+    bits: AtomicU64,
+}
+
+impl SimCostMeter {
+    /// A fresh zeroed meter.
+    pub fn new() -> SimCostMeter {
+        SimCostMeter::default()
+    }
+
+    /// Add `s` simulated seconds.
+    pub fn add(&self, s: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + s).to_bits();
+            match self
+                .bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Total simulated seconds accumulated so far.
+    pub fn total_s(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Bitplane-decomposed simulator backend (DESIGN.md §15, ROADMAP
+/// item 1): the same cycle-costed replica as [`SimBackend`], but the
+/// scorer weights are stored as [`SCORER_PLANES`] MSB-first plane
+/// contribution grids and a forward accumulates only the top `wbits`
+/// planes — a native `wbits`-bit answer at `wbits/8` of the
+/// full-precision cycle cost (per-plane latency = the §3
+/// [`cell_cycles`] total at 8-bit weights, divided by the plane count).
+///
+/// Because the encoding nests (a low-bit value is a bit-prefix of the
+/// high-bit one, DQT-style), the partial sums of a low-margin reply can
+/// be completed to full depth by *any* replica built from the same
+/// seed, by adding the residual planes ([`InferenceBackend::refine`]) —
+/// escalation costs ~(extra-bits/total-bits) of a batch instead of a
+/// full re-run, collapsing fixed per-replica precision into one
+/// homogeneous pool serving an arbitrary precision mix.
+pub struct BitplaneBackend {
+    cfg: SimBackendCfg,
+    scorer: NestedScorer,
+    /// Plane contribution grids: `planes[j]` holds `q_{j+1} − q_j` of
+    /// every weight (row-major, like the scorer grid).  Summing grids
+    /// `0..p` telescopes to the top-`p` truncated weights exactly.
+    planes: Vec<Vec<i8>>,
+    /// Wall-clock sleep per accumulated plane (already `time_scale`-d).
+    plane_cost: Duration,
+    /// Unscaled simulated seconds per plane per batch.
+    plane_latency_s: f64,
+    /// Partials of the most recent forward, until taken.
+    last: Option<Vec<PlanePartial>>,
+    /// Optional shared simulated-cost meter (benches).
+    meter: Option<Arc<SimCostMeter>>,
+}
+
+impl BitplaneBackend {
+    /// Build a bitplane backend from `cfg` (validates shapes, requires
+    /// `wbits ∈ 1..=8` — the first-pass plane depth — and a 2/4/8
+    /// `abits` for the cycle model).
+    pub fn new(cfg: SimBackendCfg) -> Result<Self> {
+        Self::with_meter(cfg, None)
+    }
+
+    /// Like [`BitplaneBackend::new`] with a shared [`SimCostMeter`]
+    /// attached: every forward/refine adds its simulated seconds, so
+    /// benches can compare refinement against full re-run on the §3
+    /// cost model without wall-clock sleeping.
+    pub fn with_meter(cfg: SimBackendCfg, meter: Option<Arc<SimCostMeter>>) -> Result<Self> {
+        ensure!(cfg.batch >= 1, "bitplane backend: batch must be >= 1");
+        ensure!(cfg.img_elems >= 1, "bitplane backend: img_elems must be >= 1");
+        ensure!(cfg.classes >= 1, "bitplane backend: classes must be >= 1");
+        ensure!(!cfg.layers.is_empty(), "bitplane backend: empty layer stack");
+        ensure!(
+            cfg.time_scale.is_finite() && cfg.time_scale >= 0.0,
+            "bitplane backend: time_scale must be finite and >= 0"
+        );
+        ensure!(
+            cfg.wbits >= 1 && cfg.wbits <= SCORER_PLANES,
+            "bitplane backend: wbits (first-pass planes) must be 1..={SCORER_PLANES}, got {}",
+            cfg.wbits
+        );
+        let pa = Prec::from_bits(cfg.abits)
+            .ok_or_else(|| anyhow!("bitplane backend: abits must be 2/4/8, got {}", cfg.abits))?;
+        // §3 cycle model: one plane costs 1/8 of the full 8-bit-weight
+        // batch — the planes of a bit-serial GEMM run back to back, so
+        // the full accumulation reproduces the B8 latency exactly
+        let hw = HwConfig::zcu102();
+        let full8: u64 = cfg
+            .layers
+            .iter()
+            .map(|l| cell_cycles(&hw, l, cfg.batch.max(1), Prec::B8, pa).total)
+            .sum();
+        let plane_latency_s = full8 as f64 * hw.cycle_time() / SCORER_PLANES as f64;
+        let plane_cost = Duration::from_secs_f64(plane_latency_s * cfg.time_scale);
+        let scorer = NestedScorer::new(cfg.classes, cfg.img_elems, cfg.seed);
+        let planes = (0..SCORER_PLANES)
+            .map(|j| {
+                scorer
+                    .w_int
+                    .iter()
+                    .map(|&w| (truncate_msb(w, j + 1) - truncate_msb(w, j)) as i8)
+                    .collect()
+            })
+            .collect();
+        Ok(BitplaneBackend { cfg, scorer, planes, plane_cost, plane_latency_s, last: None,
+                             meter })
+    }
+
+    /// A [`BackendFactory`] whose replicas share one config (one seed,
+    /// one first-pass depth).
+    pub fn factory(cfg: SimBackendCfg) -> BackendFactory {
+        Arc::new(move |_replica| {
+            Ok(Box::new(BitplaneBackend::new(cfg.clone())?) as Box<dyn InferenceBackend>)
+        })
+    }
+
+    /// A mixed-pool [`BackendFactory`] like [`SimBackend::mixed_factory`]:
+    /// replica `i` first-passes at `mix[i]`'s wbits worth of planes.
+    /// Unlike the §10 mixed pool, the precision here is only the
+    /// *first-pass depth* — every replica holds the full plane stack, so
+    /// any of them can refine any partial to full depth.
+    pub fn mixed_factory(base: SimBackendCfg, mix: Vec<ReplicaPrecision>) -> BackendFactory {
+        Self::metered_mixed_factory(base, mix, None)
+    }
+
+    /// [`BitplaneBackend::mixed_factory`] with an optional shared
+    /// [`SimCostMeter`] across every replica.
+    pub fn metered_mixed_factory(base: SimBackendCfg, mix: Vec<ReplicaPrecision>,
+                                 meter: Option<Arc<SimCostMeter>>) -> BackendFactory {
+        Arc::new(move |replica| {
+            let p = match mix.is_empty() {
+                true => ReplicaPrecision::default(),
+                false => mix[replica % mix.len()],
+            };
+            let cfg = SimBackendCfg { wbits: p.wbits, abits: p.abits, ..base.clone() };
+            Ok(Box::new(BitplaneBackend::with_meter(cfg, meter.clone())?)
+                as Box<dyn InferenceBackend>)
+        })
+    }
+
+    /// Unscaled simulated seconds per plane per batch.
+    pub fn plane_latency_s(&self) -> f64 {
+        self.plane_latency_s
+    }
+
+    /// Wall-clock sleep per accumulated plane after `time_scale`.
+    pub fn plane_cost(&self) -> Duration {
+        self.plane_cost
+    }
+
+    /// Spend `planes` planes of simulated time: meter first, then the
+    /// scaled sleep.
+    fn spend(&self, planes: u32) {
+        if let Some(m) = &self.meter {
+            m.add(planes as f64 * self.plane_latency_s);
+        }
+        let cost = self.plane_cost * planes;
+        if !cost.is_zero() {
+            std::thread::sleep(cost);
+        }
+    }
+
+    fn refine_impl(&mut self, partials: &[PlanePartial]) -> Result<Tensor> {
+        ensure!(!partials.is_empty(), "refine: empty partial batch");
+        let (d, c) = (self.cfg.img_elems, self.cfg.classes);
+        let mut residual_max = 0u32;
+        for p in partials {
+            ensure!(
+                p.bits >= 1 && p.bits <= SCORER_PLANES,
+                "refine: partial claims {} accumulated planes, scorer holds {SCORER_PLANES}",
+                p.bits
+            );
+            ensure!(
+                p.a_int.len() == d,
+                "refine: partial row has {} elements, model wants {d}",
+                p.a_int.len()
+            );
+            ensure!(
+                p.dots.len() == c,
+                "refine: partial has {} classes, model has {c}",
+                p.dots.len()
+            );
+            residual_max = residual_max.max(SCORER_PLANES - p.bits);
+        }
+        // the group accumulates residual planes in lockstep, so its cost
+        // is the deepest residual — ~(extra-bits/total-bits) of a batch
+        self.spend(residual_max);
+        let mut logits = vec![0.0f32; partials.len() * c];
+        for (r, p) in partials.iter().enumerate() {
+            for k in 0..c {
+                let mut dot = p.dots[k];
+                for grid in &self.planes[p.bits as usize..SCORER_PLANES as usize] {
+                    let w = &grid[k * d..(k + 1) * d];
+                    dot += p
+                        .a_int
+                        .iter()
+                        .zip(w)
+                        .map(|(&a, &w)| a as i64 * w as i64)
+                        .sum::<i64>();
+                }
+                logits[r * c + k] = self.scorer.logit(dot, p.a_scale);
+            }
+        }
+        Tensor::new(vec![partials.len(), c], logits)
+    }
+}
+
+impl InferenceBackend for BitplaneBackend {
+    fn name(&self) -> &str {
+        "bitplane"
+    }
+
+    fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn img_elems(&self) -> usize {
+        self.cfg.img_elems
+    }
+
+    fn forward(&mut self, x: Tensor) -> Result<Tensor> {
+        ensure!(
+            x.shape == [self.cfg.batch, self.cfg.img_elems],
+            "bitplane backend: input shape {:?}, want [{}, {}]",
+            x.shape,
+            self.cfg.batch,
+            self.cfg.img_elems
+        );
+        if let Some(s) = self.cfg.fail_on {
+            if x.data.iter().any(|v| v.to_bits() == s.to_bits()) {
+                bail!("bitplane backend: injected failure (sentinel {s} in batch)");
+            }
+        }
+        let p = self.cfg.wbits;
+        self.spend(p);
+        let (b, d, c) = (self.cfg.batch, self.cfg.img_elems, self.cfg.classes);
+        let mut logits = vec![0.0f32; b * c];
+        let mut partials = Vec::with_capacity(b);
+        for r in 0..b {
+            let (a_int, a_scale) = self.scorer.quantize_row(&x.data[r * d..(r + 1) * d]);
+            let mut dots = vec![0i64; c];
+            // honest plane accumulation (not a truncated dot): grid by
+            // grid, MSB first — what the property tests pin against the
+            // direct SimBackend product
+            for grid in &self.planes[..p as usize] {
+                for (k, dot) in dots.iter_mut().enumerate() {
+                    let w = &grid[k * d..(k + 1) * d];
+                    *dot += a_int
+                        .iter()
+                        .zip(w)
+                        .map(|(&a, &w)| a as i64 * w as i64)
+                        .sum::<i64>();
+                }
+            }
+            for k in 0..c {
+                logits[r * c + k] = self.scorer.logit(dots[k], a_scale);
+            }
+            partials.push(PlanePartial { bits: p, dots, a_int, a_scale });
+        }
+        self.last = Some(partials);
+        Tensor::new(vec![b, c], logits)
+    }
+
+    fn planes(&self) -> u32 {
+        SCORER_PLANES
+    }
+
+    fn take_partials(&mut self) -> Option<Vec<PlanePartial>> {
+        self.last.take()
+    }
+
+    fn refine(&mut self, partials: &[PlanePartial]) -> Option<Result<Tensor>> {
+        Some(self.refine_impl(partials))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Partial-sum cache (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+/// One cached partial plus its §13 fence.
+#[derive(Clone, Debug)]
+pub struct PlaneEntry {
+    /// Replica that produced the partial.
+    pub source: usize,
+    /// `source`'s incarnation when the partial was produced: a partial
+    /// from a superseded incarnation is never completed into a reply.
+    pub incarnation: u64,
+    /// The partial itself.
+    pub partial: PlanePartial,
+}
+
+/// Bounded pool-global cache of low-margin partial sums awaiting
+/// refinement (DESIGN.md §15).  Keyed by a fresh per-request id (stamped
+/// into the escalated item), evicted on reply, FIFO-evicted at
+/// capacity.  Dropping an entry is always safe: a missing entry just
+/// means the escalation target falls back to the §10 full re-run, so
+/// the cache can never wedge or corrupt a request — only save work.
+pub struct PlaneCache {
+    /// Entries + FIFO eviction order.  Leaf lock: held only inside this
+    /// type's methods, never across another acquisition.
+    // lock-order: planecache level 1
+    inner: Mutex<PlaneCacheInner>,
+    /// Monotonic id source; `0` is reserved for "no cached partial".
+    next_id: AtomicU64,
+    cap: usize,
+}
+
+struct PlaneCacheInner {
+    entries: HashMap<u64, PlaneEntry>,
+    fifo: VecDeque<u64>,
+}
+
+impl PlaneCache {
+    /// Cache bounded at `cap` entries (clamped to ≥ 1).
+    pub fn new(cap: usize) -> PlaneCache {
+        PlaneCache {
+            inner: Mutex::new(PlaneCacheInner {
+                entries: HashMap::new(),
+                fifo: VecDeque::new(),
+            }),
+            next_id: AtomicU64::new(1),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Insert a partial, returning its id (never 0).  At capacity the
+    /// oldest live entry is evicted first — its item will full-re-run.
+    pub fn insert(&self, source: usize, incarnation: u64, partial: PlanePartial) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut g = lock(&self.inner);
+        while g.entries.len() >= self.cap {
+            match g.fifo.pop_front() {
+                Some(old) => {
+                    g.entries.remove(&old);
+                }
+                None => break,
+            }
+        }
+        g.fifo.push_back(id);
+        g.entries.insert(id, PlaneEntry { source, incarnation, partial });
+        id
+    }
+
+    /// Remove and return entry `id`: evicted-on-reply, so a second take
+    /// — or a take after FIFO eviction — returns `None` and the caller
+    /// falls back to the full re-run.
+    pub fn take(&self, id: u64) -> Option<PlaneEntry> {
+        let mut g = lock(&self.inner);
+        let e = g.entries.remove(&id);
+        if e.is_some() {
+            g.fifo.retain(|&x| x != id);
+        }
+        e
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        lock(&self.inner).entries.len()
+    }
+
+    /// `true` when no entry is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (the shutdown sweep); returns how many were
+    /// swept.
+    pub fn clear(&self) -> usize {
+        let mut g = lock(&self.inner);
+        g.fifo.clear();
+        let n = g.entries.len();
+        g.entries.clear();
+        n
     }
 }
 
@@ -457,5 +998,194 @@ mod tests {
         assert_eq!(a.name(), "sim");
         let x = Tensor::zeros(&[4, 64]);
         assert_eq!(a.forward(x.clone()).unwrap(), b.forward(x).unwrap());
+    }
+
+    // ---- §15 bitplane bit-exactness oracles (ISSUE 10 satellite) ----
+
+    /// Accumulating all [`SCORER_PLANES`] planes must reproduce the
+    /// direct [`SimBackend`] logits bit-for-bit, across seeds and for
+    /// both full and short (zero-padded) batches — the §15 analogue of
+    /// the GridLut/CalibView bit-exactness oracles.
+    #[test]
+    fn all_planes_accumulated_match_simbackend_bit_for_bit() {
+        for seed in [1u64, 7, 13] {
+            let mut cfg = SimBackendCfg::tiny(seed);
+            cfg.wbits = 8;
+            let mut sim = SimBackend::new(cfg.clone()).unwrap();
+            let mut bp = BitplaneBackend::new(cfg).unwrap();
+            let mut rng = Rng::new(seed ^ 0xABCD);
+            for rows in [4usize, 2, 1] {
+                // short batches arrive zero-padded to the static dim,
+                // exactly like the worker's padding path
+                let mut data = vec![0.0f32; 4 * 64];
+                let payload = rng.normal_vec(rows * 64);
+                data[..rows * 64].copy_from_slice(&payload);
+                let x = Tensor::new(vec![4, 64], data).unwrap();
+                let a = sim.forward(x.clone()).unwrap();
+                let b = bp.forward(x).unwrap();
+                assert_eq!(a, b, "seed {seed} rows {rows}");
+            }
+        }
+    }
+
+    /// Prefix property: a `p`-plane accumulation equals a native
+    /// `p`-bit run (a direct dot against the top-`p` truncated weight
+    /// grid) bitwise, for every precision tier.
+    #[test]
+    fn plane_prefix_matches_native_truncated_run() {
+        let base = SimBackendCfg::tiny(21);
+        let scorer = NestedScorer::new(base.classes, base.img_elems, base.seed);
+        let mut rng = Rng::new(99);
+        let x = Tensor::new(vec![4, 64], rng.normal_vec(4 * 64)).unwrap();
+        for p in [2u32, 4, 8] {
+            let mut cfg = base.clone();
+            cfg.wbits = p;
+            let mut bp = BitplaneBackend::new(cfg).unwrap();
+            let got = bp.forward(x.clone()).unwrap();
+            let mut want = vec![0.0f32; 4 * 10];
+            for r in 0..4 {
+                let (a_int, a_scale) = scorer.quantize_row(&x.data[r * 64..(r + 1) * 64]);
+                for (k, w) in want[r * 10..(r + 1) * 10].iter_mut().enumerate() {
+                    *w = scorer.logit(scorer.dot_truncated(&a_int, k, p), a_scale);
+                }
+            }
+            assert_eq!(got.data, want, "p = {p}");
+        }
+    }
+
+    /// Refinement property: cached partials + residual planes equal the
+    /// native full-depth forward bitwise — on the producing replica or
+    /// any sibling, including one whose own first pass is low-bit.
+    #[test]
+    fn refine_completes_partials_to_full_depth_exactly() {
+        let mut lo = SimBackendCfg::tiny(5);
+        lo.wbits = 4;
+        let mut hi = lo.clone();
+        hi.wbits = 8;
+        let mut fast = BitplaneBackend::new(lo).unwrap();
+        let mut full = BitplaneBackend::new(hi).unwrap();
+        let mut rng = Rng::new(17);
+        let x = Tensor::new(vec![4, 64], rng.normal_vec(4 * 64)).unwrap();
+        let low = fast.forward(x.clone()).unwrap();
+        let parts = fast.take_partials().expect("partials after forward");
+        assert!(fast.take_partials().is_none(), "partials are take-once");
+        assert_eq!(parts.len(), 4);
+        assert!(parts.iter().all(|p| p.bits == 4));
+        let refined = full.refine(&parts).expect("bitplane refines").unwrap();
+        let direct = full.forward(x).unwrap();
+        assert_eq!(refined, direct, "partial + residual planes == native 8-bit run");
+        assert_ne!(low, direct, "4- and 8-plane logits must differ on random payloads");
+        let refined_by_fast = fast.refine(&parts).expect("any sibling refines").unwrap();
+        assert_eq!(refined_by_fast, direct);
+    }
+
+    #[test]
+    fn refine_validates_partial_shapes() {
+        let mut bp = BitplaneBackend::new(SimBackendCfg::tiny(3)).unwrap();
+        let ok =
+            PlanePartial { bits: 4, dots: vec![0; 10], a_int: vec![0; 64], a_scale: 0.0 };
+        assert!(bp.refine(std::slice::from_ref(&ok)).expect("supported").is_ok());
+        let bad_bits = PlanePartial { bits: 9, ..ok.clone() };
+        assert!(bp.refine(&[bad_bits]).expect("supported").is_err());
+        let bad_row = PlanePartial { a_int: vec![0; 63], ..ok.clone() };
+        assert!(bp.refine(&[bad_row]).expect("supported").is_err());
+        let bad_classes = PlanePartial { dots: vec![0; 9], ..ok };
+        assert!(bp.refine(&[bad_classes]).expect("supported").is_err());
+        assert!(bp.refine(&[]).expect("supported").is_err());
+    }
+
+    /// §3 cost model: eight planes cost exactly one 8-bit-weight batch,
+    /// so a `wbits`-plane first pass is `wbits/8` of it.
+    #[test]
+    fn plane_cost_is_an_eighth_of_the_full_precision_batch() {
+        let mut cfg = SimBackendCfg::tiny(1);
+        cfg.wbits = 8;
+        cfg.abits = 8;
+        let bp = BitplaneBackend::new(cfg.clone()).unwrap();
+        let sim = SimBackend::new(cfg).unwrap();
+        let full = bp.plane_latency_s() * SCORER_PLANES as f64;
+        let rel = (full - sim.sim_latency_s()).abs() / sim.sim_latency_s();
+        assert!(rel < 1e-9, "8 planes must cost one B8 batch: {full} vs {}",
+                sim.sim_latency_s());
+        // plane depth drives the scaled sleep linearly
+        let mut scaled = SimBackendCfg::tiny(1);
+        scaled.time_scale = 2.0;
+        scaled.wbits = 4;
+        let b = BitplaneBackend::new(scaled).unwrap();
+        let want = Duration::from_secs_f64(b.plane_latency_s() * 2.0);
+        let got = b.plane_cost();
+        let delta = if got > want { got - want } else { want - got };
+        assert!(delta < Duration::from_micros(1), "{got:?} vs {want:?}");
+    }
+
+    #[test]
+    fn sim_cost_meter_accumulates_forward_and_refine() {
+        let meter = Arc::new(SimCostMeter::new());
+        let mut cfg = SimBackendCfg::tiny(2);
+        cfg.wbits = 4;
+        let mut bp = BitplaneBackend::with_meter(cfg, Some(Arc::clone(&meter))).unwrap();
+        assert_eq!(meter.total_s(), 0.0);
+        bp.forward(Tensor::zeros(&[4, 64])).unwrap();
+        let after_fwd = meter.total_s();
+        let want = 4.0 * bp.plane_latency_s();
+        assert!((after_fwd - want).abs() < 1e-12, "{after_fwd} vs {want}");
+        let parts = bp.take_partials().expect("partials");
+        bp.refine(&parts).expect("supported").unwrap();
+        let want2 = want + 4.0 * bp.plane_latency_s(); // residual 8−4
+        assert!((meter.total_s() - want2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bitplane_rejects_bad_configs_and_shapes() {
+        let mut cfg = SimBackendCfg::tiny(1);
+        cfg.wbits = 9;
+        assert!(BitplaneBackend::new(cfg).is_err());
+        let mut cfg = SimBackendCfg::tiny(1);
+        cfg.abits = 3;
+        assert!(BitplaneBackend::new(cfg).is_err());
+        let mut b = BitplaneBackend::new(SimBackendCfg::tiny(1)).unwrap();
+        assert!(b.forward(Tensor::zeros(&[4, 63])).is_err());
+        let mut cfg = SimBackendCfg::tiny(1);
+        cfg.fail_on = Some(42.5);
+        let mut b = BitplaneBackend::new(cfg).unwrap();
+        let mut x = Tensor::zeros(&[4, 64]);
+        assert!(b.forward(x.clone()).is_ok());
+        x.data[100] = 42.5;
+        assert!(format!("{:#}", b.forward(x).unwrap_err()).contains("injected"));
+    }
+
+    #[test]
+    fn plane_cache_inserts_takes_evicts_and_clears() {
+        let part =
+            PlanePartial { bits: 4, dots: vec![1; 10], a_int: vec![2; 64], a_scale: 1.0 };
+        let cache = PlaneCache::new(2);
+        let a = cache.insert(0, 0, part.clone());
+        let b = cache.insert(1, 3, part.clone());
+        assert!(a != 0 && b != 0 && a != b, "ids are fresh and never 0");
+        assert_eq!(cache.len(), 2);
+        // at capacity the oldest entry goes, never the newest
+        let c = cache.insert(2, 0, part.clone());
+        assert_ne!(c, 0);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.take(a).is_none(), "oldest entry evicted at capacity");
+        let got = cache.take(b).expect("live entry");
+        assert_eq!((got.source, got.incarnation), (1, 3));
+        assert_eq!(got.partial.bits, 4);
+        assert!(cache.take(b).is_none(), "evicted on reply: take is once");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.clear(), 1);
+        assert!(cache.is_empty());
+    }
+
+    /// The default trait surface keeps non-plane backends inert: the
+    /// server's refinement path must see "unsupported" and fall back.
+    #[test]
+    fn simbackend_does_not_advertise_planes() {
+        let mut sb = SimBackend::new(SimBackendCfg::tiny(1)).unwrap();
+        assert_eq!(InferenceBackend::planes(&sb), 0);
+        sb.forward(Tensor::zeros(&[4, 64])).unwrap();
+        assert!(sb.take_partials().is_none());
+        let p = PlanePartial { bits: 4, dots: vec![0; 10], a_int: vec![0; 64], a_scale: 0.0 };
+        assert!(sb.refine(&[p]).is_none());
     }
 }

@@ -114,6 +114,14 @@ pub struct Item<T, R> {
     /// queue; the sentinel keeps escalation re-pushes from releasing
     /// twice.
     pub tenant_shard: u32,
+    /// Partial-sum cache ticket for §15 refinement escalations: the id
+    /// of the [`super::PlaneCache`] entry holding this request's
+    /// accumulated bitplane dots.  The receiving replica takes the
+    /// entry and adds only the residual planes; `0` (no ticket) means
+    /// a plain full re-run.  Reclaimed on every terminal path (reply,
+    /// expiry, rejection, failed rehome) so entries never outlive
+    /// their request.
+    pub refine_id: u64,
 }
 
 impl<T, R> Item<T, R> {
@@ -131,6 +139,7 @@ impl<T, R> Item<T, R> {
             deadline: None,
             tenant: 0,
             tenant_shard: Self::TENANT_UNCHARGED,
+            refine_id: 0,
         }
     }
 }

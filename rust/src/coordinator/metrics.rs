@@ -42,6 +42,9 @@ pub struct ReplicaCounters {
     /// Escalation re-runs this replica *initiated* (low-margin replies
     /// it handed to the accurate tier instead of answering).
     pub escalations: AtomicU64,
+    /// Escalations this replica *completed* as §15 refinements: cached
+    /// partial sums plus residual planes, instead of a full re-run.
+    pub refinements: AtomicU64,
     /// Requests this replica dropped at assembly because their SLA
     /// deadline expired in the queue (DESIGN.md §12).
     pub deadline_drops: AtomicU64,
@@ -72,6 +75,14 @@ pub struct Metrics {
     /// Counted when the hand-off lands in the target queue, so this is
     /// exactly the number of second executions the pool performed.
     pub escalations: AtomicU64,
+    /// Escalations answered by adding residual bitplanes to cached
+    /// partial sums instead of re-running from scratch (DESIGN.md §15).
+    /// Informational, like `escalations`: a refined reply still counts
+    /// in `requests` at the replica that finished it, so the four-bucket
+    /// invariant is untouched.  `escalations - refinements` over a
+    /// window is the number of hand-offs that paid the full 1× re-run
+    /// (cache miss, dead source incarnation, or `refine:off`).
+    pub refinements: AtomicU64,
     /// Requests whose SLA deadline expired while queued: answered `Err`
     /// at assembly, never executed (DESIGN.md §12).
     pub deadline_drops: AtomicU64,
@@ -126,6 +137,8 @@ pub struct ReplicaSnapshot {
     pub stolen: u64,
     /// Escalation re-runs this replica initiated.
     pub escalations: u64,
+    /// Escalations this replica completed as §15 plane refinements.
+    pub refinements: u64,
     /// Requests dropped at assembly with an expired SLA deadline.
     pub deadline_drops: u64,
     /// Supervisor respawns of this replica's worker.
@@ -149,6 +162,9 @@ pub struct Snapshot {
     pub rejected: u64,
     /// Low-margin replies re-run on the accurate tier.
     pub escalations: u64,
+    /// Escalations served as §15 refinements (residual planes added to
+    /// cached partial sums) rather than full re-runs.
+    pub refinements: u64,
     /// Requests dropped in-queue past their SLA deadline.
     pub deadline_drops: u64,
     /// Fast-tier first passes that preceded an escalation.
@@ -188,9 +204,10 @@ impl Snapshot {
             let p = precisions.get(i).copied().unwrap_or_default();
             out.push_str(&format!(
                 "  replica {i} ({p}): {} routed, {} batches, {} requests, \
-                 {} stolen, {} escalated-away, {} deadline-dropped, {} errors\n",
+                 {} stolen, {} escalated-away, {} refined, {} deadline-dropped, \
+                 {} errors\n",
                 r.routed, r.batches, r.requests, r.stolen, r.escalations,
-                r.deadline_drops, r.errors
+                r.refinements, r.deadline_drops, r.errors
             ));
         }
         out
@@ -208,6 +225,7 @@ impl Metrics {
             failed_requests: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             escalations: AtomicU64::new(0),
+            refinements: AtomicU64::new(0),
             deadline_drops: AtomicU64::new(0),
             first_runs: AtomicU64::new(0),
             restarts: AtomicU64::new(0),
@@ -270,6 +288,17 @@ impl Metrics {
         self.escalations.fetch_add(n as u64, Ordering::Relaxed);
         if let Some(r) = self.per_replica.get(replica) {
             r.escalations.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// `replica` completed `n` escalations as §15 plane refinements
+    /// (cached partials + residual planes).  The replies themselves are
+    /// recorded through [`Metrics::record_batch_answered`] as usual —
+    /// this counter only classifies how the second execution was paid.
+    pub fn record_refined(&self, replica: usize, n: usize) {
+        self.refinements.fetch_add(n as u64, Ordering::Relaxed);
+        if let Some(r) = self.per_replica.get(replica) {
+            r.refinements.fetch_add(n as u64, Ordering::Relaxed);
         }
     }
 
@@ -387,6 +416,7 @@ impl Metrics {
             failed_requests: self.failed_requests.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             escalations: self.escalations.load(Ordering::Relaxed),
+            refinements: self.refinements.load(Ordering::Relaxed),
             deadline_drops: self.deadline_drops.load(Ordering::Relaxed),
             first_runs: self.first_runs.load(Ordering::Relaxed),
             restarts: self.restarts.load(Ordering::Relaxed),
@@ -404,6 +434,7 @@ impl Metrics {
                     routed: r.routed.load(Ordering::Relaxed),
                     stolen: r.stolen.load(Ordering::Relaxed),
                     escalations: r.escalations.load(Ordering::Relaxed),
+                    refinements: r.refinements.load(Ordering::Relaxed),
                     deadline_drops: r.deadline_drops.load(Ordering::Relaxed),
                     restarts: r.restarts.load(Ordering::Relaxed),
                 })
@@ -602,6 +633,31 @@ mod tests {
         // phantom replica ids stay safe (same contract as record_batch)
         m.record_restart(9);
         assert_eq!(m.snapshot(1.0).restarts, 3);
+    }
+
+    #[test]
+    fn refinement_counter_tracks_without_touching_buckets() {
+        // a refined escalation is: first run (0 answered of 1) on the
+        // fast replica, then a refinement batch on the accurate one —
+        // `refinements` classifies the second execution, the reply
+        // itself still flows through record_batch_answered
+        let m = Metrics::new(2);
+        m.record_batch_answered(0, 1, 0, 0.010, 3);
+        m.record_escalated(0, 1);
+        m.record_first_decisions(1);
+        m.record_refined(1, 1);
+        m.record_batch_answered(1, 1, 1, 0.004, 3);
+        let s = m.snapshot(1.0);
+        assert_eq!(s.escalations, 1);
+        assert_eq!(s.refinements, 1);
+        assert_eq!(s.per_replica[0].refinements, 0, "initiator is not the refiner");
+        assert_eq!(s.per_replica[1].refinements, 1);
+        // the §12 invariant: 1 submitted = 1 answered, refinement is
+        // informational and never a fifth bucket
+        assert_eq!(s.requests + s.failed_requests + s.rejected + s.deadline_drops, 1);
+        // phantom replica ids stay safe (same contract as record_batch)
+        m.record_refined(9, 2);
+        assert_eq!(m.snapshot(1.0).refinements, 3);
     }
 
     #[test]

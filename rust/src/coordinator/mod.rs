@@ -21,15 +21,19 @@
 //! self-heals (DESIGN.md §13): replica heartbeats feed a supervisor
 //! that respawns dead or wedged workers with capped backoff, retires
 //! flappers, and fails traffic over to the live replicas — with
-//! [`chaos::ChaosBackend`] injecting seeded faults to prove it.
+//! [`chaos::ChaosBackend`] injecting seeded faults to prove it.  On a
+//! bitplane backend ([`BitplaneBackend`], DESIGN.md §15) escalation is
+//! *refinement*: the fast replica parks its partial sums in a
+//! [`PlaneCache`] and the accurate replica adds only the residual
+//! planes — ~(extra-bits/total-bits) of a batch instead of a re-run.
 //! Module map:
 //!
 //! | module | role | DESIGN.md |
 //! |---|---|---|
 //! | [`router`] | precision-aware queue selection + escalation policy | §10 |
 //! | [`batcher`] | per-replica queues, batching, tail stealing | §9–§11 |
-//! | [`backend`] | pluggable execution (`PjrtBackend`, `SimBackend`) | §9 |
-//! | [`server`] | pool lifecycle, readiness, escalation, supervision | §9–§10, §13 |
+//! | [`backend`] | pluggable execution (`PjrtBackend`, `SimBackend`, bitplane `BitplaneBackend`) | §9, §15 |
+//! | [`server`] | pool lifecycle, readiness, escalation + refinement, supervision | §9–§10, §13, §15 |
 //! | [`metrics`] | counters, gauges, latency percentiles | §9–§10 |
 //! | [`admission`] | SLA admission, tenant fair queuing, PI margin tuning | §12 |
 //! | [`health`] | heartbeats, death watch, watchdog, backoff policy | §13 |
@@ -67,14 +71,16 @@ pub mod router;
 pub mod server;
 
 pub use admission::{Admission, AdmissionCfg, EscalationController, Reject, SubmitOpts};
-pub use backend::{BackendFactory, InferenceBackend, PjrtBackend, SimBackend, SimBackendCfg};
+pub use backend::{BackendFactory, BitplaneBackend, InferenceBackend, PjrtBackend,
+                  PlaneCache, PlaneEntry, PlanePartial, SimBackend, SimBackendCfg,
+                  SimCostMeter, SCORER_PLANES};
 pub use batcher::{Assembled, CoarseIntake, IntakeQueue, Item, Policy, PushRefused, Request,
                   ShardedIntake};
 pub use chaos::{ChaosBackend, ChaosSpec, Fault};
 pub use health::{DeathWatch, HealthBoard, ReplicaState, SupervisionCfg};
 pub use metrics::{Metrics, ReplicaSnapshot, Snapshot};
 pub use router::{escalation_ladder, parse_precision_mix, resolve_precision_mix,
-                 router_from_spec, AccuracyFloor, Escalate, Fastest, MarginKnob,
-                 ReplicaPrecision, Router, DEFAULT_ESCALATE_MARGIN};
+                 router_and_refine_from_spec, router_from_spec, AccuracyFloor, Escalate,
+                 Fastest, MarginKnob, ReplicaPrecision, Router, DEFAULT_ESCALATE_MARGIN};
 pub use server::{load_test, load_test_opts, LoadOpts, LoadReport, PoolConfig, Server,
                  ServerConfig};

@@ -562,6 +562,23 @@ pub fn router_from_spec(spec: &str) -> Result<Arc<dyn Router>> {
     }
 }
 
+/// Parse a `--router` CLI value with an optional `+refine:on|off`
+/// suffix (DESIGN.md §15), e.g. `escalate:auto+refine:off`.  Returns
+/// the router plus the refinement toggle for `PoolConfig::refine`;
+/// without a suffix refinement defaults to on — the pre-§15 full
+/// re-run path stays reachable as `+refine:off`.
+pub fn router_and_refine_from_spec(spec: &str) -> Result<(Arc<dyn Router>, bool)> {
+    let (router_spec, refine) = match spec.split_once("+refine:") {
+        Some((head, "on")) => (head, true),
+        Some((head, "off")) => (head, false),
+        Some((_, other)) => {
+            return Err(anyhow!("bad refine toggle '{other}' in '{spec}' (on|off)"))
+        }
+        None => (spec, true),
+    };
+    Ok((router_from_spec(router_spec)?, refine))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -752,6 +769,27 @@ mod tests {
         // extra argument where none is allowed
         let e = router_from_spec("fastest:1").unwrap_err().to_string();
         assert!(e.contains("no argument"), "{e}");
+    }
+
+    #[test]
+    fn refine_suffix_parses_and_defaults_on() {
+        // no suffix: refinement on, same router as the plain spec
+        let (r, on) = router_and_refine_from_spec("escalate:auto").unwrap();
+        assert!(on && r.margin_knob().is_some());
+        let (r, on) = router_and_refine_from_spec("fastest").unwrap();
+        assert!(on && r.margin_knob().is_none());
+        // explicit toggles, on any router head
+        let (_, on) = router_and_refine_from_spec("escalate:0.1+refine:off").unwrap();
+        assert!(!on);
+        let (_, on) = router_and_refine_from_spec("floor:8+refine:on").unwrap();
+        assert!(on);
+        // bad toggle values and bad heads both fail descriptively
+        let e = router_and_refine_from_spec("fastest+refine:maybe")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("maybe") && e.contains("on|off"), "{e}");
+        assert!(router_and_refine_from_spec("fastest+refine:").is_err());
+        assert!(router_and_refine_from_spec("bogus+refine:on").is_err());
     }
 
     #[test]

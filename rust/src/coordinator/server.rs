@@ -38,6 +38,17 @@
 //! §13 fallback ladder) skip dead replicas, and the accounting
 //! invariant above stays exact through every kill and respawn.
 //!
+//! Refinement (DESIGN.md §15, on by default via [`PoolConfig::refine`]):
+//! when the backend decomposes into bitplanes
+//! ([`InferenceBackend::planes`] > 0), an escalating replica parks the
+//! low-margin rows' partial sums in a pool-wide [`PlaneCache`] and the
+//! receiving replica adds only the residual planes — ~(extra-bits /
+//! total-bits) of a batch instead of the 1× full re-run, which remains
+//! the fallback whenever the ticket is gone (evicted, or its source
+//! incarnation was superseded, §13).  Tickets are reclaimed on every
+//! terminal path, and `refinements` in [`Metrics`] counts how many
+//! escalations were served the cheap way.
+//!
 //! ```
 //! use dybit::coordinator::{Escalate, PoolConfig, ReplicaPrecision, Server,
 //!                          SimBackend, SimBackendCfg};
@@ -82,7 +93,8 @@ use crate::util::threadpool::payload_msg;
 
 use super::admission::{run_margin_controller, Admission, AdmissionCfg, EscalationController,
                        Reject, SubmitOpts};
-use super::backend::{BackendFactory, InferenceBackend, PjrtBackend};
+use super::backend::{BackendFactory, InferenceBackend, PjrtBackend, PlaneCache,
+                     PlanePartial};
 use super::batcher::{Assembled, Item, Policy, PushRefused, Request, ShardedIntake};
 use super::health::{DeathWatch, HealthBoard, ReplicaState, SupervisionCfg};
 use super::metrics::{Metrics, Snapshot};
@@ -155,6 +167,13 @@ pub struct PoolConfig {
     /// entirely — worker deaths then surface as `shutdown` errors, the
     /// pre-§13 behavior.
     pub supervision: Option<SupervisionCfg>,
+    /// §15 refinement: when the backend decomposes into bitplanes
+    /// ([`InferenceBackend::planes`] > 0), escalations carry a
+    /// partial-sum cache ticket and the receiving replica adds only the
+    /// residual planes instead of re-running from scratch.  `false`
+    /// preserves the pre-§15 full re-run path (`+refine:off` in router
+    /// specs); non-plane backends behave identically either way.
+    pub refine: bool,
 }
 
 impl Default for PoolConfig {
@@ -169,6 +188,7 @@ impl Default for PoolConfig {
             admission: AdmissionCfg::default(),
             escalation: None,
             supervision: Some(SupervisionCfg::default()),
+            refine: true,
         }
     }
 }
@@ -185,6 +205,7 @@ impl std::fmt::Debug for PoolConfig {
             .field("admission", &self.admission)
             .field("escalation", &self.escalation)
             .field("supervision", &self.supervision)
+            .field("refine", &self.refine)
             .finish()
     }
 }
@@ -204,6 +225,11 @@ struct WorkerCtx {
     precisions: Arc<Vec<ReplicaPrecision>>,
     admission: Arc<Admission>,
     health: Arc<HealthBoard>,
+    /// Partial-sum cache for §15 refinement escalations (shared by the
+    /// pool; unused when `refine` is off or the backend has no planes).
+    cache: Arc<PlaneCache>,
+    /// [`PoolConfig::refine`] — gate on both ends of the hand-off.
+    refine: bool,
 }
 
 impl WorkerCtx {
@@ -215,6 +241,8 @@ impl WorkerCtx {
             precisions: Arc::clone(&self.precisions),
             admission: Arc::clone(&self.admission),
             health: Arc::clone(&self.health),
+            cache: Arc::clone(&self.cache),
+            refine: self.refine,
         }
     }
 }
@@ -232,6 +260,9 @@ pub struct Server {
     precisions: Arc<Vec<ReplicaPrecision>>,
     admission: Arc<Admission>,
     health: Arc<HealthBoard>,
+    /// §15 partial-sum cache behind refinement escalations; swept at
+    /// shutdown so no partial outlives the pool.
+    cache: Arc<PlaneCache>,
     /// Supervisor thread (DESIGN.md §13); `None` when supervision is
     /// disabled.
     supervisor: Option<JoinHandle<()>>,
@@ -334,6 +365,14 @@ impl Server {
         let queues = Arc::new(Intake::new(pool.queue_cap, floors, pool.work_stealing));
         let precisions = Arc::new(precisions);
         let health = Arc::new(HealthBoard::new(pool.replicas));
+        // §15 partial-sum cache: every in-flight escalation holds a
+        // queue slot, so queue_cap × replicas entries means no live
+        // ticket is ever evicted under healthy operation — eviction
+        // only fires when entries leak past their request (and the
+        // stress oracle asserts they don't)
+        let cache = Arc::new(PlaneCache::new(
+            pool.queue_cap.saturating_mul(pool.replicas).max(1),
+        ));
         let (ready_tx, ready_rx) =
             std::sync::mpsc::channel::<(usize, std::result::Result<Ready, String>)>();
 
@@ -347,6 +386,8 @@ impl Server {
                 precisions: Arc::clone(&precisions),
                 admission: Arc::clone(&admission),
                 health: Arc::clone(&health),
+                cache: Arc::clone(&cache),
+                refine: pool.refine,
             };
             let factory = Arc::clone(&factory);
             let ready = ready_tx.clone();
@@ -423,6 +464,8 @@ impl Server {
                     precisions: Arc::clone(&precisions),
                     admission: Arc::clone(&admission),
                     health: Arc::clone(&health),
+                    cache: Arc::clone(&cache),
+                    refine: pool.refine,
                 },
                 policy,
                 factory: Arc::clone(&factory),
@@ -441,6 +484,7 @@ impl Server {
             precisions,
             admission,
             health,
+            cache,
             supervisor,
             supervisor_stop,
             max_floor,
@@ -595,6 +639,13 @@ impl Server {
         &self.health
     }
 
+    /// §15 partial-sum cache behind refinement escalations.  Its
+    /// `len()` is the number of in-flight refinement tickets; the
+    /// stress oracle asserts it returns to 0 once the pool drains.
+    pub fn plane_cache(&self) -> &PlaneCache {
+        &self.cache
+    }
+
     /// Fault history the supervisor already handled — deaths, watchdog
     /// trips, respawns, retirements.  These are operational events, not
     /// request failures, so they never fail [`Server::shutdown`];
@@ -664,6 +715,10 @@ impl Server {
             self.metrics.record_failed(stranded);
             self.metrics.queue_pop(stranded);
         }
+        // the stranded items' refinement tickets (and any entry whose
+        // request already resolved through a non-reclaiming path) die
+        // with the pool — the cache must not outlive its requests
+        self.cache.clear();
         let elapsed = self.started.elapsed().as_secs_f64();
         let snap = self.metrics.snapshot(elapsed);
         if errs.is_empty() {
@@ -803,7 +858,7 @@ fn replica_main(id: usize, incarnation: u64, ctx: WorkerCtx, policy: Policy,
                 if stolen > 0 {
                     ctx.metrics.record_stolen(id, stolen);
                 }
-                execute_assembly(backend.as_mut(), id, items, &ctx);
+                execute_assembly(backend.as_mut(), id, incarnation, items, &ctx);
                 // a permanently failed backend exits *between* batches:
                 // every item popped above already got its reply, so the
                 // §12 buckets stay exact through the death, and the
@@ -822,8 +877,11 @@ fn replica_main(id: usize, incarnation: u64, ctx: WorkerCtx, policy: Policy,
 /// one reply here or is re-enqueued exactly once on the accurate tier
 /// (which always replies: escalated items never re-escalate), and
 /// backend errors/panics are converted into error replies, never worker
-/// death.
-fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
+/// death.  Escalated items carrying a live §15 cache ticket are served
+/// by *refinement* — residual planes added to the cached partial sums —
+/// and every terminal path reclaims the ticket, so cache entries never
+/// outlive their request.
+fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize, incarnation: u64,
                     items: Vec<Item<Payload, Reply>>, ctx: &WorkerCtx) {
     let batch = backend.batch().max(1);
     let img_elems = backend.img_elems();
@@ -837,6 +895,7 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
     if !expired.is_empty() {
         let n = expired.len();
         for it in expired {
+            reclaim_ticket(&it, ctx);
             let _ = it.req.respond.send(Err(format!(
                 "deadline exceeded before execution ({:.1}ms in queue)",
                 it.req.enqueued.elapsed().as_secs_f64() * 1e3
@@ -851,11 +910,98 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
         .into_iter()
         .partition(|it| it.req.payload.len() == img_elems);
     for it in invalid {
+        reclaim_ticket(&it, ctx);
         let _ = it.req.respond.send(Err(format!(
             "payload has {} elements, model wants {img_elems}",
             it.req.payload.len()
         )));
         ctx.metrics.record_rejected();
+    }
+    // §15 refinement partition: escalated items whose partial-sum cache
+    // entry is still live, from a still-current incarnation, and shaped
+    // for this model skip the full re-run — only their residual planes
+    // execute.  Anything else (ticket evicted, source replica respawned
+    // since the first pass, refinement off, non-plane backend) falls
+    // back to the pre-§15 full re-run below, which always works.
+    let mut refinable: Vec<(Item<Payload, Reply>, PlanePartial)> = Vec::new();
+    {
+        // every arriving ticket is consumed HERE, refinable or not — a
+        // ticketed item that lands on a non-plane replica of a mixed
+        // pool must not strand its cache entry
+        let refines = ctx.refine && backend.planes() > 0;
+        let mut rerun = Vec::with_capacity(valid.len());
+        for mut it in valid {
+            let rid = std::mem::take(&mut it.refine_id);
+            let entry = if rid != 0 { ctx.cache.take(rid) } else { None };
+            match entry {
+                Some(e)
+                    if refines
+                        && ctx.health.is_current(e.source, e.incarnation)
+                        && e.partial.a_int.len() == img_elems =>
+                {
+                    refinable.push((it, e.partial));
+                }
+                _ => rerun.push(it),
+            }
+        }
+        valid = rerun;
+    }
+    while !refinable.is_empty() {
+        let take = batch.min(refinable.len());
+        let group: Vec<(Item<Payload, Reply>, PlanePartial)> =
+            refinable.drain(..take).collect();
+        let t0 = Instant::now();
+        let n = group.len();
+        let parts: Vec<PlanePartial> = group.iter().map(|(_, p)| p.clone()).collect();
+        let total = backend.planes().max(1);
+        let residual = parts
+            .iter()
+            .map(|p| total.saturating_sub(p.bits))
+            .max()
+            .unwrap_or(0);
+        let out = match catch_unwind(AssertUnwindSafe(|| backend.refine(&parts))) {
+            Ok(Some(r)) => r,
+            Ok(None) => Err(anyhow!(
+                "backend advertises {total} planes but does not refine"
+            )),
+            Err(p) => Err(anyhow!("backend panicked: {}", payload_msg(&*p))),
+        }
+        .and_then(|logits| {
+            ensure!(
+                logits.rank() == 2 && logits.shape[0] >= n,
+                "backend returned logits shaped {:?} for a {n}-partial refinement",
+                logits.shape
+            );
+            Ok(logits)
+        });
+        let dt = t0.elapsed().as_secs_f64();
+        match out {
+            Ok(logits) => {
+                // a refinement batch runs `residual` of `total` planes:
+                // scale the observation to its full-batch equivalent so
+                // the §12 delay projection stays honest
+                ctx.admission
+                    .observe_partial_batch_cost(id, dt, residual as f64 / total as f64);
+                let preds = logits.argmax_margin_rows();
+                for (i, (it, _)) in group.into_iter().enumerate() {
+                    // refined items are already escalated: they reply
+                    // here unconditionally, never re-escalate
+                    let _ = it.req.respond.send(Ok(preds[i].0));
+                }
+                ctx.metrics.record_refined(id, n);
+                ctx.metrics.record_batch_answered(id, n, n, dt, batch.saturating_sub(n));
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for (it, _) in &group {
+                    let _ = it.req.respond.send(Err(msg.clone()));
+                }
+                ctx.metrics.record_error(id, n, dt);
+            }
+        }
+        // heartbeat per refinement group, same contract as the chunk
+        // loop below: the watchdog deadline bounds one group
+        ctx.health.beat(id);
     }
     // defensive split: an assembly larger than the backend's static
     // batch dim (mis-clamped policy, future policy bugs) is executed in
@@ -898,6 +1044,14 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
                     ctx.metrics.record_first_decisions(firsts);
                 }
                 let preds = logits.argmax_margin_rows();
+                // §15: the bitplane partial sums behind this chunk's
+                // logits, one per row — taken whether or not anything
+                // escalates, so the backend never accumulates state
+                let partials = if ctx.refine && backend.planes() > 0 {
+                    backend.take_partials()
+                } else {
+                    None
+                };
                 let mut answered = 0usize;
                 let mut escalated = 0usize;
                 let mut failovers = 0usize;
@@ -922,6 +1076,17 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
                             let mut it = it;
                             it.escalated = true;
                             it.stolen = false;
+                            // §15: park this row's partial sums in the
+                            // cache so the receiving replica can refine
+                            // instead of re-running; keyed to OUR
+                            // incarnation so a respawn fences off any
+                            // partials its dead predecessor produced
+                            if let Some(p) =
+                                partials.as_ref().and_then(|ps| ps.get(i))
+                            {
+                                it.refine_id =
+                                    ctx.cache.insert(id, incarnation, p.clone());
+                            }
                             // fall down the ladder of *live* higher-
                             // precision replicas, most accurate first,
                             // with a bounded wait per rung: a dead or
@@ -931,8 +1096,31 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
                             // confidence fast answer stands — it beats
                             // a dropped request.
                             let alive = |t: usize| ctx.health.alive(t);
-                            let ladder =
+                            let mut ladder =
                                 escalation_ladder(id, &ctx.precisions, &alive);
+                            if it.refine_id != 0 {
+                                // a ticketed item refines to full plane
+                                // depth on ANY replica, so when every
+                                // strictly-higher rung is dead or full
+                                // the rest of the live pool (highest
+                                // floor first) beats answering with the
+                                // low-confidence fast result
+                                let mut extras: Vec<usize> = (0..ctx
+                                    .precisions
+                                    .len())
+                                    .filter(|&t| {
+                                        t != id
+                                            && alive(t)
+                                            && !ladder.contains(&t)
+                                    })
+                                    .collect();
+                                extras.sort_by_key(|&t| {
+                                    std::cmp::Reverse(
+                                        ctx.precisions[t].floor_bits(),
+                                    )
+                                });
+                                ladder.extend(extras);
+                            }
                             let mut holding = Some(it);
                             let mut landed: Option<usize> = None;
                             for t in ladder {
@@ -969,6 +1157,9 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
                                 None => {
                                     // lint:allow(no-unwrap): landed == None means no rung accepted the item, so every attempt handed it back
                                     let it = holding.expect("held item");
+                                    // the ticket dies with the hand-off:
+                                    // nobody will ever refine this item
+                                    reclaim_ticket(&it, ctx);
                                     let _ = it.req.respond.send(Ok(pred));
                                     answered += 1;
                                     failovers += 1;
@@ -1005,6 +1196,17 @@ fn execute_assembly(backend: &mut dyn InferenceBackend, id: usize,
         // busy stamp so the watchdog deadline bounds one *chunk*, not a
         // whole multi-chunk assembly (DESIGN.md §13).
         ctx.health.beat(id);
+    }
+}
+
+/// Drop `it`'s §15 partial-sum cache entry, if it holds one.  Called on
+/// every terminal path that will never refine — expiry, invalid
+/// payload, exhausted escalation ladder, failed re-home, pool shutdown
+/// — so tickets cannot outlive their request (the stress oracle's
+/// no-leak invariant).
+fn reclaim_ticket(it: &Item<Payload, Reply>, ctx: &WorkerCtx) {
+    if it.refine_id != 0 {
+        let _ = ctx.cache.take(it.refine_id);
     }
 }
 
@@ -1207,6 +1409,7 @@ fn rehome_items(from: usize, items: Vec<Item<Payload, Reply>>, ctx: &WorkerCtx) 
             }
         }
         if let Some(it) = holding {
+            reclaim_ticket(&it, ctx);
             let _ = it.req.respond.send(Err(format!(
                 "replica {from} retired and no live replica can serve this request"
             )));

@@ -20,7 +20,12 @@
 //!                           --chaos "die@3:r0,jitter=2" injects seeded
 //!                           faults, --heartbeat-ms / --max-restarts
 //!                           tune the self-healing supervisor and
-//!                           --no-supervise disables it, DESIGN.md §13)
+//!                           --no-supervise disables it, DESIGN.md §13;
+//!                           --bitplane serves the nested-precision
+//!                           backend where escalations refine cached
+//!                           partial sums, and --refine on|off (or a
+//!                           +refine:off router suffix) toggles that
+//!                           path, DESIGN.md §15)
 //!   report                  dump manifest summary
 //!
 //! Everything executes from compiled artifacts; run `make artifacts` once.
@@ -30,7 +35,7 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use dybit::coordinator::{
-    parse_precision_mix, resolve_precision_mix, router_from_spec, AdmissionCfg,
+    parse_precision_mix, resolve_precision_mix, router_and_refine_from_spec, AdmissionCfg,
     BackendFactory, ChaosSpec, EscalationController, InferenceBackend, LoadOpts,
     PjrtBackend, Policy, PoolConfig, ReplicaPrecision, Server, SimBackend, SimBackendCfg,
     Snapshot, SupervisionCfg,
@@ -63,9 +68,10 @@ fn main() {
                  train/qat: --steps N --lr 0.05 --eval-batches 16\n\
                  serve: --clients 4 --requests 64 --max-wait-ms 5 --max-batch N \
                  --replicas 1 [--sim] [--precision-mix 4,4,4,8] \
-                 [--router fastest|floor:<bits>|escalate[:margin|:auto]] [--no-steal] \
-                 [--deadline-ms D] [--tenants T] [--escalation-budget B] \
-                 [--chaos SPEC] [--heartbeat-ms MS] [--max-restarts N] [--no-supervise]"
+                 [--router fastest|floor:<bits>|escalate[:margin|:auto][+refine:on|off]] \
+                 [--no-steal] [--deadline-ms D] [--tenants T] [--escalation-budget B] \
+                 [--chaos SPEC] [--heartbeat-ms MS] [--max-restarts N] [--no-supervise] \
+                 [--bitplane] [--refine on|off]"
             );
             std::process::exit(2);
         }
@@ -233,11 +239,11 @@ fn cmd_train(args: &Args, qat: bool) -> Result<()> {
 fn print_serve_snapshot(snap: &Snapshot, precisions: &[ReplicaPrecision]) {
     println!(
         "requests {}  batches {}  errors {}  rejected {}  deadline drops {}  \
-         escalations {}  mean batch {:.1}  p50 {:.1}ms  p95 {:.1}ms  {:.1} req/s  \
-         (queue depth {})",
+         escalations {}  refined {}  mean batch {:.1}  p50 {:.1}ms  p95 {:.1}ms  \
+         {:.1} req/s  (queue depth {})",
         snap.requests, snap.batches, snap.errors, snap.rejected, snap.deadline_drops,
-        snap.escalations, snap.mean_batch, snap.lat_p50_ms, snap.lat_p95_ms,
-        snap.throughput_rps, snap.queue_depth
+        snap.escalations, snap.refinements, snap.mean_batch, snap.lat_p50_ms,
+        snap.lat_p95_ms, snap.throughput_rps, snap.queue_depth
     );
     print!("{}", snap.replica_report(precisions));
 }
@@ -267,7 +273,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => None,
     };
     let default_router = if escalation.is_some() { "escalate:auto" } else { "fastest" };
-    let router = router_from_spec(&args.get_or("router", default_router))?;
+    // §15 refinement is on by default; turn it off with either the
+    // `+refine:off` router-spec suffix or the standalone --refine off
+    // flag (the flag wins when both are present)
+    let (router, refine_spec) =
+        router_and_refine_from_spec(&args.get_or("router", default_router))?;
+    let refine = match args.get("refine") {
+        Some("on") => true,
+        Some("off") => false,
+        Some(other) => return Err(anyhow!("--refine must be on|off, got '{other}'")),
+        None => refine_spec,
+    };
     let margin_knob = router.margin_knob();
     let deadline = match args.get("deadline-ms") {
         Some(s) => {
@@ -339,7 +355,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             tenants,
             ..AdmissionCfg::default()
         };
-        let factory = SimBackend::mixed_factory(cfg, precisions.clone());
+        // --bitplane serves the §15 nested-precision backend: same
+        // logits at full depth, but escalations refine from cached
+        // partial sums instead of re-running (pair with --refine off /
+        // +refine:off to measure the difference)
+        let factory = if args.has("bitplane") {
+            dybit::coordinator::BitplaneBackend::mixed_factory(cfg, precisions.clone())
+        } else {
+            SimBackend::mixed_factory(cfg, precisions.clone())
+        };
         let factory = match chaos.clone() {
             Some(spec) => spec.wrap(factory),
             None => factory,
@@ -355,6 +379,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 admission,
                 escalation,
                 supervision: supervision.clone(),
+                refine,
             },
             factory,
         )?
@@ -411,6 +436,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 admission,
                 escalation,
                 supervision: supervision.clone(),
+                refine,
             },
             factory,
         )?

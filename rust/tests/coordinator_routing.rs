@@ -7,13 +7,19 @@
 //! an escalated request counts in `requests` only when its re-run
 //! replies, so `requests + failed_requests + rejected + deadline_drops
 //! == submitted` stays exact (asserted in every test here).
+//!
+//! The §15 tests at the bottom cover both escalation paths over the
+//! nested-precision [`BitplaneBackend`]: refinement on (cached partial
+//! sums + residual planes) and `refine: false` (the pre-§15 full
+//! re-run) — with tier-invariant answers across both and the plain
+//! [`SimBackend`].
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use dybit::coordinator::{
-    AccuracyFloor, Escalate, Policy, PoolConfig, ReplicaPrecision, Router, Server,
-    SimBackend, SimBackendCfg, Snapshot,
+    AccuracyFloor, BitplaneBackend, Escalate, Policy, PoolConfig, ReplicaPrecision, Router,
+    Server, SimBackend, SimBackendCfg, Snapshot,
 };
 use dybit::util::rng::Rng;
 
@@ -361,4 +367,116 @@ fn heterogeneous_pool_answers_identically_across_tiers() {
     let snap = server.shutdown().unwrap();
     assert_accounted(&snap, 9);
     assert!(snap.per_replica.iter().all(|r| r.requests > 0));
+}
+
+/// A two-tier bitplane pool with `refine` as requested; everything else
+/// matches the escalation tests above.
+fn bitplane_pool(margin: f32, refine: bool) -> Server {
+    let mix = two_tier();
+    let pool = PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 256,
+        replicas: 2,
+        precisions: mix.clone(),
+        router: Arc::new(Escalate::new(margin)),
+        work_stealing: false, // the accurate tier must not pre-steal the probe
+        refine,
+        ..PoolConfig::default()
+    };
+    Server::start_pool(pool, BitplaneBackend::mixed_factory(SimBackendCfg::tiny(21), mix))
+        .unwrap()
+}
+
+#[test]
+fn bitplane_escalations_refine_from_cached_partials() {
+    // zero payloads ⇒ margin exactly 0 < 0.05 ⇒ every request escalates
+    // off the fast tier; on a bitplane pool with refinement on, every
+    // one of them is served by adding residual planes to the cached
+    // partial sums, never by a full re-run (DESIGN.md §15)
+    let server = bitplane_pool(0.05, true);
+    let n = 20;
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(vec![0.0; IMG]).unwrap()).collect();
+    for rx in &rxs {
+        let pred = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("refined requests must still be answered")
+            .expect("refinement is a completion, not a failure");
+        assert!(pred < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, n as u64);
+    assert_eq!(snap.escalations, n as u64, "every low-margin reply escalates: {snap:?}");
+    assert_eq!(snap.refinements, n as u64, "every escalation must refine: {snap:?}");
+    assert_eq!(snap.per_replica[1].refinements, n as u64,
+               "refinement executes at the accurate tier");
+    assert_eq!(snap.per_replica[0].refinements, 0);
+    // the accurate tier answered everything, via refinement
+    assert_eq!(snap.per_replica[0].requests, 0);
+    assert_eq!(snap.per_replica[1].requests, n as u64);
+}
+
+#[test]
+fn refine_off_preserves_the_full_rerun_escalation_path() {
+    // same pool, same workload, `refine: false`: the pre-§15 behavior —
+    // escalations re-run from scratch on the accurate tier, the
+    // refinement counter stays untouched, and the accounting is
+    // identical to the SimBackend escalation tests above
+    let server = bitplane_pool(0.05, false);
+    let n = 20;
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(vec![0.0; IMG]).unwrap()).collect();
+    for rx in &rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap() < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_accounted(&snap, n as u64);
+    assert_eq!(snap.escalations, n as u64, "{snap:?}");
+    assert_eq!(snap.refinements, 0, "refine:off must never touch the plane cache: {snap:?}");
+    assert_eq!(snap.per_replica[1].requests, n as u64);
+}
+
+#[test]
+fn tier_invariant_answers_hold_under_refinement() {
+    // an absurd margin forces EVERY request onto the escalation path,
+    // so every answer is produced at full plane depth — by refinement
+    // (bitplane, refine on), by a full re-run (bitplane, refine off),
+    // and by the plain SimBackend re-run.  All three pools share the
+    // scorer seed, so the three answer streams must be identical: §15
+    // refinement never changes a deterministic answer.
+    let run = |server: Server| {
+        let mut rng = Rng::new(31);
+        let n = 24;
+        let rxs: Vec<_> = (0..n)
+            .map(|_| server.submit(rng.normal_vec(IMG)).unwrap())
+            .collect();
+        let answers: Vec<usize> = rxs
+            .iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap())
+            .collect();
+        let snap = server.shutdown().unwrap();
+        assert_accounted(&snap, n as u64);
+        assert_eq!(snap.escalations, n as u64, "margin 1e9 escalates everything: {snap:?}");
+        (answers, snap.refinements)
+    };
+    let (refined, refinements_on) = run(bitplane_pool(1e9, true));
+    let (rerun, refinements_off) = run(bitplane_pool(1e9, false));
+    assert_eq!(refinements_on, refined.len() as u64);
+    assert_eq!(refinements_off, 0);
+    assert_eq!(refined, rerun, "refinement must reproduce the full re-run bit-for-bit");
+
+    let mix = two_tier();
+    let pool = PoolConfig {
+        policy: Policy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_cap: 256,
+        replicas: 2,
+        precisions: mix.clone(),
+        router: Arc::new(Escalate::new(1e9)),
+        work_stealing: false,
+        ..PoolConfig::default()
+    };
+    let sim =
+        Server::start_pool(pool, SimBackend::mixed_factory(SimBackendCfg::tiny(21), mix))
+            .unwrap();
+    let (direct, refinements_sim) = run(sim);
+    assert_eq!(refinements_sim, 0, "SimBackend advertises no planes, so nothing refines");
+    assert_eq!(refined, direct, "refined answers must match the direct full-depth scorer");
 }

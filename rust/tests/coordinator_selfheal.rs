@@ -57,7 +57,7 @@ fn first_spawn_chaos(spec: &str, inner: BackendFactory) -> BackendFactory {
     let seen: Arc<Mutex<HashSet<usize>>> = Arc::new(Mutex::new(HashSet::new()));
     Arc::new(move |replica| {
         let backend = inner(replica)?;
-        if seen.lock().unwrap().insert(replica) {
+        if dybit::util::lock(&seen).insert(replica) {
             Ok(Box::new(ChaosBackend::new(backend, &spec, replica))
                 as Box<dyn InferenceBackend>)
         } else {

@@ -40,6 +40,13 @@
 //!    retired shard, and only by a shard whose floor honors its
 //!    (clamped) `min_bits` tag — while the flapped shard's owner FIFO
 //!    holds *across* the incarnation change.
+//! 8. **Partial-sum ticket conservation** (§15, refinement mode) — the
+//!    fast tiers park partials in the REAL [`PlaneCache`] on every
+//!    escalation and the escalated item carries the ticket; after a
+//!    seeded fast replica is superseded (incarnation bump), its parked
+//!    tickets must be re-run, never refined; every other ticket is
+//!    refined exactly once; and the cache is empty after the drain (no
+//!    leaked entries).
 //!
 //! The harness runs against BOTH implementations: the pre-§11
 //! [`CoarseIntake`] certifies the harness (if the reference fails, the
@@ -58,8 +65,8 @@ use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use dybit::coordinator::{Assembled, CoarseIntake, IntakeQueue, Item, Metrics, Policy,
-                         PushRefused, Request, ShardedIntake};
+use dybit::coordinator::{Assembled, CoarseIntake, IntakeQueue, Item, Metrics, PlaneCache,
+                         PlanePartial, Policy, PushRefused, Request, ShardedIntake};
 use dybit::util::rng::Rng;
 
 // ---------------------------------------------------------------------
@@ -215,6 +222,47 @@ fn check_selfheal_invariants(floors: &[u32], consumed_by: &[Vec<Consumed>],
             "{} re-homed item(s) lost after the failover drain",
             rehomed.len() - seen.len()
         ));
+    }
+    Ok(())
+}
+
+/// §15 oracle extension (invariant 8): partial-sum ticket conservation
+/// over a recorded refinement trace.  `inserts` maps every cache ticket
+/// to the `(source, incarnation)` that parked it; `refined` lists each
+/// refined reply with the provenance of the entry it consumed;
+/// `superseded` names `(replica, incarnation)` pairs fenced off by a
+/// respawn before the drain; `leaked` is the cache population after the
+/// drain.  A refined reply must consume a real ticket, with its true
+/// provenance, at most once, never from a superseded incarnation — and
+/// the drain must leave the cache empty (every ticket taken by its
+/// consumer or reclaimed on a terminal path).
+fn check_refinement_invariants(inserts: &HashMap<u64, (usize, u64)>,
+                               refined: &[(u64, usize, u64)],
+                               superseded: &HashSet<(usize, u64)>, leaked: usize)
+                               -> Result<(), String> {
+    let mut seen: HashSet<u64> = HashSet::with_capacity(refined.len());
+    for &(ticket, source, inc) in refined {
+        let Some(&(src, i)) = inserts.get(&ticket) else {
+            return Err(format!("refined reply from ticket {ticket} that was never inserted"));
+        };
+        if (src, i) != (source, inc) {
+            return Err(format!(
+                "ticket {ticket} refined with forged provenance: claims replica {source} \
+                 incarnation {inc}, was parked by replica {src} incarnation {i}"
+            ));
+        }
+        if !seen.insert(ticket) {
+            return Err(format!("ticket {ticket} refined twice"));
+        }
+        if superseded.contains(&(source, inc)) {
+            return Err(format!(
+                "stale refinement: ticket {ticket} used planes from superseded \
+                 incarnation {inc} of replica {source}"
+            ));
+        }
+    }
+    if leaked != 0 {
+        return Err(format!("{leaked} cache entry(ies) leaked past the drain"));
     }
     Ok(())
 }
@@ -841,6 +889,232 @@ fn stress_chaos_kill_flap_and_failover() {
     }
 }
 
+// ---------------------------------------------------------------------
+// §15 refinement mode: ticket conservation + incarnation fencing over
+// the REAL PlaneCache (invariant 8)
+// ---------------------------------------------------------------------
+
+/// One refinement run, escalation-heavy by construction.
+///
+/// **Phase 1** — concurrent pushers and fast-tier poppers (all at
+/// incarnation 1): every seeded escalation parks a [`PlanePartial`] in
+/// a real [`PlaneCache`], tags the escalated item with the returned
+/// ticket, and pushes it onto the accurate shard (whose popper is not
+/// running yet, so the backlog holds every in-flight ticket at once —
+/// the worst case for leaks and eviction).
+///
+/// **The fence** — after phase 1 joins, one seeded fast replica is
+/// superseded: its incarnation bumps, exactly like a §13 respawn, so
+/// every ticket its dead incarnation parked is now refuse.
+///
+/// **Phase 2** — the accurate popper drains the escalation backlog: it
+/// takes each item's ticket unconditionally (the server's contract),
+/// refines when the entry's source incarnation is still current, and
+/// falls back to a full re-run when it is not.  The §15 oracle then
+/// checks the trace, and the cache must come out empty.
+fn stress_refinement_once(shards: usize, per_pusher: u64, seed: u64) {
+    let floors = floors(shards);
+    let esc_target = (0..shards).rev().find(|&s| floors[s] == 8).unwrap();
+    let flap = (0..shards).find(|&s| floors[s] < 8).expect("refinement mode needs a fast tier");
+    // the accurate shard must hold every escalation while its popper
+    // waits out phase 1; the cache is sized the same way the server
+    // sizes it (queue capacity × replicas ⇒ no eviction in flight)
+    let cap = shards * per_pusher as usize;
+    // stealing off: every escalated item lands on the accurate shard
+    // and nowhere else, so each ticket's terminal consumer is known
+    let q = ShardedIntake::<u64, u64>::new(cap, floors.clone(), false);
+    let cache = PlaneCache::new(cap);
+    let inc_table: Vec<AtomicU64> = (0..shards).map(|_| AtomicU64::new(1)).collect();
+    let metrics = Metrics::new(shards);
+    let esc_seq = AtomicU64::new(0);
+    let policy = Policy { max_batch: 4, max_wait: Duration::from_micros(200) };
+    let partial = || PlanePartial { bits: 4, dots: vec![0], a_int: vec![0], a_scale: 0.0 };
+
+    let fast: Vec<usize> = (0..shards).filter(|&s| s != esc_target).collect();
+    let (pushed, mut consumed, inserts, flap_tickets) = thread::scope(|scope| {
+        let mut pushers = Vec::new();
+        for &s in &fast {
+            let (q, metrics) = (&q, &metrics);
+            pushers.push(scope.spawn(move || {
+                let mut ok = Vec::new();
+                for seq in 0..per_pusher {
+                    let id = pid(0, s, seq);
+                    match q.push(s, probe_item(id, 0, false)) {
+                        Ok(()) => {
+                            metrics.queue_push();
+                            ok.push(id);
+                        }
+                        Err(_) => panic!("phase-1 pushes must never refuse (shard {s})"),
+                    }
+                }
+                ok
+            }));
+        }
+        let mut poppers = Vec::new();
+        for &s in &fast {
+            let (q, cache, inc_table, metrics, floors, esc_seq, partial) =
+                (&q, &cache, &inc_table, &metrics, &floors, &esc_seq, &partial);
+            poppers.push(scope.spawn(move || {
+                let mut trace: Vec<Consumed> = Vec::new();
+                let mut tickets: Vec<(u64, usize, u64)> = Vec::new();
+                let mut esc_ids: Vec<u64> = Vec::new();
+                while (trace.len() as u64) < per_pusher {
+                    let batch = match q.pop_batch(s, policy) {
+                        Assembled::Batch(b) => b,
+                        Assembled::Closed => break,
+                    };
+                    metrics.queue_pop(batch.len());
+                    let n = batch.len();
+                    let mut answered = 0;
+                    for it in batch {
+                        let id = it.req.payload;
+                        trace.push(Consumed {
+                            id,
+                            stolen: it.stolen,
+                            min_bits: it.min_bits,
+                            dropped: false,
+                        });
+                        if floors[s] < 8 && escalates(id, seed) {
+                            // park the partial, carry the ticket — what
+                            // execute_assembly does on a low margin
+                            let inc = inc_table[s].load(Ordering::Relaxed);
+                            let ticket = cache.insert(s, inc, partial());
+                            let nid = pid(1, s, esc_seq.fetch_add(1, Ordering::Relaxed));
+                            let mut item = probe_item(nid, 8, true);
+                            item.refine_id = ticket;
+                            match q.push(esc_target, item) {
+                                Ok(()) => {
+                                    metrics.queue_push();
+                                    metrics.record_escalated(s, 1);
+                                    tickets.push((ticket, s, inc));
+                                    esc_ids.push(nid);
+                                }
+                                Err(_) => panic!(
+                                    "accurate shard is sized for every escalation"
+                                ),
+                            }
+                        } else {
+                            answered += 1;
+                        }
+                    }
+                    metrics.record_batch_answered(s, n, answered, 1e-4, 0);
+                }
+                (trace, tickets, esc_ids)
+            }));
+        }
+        let mut pushed: Vec<u64> = Vec::new();
+        for h in pushers {
+            pushed.extend(h.join().expect("pusher panicked"));
+        }
+        let mut consumed: Vec<Vec<Consumed>> = vec![Vec::new(); shards];
+        let mut inserts: HashMap<u64, (usize, u64)> = HashMap::new();
+        let mut flap_tickets = 0usize;
+        for (&s, h) in fast.iter().zip(poppers) {
+            let (trace, tickets, esc_ids) = h.join().expect("popper panicked");
+            consumed[s] = trace;
+            pushed.extend(esc_ids);
+            for (ticket, src, inc) in tickets {
+                if src == flap {
+                    flap_tickets += 1;
+                }
+                assert!(
+                    inserts.insert(ticket, (src, inc)).is_none(),
+                    "cache handed out ticket {ticket} twice"
+                );
+            }
+        }
+        (pushed, consumed, inserts, flap_tickets)
+    });
+
+    // -- the fence: the flapped fast replica respawns, superseding every
+    //    partial its dead incarnation parked (§13 meets §15)
+    inc_table[flap].store(2, Ordering::Relaxed);
+    let superseded: HashSet<(usize, u64)> = [(flap, 1)].into_iter().collect();
+
+    // -- phase 2: the accurate popper drains the escalation backlog
+    let expected = inserts.len();
+    let mut refined: Vec<(u64, usize, u64)> = Vec::new();
+    let mut rerun = 0usize;
+    let mut trace: Vec<Consumed> = Vec::new();
+    while trace.len() < expected {
+        let batch = match q.pop_batch(esc_target, policy) {
+            Assembled::Batch(b) => b,
+            Assembled::Closed => break,
+        };
+        metrics.queue_pop(batch.len());
+        let n = batch.len();
+        let mut refined_n = 0usize;
+        for it in batch {
+            trace.push(Consumed {
+                id: it.req.payload,
+                stolen: it.stolen,
+                min_bits: it.min_bits,
+                dropped: false,
+            });
+            // the ticket is consumed unconditionally (the server's
+            // contract), then fenced by the source's live incarnation
+            let entry = cache
+                .take(it.refine_id)
+                .expect("an in-flight ticket must never be evicted");
+            if inc_table[entry.source].load(Ordering::Relaxed) == entry.incarnation {
+                refined.push((it.refine_id, entry.source, entry.incarnation));
+                refined_n += 1;
+            } else {
+                rerun += 1; // fenced: full re-run, entry discarded
+            }
+        }
+        if refined_n > 0 {
+            metrics.record_refined(esc_target, refined_n);
+        }
+        metrics.record_batch_answered(esc_target, n, n, 1e-4, 0);
+    }
+    consumed[esc_target] = trace;
+    q.close();
+
+    let label = format!("refinement seed {seed} shards {shards} flap {flap}");
+    if let Err(e) = check_invariants(&floors, &pushed, &consumed, &HashSet::new()) {
+        panic!("[{label}] invariant violated: {e}");
+    }
+    if let Err(e) = check_refinement_invariants(&inserts, &refined, &superseded, cache.len()) {
+        panic!("[{label}] refinement invariant violated: {e}");
+    }
+    assert!(cache.is_empty(), "[{label}] plane cache must drain to empty");
+    assert_eq!(q.len(), 0, "[{label}] intake not drained");
+    // the scenario must exercise both §15 outcomes, and nothing else:
+    // fenced tickets all re-run, every other ticket refined exactly once
+    assert!(flap_tickets > 0, "[{label}] the superseded replica never escalated");
+    assert!(!refined.is_empty(), "[{label}] nothing refined");
+    assert_eq!(rerun, flap_tickets, "[{label}] exactly the fenced tickets re-run");
+    assert_eq!(refined.len() + rerun, expected, "[{label}] every ticket reaches a terminal");
+    let snap = metrics.snapshot(1.0);
+    let total: u64 = consumed.iter().map(|t| t.len() as u64).sum();
+    assert_eq!(
+        snap.requests + snap.escalations,
+        total,
+        "[{label}] answered + escalated-away must cover every consumption"
+    );
+    assert_eq!(snap.refinements, refined.len() as u64, "[{label}] refinement counter");
+    let per_ref: u64 = snap.per_replica.iter().map(|r| r.refinements).sum();
+    assert_eq!(per_ref, snap.refinements, "[{label}] per-replica refinements sum");
+    assert_eq!(snap.per_replica[esc_target].refinements, snap.refinements,
+               "[{label}] only the accurate tier refines");
+    assert_eq!(snap.queue_depth, 0, "[{label}] queue gauge must return to zero");
+}
+
+/// Tier-1 §15 refinement sweep (invariant 8) over seeded
+/// escalation-heavy workloads.
+#[test]
+fn stress_refinement_ticket_conservation() {
+    for seed in seed_list(&[41, 42]) {
+        for shards in [4usize, 8] {
+            let label = format!("refinement seed {seed} shards {shards}");
+            with_watchdog(&label, Duration::from_secs(60), move || {
+                stress_refinement_once(shards, 200, seed);
+            });
+        }
+    }
+}
+
 /// The `ci.sh --stress` sweep: ≥8 seeds × {4, 16, 64} shards on the
 /// §11 intake (plus the coarse reference at the smaller counts — its
 /// single lock makes 64 coarse shards pointlessly slow), then the §12
@@ -889,6 +1163,17 @@ fn stress_full_sweep() {
             with_watchdog(&label, Duration::from_secs(60), move || {
                 let q = ShardedIntake::new(cfg.cap, floors(cfg.shards), true);
                 stress_once(&q, cfg);
+            });
+        }
+    }
+    // §15 refinement conservation (invariant 8) over the full seed set
+    // and wider pools
+    for &seed in &seeds {
+        for shards in [4usize, 8, 16] {
+            let seed = seed.wrapping_add(300);
+            let label = format!("refinement-full seed {seed} shards {shards}");
+            with_watchdog(&label, Duration::from_secs(60), move || {
+                stress_refinement_once(shards, 300, seed);
             });
         }
     }
@@ -966,6 +1251,41 @@ fn checker_detects_planted_violations() {
                         vec![cd(pid(0, 1, 0))]];
     let e = check_invariants(&floors, &pushed, &overdrop, &expired).unwrap_err();
     assert!(e.contains("without an expired deadline"), "{e}");
+
+    // ---- §15 partial-sum ticket conservation plants ----
+    // tickets 1 and 2 parked by replica 0's superseded incarnation 1,
+    // ticket 3 by replica 1's still-current incarnation 2
+    let inserts: HashMap<u64, (usize, u64)> =
+        [(1, (0, 1)), (2, (0, 1)), (3, (1, 2))].into_iter().collect();
+    let superseded: HashSet<(usize, u64)> = [(0, 1)].into_iter().collect();
+
+    // clean: the current ticket refined once, the fenced tickets re-ran
+    // (absent from `refined`), nothing left in the cache
+    check_refinement_invariants(&inserts, &[(3, 1, 2)], &superseded, 0)
+        .expect("clean refinement trace must pass");
+
+    // planted: a reply refined from a superseded incarnation's planes
+    // (the respawn fence was skipped)
+    let e = check_refinement_invariants(&inserts, &[(1, 0, 1)], &superseded, 0).unwrap_err();
+    assert!(e.contains("stale refinement"), "{e}");
+
+    // planted: a cache entry outlived the drain (a consumer replied
+    // without taking its ticket)
+    let e = check_refinement_invariants(&inserts, &[(3, 1, 2)], &superseded, 1).unwrap_err();
+    assert!(e.contains("leaked"), "{e}");
+
+    // planted: one ticket refined two replies (take-once violated)
+    let e = check_refinement_invariants(&inserts, &[(3, 1, 2), (3, 1, 2)], &superseded, 0)
+        .unwrap_err();
+    assert!(e.contains("twice"), "{e}");
+
+    // planted: a refined reply from a ticket nobody ever inserted
+    let e = check_refinement_invariants(&inserts, &[(9, 1, 2)], &superseded, 0).unwrap_err();
+    assert!(e.contains("never inserted"), "{e}");
+
+    // planted: provenance rewritten to dodge the supersede fence
+    let e = check_refinement_invariants(&inserts, &[(1, 1, 2)], &superseded, 0).unwrap_err();
+    assert!(e.contains("forged provenance"), "{e}");
 }
 
 /// The §13 oracle must catch corrupted failover traces, the same way
